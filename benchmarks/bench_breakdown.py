@@ -1,0 +1,61 @@
+"""Paper Fig. 6 (storage breakdown: model / T_aux / V_exist / f_decode)
+and Fig. 7 (end-to-end latency breakdown: inference / existence check /
+aux lookup / decode)."""
+
+from __future__ import annotations
+
+import argparse
+from typing import Dict, List
+
+from benchmarks import common as C
+from repro.storage import MemoryPool
+
+
+def run_storage(datasets=None) -> List[Dict]:
+    rows = []
+    for ds in datasets or C.FAST_DATASETS:
+        store = C.dm_store(ds, "DM-Z")
+        bd = store.size_breakdown()
+        total = sum(bd.values())
+        rows.append({"dataset": ds, **bd, "total": total,
+                     "memorized": store.memorized_fraction()})
+        C.emit(
+            f"storage_breakdown/{ds}", 0.0,
+            f"model={bd['model']};aux={bd['aux_table']};"
+            f"vexist={bd['exist_bitvector']};decode={bd['decode_map']};"
+            f"memorized={store.memorized_fraction():.3f}",
+        )
+    return rows
+
+
+def run_latency(datasets=None, batch=10_000) -> List[Dict]:
+    rows = []
+    for ds in datasets or C.FAST_DATASETS:
+        table = C.DATASETS[ds]()
+        pool = MemoryPool(max(1 << 20, table.raw_size_bytes() // 20))
+        store = C.dm_store(ds, "DM-Z", pool=pool)
+        keys = C.query_keys(table, batch, seed=1)
+        store.lookup(keys)  # warm the jit
+        pool.clear()
+        store.lookup(keys)
+        s = store.last_stats
+        rows.append({"dataset": ds, "infer_s": s.infer_s, "exist_s": s.exist_s,
+                     "aux_s": s.aux_s, "decode_s": s.decode_s})
+        C.emit(
+            f"latency_breakdown/{ds}/B={batch}",
+            s.total() * 1e6,
+            f"infer={s.infer_s*1e6:.0f};exist={s.exist_s*1e6:.0f};"
+            f"aux={s.aux_s*1e6:.0f};decode={s.decode_s*1e6:.0f}",
+        )
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--what", default="storage", choices=["storage", "latency"])
+    args = ap.parse_args()
+    (run_storage if args.what == "storage" else run_latency)()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Paper Tables I & II: offline storage size + batched lookup latency,
+DeepMapping vs AB/ABC-*/HB/HBC-* under a bounded memory pool.
+
+``--pool small`` reproduces the exceeds-memory regime (Table I): the
+pool holds ~5% of the raw data, so baselines pay partition reload +
+decompress on nearly every batch while the DeepMapping model stays
+resident.  ``--pool large`` is the fits-in-memory regime (Table II).
+"""
+
+from __future__ import annotations
+
+import argparse
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks import common as C
+from repro.storage import MemoryPool
+
+SYSTEMS = ["AB", "ABC-D", "ABC-G", "ABC-Z", "ABC-L", "HB", "HBC-Z", "HBC-L",
+           "DM-Z", "DM-L"]
+
+
+def run(datasets=None, batches=(1000, 10_000, 100_000), pool_mode="small",
+        systems=None) -> List[Dict]:
+    datasets = datasets or C.FAST_DATASETS
+    systems = systems or SYSTEMS
+    rows = []
+    for ds in datasets:
+        table = C.DATASETS[ds]()
+        raw = table.raw_size_bytes()
+        budget = max(1 << 20, raw // 20) if pool_mode == "small" else 1 << 30
+        for sys_name in systems:
+            pool = MemoryPool(budget)
+            if sys_name.startswith("DM"):
+                store = C.dm_store(ds, sys_name, pool=pool)
+            else:
+                store = C.baseline_store(ds, sys_name, pool=pool)
+            size = store.size_bytes()
+            for b in batches:
+                keys = C.query_keys(table, b, seed=b)
+                pool.clear()
+                sec = C.time_lookup(store, keys)
+                rows.append(
+                    {
+                        "dataset": ds, "system": sys_name, "batch": b,
+                        "pool": pool_mode, "storage_bytes": size,
+                        "ratio": size / raw, "latency_s": sec,
+                    }
+                )
+                C.emit(
+                    f"lookup/{pool_mode}/{ds}/{sys_name}/B={b}",
+                    sec * 1e6,
+                    f"ratio={size / raw:.4f}",
+                )
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pool", default="small", choices=["small", "large"])
+    ap.add_argument("--datasets", nargs="*", default=None)
+    ap.add_argument("--batches", nargs="*", type=int, default=[1000, 10_000])
+    args = ap.parse_args()
+    run(datasets=args.datasets, batches=tuple(args.batches), pool_mode=args.pool)
+
+
+if __name__ == "__main__":
+    main()

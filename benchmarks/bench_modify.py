@@ -1,0 +1,132 @@
+"""Paper Tables III/IV (insertion), Table V (deletion), Fig. 8
+(insertion speed): modification workloads against DM-Z (no retrain),
+DM-Z1 (retrain at threshold), AB, ABC-Z, HB, HBC-Z.
+
+``--shift`` inserts data that does NOT follow the original distribution
+(Table IV): low-correlation inserts into the high-correlation store and
+vice versa."""
+
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks import common as C
+from repro.baselines import BASELINE_FACTORIES
+from repro.core import DeepMappingStore, Table
+from repro.data import synthetic_multi_column
+from repro.storage import MemoryPool
+
+
+def _insert_batch(base: Table, n: int, correlation: str, seed: int) -> Table:
+    """Unseen keys continuing the key space, values per correlation."""
+    t = synthetic_multi_column(n=n, correlation=correlation, seed=seed)
+    return Table(keys=t.keys + base.max_key + 1, columns=t.columns)
+
+
+def run_inserts(shift=False, steps=(0.1, 0.2, 0.3), batch=10_000) -> List[Dict]:
+    rows = []
+    for corr in ("low", "high"):
+        ds = f"synth_multi_{corr}"
+        table = C.DATASETS[ds]()
+        raw = table.raw_size_bytes()
+        ins_corr = ({"low": "high", "high": "low"}[corr]) if shift else corr
+        n0 = table.num_rows
+
+        # DM-Z without retrain and DM-Z1 with one retrain at ~20% inserted.
+        for variant, retrain_frac in (("DM-Z", None), ("DM-Z1", 0.2)):
+            store = C.dm_store(ds, "DM-Z")
+            cur = table
+            for frac in steps:
+                n_ins = int(n0 * frac) - (cur.num_rows - n0)
+                ins = _insert_batch(cur, n_ins, ins_corr, seed=int(frac * 100))
+                t0 = time.perf_counter()
+                store.insert(ins.keys, ins.columns)
+                ins_s = time.perf_counter() - t0
+                cur = cur.concat(ins)
+                if retrain_frac is not None and frac >= retrain_frac and variant == "DM-Z1":
+                    store = store.retrain()
+                    retrain_frac = None  # only once, like the paper's DM-Z1
+                keys = C.query_keys(cur, batch, seed=7)
+                sec = C.time_lookup(store, keys)
+                rows.append({"dataset": ds, "system": variant, "frac": frac,
+                             "storage": store.size_bytes(), "latency_s": sec,
+                             "insert_s": ins_s, "shift": shift})
+                C.emit(
+                    f"insert{'_shift' if shift else ''}/{ds}/{variant}/+{int(frac*100)}%",
+                    sec * 1e6,
+                    f"storage={store.size_bytes()};insert_us={ins_s*1e6:.0f}",
+                )
+
+        # baselines: rebuild at each size (array/hash stores are immutable
+        # partitions; the paper rebuilds/extends them on insert).
+        for sys_name in ("AB", "ABC-Z", "HB", "HBC-Z"):
+            cur = table
+            for frac in steps:
+                n_ins = int(n0 * frac) - (cur.num_rows - n0)
+                ins = _insert_batch(cur, n_ins, ins_corr, seed=int(frac * 100))
+                t0 = time.perf_counter()
+                cur = cur.concat(ins)
+                store = BASELINE_FACTORIES[sys_name](cur, pool=MemoryPool(1 << 30))
+                ins_s = time.perf_counter() - t0
+                keys = C.query_keys(cur, batch, seed=7)
+                sec = C.time_lookup(store, keys)
+                rows.append({"dataset": ds, "system": sys_name, "frac": frac,
+                             "storage": store.size_bytes(), "latency_s": sec,
+                             "insert_s": ins_s, "shift": shift})
+                C.emit(
+                    f"insert{'_shift' if shift else ''}/{ds}/{sys_name}/+{int(frac*100)}%",
+                    sec * 1e6,
+                    f"storage={store.size_bytes()};insert_us={ins_s*1e6:.0f}",
+                )
+    return rows
+
+
+def run_deletes(steps=(0.1, 0.2, 0.3), batch=10_000) -> List[Dict]:
+    rows = []
+    for corr in ("low", "high"):
+        ds = f"synth_multi_{corr}"
+        table = C.DATASETS[ds]()
+        rng = np.random.default_rng(0)
+        for variant in ("DM-Z", "DM-Z1"):
+            store = C.dm_store(ds, "DM-Z")
+            deleted = np.zeros(0, dtype=np.int64)
+            retrained = False
+            for frac in steps:
+                remaining = np.setdiff1d(table.keys, deleted)
+                n_del = int(table.num_rows * frac) - deleted.shape[0]
+                dele = rng.choice(remaining, size=n_del, replace=False)
+                store.delete(dele)
+                deleted = np.concatenate([deleted, dele])
+                if variant == "DM-Z1" and frac >= 0.2 and not retrained:
+                    store = store.retrain()
+                    retrained = True
+                live = np.setdiff1d(table.keys, deleted)
+                keys = rng.choice(live, size=min(batch, live.size), replace=True)
+                sec = C.time_lookup(store, keys)
+                rows.append({"dataset": ds, "system": variant, "frac": frac,
+                             "storage": store.size_bytes(), "latency_s": sec})
+                C.emit(
+                    f"delete/{ds}/{variant}/-{int(frac*100)}%",
+                    sec * 1e6,
+                    f"storage={store.size_bytes()}",
+                )
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--op", default="insert", choices=["insert", "delete"])
+    ap.add_argument("--shift", action="store_true")
+    args = ap.parse_args()
+    if args.op == "insert":
+        run_inserts(shift=args.shift)
+    else:
+        run_deletes()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,118 @@
+"""Shared benchmark plumbing: dataset registry, store builders with an
+on-disk cache (mapping-model training is the expensive part), bounded
+memory pools, timing, and the ``name,us_per_call,derived`` CSV emitter."""
+
+from __future__ import annotations
+
+import hashlib
+import os
+import time
+from typing import Callable, Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.baselines import BASELINE_FACTORIES
+from repro.core import DeepMappingConfig, DeepMappingStore, Table
+from repro.core.serialize import load_store, save_store
+from repro.core.trainer import TrainConfig
+from repro.data import (
+    catalog_returns_like,
+    catalog_sales_like,
+    cropland_like,
+    customer_demographics_like,
+    lineitem_like,
+    orders_like,
+    part_like,
+    synthetic_multi_column,
+    synthetic_single_column,
+)
+from repro.storage import MemoryPool
+
+CACHE_DIR = os.path.join("results", "bench_cache")
+
+# Scaled-down stand-ins for the paper's workloads (§V-A1).
+DATASETS: Dict[str, Callable[[], Table]] = {
+    "tpch_orders": lambda: orders_like(n=60_000),
+    "tpch_lineitem": lambda: lineitem_like(n=120_000),
+    "tpch_part": lambda: part_like(n=40_000),
+    "tpcds_customer_demographics": lambda: customer_demographics_like(n=120_000),
+    "tpcds_catalog_sales": lambda: catalog_sales_like(n=80_000),
+    "tpcds_catalog_returns": lambda: catalog_returns_like(n=40_000),
+    "synth_single_low": lambda: synthetic_single_column(n=120_000, correlation="low"),
+    "synth_single_high": lambda: synthetic_single_column(n=120_000, correlation="high"),
+    "synth_multi_low": lambda: synthetic_multi_column(n=100_000, correlation="low"),
+    "synth_multi_high": lambda: synthetic_multi_column(n=100_000, correlation="high"),
+    "crop": lambda: cropland_like(rows=320, cols=320),
+}
+
+FAST_DATASETS = (
+    "tpch_orders",
+    "tpcds_customer_demographics",
+    "synth_multi_low",
+    "synth_multi_high",
+)
+
+DM_CONFIGS: Dict[str, DeepMappingConfig] = {
+    "DM-Z": DeepMappingConfig(
+        shared=(256, 128), private=(32,), codec="zstd",
+        partition_bytes=64 * 1024,
+        train=TrainConfig(epochs=60, batch_size=8192),
+    ),
+    "DM-L": DeepMappingConfig(
+        shared=(256, 128), private=(32,), codec="lzma",
+        partition_bytes=32 * 1024,
+        train=TrainConfig(epochs=60, batch_size=8192),
+    ),
+    # Beyond-paper: auto-detected residue features (EXPERIMENTS §Perf).
+    # Smaller trunk — the residue features carry the periodic structure,
+    # so the model only has to wire them up, not compute divisions.
+    "DM-R": DeepMappingConfig(
+        shared=(128, 64), private=(16,), codec="zstd",
+        partition_bytes=64 * 1024, auto_residues=True,
+        train=TrainConfig(epochs=60, batch_size=8192),
+    ),
+}
+
+
+def dm_store(
+    dataset: str, variant: str = "DM-Z", pool: Optional[MemoryPool] = None
+) -> DeepMappingStore:
+    """Build (or load cached) DeepMapping store for a dataset."""
+    cfg = DM_CONFIGS[variant]
+    key = hashlib.sha1(
+        f"{dataset}|{variant}|{cfg.shared}|{cfg.private}|{cfg.train.epochs}".encode()
+    ).hexdigest()[:16]
+    path = os.path.join(CACHE_DIR, f"{dataset}_{variant}_{key}")
+    if os.path.isdir(path):
+        return load_store(path, pool=pool)
+    table = DATASETS[dataset]()
+    store = DeepMappingStore.build(table, cfg, pool=pool)
+    os.makedirs(CACHE_DIR, exist_ok=True)
+    save_store(store, path)
+    # reload so the aux pool binding matches the requested pool
+    return load_store(path, pool=pool)
+
+
+def baseline_store(dataset: str, name: str, pool: Optional[MemoryPool] = None,
+                   partition_bytes: int = 256 * 1024):
+    table = DATASETS[dataset]()
+    return BASELINE_FACTORIES[name](table, pool=pool, partition_bytes=partition_bytes)
+
+
+def time_lookup(store, keys: np.ndarray, repeats: int = 3) -> float:
+    """Median seconds per batched lookup."""
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        store.lookup(keys)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def query_keys(table: Table, batch: int, seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    return rng.choice(table.keys, size=min(batch, table.num_rows), replace=True)
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")

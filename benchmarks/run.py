@@ -1,0 +1,69 @@
+"""Benchmark harness entrypoint — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines.  Default preset is sized
+for this CPU container (~minutes); ``--full`` widens datasets/batches.
+
+Sections:
+  table1  — storage + lookup latency, exceeds-memory pool   (paper Tab. I)
+  table2  — storage + lookup latency, fits-in-memory pool   (paper Tab. II)
+  table3  — insertions, same distribution                   (paper Tab. III)
+  table4  — insertions, shifted distribution                (paper Tab. IV)
+  table5  — deletions                                       (paper Tab. V)
+  fig6    — storage breakdown                               (paper Fig. 6)
+  fig7    — latency breakdown                               (paper Fig. 7)
+  fig9    — MHAS search progression                         (paper Fig. 9/10)
+  tokens  — beyond-paper: DeepMapping-compressed LM data pipeline
+  roofline — assignment §Roofline terms from the dry-run records
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--sections", nargs="*", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import bench_beyond, bench_breakdown, bench_lookup
+    from benchmarks import bench_mhas, bench_modify, bench_tokens, roofline
+    from benchmarks import common as C
+
+    datasets = list(C.DATASETS) if args.full else list(C.FAST_DATASETS)
+    batches = (1000, 10_000, 100_000) if args.full else (1000, 10_000)
+
+    sections = {
+        "table1": lambda: bench_lookup.run(datasets=datasets, batches=batches,
+                                           pool_mode="small"),
+        "table2": lambda: bench_lookup.run(datasets=datasets, batches=batches,
+                                           pool_mode="large"),
+        "table3": lambda: bench_modify.run_inserts(shift=False),
+        "table4": lambda: bench_modify.run_inserts(shift=True),
+        "table5": lambda: bench_modify.run_deletes(),
+        "fig6": lambda: bench_breakdown.run_storage(datasets=datasets),
+        "fig7": lambda: bench_breakdown.run_latency(datasets=datasets),
+        "fig9": lambda: bench_mhas.run(iters=None if args.full else 60),
+        "tokens": lambda: bench_tokens.run(),
+        "beyond": lambda: bench_beyond.run(),
+        "roofline": lambda: roofline.run(),
+    }
+    wanted = args.sections or list(sections)
+    failures = 0
+    for name in wanted:
+        print(f"# === {name} ===", flush=True)
+        try:
+            sections[name]()
+        except Exception:  # noqa: BLE001 — report all sections
+            failures += 1
+            print(f"# SECTION {name} FAILED", flush=True)
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

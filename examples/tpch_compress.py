@@ -1,0 +1,46 @@
+"""Compress TPC-H/TPC-DS-like tables with DeepMapping vs the paper's
+baselines and print the Table-I-style comparison.
+
+    PYTHONPATH=src python examples/tpch_compress.py [--dataset tpcds_customer_demographics]
+"""
+
+import argparse
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks import common as C  # noqa: E402
+from repro.storage import MemoryPool  # noqa: E402
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="tpcds_customer_demographics",
+                    choices=sorted(C.DATASETS))
+    ap.add_argument("--batch", type=int, default=10_000)
+    args = ap.parse_args()
+
+    table = C.DATASETS[args.dataset]()
+    raw = table.raw_size_bytes()
+    print(f"dataset={args.dataset} rows={table.num_rows:,} raw={raw:,} bytes")
+    print(f"{'system':>8} | {'bytes':>12} | {'ratio':>7} | {'lookup(s) B=' + str(args.batch):>16}")
+
+    keys = C.query_keys(table, args.batch, seed=0)
+    for name in ["AB", "ABC-Z", "ABC-L", "HB", "HBC-Z", "DM-Z", "DM-L", "DM-R"]:
+        pool = MemoryPool(max(1 << 20, raw // 20))  # exceeds-memory regime
+        if name.startswith("DM"):
+            store = C.dm_store(args.dataset, name, pool=pool)
+        else:
+            store = C.baseline_store(args.dataset, name, pool=pool)
+        # correctness spot-check
+        v, e = store.lookup(keys[:100])
+        assert e.all()
+        sec = C.time_lookup(store, keys)
+        print(f"{name:>8} | {store.size_bytes():>12,} | {store.size_bytes()/raw:>7.4f} | {sec:>16.3f}")
+
+
+if __name__ == "__main__":
+    main()

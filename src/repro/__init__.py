@@ -1,0 +1,23 @@
+"""repro — DeepMapping: learned data mapping for lossless compression and
+efficient lookup, built as a multi-pod JAX training/inference framework.
+
+Subpackages:
+
+- ``repro.core``      — the paper's hybrid learned structure (model, T_aux,
+                        V_exist, f_decode, MHAS search, modifications).
+- ``repro.baselines`` — AB/ABC/HB/HBC comparison stores.
+- ``repro.data``      — dataset generators + token stores.
+- ``repro.models``    — the assigned LM architectures.
+- ``repro.train``     — optimizer/checkpoint/fault-tolerance substrate.
+- ``repro.serve``     — serving engines (decode step, lookup server).
+- ``repro.sharding``  — mesh partitioning rules.
+- ``repro.kernels``   — Pallas TPU kernels for the lookup hot path.
+- ``repro.launch``    — mesh factory, dry-run driver, train/serve entry.
+- ``repro.configs``   — per-architecture configs (exact + smoke).
+
+Import of this package must stay side-effect free w.r.t. JAX device state:
+never touch ``jax.devices()`` at import time (the dry-run pins a 512-device
+host platform before importing us).
+"""
+
+__version__ = "1.0.0"

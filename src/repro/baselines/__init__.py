@@ -1,0 +1,29 @@
+"""The paper's comparison baselines (§V-A3):
+
+* **AB**    — array-based, uncompressed (serialized numpy partitions);
+* **ABC-D/G/Z/L** — array-based + Dictionary/Gzip/Z-Standard/LZMA;
+* **HB**    — hash-based, uncompressed (pickled dict partitions);
+* **HBC-Z/L** — hash-based + Z-Standard/LZMA.
+
+All stores share the lookup contract of
+:class:`~repro.core.hybrid.DeepMappingStore` (``lookup(keys) ->
+(values, exists)``) and charge decompressed partitions to the same
+:class:`~repro.storage.pool.MemoryPool`, so the benchmark comparisons
+see identical memory pressure (§V-A5 partition-size tuning applies).
+"""
+
+from repro.baselines.array_store import ArrayStore  # noqa: F401
+from repro.baselines.hash_store import HashStore  # noqa: F401
+
+BASELINE_FACTORIES = {
+    "AB": lambda table, pool=None, **kw: ArrayStore.build(table, codec="none", pool=pool, **kw),
+    "ABC-D": lambda table, pool=None, **kw: ArrayStore.build(
+        table, codec="none", dictionary=True, pool=pool, **kw
+    ),
+    "ABC-G": lambda table, pool=None, **kw: ArrayStore.build(table, codec="gzip", pool=pool, **kw),
+    "ABC-Z": lambda table, pool=None, **kw: ArrayStore.build(table, codec="zstd", pool=pool, **kw),
+    "ABC-L": lambda table, pool=None, **kw: ArrayStore.build(table, codec="lzma", pool=pool, **kw),
+    "HB": lambda table, pool=None, **kw: HashStore.build(table, codec="none", pool=pool, **kw),
+    "HBC-Z": lambda table, pool=None, **kw: HashStore.build(table, codec="zstd", pool=pool, **kw),
+    "HBC-L": lambda table, pool=None, **kw: HashStore.build(table, codec="lzma", pool=pool, **kw),
+}

@@ -1,0 +1,181 @@
+"""Array-based baseline (paper's AB / ABC-*).
+
+The table is sorted by key and split into fixed-row partitions.  Each
+partition serializes ``keys`` + per-column value arrays into one buffer
+(numpy raw bytes with a tiny header — the paper's "serialized numpy
+array"), optionally dictionary-encodes values first (ABC-D) and/or
+compresses the buffer (ABC-G/Z/L).  Lookup binary-searches boundary
+keys for the partition, loads/decompresses it through the shared memory
+pool, then binary-searches inside (the paper's stated lookup cost).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.core.encoding import ValueCodec
+from repro.core.table import Table
+from repro.storage import MemoryPool, get_codec
+
+
+def _pack_arrays(keys: np.ndarray, cols: Dict[str, np.ndarray]) -> bytes:
+    """Self-describing buffer: [n, ncols] + keys + per-col (dtype tag, data)."""
+    parts = [np.array([keys.shape[0], len(cols)], dtype=np.int64).tobytes()]
+    parts.append(keys.tobytes())
+    for name in sorted(cols):
+        arr = cols[name]
+        dt = arr.dtype.str.encode()
+        parts.append(np.array([len(dt), arr.nbytes], dtype=np.int64).tobytes())
+        parts.append(dt)
+        parts.append(arr.tobytes())
+    return b"".join(parts)
+
+
+def _unpack_arrays(blob: bytes, names) -> Tuple[np.ndarray, Dict[str, np.ndarray]]:
+    n, ncols = np.frombuffer(blob[:16], dtype=np.int64)
+    n, ncols = int(n), int(ncols)
+    off = 16
+    keys = np.frombuffer(blob[off : off + 8 * n], dtype=np.int64)
+    off += 8 * n
+    cols: Dict[str, np.ndarray] = {}
+    for name in sorted(names):
+        dtlen, nbytes = np.frombuffer(blob[off : off + 16], dtype=np.int64)
+        off += 16
+        dt = blob[off : off + int(dtlen)].decode()
+        off += int(dtlen)
+        cols[name] = np.frombuffer(blob[off : off + int(nbytes)], dtype=np.dtype(dt))
+        off += int(nbytes)
+    return keys, cols
+
+
+class ArrayStore:
+    """AB (codec='none'), ABC-D (dictionary=True), ABC-G/Z/L."""
+
+    def __init__(
+        self,
+        names,
+        codec: str,
+        dictionary: bool,
+        partition_bytes: int,
+        pool: Optional[MemoryPool],
+    ):
+        self.names = list(names)
+        self.codec_name = codec
+        self._codec = get_codec(codec)
+        self.dictionary = dictionary
+        self.partition_bytes = partition_bytes
+        self.pool = pool if pool is not None else MemoryPool(1 << 30)
+        self._partitions: list[bytes] = []
+        self._boundaries = np.zeros(0, dtype=np.int64)
+        self._decoders: Dict[str, ValueCodec] = {}
+        self.num_rows = 0
+
+    @classmethod
+    def build(
+        cls,
+        table: Table,
+        codec: str = "none",
+        dictionary: bool = False,
+        partition_bytes: int = 4 * 1024 * 1024,
+        pool: Optional[MemoryPool] = None,
+    ) -> "ArrayStore":
+        store = cls(table.value_names, codec, dictionary, partition_bytes, pool)
+        t = table.sorted_by_key()
+        cols: Dict[str, np.ndarray] = {}
+        for name in t.value_names:
+            col = t.columns[name]
+            if dictionary or col.dtype == object:
+                vc = ValueCodec(name, col)
+                store._decoders[name] = vc
+                # smallest int dtype that fits the cardinality
+                dt = np.uint8 if vc.cardinality <= 256 else (
+                    np.uint16 if vc.cardinality <= 65536 else np.int32
+                )
+                cols[name] = vc.codes.astype(dt) if dictionary else col
+                if not dictionary:
+                    # object columns must still be encodable to raw bytes:
+                    cols[name] = np.char.encode(col.astype(str), "utf-8").astype("S")
+            else:
+                cols[name] = col
+        row_bytes = 8 + sum(
+            (c.dtype.itemsize if c.dtype != object else 16) for c in cols.values()
+        )
+        rows_per_part = max(1, partition_bytes // row_bytes)
+        bounds = []
+        for start in range(0, t.num_rows, rows_per_part):
+            k = t.keys[start : start + rows_per_part]
+            pc = {n: c[start : start + rows_per_part] for n, c in cols.items()}
+            store._partitions.append(store._codec.compress(_pack_arrays(k, pc)))
+            bounds.append(int(k[0]))
+        store._boundaries = np.asarray(bounds, dtype=np.int64)
+        store.num_rows = t.num_rows
+        return store
+
+    def _load(self, idx: int):
+        def loader():
+            blob = self._codec.decompress(self._partitions[idx])
+            part = _unpack_arrays(blob, self.names)
+            nbytes = part[0].nbytes + sum(c.nbytes for c in part[1].values())
+            return part, nbytes
+
+        return self.pool.get(("ab", id(self), idx), loader)
+
+    def lookup(self, keys: np.ndarray, columns=None):
+        keys = np.asarray(keys, dtype=np.int64)
+        wanted = list(columns) if columns is not None else self.names
+        n = keys.shape[0]
+        exists = np.zeros(n, dtype=bool)
+        out: Dict[str, np.ndarray] = {}
+        gathered = {name: [] for name in wanted}
+        gathered_idx = []
+        if self._partitions.__len__():
+            pid = np.searchsorted(self._boundaries, keys, side="right") - 1
+            order = np.argsort(pid, kind="stable")
+            start = 0
+            while start < n:
+                end = start
+                p = pid[order[start]]
+                while end < n and pid[order[end]] == p:
+                    end += 1
+                if p >= 0:
+                    pkeys, pcols = self._load(int(p))
+                    qidx = order[start:end]
+                    qk = keys[qidx]
+                    pos = np.searchsorted(pkeys, qk)
+                    hit = (pos < pkeys.shape[0]) & (
+                        pkeys[np.minimum(pos, pkeys.shape[0] - 1)] == qk
+                    )
+                    sel = qidx[hit]
+                    exists[sel] = True
+                    gathered_idx.append(sel)
+                    for name in wanted:
+                        gathered[name].append(pcols[name][pos[hit]])
+                start = end
+        idx = (
+            np.concatenate(gathered_idx)
+            if gathered_idx
+            else np.zeros(0, dtype=np.int64)
+        )
+        for name in wanted:
+            vals = (
+                np.concatenate(gathered[name])
+                if gathered[name]
+                else np.zeros(0, dtype=np.int64)
+            )
+            if self.dictionary and name in self._decoders:
+                decoded_hits = self._decoders[name].decode(vals)
+            else:
+                decoded_hits = vals
+            col = np.zeros(n, dtype=decoded_hits.dtype if decoded_hits.size else np.int64)
+            if idx.size:
+                col[idx] = decoded_hits
+            out[name] = col
+        return out, exists
+
+    def size_bytes(self) -> int:
+        total = sum(len(p) for p in self._partitions) + self._boundaries.nbytes
+        for vc in self._decoders.values():
+            total += vc.size_bytes()
+        return total

@@ -1,0 +1,19 @@
+"""Per-architecture configs (assigned pool) + the paper's own config.
+
+Importing this package registers every :class:`~repro.configs.base.ArchSpec`;
+use ``get_arch("<id>")`` / ``list_archs()``.
+"""
+
+from repro.configs.base import SHAPES, ArchSpec, get_arch, list_archs  # noqa: F401
+
+# side-effect registration — one module per assigned architecture
+from repro.configs import deepseek_v3_671b  # noqa: F401
+from repro.configs import gemma3_1b  # noqa: F401
+from repro.configs import granite3_2b  # noqa: F401
+from repro.configs import llama4_scout_17b  # noqa: F401
+from repro.configs import phi3_vision_4_2b  # noqa: F401
+from repro.configs import qwen2_7b  # noqa: F401
+from repro.configs import recurrentgemma_2b  # noqa: F401
+from repro.configs import rwkv6_7b  # noqa: F401
+from repro.configs import seamless_m4t_medium  # noqa: F401
+from repro.configs import tinyllama_1_1b  # noqa: F401

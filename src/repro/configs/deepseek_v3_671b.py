@@ -1,0 +1,66 @@
+"""deepseek-v3-671b — MLA + MoE (1 shared + 256 routed top-8)
+[arXiv:2412.19437].  61L d_model=7168 128H vocab=129280; expert
+d_ff=2048; first 3 layers dense FFN (d_ff 18432); MLA: q_lora 1536,
+kv_lora 512, nope 128, rope 64, v_head 128.  MTP head omitted (noted in
+DESIGN.md — single-token training objective here)."""
+
+from repro.configs.base import ArchSpec, register
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v3-671b",
+    family="moe",
+    num_layers=61,
+    d_model=7168,
+    num_heads=128,
+    num_kv_heads=128,       # MLA: per-head K expanded from shared latent
+    d_ff=18432,             # dense-FFN prefix layers
+    vocab_size=129280,
+    use_mla=True,
+    q_lora_rank=1536,
+    kv_lora_rank=512,
+    qk_nope_dim=128,
+    qk_rope_dim=64,
+    v_head_dim=128,
+    num_experts=256,
+    experts_per_token=8,
+    num_shared_experts=1,
+    moe_d_ff=2048,
+    first_dense_layers=3,
+    capacity_factor=1.25,
+)
+
+SMOKE = ModelConfig(
+    name="dsv3-smoke",
+    family="moe",
+    num_layers=4,           # 2 dense prefix + 2 MoE
+    d_model=32,
+    num_heads=4,
+    num_kv_heads=4,
+    d_ff=64,
+    vocab_size=128,
+    use_mla=True,
+    q_lora_rank=16,
+    kv_lora_rank=8,
+    qk_nope_dim=8,
+    qk_rope_dim=4,
+    v_head_dim=8,
+    num_experts=4,
+    experts_per_token=2,
+    num_shared_experts=1,
+    moe_d_ff=16,
+    first_dense_layers=2,
+    capacity_factor=2.0,
+    dtype="float32",
+    remat="none",
+)
+
+SPEC = register(
+    ArchSpec(
+        arch_id="deepseek-v3-671b",
+        config=CONFIG,
+        smoke=SMOKE,
+        shapes=("train_4k", "prefill_32k", "decode_32k"),
+        notes="Full attention (MLA) -> long_500k skipped; MTP omitted.",
+    )
+)

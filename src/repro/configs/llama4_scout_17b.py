@@ -1,0 +1,54 @@
+"""llama4-scout-17b-a16e — MoE 16 experts top-1 + shared expert, early
+fusion [hf:meta-llama/Llama-4-Scout-17B-16E; unverified].
+48L d_model=5120 40H (kv=8, head 128) expert d_ff=8192 vocab=202048.
+Text backbone only (early-fusion image tokens arrive as embeddings)."""
+
+from repro.configs.base import ArchSpec, register
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama4-scout-17b-a16e",
+    family="moe",
+    num_layers=48,
+    d_model=5120,
+    num_heads=40,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=8192,
+    vocab_size=202048,
+    num_experts=16,
+    experts_per_token=1,
+    num_shared_experts=1,
+    moe_d_ff=8192,
+    rope_theta=500_000.0,
+    capacity_factor=1.25,
+)
+
+SMOKE = ModelConfig(
+    name="llama4-smoke",
+    family="moe",
+    num_layers=2,
+    d_model=32,
+    num_heads=4,
+    num_kv_heads=2,
+    head_dim=8,
+    d_ff=64,
+    vocab_size=128,
+    num_experts=4,
+    experts_per_token=1,
+    num_shared_experts=1,
+    moe_d_ff=32,
+    capacity_factor=2.0,
+    dtype="float32",
+    remat="none",
+)
+
+SPEC = register(
+    ArchSpec(
+        arch_id="llama4-scout-17b-a16e",
+        config=CONFIG,
+        smoke=SMOKE,
+        shapes=("train_4k", "prefill_32k", "decode_32k"),
+        notes="Full attention -> long_500k skipped.",
+    )
+)

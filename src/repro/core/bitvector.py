@@ -1,0 +1,105 @@
+"""Existence bitvector ``V_exist`` (paper §IV-B).
+
+One bit per slot of the key domain ``[0, capacity)``.  Runtime form is a
+packed uint64 numpy array (vectorized test/set); the at-rest form is the
+zstd-compressed pack — the paper compresses ``V_exist`` on disk (§V-C
+notes "randomness in decompressing V_exist").
+
+A JAX-traceable ``test_bits`` twin lives in ``repro.kernels.bitvector``
+(Pallas) with the oracle in ``repro.kernels.ref``.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import zstandard
+
+
+class BitVector:
+    """Dynamic packed bitvector over a non-negative integer key domain."""
+
+    __slots__ = ("_words", "_capacity")
+
+    def __init__(self, capacity: int):
+        if capacity < 0:
+            raise ValueError("capacity must be >= 0")
+        self._capacity = int(capacity)
+        self._words = np.zeros((self._capacity + 63) // 64, dtype=np.uint64)
+
+    # -- construction ------------------------------------------------------
+    @classmethod
+    def from_keys(cls, keys: np.ndarray, capacity: int | None = None) -> "BitVector":
+        keys = np.asarray(keys, dtype=np.int64)
+        cap = int(capacity if capacity is not None else (keys.max() + 1 if keys.size else 0))
+        bv = cls(cap)
+        bv.set(keys, True)
+        return bv
+
+    # -- core ops (vectorized) ---------------------------------------------
+    @property
+    def capacity(self) -> int:
+        return self._capacity
+
+    def _grow_to(self, capacity: int) -> None:
+        if capacity <= self._capacity:
+            return
+        nwords = (capacity + 63) // 64
+        if nwords > self._words.shape[0]:
+            grown = np.zeros(nwords, dtype=np.uint64)
+            grown[: self._words.shape[0]] = self._words
+            self._words = grown
+        self._capacity = capacity
+
+    def set(self, keys: np.ndarray, value: bool) -> None:
+        keys = np.asarray(keys, dtype=np.int64)
+        if keys.size == 0:
+            return
+        if keys.min() < 0:
+            raise ValueError("negative key")
+        self._grow_to(int(keys.max()) + 1)
+        word = keys >> 6
+        bit = np.uint64(1) << (keys & 63).astype(np.uint64)
+        if value:
+            np.bitwise_or.at(self._words, word, bit)
+        else:
+            np.bitwise_and.at(self._words, word, ~bit)
+
+    def test(self, keys: np.ndarray) -> np.ndarray:
+        """Vectorized membership test; out-of-domain keys are False."""
+        keys = np.asarray(keys, dtype=np.int64)
+        if self._words.size == 0:
+            return np.zeros(keys.shape, dtype=bool)
+        in_domain = (keys >= 0) & (keys < self._capacity)
+        safe = np.where(in_domain, keys, 0)
+        word = self._words[safe >> 6]
+        bit = (word >> (safe & 63).astype(np.uint64)) & np.uint64(1)
+        return (bit.astype(bool)) & in_domain
+
+    def count(self) -> int:
+        return int(np.unpackbits(self._words.view(np.uint8)).sum())
+
+    # -- storage accounting / (de)serialization -----------------------------
+    @property
+    def words(self) -> np.ndarray:
+        return self._words
+
+    def runtime_bytes(self) -> int:
+        return int(self._words.nbytes)
+
+    def to_bytes(self) -> bytes:
+        header = np.array([self._capacity], dtype=np.int64).tobytes()
+        return header + zstandard.ZstdCompressor(level=3).compress(
+            self._words.tobytes()
+        )
+
+    @classmethod
+    def from_bytes(cls, blob: bytes) -> "BitVector":
+        capacity = int(np.frombuffer(blob[:8], dtype=np.int64)[0])
+        raw = zstandard.ZstdDecompressor().decompress(blob[8:])
+        bv = cls(capacity)
+        bv._words = np.frombuffer(raw, dtype=np.uint64).copy()
+        return bv
+
+    def size_bytes(self) -> int:
+        """At-rest (compressed) size — the Eq. 1 contribution."""
+        return len(self.to_bytes())

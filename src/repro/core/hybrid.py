@@ -1,0 +1,381 @@
+"""The DeepMapping hybrid structure ``M̂ = ⟨M, T_aux, V_exist, f_decode⟩``
+(paper §IV) with Algorithm 1 lookup and Algorithm 3/4/5 modifications.
+
+A :class:`DeepMappingStore` owns:
+
+* ``params``/``spec``  — the multi-task memorization MLP ``M``;
+* ``aux``              — :class:`~repro.core.aux_table.AuxTable` (``T_aux``);
+* ``vexist``           — :class:`~repro.core.bitvector.BitVector`;
+* ``codecs``           — per-column :class:`~repro.core.encoding.ValueCodec`
+                         (``f_decode``);
+* ``encoder``          — digit featurizer for keys.
+
+Eq. 1 of the paper is :meth:`compression_ratio`:
+``(size(M)+size(T_aux)+size(V_exist)+size(f_decode)) / size(D)``.
+
+Modification semantics follow the paper exactly: inserts/updates/deletes
+are materialized in the auxiliary structures without touching ``M``;
+:meth:`should_retrain` triggers lazily once modified bytes exceed a
+threshold (the paper's DM-Z1 retrains after 200 MB of modifications).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import model as model_lib
+from repro.core import trainer as trainer_lib
+from repro.core.aux_table import AuxTable
+from repro.core.bitvector import BitVector
+from repro.core.encoding import KeyEncoder, ValueCodec, build_codecs
+from repro.core.model import MLPSpec
+from repro.core.table import Table
+from repro.storage import MemoryPool
+
+
+@dataclasses.dataclass(frozen=True)
+class DeepMappingConfig:
+    """Build-time knobs. ``shared``/``private`` give the default manual
+    architecture; MHAS (``repro.core.mhas``) searches these instead."""
+
+    base: int = 10
+    # Beyond-paper: residue feature positions (multi-digit key % r).
+    # Empty + auto_residues=False = paper-faithful encoding.  See
+    # DESIGN.md §Perf / EXPERIMENTS §Perf.
+    residues: Tuple[int, ...] = ()
+    auto_residues: bool = False   # detect per-column periods at build
+    shared: Tuple[int, ...] = (256, 256)
+    private: Tuple[int, ...] = (64,)
+    codec: str = "zstd"                    # DM-Z; "lzma" = DM-L
+    partition_bytes: int = 128 * 1024
+    dtype: str = "float32"
+    train: trainer_lib.TrainConfig = dataclasses.field(
+        default_factory=trainer_lib.TrainConfig
+    )
+    # Retrain once this many raw bytes have been inserted/deleted/updated
+    # (paper's DM-Z1 uses 200 MB). None disables auto-trigger.
+    retrain_after_modified_bytes: Optional[int] = None
+    inference_batch: int = 1 << 16
+    # Route inference through the fused Pallas kernel (TPU hot path).
+    # The SAME path is used for build-time misclassification evaluation
+    # and lookup, so T_aux always corrects exactly the deployed model.
+    use_pallas: bool = False
+
+
+@dataclasses.dataclass
+class LookupStats:
+    """Per-call latency breakdown — feeds the paper's Fig. 7 benchmark."""
+
+    infer_s: float = 0.0
+    exist_s: float = 0.0
+    aux_s: float = 0.0
+    decode_s: float = 0.0
+
+    def total(self) -> float:
+        return self.infer_s + self.exist_s + self.aux_s + self.decode_s
+
+
+def _make_predict_fn(params: Dict, spec: MLPSpec, config: "DeepMappingConfig"):
+    """Inference path factory: fused Pallas kernel or plain jit.  Both
+    build-time misclassification evaluation and lookup go through the
+    SAME function — T_aux corrects exactly the deployed model."""
+    if config.use_pallas:
+        from repro.kernels import fused_mlp_codes
+
+        return lambda digits: fused_mlp_codes(params, spec, digits)
+    return lambda digits: trainer_lib.predict_codes_jit(params, digits, spec)
+
+
+class DeepMappingStore:
+    """Hybrid learned KV store for one relation (single packed key)."""
+
+    def __init__(
+        self,
+        encoder: KeyEncoder,
+        spec: MLPSpec,
+        params: Dict,
+        codecs: Dict[str, ValueCodec],
+        aux: AuxTable,
+        vexist: BitVector,
+        raw_bytes: int,
+        num_rows: int,
+        config: DeepMappingConfig,
+    ):
+        self.encoder = encoder
+        self.spec = spec
+        self.params = params
+        self.codecs = codecs
+        self.aux = aux
+        self.vexist = vexist
+        self.raw_bytes = int(raw_bytes)
+        self.num_rows = int(num_rows)
+        self.config = config
+        self.modified_bytes = 0
+        self.last_stats = LookupStats()
+        self._bytes_per_row = raw_bytes / max(1, num_rows)
+
+    # ------------------------------------------------------------------ build
+    @classmethod
+    def build(
+        cls,
+        table: Table,
+        config: DeepMappingConfig = DeepMappingConfig(),
+        pool: Optional[MemoryPool] = None,
+        spec: Optional[MLPSpec] = None,
+        params: Optional[Dict] = None,
+        verbose: bool = False,
+    ) -> "DeepMappingStore":
+        """Train (or accept) a mapping model and assemble the hybrid.
+
+        Passing ``spec``+``params`` (e.g. from MHAS) skips training.
+        """
+        residues = config.residues
+        if config.auto_residues:
+            from repro.core.encoding import detect_residues
+
+            residues = tuple(sorted(set(residues) | set(
+                detect_residues(table.keys, table.columns, config.base)
+            )))
+            if verbose and residues:
+                print(f"[build] auto-detected residue periods: {residues}")
+        encoder = KeyEncoder(table.max_key, base=config.base, residues=residues)
+        codecs = build_codecs(table.columns)
+        if spec is None:
+            spec = MLPSpec(
+                base=config.base,
+                width=encoder.width,
+                shared=tuple(config.shared),
+                private={n: tuple(config.private) for n in table.columns},
+                out_cards={n: codecs[n].cardinality for n in table.columns},
+                dtype=config.dtype,
+            )
+        digits = encoder.digits(table.keys)
+        codes = np.stack([codecs[t].codes for t in spec.tasks], axis=1)
+        if params is None:
+            params, _, hist = trainer_lib.train(spec, digits, codes, config.train)
+            if verbose:
+                print(f"[build] trained {len(hist)} epochs, final loss {hist[-1]:.5f}")
+        predict_fn = _make_predict_fn(params, spec, config)
+        wrong = trainer_lib.evaluate_misclassified(
+            params, digits, codes, spec, predict_fn=predict_fn
+        )
+        aux = AuxTable.build(
+            table.keys[wrong],
+            codes[wrong],
+            codec=config.codec,
+            partition_bytes=config.partition_bytes,
+            pool=pool,
+        )
+        vexist = BitVector.from_keys(table.keys)
+        store = cls(
+            encoder=encoder,
+            spec=spec,
+            params=params,
+            codecs=codecs,
+            aux=aux,
+            vexist=vexist,
+            raw_bytes=table.raw_size_bytes(),
+            num_rows=table.num_rows,
+            config=config,
+        )
+        if verbose:
+            memorized = 1.0 - wrong.mean() if wrong.size else 1.0
+            print(
+                f"[build] memorized {memorized:.1%} of {table.num_rows} rows; "
+                f"ratio {store.compression_ratio():.4f}"
+            )
+        return store
+
+    # ---------------------------------------------------------------- lookup
+    def _infer_codes(self, keys: np.ndarray) -> np.ndarray:
+        """Model predictions for (possibly out-of-capacity) keys."""
+        if not hasattr(self, "_predict_fn"):
+            self._predict_fn = _make_predict_fn(self.params, self.spec, self.config)
+        out = np.zeros((keys.shape[0], len(self.spec.tasks)), dtype=np.int32)
+        in_cap = keys < self.encoder.capacity
+        idx = np.flatnonzero(in_cap)
+        bs = self.config.inference_batch
+        for start in range(0, idx.size, bs):
+            sel = idx[start : start + bs]
+            digits = self.encoder.digits(keys[sel])
+            out[sel] = np.asarray(self._predict_fn(jnp.asarray(digits)))
+        return out
+
+    def lookup(
+        self, keys: np.ndarray, columns: Optional[Tuple[str, ...]] = None
+    ) -> Tuple[Dict[str, np.ndarray], np.ndarray]:
+        """Algorithm 1 — batched exact-match lookup.
+
+        Returns ``(values, exists)``: per-column decoded arrays (rows
+        where ``exists`` is False are NULL — filled with the column's
+        code-0 value, callers must respect the mask) plus the existence
+        mask.
+        """
+        keys = np.asarray(keys, dtype=np.int64)
+        stats = LookupStats()
+
+        t0 = time.perf_counter()
+        pred = self._infer_codes(keys)                       # line 3 (batch inference)
+        t1 = time.perf_counter()
+        exists = self.vexist.test(keys)                      # line 5 (existence check)
+        t2 = time.perf_counter()
+        # line 6-8: aux override for existing keys only.
+        exist_idx = np.flatnonzero(exists)
+        found, aux_codes = self.aux.get(keys[exist_idx])
+        pred[exist_idx[found]] = aux_codes[found]
+        t3 = time.perf_counter()
+        # line 13: decode.
+        wanted = columns if columns is not None else self.spec.tasks
+        values: Dict[str, np.ndarray] = {}
+        for i, t in enumerate(self.spec.tasks):
+            if t in wanted:
+                safe = np.where(exists, pred[:, i], 0)
+                values[t] = self.codecs[t].decode(safe)
+        t4 = time.perf_counter()
+
+        stats.infer_s, stats.exist_s = t1 - t0, t2 - t1
+        stats.aux_s, stats.decode_s = t3 - t2, t4 - t3
+        self.last_stats = stats
+        return values, exists
+
+    # ------------------------------------------------ modifications (Alg 3-5)
+    def _encode_rows(self, columns: Dict[str, np.ndarray]) -> np.ndarray:
+        """Encode raw values to codes, extending codecs for unseen values.
+
+        Codes beyond a head's out_card can never be predicted by ``M``,
+        so such rows are automatically routed to T_aux — exactly the
+        paper's semantics for values the model cannot express.
+        """
+        cols = []
+        for t in self.spec.tasks:
+            codec = self.codecs[t]
+            codec.extend(columns[t])
+            codes, known = codec.encode(columns[t])
+            assert known.all(), "extend() must make every value encodable"
+            cols.append(codes)
+        return np.stack(cols, axis=1)
+
+    def insert(self, keys: np.ndarray, columns: Dict[str, np.ndarray]) -> None:
+        """Algorithm 3. Pairs the model already generalizes to are NOT
+        stored; the rest land in T_aux."""
+        keys = np.asarray(keys, dtype=np.int64)
+        if self.vexist.test(keys).any():
+            raise ValueError("insert of existing key; use update()")
+        codes = self._encode_rows(columns)
+        self.vexist.set(keys, True)                      # line 4
+        pred = self._infer_codes(keys)                   # line 5 (inference check)
+        wrong = (pred != codes).any(axis=1) | (keys >= self.encoder.capacity)
+        if wrong.any():
+            self.aux.add(keys[wrong], codes[wrong])      # line 9
+        self.num_rows += keys.shape[0]
+        self.raw_bytes += int(keys.shape[0] * self._bytes_per_row)
+        self.modified_bytes += int(keys.shape[0] * self._bytes_per_row)
+
+    def delete(self, keys: np.ndarray) -> None:
+        """Algorithm 4. Existence bit off; purge from T_aux if present."""
+        keys = np.asarray(keys, dtype=np.int64)
+        present = self.vexist.test(keys)
+        keys = keys[present]
+        if keys.size == 0:
+            return
+        self.vexist.set(keys, False)                     # line 4
+        in_aux = self.aux.contains(keys)                 # line 5
+        if in_aux.any():
+            self.aux.remove(keys[in_aux])
+        self.num_rows -= keys.shape[0]
+        self.raw_bytes -= int(keys.shape[0] * self._bytes_per_row)
+        self.modified_bytes += int(keys.shape[0] * self._bytes_per_row)
+
+    def update(self, keys: np.ndarray, columns: Dict[str, np.ndarray]) -> None:
+        """Algorithm 5. Correctly-predicted updates drop any aux entry;
+        the rest are upserted into T_aux."""
+        keys = np.asarray(keys, dtype=np.int64)
+        if not self.vexist.test(keys).all():
+            raise ValueError("update of non-existing key; use insert()")
+        codes = self._encode_rows(columns)
+        pred = self._infer_codes(keys)
+        right = (pred == codes).all(axis=1) & (keys < self.encoder.capacity)
+        if right.any():
+            in_aux = self.aux.contains(keys[right])      # line 4
+            if in_aux.any():
+                self.aux.remove(keys[right][in_aux])
+        wrong = ~right
+        if wrong.any():
+            self.aux.update(keys[wrong], codes[wrong])   # lines 7-11
+        self.modified_bytes += int(keys.shape[0] * self._bytes_per_row)
+
+    def range_lookup(
+        self, lo: int, hi: int, columns: Optional[Tuple[str, ...]] = None
+    ) -> Tuple[np.ndarray, Dict[str, np.ndarray]]:
+        """Paper §IV-E, first approach: range-filter the existence index
+        to collect keys in [lo, hi), then answer them by batch inference
+        (Algorithm 1).  Exact (not the approximate view-based variant).
+
+        Returns (keys, values) for existing keys in the range.
+        """
+        lo = max(0, int(lo))
+        hi = min(int(hi), self.vexist.capacity)
+        found_keys = []
+        chunk = 1 << 20
+        for start in range(lo, hi, chunk):
+            ks = np.arange(start, min(start + chunk, hi), dtype=np.int64)
+            found_keys.append(ks[self.vexist.test(ks)])
+        keys = (
+            np.concatenate(found_keys) if found_keys else np.zeros(0, dtype=np.int64)
+        )
+        values, exists = self.lookup(keys, columns)
+        assert bool(exists.all())
+        return keys, values
+
+    def should_retrain(self) -> bool:
+        thr = self.config.retrain_after_modified_bytes
+        return thr is not None and self.modified_bytes >= thr
+
+    def materialize(self) -> Table:
+        """Reconstruct the full logical table (used by retrain)."""
+        capacity = self.vexist.capacity
+        chunk = 1 << 20
+        key_parts = []
+        for start in range(0, capacity, chunk):
+            ks = np.arange(start, min(start + chunk, capacity), dtype=np.int64)
+            key_parts.append(ks[self.vexist.test(ks)])
+        keys = (
+            np.concatenate(key_parts) if key_parts else np.zeros(0, dtype=np.int64)
+        )
+        values, exists = self.lookup(keys)
+        assert bool(exists.all())
+        return Table(keys=keys, columns=values)
+
+    def retrain(self, verbose: bool = False) -> "DeepMappingStore":
+        """Rebuild model + auxiliary structures on current logical data
+        (paper: lazily, offline/background/non-peak)."""
+        return DeepMappingStore.build(
+            self.materialize(), self.config, pool=self.aux.pool, verbose=verbose
+        )
+
+    # ------------------------------------------------------------- accounting
+    def size_breakdown(self) -> Dict[str, int]:
+        """Bytes per component — the paper's Fig. 6 storage breakdown."""
+        return {
+            "model": model_lib.model_size_bytes(self.params),
+            "aux_table": self.aux.size_bytes(),
+            "exist_bitvector": self.vexist.size_bytes(),
+            "decode_map": sum(c.size_bytes() for c in self.codecs.values())
+            + self.encoder.size_bytes(),
+        }
+
+    def size_bytes(self) -> int:
+        return sum(self.size_breakdown().values())
+
+    def compression_ratio(self) -> float:
+        """Paper Eq. 1 — lower is better; 1.0 means no compression."""
+        return self.size_bytes() / max(1, self.raw_bytes)
+
+    def memorized_fraction(self) -> float:
+        """Fraction of rows answered by ``M`` alone (paper reports 66-81%)."""
+        return 1.0 - self.aux.num_rows / max(1, self.num_rows)

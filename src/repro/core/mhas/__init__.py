@@ -1,0 +1,13 @@
+"""Multi-task Hybrid Architecture Search (paper §IV-C, Algorithm 2).
+
+ENAS-style parameter sharing: every candidate architecture is a masked
+sub-network of one max-width weight bank, so child models never train
+from scratch and a single XLA compilation serves the entire search.
+The LSTM controller samples (shared depth, shared sizes, per-task
+private depth/sizes) autoregressively and is trained with REINFORCE
+against the paper's Eq. 1 — the *whole hybrid structure's* compression
+ratio, including the auxiliary table the sampled model would need.
+"""
+
+from repro.core.mhas.search import MHASConfig, MHASResult, run_mhas  # noqa: F401
+from repro.core.mhas.search_space import SearchSpace  # noqa: F401

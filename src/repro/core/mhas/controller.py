@@ -1,0 +1,146 @@
+"""LSTM controller (paper §IV-C2): samples architecture decisions via
+softmax classifiers in an autoregressive fashion — 64 hidden units, as
+in ENAS, trained with Adam at lr 3.5e-4 (paper §V-A6) using REINFORCE
+on the Eq. 1 reward.
+
+Decision sequence (fixed length): for the trunk and then for each task,
+one *depth* decision (0..max_layers) followed by ``max_layers`` *size*
+decisions (indices into ``layer_sizes``; sizes beyond the sampled depth
+are ignored by the search space but still sampled, keeping the sequence
+shape static for jit).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.mhas.search_space import SearchSpace
+
+HIDDEN = 64  # paper: LSTM with 64 hidden units
+EMBED = 32
+
+
+@dataclasses.dataclass(frozen=True)
+class ControllerSpec:
+    num_decisions: int
+    depth_choices: int           # max_layers + 1
+    size_choices: int
+    kinds: Tuple[int, ...]       # 0=depth, 1=size per step
+
+    @classmethod
+    def for_space(cls, space: SearchSpace) -> "ControllerSpec":
+        return cls(
+            num_decisions=space.num_decisions,
+            depth_choices=space.max_layers + 1,
+            size_choices=space.num_size_choices,
+            kinds=tuple(int(k) for k in space.decision_kinds()),
+        )
+
+    @property
+    def vocab(self) -> int:
+        # start token + depth tokens + size tokens (disjoint id ranges)
+        return 1 + self.depth_choices + self.size_choices
+
+    def token_id(self, kind: int, choice: jnp.ndarray) -> jnp.ndarray:
+        return jnp.where(kind == 0, 1 + choice, 1 + self.depth_choices + choice)
+
+    @property
+    def max_choices(self) -> int:
+        return max(self.depth_choices, self.size_choices)
+
+
+def init_controller(spec: ControllerSpec, seed: int = 0) -> Dict:
+    # paper: parameters initialized from N(0, 0.05^2)
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 6)
+    init = lambda k, shape: 0.05 * jax.random.normal(k, shape, jnp.float32)
+    return {
+        "embed": init(ks[0], (spec.vocab, EMBED)),
+        "wx": init(ks[1], (EMBED, 4 * HIDDEN)),
+        "wh": init(ks[2], (HIDDEN, 4 * HIDDEN)),
+        "b": jnp.zeros((4 * HIDDEN,), jnp.float32),
+        "depth_head": init(ks[3], (HIDDEN, spec.depth_choices)),
+        "size_head": init(ks[4], (HIDDEN, spec.size_choices)),
+    }
+
+
+def _lstm_step(params: Dict, h, c, x):
+    z = x @ params["wx"] + h @ params["wh"] + params["b"]
+    i, f, g, o = jnp.split(z, 4, axis=-1)
+    c = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h = jax.nn.sigmoid(o) * jnp.tanh(c)
+    return h, c
+
+
+def _step_logits(params: Dict, spec: ControllerSpec, h, kind):
+    """Kind-select between heads, padding to max_choices with -inf."""
+    mc = spec.max_choices
+    dl = h @ params["depth_head"]
+    sl = h @ params["size_head"]
+    pad = lambda l: jnp.pad(l, (0, mc - l.shape[-1]), constant_values=-1e9)
+    return jnp.where(kind == 0, pad(dl), pad(sl))
+
+
+@functools.partial(jax.jit, static_argnames=("spec",))
+def sample_arch(params: Dict, spec: ControllerSpec, rng) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Autoregressively sample one decision sequence.
+
+    Returns (tokens (D,) int32 choice indices, sum logprob, sum entropy).
+    """
+    kinds = jnp.asarray(spec.kinds, jnp.int32)
+
+    def step(carry, inp):
+        h, c, prev_tok, key = carry
+        kind = inp
+        x = params["embed"][prev_tok]
+        h, c = _lstm_step(params, h, c, x)
+        logits = _step_logits(params, spec, h, kind)
+        key, sub = jax.random.split(key)
+        choice = jax.random.categorical(sub, logits)
+        logp = jax.nn.log_softmax(logits)[choice]
+        probs = jax.nn.softmax(logits)
+        entropy = -jnp.sum(probs * jnp.where(probs > 0, jnp.log(probs + 1e-12), 0.0))
+        tok = spec.token_id(kind, choice)
+        return (h, c, tok, key), (choice, logp, entropy)
+
+    carry = (
+        jnp.zeros((HIDDEN,), jnp.float32),
+        jnp.zeros((HIDDEN,), jnp.float32),
+        jnp.zeros((), jnp.int32),  # start token id 0
+        rng,
+    )
+    _, (choices, logps, ents) = jax.lax.scan(step, carry, kinds)
+    return choices.astype(jnp.int32), logps.sum(), ents.sum()
+
+
+@functools.partial(jax.jit, static_argnames=("spec",))
+def logprob_of(params: Dict, spec: ControllerSpec, tokens: jnp.ndarray):
+    """Differentiable log-probability (+entropy) of a sampled sequence —
+    the REINFORCE score function."""
+    kinds = jnp.asarray(spec.kinds, jnp.int32)
+
+    def step(carry, inp):
+        h, c, prev_tok = carry
+        kind, choice = inp
+        x = params["embed"][prev_tok]
+        h, c = _lstm_step(params, h, c, x)
+        logits = _step_logits(params, spec, h, kind)
+        logp = jax.nn.log_softmax(logits)[choice]
+        probs = jax.nn.softmax(logits)
+        entropy = -jnp.sum(probs * jnp.where(probs > 0, jnp.log(probs + 1e-12), 0.0))
+        tok = spec.token_id(kind, choice)
+        return (h, c, tok), (logp, entropy)
+
+    carry = (
+        jnp.zeros((HIDDEN,), jnp.float32),
+        jnp.zeros((HIDDEN,), jnp.float32),
+        jnp.zeros((), jnp.int32),
+    )
+    _, (logps, ents) = jax.lax.scan(step, carry, (kinds, tokens))
+    return logps.sum(), ents.sum()

@@ -1,0 +1,229 @@
+"""MHAS search space: weight bank + masked child forward (paper §IV-C1).
+
+The space is the paper's DAG per tree node: up to ``max_layers`` shared
+hidden layers and up to ``max_layers`` private hidden layers per task,
+with each hidden layer's width chosen from ``layer_sizes`` (paper
+searches [100, 2000]).  A sampled sub-graph =
+``(shared_depth, shared_sizes[..], {task: (depth, sizes[..])})``.
+
+Weight sharing à la ENAS: one bank of ``(max_width, max_width)``
+matrices; a child with width ``s`` uses the first ``s`` columns (mask)
+and — because the previous activation is zero beyond its own width —
+effectively the first ``prev`` rows.  Masked evaluation is exactly
+equivalent to slicing, but keeps every child the same XLA shape: the
+whole search compiles ONCE.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.model import MLPSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchSpace:
+    base: int
+    width: int                       # key digit positions
+    tasks: Tuple[str, ...]
+    out_cards: Tuple[int, ...]       # aligned with tasks
+    layer_sizes: Tuple[int, ...] = (100, 200, 400, 800, 1200, 1600, 2000)
+    max_layers: int = 2              # paper §V-A6: up to 2 shared + 2 private
+
+    @property
+    def feature_dim(self) -> int:
+        return self.base * self.width
+
+    @property
+    def max_width(self) -> int:
+        return max(self.feature_dim, max(self.layer_sizes))
+
+    @property
+    def num_size_choices(self) -> int:
+        return len(self.layer_sizes)
+
+    @property
+    def num_decisions(self) -> int:
+        """Controller sequence length: (depth + max_layers sizes) for the
+        trunk and for each task."""
+        return (1 + self.max_layers) * (1 + len(self.tasks))
+
+    def decision_kinds(self) -> np.ndarray:
+        """0 = depth decision (choices: max_layers+1), 1 = size decision."""
+        block = [0] + [1] * self.max_layers
+        return np.asarray(block * (1 + len(self.tasks)), dtype=np.int32)
+
+    # ------------------------------------------------------------- bank init
+    def init_bank(self, seed: int = 0, dtype=jnp.float32) -> Dict:
+        mw = self.max_width
+        key = jax.random.PRNGKey(seed)
+        n_mats = self.max_layers * (1 + len(self.tasks)) + len(self.tasks)
+        keys = iter(jax.random.split(key, n_mats))
+
+        def mat(out_dim):
+            k = next(keys)
+            w = jax.random.normal(k, (mw, out_dim), dtype) * jnp.sqrt(2.0 / mw)
+            return {"w": w, "b": jnp.zeros((out_dim,), dtype)}
+
+        bank = {
+            "trunk": [mat(mw) for _ in range(self.max_layers)],
+            "heads": {
+                t: {
+                    "hidden": [mat(mw) for _ in range(self.max_layers)],
+                    "out": mat(card),
+                }
+                for t, card in zip(self.tasks, self.out_cards)
+            },
+        }
+        return bank
+
+    # -------------------------------------------------------- arch encoding
+    def tokens_to_arch(self, tokens: np.ndarray) -> Dict:
+        """Controller token sequence -> arch dict with ACTUAL widths."""
+        tokens = np.asarray(tokens)
+        sizes = np.asarray(self.layer_sizes, dtype=np.int32)
+        ml = self.max_layers
+        arch = {
+            "trunk_depth": int(tokens[0]),
+            "trunk_sizes": sizes[tokens[1 : 1 + ml] % len(sizes)],
+        }
+        off = 1 + ml
+        heads = {}
+        for t in self.tasks:
+            heads[t] = {
+                "depth": int(tokens[off]),
+                "sizes": sizes[tokens[off + 1 : off + 1 + ml] % len(sizes)],
+            }
+            off += 1 + ml
+        arch["heads"] = heads
+        return arch
+
+    def arch_arrays(self, arch: Dict) -> Dict[str, jnp.ndarray]:
+        """Arch dict -> fixed-shape device arrays for the masked forward."""
+        T = len(self.tasks)
+        ml = self.max_layers
+        head_depth = np.zeros((T,), np.int32)
+        head_sizes = np.zeros((T, ml), np.int32)
+        for i, t in enumerate(self.tasks):
+            head_depth[i] = arch["heads"][t]["depth"]
+            head_sizes[i] = arch["heads"][t]["sizes"]
+        return {
+            "trunk_depth": jnp.asarray(arch["trunk_depth"], jnp.int32),
+            "trunk_sizes": jnp.asarray(np.asarray(arch["trunk_sizes"], np.int32)),
+            "head_depth": jnp.asarray(head_depth),
+            "head_sizes": jnp.asarray(head_sizes),
+        }
+
+    # ------------------------------------------------------- masked forward
+    def forward(self, bank: Dict, onehot_pad: jnp.ndarray, aa: Dict) -> Dict[str, jnp.ndarray]:
+        """Masked child forward. ``onehot_pad`` is (n, max_width) — the
+        one-hot key features zero-padded to bank width."""
+        mw = self.max_width
+        iota = jnp.arange(mw)
+
+        def masked_layer(layer, x, active, size):
+            h = jax.nn.relu(x @ layer["w"] + layer["b"])
+            h = h * (iota < size)[None, :]
+            return jnp.where(active, h, x)
+
+        x = onehot_pad
+        for i in range(self.max_layers):
+            x = masked_layer(
+                bank["trunk"][i], x, aa["trunk_depth"] > i, aa["trunk_sizes"][i]
+            )
+        out = {}
+        for ti, t in enumerate(self.tasks):
+            h = x
+            head = bank["heads"][t]
+            for j in range(self.max_layers):
+                h = masked_layer(
+                    head["hidden"][j], h, aa["head_depth"][ti] > j, aa["head_sizes"][ti, j]
+                )
+            out[t] = h @ head["out"]["w"] + head["out"]["b"]
+        return out
+
+    # ------------------------------------------------- child model metadata
+    def child_num_params(self, arch: Dict) -> int:
+        """Parameter count of the SLICED child (what Eq. 1's size(M) sees)."""
+        total = 0
+        d = self.feature_dim
+        for i in range(arch["trunk_depth"]):
+            h = int(arch["trunk_sizes"][i])
+            total += d * h + h
+            d = h
+        trunk = d
+        for t, card in zip(self.tasks, self.out_cards):
+            d = trunk
+            hd = arch["heads"][t]
+            for j in range(hd["depth"]):
+                h = int(hd["sizes"][j])
+                total += d * h + h
+                d = h
+            total += d * card + card
+        return total
+
+    def child_spec(self, arch: Dict) -> MLPSpec:
+        return MLPSpec(
+            base=self.base,
+            width=self.width,
+            shared=tuple(int(s) for s in arch["trunk_sizes"][: arch["trunk_depth"]]),
+            private={
+                t: tuple(
+                    int(s)
+                    for s in arch["heads"][t]["sizes"][: arch["heads"][t]["depth"]]
+                )
+                for t in self.tasks
+            },
+            out_cards={t: c for t, c in zip(self.tasks, self.out_cards)},
+        )
+
+    def extract_child_params(self, bank: Dict, arch: Dict) -> Dict:
+        """Slice the bank into a standalone ``repro.core.model`` param tree
+        (used to warm-start the post-search fine-tune — the ENAS payoff)."""
+        bank = jax.tree.map(np.asarray, bank)
+        fd = self.feature_dim
+
+        def first_from_input(w, b, out_dim):
+            return {
+                "w": jnp.asarray(w[:fd, :out_dim].reshape(self.width, self.base, out_dim)),
+                "b": jnp.asarray(b[:out_dim]),
+            }
+
+        def dense(w, b, in_dim, out_dim):
+            return {"w": jnp.asarray(w[:in_dim, :out_dim]), "b": jnp.asarray(b[:out_dim])}
+
+        params: Dict = {"shared": [], "heads": {}}
+        d = None
+        for i in range(arch["trunk_depth"]):
+            h = int(arch["trunk_sizes"][i])
+            layer = bank["trunk"][i]
+            if d is None:
+                params["shared"].append(first_from_input(layer["w"], layer["b"], h))
+            else:
+                params["shared"].append(dense(layer["w"], layer["b"], d, h))
+            d = h
+        trunk_dim = d
+        for t, card in zip(self.tasks, self.out_cards):
+            hd = arch["heads"][t]
+            head = {"hidden": [], "out": None}
+            cur = trunk_dim
+            for j in range(hd["depth"]):
+                h = int(hd["sizes"][j])
+                layer = bank["heads"][t]["hidden"][j]
+                if cur is None:
+                    head["hidden"].append(first_from_input(layer["w"], layer["b"], h))
+                else:
+                    head["hidden"].append(dense(layer["w"], layer["b"], cur, h))
+                cur = h
+            out_layer = bank["heads"][t]["out"]
+            if cur is None:
+                head["out"] = first_from_input(out_layer["w"], out_layer["b"], card)
+            else:
+                head["out"] = dense(out_layer["w"], out_layer["b"], cur, card)
+            params["heads"][t] = head
+        return params

@@ -1,0 +1,203 @@
+"""Compact multi-task MLP that memorizes key->value mappings (paper §IV-A).
+
+Structure: a stack of *shared* fully-connected layers abstracting the
+key, then per-value-column *private* stacks ending in a logits layer
+(one softmax classifier per column).  Strings/categoricals are integer
+codes; keys are digit-decomposed (``repro.core.encoding``).
+
+The first dense layer from the input is stored as a rank-3 tensor
+``(width, base, out)`` and evaluated as a **gather** (sum of rows
+selected by digit codes) — mathematically identical to a dense matmul on
+the one-hot encoding but never materializes it.  ``forward_onehot`` is
+the reference path used by tests and by the Pallas kernel oracles.
+
+Everything is pure JAX on pytrees: no flax/haiku dependency.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class MLPSpec:
+    """Architecture of one hybrid DeepMapping model.
+
+    Hashable (usable as a jit static argument): dict-valued fields are
+    normalized to sorted tuples of pairs at construction.
+    """
+
+    base: int
+    width: int
+    shared: Tuple[int, ...]
+    private: Tuple[Tuple[str, Tuple[int, ...]], ...]
+    out_cards: Tuple[Tuple[str, int], ...]
+    dtype: str = "float32"
+
+    def __init__(self, base, width, shared, private, out_cards, dtype="float32"):
+        if isinstance(private, dict):
+            private = tuple(sorted((k, tuple(v)) for k, v in private.items()))
+        if isinstance(out_cards, dict):
+            out_cards = tuple(sorted(out_cards.items()))
+        object.__setattr__(self, "base", int(base))
+        object.__setattr__(self, "width", int(width))
+        object.__setattr__(self, "shared", tuple(shared))
+        object.__setattr__(self, "private", tuple(private))
+        object.__setattr__(self, "out_cards", tuple(out_cards))
+        object.__setattr__(self, "dtype", dtype)
+        if {k for k, _ in self.private} != {k for k, _ in self.out_cards}:
+            raise ValueError("private/out_cards task mismatch")
+        if not self.out_cards:
+            raise ValueError("need at least one task")
+
+    @property
+    def tasks(self) -> Tuple[str, ...]:
+        return tuple(k for k, _ in self.out_cards)
+
+    @property
+    def private_map(self) -> Dict[str, Tuple[int, ...]]:
+        return dict(self.private)
+
+    @property
+    def card_map(self) -> Dict[str, int]:
+        return dict(self.out_cards)
+
+    @property
+    def feature_dim(self) -> int:
+        return self.base * self.width
+
+    def num_params(self) -> int:
+        total = 0
+        priv, cards = self.private_map, self.card_map
+        d = self.feature_dim
+        for h in self.shared:
+            total += d * h + h
+            d = h
+        trunk = d
+        for t in self.tasks:
+            d = trunk
+            for h in priv[t]:
+                total += d * h + h
+                d = h
+            total += d * cards[t] + cards[t]
+        return total
+
+    def size_bytes(self) -> int:
+        """On-disk model size — Eq. 1's ``size(M)`` (fp32 serialized)."""
+        itemsize = jnp.dtype(self.dtype).itemsize
+        return self.num_params() * itemsize
+
+
+def _init_dense(key, in_dim: int, out_dim: int, dtype) -> Dict[str, jnp.ndarray]:
+    # He-normal: memorization nets are ReLU stacks.
+    w = jax.random.normal(key, (in_dim, out_dim), dtype) * jnp.sqrt(2.0 / in_dim).astype(dtype)
+    return {"w": w, "b": jnp.zeros((out_dim,), dtype)}
+
+
+def init_params(spec: MLPSpec, seed: int = 0) -> Dict:
+    """Initialize parameters. First layer from input is (width, base, out)."""
+    dtype = jnp.dtype(spec.dtype)
+    key = jax.random.PRNGKey(seed)
+    n_heads = len(spec.tasks)
+    keys = jax.random.split(key, 1 + len(spec.shared) + 4 * n_heads)
+    ki = iter(range(len(keys)))
+
+    def first_from_input(k, out_dim):
+        p = _init_dense(k, spec.feature_dim, out_dim, dtype)
+        return {"w": p["w"].reshape(spec.width, spec.base, out_dim), "b": p["b"]}
+
+    params: Dict = {"shared": [], "heads": {}}
+    d = None
+    for i, h in enumerate(spec.shared):
+        if i == 0:
+            params["shared"].append(first_from_input(keys[next(ki)], h))
+        else:
+            params["shared"].append(_init_dense(keys[next(ki)], d, h, dtype))
+        d = h
+    trunk_dim = d  # None if no shared layers
+    priv, cards = spec.private_map, spec.card_map
+    for t in spec.tasks:
+        head = {"hidden": [], "out": None}
+        hd = trunk_dim
+        for h in priv[t]:
+            if hd is None:
+                head["hidden"].append(first_from_input(keys[next(ki)], h))
+            else:
+                head["hidden"].append(_init_dense(keys[next(ki)], hd, h, dtype))
+            hd = h
+        if hd is None:
+            head["out"] = first_from_input(keys[next(ki)], cards[t])
+        else:
+            head["out"] = _init_dense(keys[next(ki)], hd, cards[t], dtype)
+        params["heads"][t] = head
+    return params
+
+
+def _apply(layer: Dict, x, digits):
+    w = layer["w"]
+    if w.ndim == 3:
+        # Gather path: sum over digit positions of selected rows.
+        # digits: (n, width) int32 ; w: (width, base, out)
+        assert x is None, "rank-3 layer must be first from input"
+        gathered = jax.vmap(lambda wp, dp: wp[dp], in_axes=(0, 1))(w, digits)
+        return gathered.sum(axis=0) + layer["b"]  # (width, n, out) -> (n, out)
+    return x @ w + layer["b"]
+
+
+def forward_digits(params: Dict, digits: jnp.ndarray, spec: MLPSpec) -> Dict[str, jnp.ndarray]:
+    """digits (n, width) int32 -> {task: (n, card) logits}. Gather fast path."""
+    x = None
+    for layer in params["shared"]:
+        x = jax.nn.relu(_apply(layer, x, digits))
+    out = {}
+    for t in spec.tasks:
+        head = params["heads"][t]
+        h = x
+        for layer in head["hidden"]:
+            h = jax.nn.relu(_apply(layer, h, digits))
+        out[t] = _apply(head["out"], h, digits)
+    return out
+
+
+def _apply_onehot(layer: Dict, x, onehot):
+    w = layer["w"]
+    if w.ndim == 3:
+        assert x is None
+        return onehot @ w.reshape(-1, w.shape[-1]) + layer["b"]
+    return x @ w + layer["b"]
+
+
+def forward_onehot(params: Dict, onehot: jnp.ndarray, spec: MLPSpec) -> Dict[str, jnp.ndarray]:
+    """Reference path: identical math on materialized one-hot features."""
+    x = None
+    for layer in params["shared"]:
+        x = jax.nn.relu(_apply_onehot(layer, x, onehot))
+    out = {}
+    for t in spec.tasks:
+        head = params["heads"][t]
+        h = x
+        for layer in head["hidden"]:
+            h = jax.nn.relu(_apply_onehot(layer, h, onehot))
+        out[t] = _apply_onehot(head["out"], h, onehot)
+    return out
+
+
+def predict_codes(params: Dict, digits: jnp.ndarray, spec: MLPSpec) -> jnp.ndarray:
+    """argmax per task -> (n, m) int32 codes, tasks in spec.tasks order."""
+    logits = forward_digits(params, digits, spec)
+    return jnp.stack([jnp.argmax(logits[t], axis=-1) for t in spec.tasks], axis=1).astype(
+        jnp.int32
+    )
+
+
+def count_params(params: Dict) -> int:
+    return sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params))
+
+
+def model_size_bytes(params: Dict) -> int:
+    return sum(int(np.prod(l.shape)) * l.dtype.itemsize for l in jax.tree.leaves(params))

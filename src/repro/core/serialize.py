@@ -1,0 +1,209 @@
+"""On-disk format for DeepMapping hybrid stores.
+
+Directory layout (atomic: written to ``<dir>.tmp`` then renamed):
+
+    store/
+      meta.msgpack      — spec, encoder, config, counters
+      params.npz        — model weights (flattened path -> array)
+      aux.msgpack       — compacted T_aux state (compressed partitions)
+      vexist.bin        — compressed existence bitvector
+      decode_<col>.npy  — f_decode arrays (numpy native, no pickle for
+                          numeric/string dtypes)
+
+The format is self-describing and versioned; restore works with any
+later minor version.  No pickle anywhere — partitions and weights are
+raw buffers, metadata is msgpack.
+"""
+
+from __future__ import annotations
+
+import os
+import shutil
+from typing import Dict, Tuple
+
+import msgpack
+import numpy as np
+
+from repro.core import model as model_lib
+from repro.core.aux_table import AuxTable
+from repro.core.bitvector import BitVector
+from repro.core.encoding import KeyEncoder, ValueCodec
+from repro.core.hybrid import DeepMappingConfig, DeepMappingStore
+from repro.core.model import MLPSpec
+from repro.storage import MemoryPool
+
+FORMAT_VERSION = 1
+
+
+def _flatten_params(params: Dict, prefix: str = "") -> Dict[str, np.ndarray]:
+    flat: Dict[str, np.ndarray] = {}
+
+    def rec(node, path):
+        if isinstance(node, dict):
+            for k, v in node.items():
+                rec(v, f"{path}/{k}")
+        elif isinstance(node, (list, tuple)):
+            for i, v in enumerate(node):
+                rec(v, f"{path}/{i}")
+        else:
+            flat[path] = np.asarray(node)
+
+    rec(params, prefix)
+    return flat
+
+
+def _unflatten_params(flat: Dict[str, np.ndarray], spec: MLPSpec) -> Dict:
+    params = model_lib.init_params(spec, seed=0)
+    ref = _flatten_params(params)
+    if set(ref) != set(flat):
+        raise ValueError("param tree mismatch on load")
+
+    def rec(node, path):
+        if isinstance(node, dict):
+            return {k: rec(v, f"{path}/{k}") for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            return [rec(v, f"{path}/{i}") for i, v in enumerate(node)]
+        import jax.numpy as jnp
+
+        return jnp.asarray(flat[path])
+
+    return rec(params, "")
+
+
+def save_store(store: DeepMappingStore, path: str) -> None:
+    tmp = path + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+
+    meta = {
+        "version": FORMAT_VERSION,
+        "spec": {
+            "base": store.spec.base,
+            "width": store.spec.width,
+            "shared": list(store.spec.shared),
+            "private": [[k, list(v)] for k, v in store.spec.private],
+            "out_cards": [[k, v] for k, v in store.spec.out_cards],
+            "dtype": store.spec.dtype,
+        },
+        "encoder": {
+            "max_key_capacity": store.encoder.capacity,
+            "base": store.encoder.base,
+            "residues": list(store.encoder.residues),
+        },
+        "config": {
+            "codec": store.config.codec,
+            "partition_bytes": store.config.partition_bytes,
+            "base": store.config.base,
+        },
+        "raw_bytes": store.raw_bytes,
+        "num_rows": store.num_rows,
+        "modified_bytes": store.modified_bytes,
+        "columns": list(store.spec.tasks),
+    }
+    with open(os.path.join(tmp, "meta.msgpack"), "wb") as f:
+        f.write(msgpack.packb(meta))
+
+    np.savez(os.path.join(tmp, "params.npz"), **_flatten_params(store.params))
+
+    aux_state = store.aux.to_state()
+    aux_blob = msgpack.packb(
+        {
+            "codec": aux_state["codec"],
+            "partition_bytes": aux_state["partition_bytes"],
+            "num_values": aux_state["num_values"],
+            "partitions": aux_state["partitions"],
+            "boundaries": aux_state["boundaries"].tobytes(),
+            "part_rows": aux_state["part_rows"],
+            "rows": aux_state["rows"],
+        }
+    )
+    with open(os.path.join(tmp, "aux.msgpack"), "wb") as f:
+        f.write(aux_blob)
+
+    with open(os.path.join(tmp, "vexist.bin"), "wb") as f:
+        f.write(store.vexist.to_bytes())
+
+    for col in store.spec.tasks:
+        dm = store.codecs[col].decode_map
+        if dm.dtype == object:
+            dm = dm.astype(str)  # unicode arrays serialize without pickle
+        np.save(os.path.join(tmp, f"decode_{col}.npy"), dm, allow_pickle=False)
+
+    if os.path.exists(path):
+        shutil.rmtree(path)
+    os.rename(tmp, path)
+
+
+def load_store(path: str, pool: MemoryPool | None = None) -> DeepMappingStore:
+    with open(os.path.join(path, "meta.msgpack"), "rb") as f:
+        meta = msgpack.unpackb(f.read())
+    if meta["version"] > FORMAT_VERSION:
+        raise ValueError(f"store format {meta['version']} newer than reader")
+
+    s = meta["spec"]
+    spec = MLPSpec(
+        base=s["base"],
+        width=s["width"],
+        shared=tuple(s["shared"]),
+        private={k: tuple(v) for k, v in s["private"]},
+        out_cards={k: v for k, v in s["out_cards"]},
+        dtype=s["dtype"],
+    )
+    with np.load(os.path.join(path, "params.npz")) as z:
+        flat = {k: z[k] for k in z.files}
+    params = _unflatten_params(flat, spec)
+
+    with open(os.path.join(path, "aux.msgpack"), "rb") as f:
+        a = msgpack.unpackb(f.read())
+    aux = AuxTable.from_state(
+        {
+            "codec": a["codec"],
+            "partition_bytes": a["partition_bytes"],
+            "num_values": a["num_values"],
+            "partitions": a["partitions"],
+            "boundaries": np.frombuffer(a["boundaries"], dtype=np.int64),
+            "part_rows": a["part_rows"],
+            "rows": a["rows"],
+        },
+        pool=pool,
+    )
+
+    with open(os.path.join(path, "vexist.bin"), "rb") as f:
+        vexist = BitVector.from_bytes(f.read())
+
+    codecs: Dict[str, ValueCodec] = {}
+    for col in meta["columns"]:
+        dm = np.load(os.path.join(path, f"decode_{col}.npy"), allow_pickle=False)
+        codec = ValueCodec.__new__(ValueCodec)
+        codec.name = col
+        codec.decode_map = dm
+        codec._codes = np.zeros(0, dtype=np.int32)  # codes only needed at build
+        codec._encode = {v: i for i, v in enumerate(dm.tolist())}
+        codecs[col] = codec
+
+    # Reconstruct the KeyEncoder with the same width/base/residues.
+    base = meta["encoder"]["base"]
+    cap = meta["encoder"]["max_key_capacity"]
+    residues = tuple(meta["encoder"].get("residues", ()))
+    enc = KeyEncoder(max_key=max(0, cap - 1), base=base, residues=residues)
+    assert enc.capacity == cap
+
+    cfg = DeepMappingConfig(
+        base=meta["config"]["base"],
+        codec=meta["config"]["codec"],
+        partition_bytes=meta["config"]["partition_bytes"],
+    )
+    store = DeepMappingStore(
+        encoder=enc,
+        spec=spec,
+        params=params,
+        codecs=codecs,
+        aux=aux,
+        vexist=vexist,
+        raw_bytes=meta["raw_bytes"],
+        num_rows=meta["num_rows"],
+        config=cfg,
+    )
+    store.modified_bytes = meta["modified_bytes"]
+    return store

@@ -1,0 +1,19 @@
+"""Pallas TPU kernels for the DeepMapping lookup hot path.
+
+The paper's Algorithm 1 line 3 — batched inference of the multi-task
+memorization MLP — dominates device time.  Three kernels:
+
+* ``fused_mlp``   — the WHOLE multi-task model (one-hot-free first layer,
+  shared trunk computed once, every head) in a single VMEM-resident
+  kernel; optionally emits argmax codes instead of logits so HBM writes
+  are O(tasks) int32 per row instead of O(Σ card) floats.
+* ``bitvector``   — packed-word existence test (Algorithm 1 line 5).
+* ``ref``         — pure-jnp oracles for both.
+
+``ops`` holds the jit'd public wrappers with MXU-alignment padding and
+the VMEM-budget check.  Kernels are validated in ``interpret=True`` on
+CPU; the dry-run path never traces them (pure-jnp path is used when
+lowering for the virtual-device mesh).
+"""
+
+from repro.kernels.ops import bitvector_test, fused_mlp_codes, fused_mlp_logits  # noqa: F401

@@ -1,0 +1,166 @@
+"""Fused multi-task MLP inference kernel (pl.pallas_call + BlockSpec).
+
+TPU adaptation of the paper's ONNX-on-GPU batch inference: all model
+weights stay resident in VMEM across the batch (mapping models are
+small — KBs to a few MB); the grid walks batch tiles, so activations
+make exactly ONE HBM round trip instead of one per layer.  The one-hot
+encoding of key digits is materialized per-tile in VMEM as an
+(TILE_N, base) compare-with-iota and immediately consumed by the MXU —
+it never exists in HBM (DESIGN.md §3).
+
+Layout contract (enforced by ops.py):
+* every dense dimension padded to multiples of 128 (MXU lane width);
+* batch tiles of ``tile_n`` rows (multiple of 8, default 256);
+* rank-3 first-layer weights are (width, base_pad, h_pad);
+* with ``emit_codes=True`` each head reduces to int32 argmax codes
+  in-kernel (padded logit columns masked to -inf), shrinking the HBM
+  write from O(Σ cards) floats to one int32 per task per row.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.model import MLPSpec
+
+
+def _plan(spec: MLPSpec) -> Tuple[List[str], Dict[str, List[str]]]:
+    """Layer kinds for trunk and heads: 'embed' (rank-3 from input) or
+    'dense'."""
+    trunk = ["embed" if i == 0 else "dense" for i in range(len(spec.shared))]
+    heads = {}
+    priv = spec.private_map
+    for t in spec.tasks:
+        kinds = []
+        first = len(trunk) == 0
+        for _ in priv[t]:
+            kinds.append("embed" if first else "dense")
+            first = False
+        kinds.append("embed_out" if first else "dense_out")
+        heads[t] = kinds
+    return trunk, heads
+
+
+def _apply_embed(w_ref, b_ref, digits, base_pad):
+    """One-hot-in-VMEM gather-matmul: sum_p onehot(d_p) @ W[p]."""
+    width = w_ref.shape[0]
+    acc = None
+    iota = jax.lax.broadcasted_iota(jnp.int32, (digits.shape[0], base_pad), 1)
+    for p in range(width):
+        onehot = (digits[:, p][:, None] == iota).astype(w_ref.dtype)
+        part = jnp.dot(onehot, w_ref[p], preferred_element_type=jnp.float32)
+        acc = part if acc is None else acc + part
+    return acc + b_ref[...]
+
+
+def make_fused_kernel(
+    spec: MLPSpec,
+    base_pad: int,
+    card_pads: Dict[str, int],
+    emit_codes: bool,
+):
+    """Build the kernel body for this model structure (static closure)."""
+    trunk_kinds, head_kinds = _plan(spec)
+    n_trunk = len(trunk_kinds)
+    cards = spec.card_map
+
+    def kernel(digits_ref, *refs):
+        n_heads = len(spec.tasks)
+        out_refs = refs[len(refs) - n_heads :]
+        w_refs = list(refs[: len(refs) - n_heads])
+        it = iter(w_refs)
+        digits = digits_ref[...]
+
+        x = None
+        for kind in trunk_kinds:
+            w_ref, b_ref = next(it), next(it)
+            if kind == "embed":
+                x = _apply_embed(w_ref, b_ref, digits, base_pad)
+            else:
+                x = jnp.dot(x, w_ref[...], preferred_element_type=jnp.float32) + b_ref[...]
+            x = jnp.maximum(x, 0.0)
+
+        for ti, t in enumerate(spec.tasks):
+            h = x
+            for kind in head_kinds[t]:
+                w_ref, b_ref = next(it), next(it)
+                if kind == "embed":
+                    h = jnp.maximum(_apply_embed(w_ref, b_ref, digits, base_pad), 0.0)
+                elif kind == "dense":
+                    h = jnp.maximum(
+                        jnp.dot(h, w_ref[...], preferred_element_type=jnp.float32)
+                        + b_ref[...],
+                        0.0,
+                    )
+                elif kind == "embed_out":
+                    h = _apply_embed(w_ref, b_ref, digits, base_pad)
+                else:  # dense_out
+                    h = (
+                        jnp.dot(h, w_ref[...], preferred_element_type=jnp.float32)
+                        + b_ref[...]
+                    )
+            if emit_codes:
+                # mask padded logit columns, reduce to codes in-kernel
+                card = cards[t]
+                col = jax.lax.broadcasted_iota(jnp.int32, h.shape, 1)
+                masked = jnp.where(col < card, h, -jnp.inf)
+                out_refs[ti][...] = jnp.argmax(masked, axis=-1).astype(jnp.int32)[:, None]
+            else:
+                out_refs[ti][...] = h
+
+    return kernel
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("spec", "tile_n", "base_pad", "card_pads", "emit_codes", "interpret"),
+)
+def fused_mlp_call(
+    digits: jnp.ndarray,
+    flat_weights: Tuple[jnp.ndarray, ...],
+    spec: MLPSpec,
+    tile_n: int,
+    base_pad: int,
+    card_pads: Tuple[Tuple[str, int], ...],
+    emit_codes: bool,
+    interpret: bool,
+):
+    """digits (N_pad, width) int32; flat_weights in plan order (padded).
+
+    Returns tuple per task: (N_pad, 1) int32 codes if emit_codes else
+    (N_pad, card_pad) float32 logits.
+    """
+    card_pads_d = dict(card_pads)
+    n = digits.shape[0]
+    assert n % tile_n == 0
+    grid = (n // tile_n,)
+    kernel = make_fused_kernel(spec, base_pad, card_pads_d, emit_codes)
+
+    in_specs = [pl.BlockSpec((tile_n, digits.shape[1]), lambda i: (i, 0))]
+    for w in flat_weights:
+        # weights are grid-invariant: whole tensor resident per step
+        in_specs.append(pl.BlockSpec(w.shape, lambda i, nd=w.ndim: (0,) * nd))
+
+    out_shapes, out_specs = [], []
+    for t in spec.tasks:
+        if emit_codes:
+            out_shapes.append(jax.ShapeDtypeStruct((n, 1), jnp.int32))
+            out_specs.append(pl.BlockSpec((tile_n, 1), lambda i: (i, 0)))
+        else:
+            cp = card_pads_d[t]
+            out_shapes.append(jax.ShapeDtypeStruct((n, cp), jnp.float32))
+            out_specs.append(pl.BlockSpec((tile_n, cp), lambda i: (i, 0)))
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(digits, *flat_weights)

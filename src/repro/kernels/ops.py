@@ -1,0 +1,154 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Responsibilities: MXU-alignment padding (zero-padding is exact for
+dense+ReLU chains: padded inputs are zero, padded weight rows/cols are
+zero, ReLU(0)=0 propagates), batch tiling, the VMEM residency budget
+check, and interpret-mode selection (interpret on non-TPU backends so
+the same tests run everywhere).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.model import MLPSpec
+from repro.kernels import bitvector as bv_kernel
+from repro.kernels import fused_mlp as fm_kernel
+
+LANE = 128          # MXU lane width
+DEFAULT_TILE_N = 256
+VMEM_BUDGET_BYTES = 12 * 1024 * 1024  # conservative v5e VMEM residency cap
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _auto_interpret(interpret: Optional[bool]) -> bool:
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+def _pad2(w: jnp.ndarray) -> jnp.ndarray:
+    return jnp.pad(
+        w,
+        ((0, _round_up(w.shape[0], LANE) - w.shape[0]),
+         (0, _round_up(w.shape[1], LANE) - w.shape[1])),
+    )
+
+
+def _pad_flat_weights(params: Dict, spec: MLPSpec) -> Tuple[Tuple[jnp.ndarray, ...], int]:
+    """Flatten + pad weights in kernel plan order. Returns (flat, bytes)."""
+    flat = []
+
+    def add(layer):
+        w, b = layer["w"], layer["b"]
+        if w.ndim == 3:
+            base_pad = _round_up(w.shape[1], LANE)
+            h_pad = _round_up(w.shape[2], LANE)
+            wp = jnp.pad(w, ((0, 0), (0, base_pad - w.shape[1]), (0, h_pad - w.shape[2])))
+        else:
+            wp = _pad2(w)
+            h_pad = wp.shape[1]
+        bp = jnp.pad(b, (0, h_pad - b.shape[0]))
+        flat.append(wp.astype(jnp.float32))
+        flat.append(bp.astype(jnp.float32))
+
+    for layer in params["shared"]:
+        add(layer)
+    for t in spec.tasks:
+        for layer in params["heads"][t]["hidden"]:
+            add(layer)
+        add(params["heads"][t]["out"])
+    nbytes = sum(int(np.prod(x.shape)) * 4 for x in flat)
+    return tuple(flat), nbytes
+
+
+def check_vmem_budget(params: Dict, spec: MLPSpec, tile_n: int) -> None:
+    _, wbytes = _pad_flat_weights(params, spec)
+    widths = [spec.feature_dim, *spec.shared]
+    for t, sizes in spec.private:
+        widths.extend(sizes)
+    act_bytes = tile_n * _round_up(max(widths), LANE) * 4 * 3  # ~double buffering
+    if wbytes + act_bytes > VMEM_BUDGET_BYTES:
+        raise ValueError(
+            f"model too large for VMEM-resident fused kernel "
+            f"({(wbytes + act_bytes) / 2**20:.1f} MiB > "
+            f"{VMEM_BUDGET_BYTES / 2**20:.0f} MiB); use the jnp path"
+        )
+
+
+def _prep(digits: jnp.ndarray, tile_n: int) -> Tuple[jnp.ndarray, int]:
+    n = digits.shape[0]
+    n_pad = _round_up(max(n, tile_n), tile_n)
+    dp = jnp.pad(digits.astype(jnp.int32), ((0, n_pad - n), (0, 0)))
+    return dp, n
+
+
+def fused_mlp_logits(
+    params: Dict,
+    spec: MLPSpec,
+    digits: jnp.ndarray,
+    tile_n: int = DEFAULT_TILE_N,
+    interpret: Optional[bool] = None,
+) -> Dict[str, jnp.ndarray]:
+    """Per-task logits via the fused kernel. digits (n, width) int."""
+    check_vmem_budget(params, spec, tile_n)
+    flat, _ = _pad_flat_weights(params, spec)
+    dp, n = _prep(digits, tile_n)
+    cards = spec.card_map
+    card_pads = tuple((t, _round_up(cards[t], LANE)) for t in spec.tasks)
+    outs = fm_kernel.fused_mlp_call(
+        dp, flat, spec, tile_n, _round_up(spec.base, LANE), card_pads,
+        emit_codes=False, interpret=_auto_interpret(interpret),
+    )
+    return {t: o[:n, : cards[t]] for t, o in zip(spec.tasks, outs)}
+
+
+def fused_mlp_codes(
+    params: Dict,
+    spec: MLPSpec,
+    digits: jnp.ndarray,
+    tile_n: int = DEFAULT_TILE_N,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """(n, num_tasks) int32 argmax codes — Algorithm 1's inference output.
+    The argmax happens in-kernel: HBM sees one int32 per task per row."""
+    check_vmem_budget(params, spec, tile_n)
+    flat, _ = _pad_flat_weights(params, spec)
+    dp, n = _prep(digits, tile_n)
+    cards = spec.card_map
+    card_pads = tuple((t, _round_up(cards[t], LANE)) for t in spec.tasks)
+    outs = fm_kernel.fused_mlp_call(
+        dp, flat, spec, tile_n, _round_up(spec.base, LANE), card_pads,
+        emit_codes=True, interpret=_auto_interpret(interpret),
+    )
+    return jnp.concatenate([o[:n] for o in outs], axis=1)
+
+
+def bitvector_test(
+    words64: np.ndarray,
+    keys: jnp.ndarray,
+    tile_n: int = 1024,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Existence bits for int keys against a packed uint64 word array
+    (the BitVector runtime form). Returns (n,) bool.
+
+    The kernel works on uint32 words.  The 64->32 split happens host-side
+    (``.view``) — JAX without x64 would silently TRUNCATE uint64 on
+    ``jnp.asarray``, losing every odd 32-bit word.
+    """
+    words32 = jnp.asarray(np.asarray(words64, dtype=np.uint64).view(np.uint32))
+    n = keys.shape[0]
+    n_pad = _round_up(max(n, tile_n), tile_n)
+    kp = jnp.pad(keys.astype(jnp.int32), (0, n_pad - n))
+    bits = bv_kernel.bitvector_call(
+        kp, words32, tile_n, _auto_interpret(interpret)
+    )
+    return bits[:n].astype(bool)

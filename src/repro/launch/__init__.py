@@ -1,0 +1,4 @@
+"""Launch layer: mesh factory, multi-pod dry-run driver, train/serve
+entrypoints.  NOTE: ``dryrun`` must be executed as a module entry
+(``python -m repro.launch.dryrun``) so its XLA_FLAGS device-count pin
+happens before any jax import."""

@@ -1,0 +1,348 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run driver (assignment deliverable e).
+
+For every (architecture × input shape × mesh) cell: build shardings,
+``jax.jit(step).lower(...).compile()`` against the 16x16 single-pod and
+2x16x16 multi-pod virtual meshes, record ``memory_analysis()`` /
+``cost_analysis()`` / per-device collective bytes parsed from the
+compiled HLO, and append to ``results/dryrun.jsonl`` (idempotent: cells
+already present are skipped unless --force).
+
+Run as a module so the XLA device-count pin above precedes any jax
+import:  ``PYTHONPATH=src python -m repro.launch.dryrun --arch all``.
+"""
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import re  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs import SHAPES, get_arch, list_archs  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch import specs as specs_lib  # noqa: E402
+from repro.serve.serve_step import make_decode_step, make_prefill_step  # noqa: E402
+from repro.sharding.partition import (  # noqa: E402
+    batch_shardings,
+    cache_shardings,
+    logits_sharding,
+    param_shardings,
+    state_shardings,
+)
+from repro.train.optimizer import adamw  # noqa: E402
+from repro.train.train_step import make_train_step  # noqa: E402
+
+_COLLECTIVE_RE = re.compile(
+    r"=\s+((?:\([^)]*\))|(?:[a-z0-9]+\[[^\]]*\](?:\{[^}]*\})?))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\("
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device collective traffic by op type, from post-SPMD HLO.
+
+    Result shapes in the partitioned module are per-device shards; the
+    ring all-reduce moves ~2x its buffer, others ~1x.
+    """
+    seen_starts = set()
+    out = {"all-gather": 0, "all-reduce": 0, "reduce-scatter": 0,
+           "all-to-all": 0, "collective-permute": 0}
+    for m in _COLLECTIVE_RE.finditer(hlo_text):
+        shape_txt, op = m.group(1), m.group(2)
+        b = _shape_bytes(shape_txt)
+        out[op] += b * (2 if op == "all-reduce" else 1)
+    return out
+
+
+def run_cell(
+    arch_id: str, shape_id: str, multi_pod: bool, microbatches: int = 1,
+    unroll: bool = False, num_layers: int | None = None,
+    overrides: dict | None = None,
+) -> dict:
+    import dataclasses
+
+    spec = get_arch(arch_id)
+    cfg = spec.config
+    if unroll:
+        cfg = dataclasses.replace(cfg, scan_unroll=True)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    restore_spec = None
+    if num_layers is not None:
+        cfg = dataclasses.replace(cfg, num_layers=num_layers)
+    if num_layers is not None or overrides:
+        # patch the registry view so specs/steps see the modified config
+        # (param shapes can change, e.g. vocab padding); restored below.
+        import repro.configs.base as _base
+
+        restore_spec = _base._REGISTRY[arch_id]
+        _base._REGISTRY[arch_id] = dataclasses.replace(spec, config=cfg)
+    sh = SHAPES[shape_id]
+    kind = sh["kind"]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rec = {
+        "arch": arch_id, "shape": shape_id,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": int(np.prod(list(mesh.shape.values()))),
+        "kind": kind, "unrolled": bool(unroll),
+    }
+    if num_layers is not None:
+        rec["num_layers"] = num_layers
+    t0 = time.time()
+    try:
+        rec.update(_lower_and_measure(arch_id, shape_id, cfg, sh, kind, mesh,
+                                      microbatches, t0))
+    finally:
+        if restore_spec is not None:
+            import repro.configs.base as _base
+
+            _base._REGISTRY[arch_id] = restore_spec
+    return rec
+
+
+def _lower_and_measure(arch_id, shape_id, cfg, sh, kind, mesh, microbatches, t0) -> dict:
+    rec: dict = {}
+    with mesh:
+        if kind == "train":
+            opt = adamw(lr=3e-4, max_grad_norm=1.0)
+            state_shapes = specs_lib.state_specs(arch_id, opt)
+            state_sh = state_shardings(cfg, mesh, state_shapes)
+            batch_shapes = specs_lib.input_specs(arch_id, shape_id)
+            batch_sh = batch_shardings(cfg, mesh, batch_shapes)
+            step = make_train_step(cfg, opt, microbatches=microbatches)
+            lowered = jax.jit(
+                step,
+                in_shardings=(state_sh, batch_sh),
+                out_shardings=(state_sh, None),
+                donate_argnums=(0,),
+            ).lower(state_shapes, batch_shapes)
+        elif kind == "prefill":
+            params_shapes = specs_lib.params_specs(arch_id)
+            params_sh = param_shardings(cfg, mesh, params_shapes)
+            batch_shapes = specs_lib.input_specs(arch_id, shape_id)
+            batch_sh = batch_shardings(cfg, mesh, batch_shapes)
+            step = make_prefill_step(cfg)
+            out_sh = logits_sharding(cfg, mesh, sh["global_batch"])
+            lowered = jax.jit(
+                step, in_shardings=(params_sh, batch_sh), out_shardings=out_sh
+            ).lower(params_shapes, batch_shapes)
+        else:  # decode
+            params_shapes = specs_lib.params_specs(arch_id)
+            params_sh = param_shardings(cfg, mesh, params_shapes)
+            cache_shapes = specs_lib.cache_specs(arch_id, shape_id)
+            cache_sh = cache_shardings(cfg, mesh, cache_shapes)
+            tok_shapes = specs_lib.input_specs(arch_id, shape_id)["tokens"]
+            tok_sh = batch_shardings(cfg, mesh, {"tokens": tok_shapes})["tokens"]
+            step = make_decode_step(cfg)
+            out_sh = (logits_sharding(cfg, mesh, sh["global_batch"]), cache_sh)
+            lowered = jax.jit(
+                step,
+                in_shardings=(params_sh, cache_sh, tok_sh),
+                out_shardings=out_sh,
+                donate_argnums=(1,),
+            ).lower(params_shapes, cache_shapes, tok_shapes)
+        rec["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 1)
+
+        ca = compiled.cost_analysis() or {}
+        rec["flops_per_device"] = float(ca.get("flops", 0.0))
+        rec["bytes_accessed_per_device"] = float(ca.get("bytes accessed", 0.0))
+        rec["transcendentals"] = float(ca.get("transcendentals", 0.0))
+
+        ma = compiled.memory_analysis()
+        if ma is not None:
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes"):
+                v = getattr(ma, k, None)
+                if v is not None:
+                    rec[k] = int(v)
+
+        hlo = compiled.as_text()
+        rec["hlo_bytes"] = len(hlo)
+        coll = collective_bytes(hlo)
+        rec["collective_bytes"] = coll
+        rec["collective_bytes_total"] = int(sum(coll.values()))
+    return rec
+
+
+_LINEAR_KEYS = (
+    "flops_per_device", "bytes_accessed_per_device", "transcendentals",
+    "argument_size_in_bytes", "output_size_in_bytes", "temp_size_in_bytes",
+    "collective_bytes_total",
+)
+
+
+def run_cell_extrapolated(
+    arch_id: str, shape_id: str, multi_pod: bool, L1: int, L2: int,
+    overrides: dict | None = None,
+) -> dict:
+    """Loop-accurate metrics for archs whose fully-unrolled compile is
+    prohibitively slow (61-layer MoE at 512 partitions): compile two
+    REDUCED-depth unrolled variants and extrapolate every per-layer-
+    linear metric to the full depth.  Prologue/epilogue (embed, lm head)
+    cancel in the finite difference, so the slope is exactly the
+    per-layer cost."""
+    full_L = get_arch(arch_id).config.num_layers
+    r1 = run_cell(arch_id, shape_id, multi_pod, unroll=True, num_layers=L1,
+                  overrides=overrides)
+    r2 = run_cell(arch_id, shape_id, multi_pod, unroll=True, num_layers=L2,
+                  overrides=overrides)
+    rec = dict(r2)
+    rec["extrapolated_from"] = [L1, L2]
+    rec["num_layers"] = full_L
+    scale = full_L - L2
+    for k in _LINEAR_KEYS:
+        if k in r1 and k in r2:
+            slope = (r2[k] - r1[k]) / max(1, (L2 - L1))
+            rec[k] = r2[k] + slope * scale
+    if "collective_bytes" in r1 and "collective_bytes" in r2:
+        merged = {}
+        for op in r2["collective_bytes"]:
+            slope = (r2["collective_bytes"][op] - r1["collective_bytes"][op]) / max(
+                1, (L2 - L1)
+            )
+            merged[op] = int(r2["collective_bytes"][op] + slope * scale)
+        rec["collective_bytes"] = merged
+        rec["collective_bytes_total"] = int(sum(merged.values()))
+    rec["compile_s"] = r1.get("compile_s", 0) + r2.get("compile_s", 0)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="results/dryrun.jsonl")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument(
+        "--unroll", action="store_true",
+        help="unroll layer scans so cost_analysis counts every layer "
+             "(roofline metrics sweep; slower compiles)",
+    )
+    ap.add_argument(
+        "--extrapolate", default=None, metavar="L1,L2",
+        help="compile two reduced-depth unrolled variants and linearly "
+             "extrapolate per-layer metrics to full depth (heavy MoE archs)",
+    )
+    # §Perf variant knobs — tag the record so roofline can diff vs baseline.
+    ap.add_argument("--tag", default=None, help="variant tag for the record")
+    ap.add_argument("--flash-remat", action="store_true")
+    ap.add_argument("--vocab-pad", type=int, default=0)
+    ap.add_argument("--moe-constraints", action="store_true")
+    ap.add_argument("--cache-seq-shard", action="store_true")
+    ap.add_argument("--param-mode", default=None, choices=["fsdp_tp", "tp_only"])
+    ap.add_argument("--moe-block-dispatch", type=int, default=0)
+    ap.add_argument("--embed-unsharded-d", action="store_true")
+    ap.add_argument("--attn-replicated", action="store_true")
+    args = ap.parse_args()
+
+    overrides = {}
+    if args.flash_remat:
+        overrides["flash_remat"] = True
+    if args.vocab_pad:
+        overrides["vocab_pad_multiple"] = args.vocab_pad
+    if args.moe_constraints:
+        overrides["moe_shard_constraints"] = True
+    if args.cache_seq_shard:
+        overrides["cache_seq_shard_tp"] = True
+    if args.param_mode:
+        overrides["param_sharding_mode"] = args.param_mode
+    if args.moe_block_dispatch:
+        overrides["moe_block_dispatch"] = args.moe_block_dispatch
+    if args.embed_unsharded_d:
+        overrides["embed_unsharded_d"] = True
+    if args.attn_replicated:
+        overrides["attn_replicated"] = True
+
+    archs = list_archs() if args.arch == "all" else [args.arch]
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    done = set()
+    if os.path.exists(args.out) and not args.force:
+        with open(args.out) as f:
+            for line in f:
+                try:
+                    r = json.loads(line)
+                    if r.get("ok"):
+                        done.add((r["arch"], r["shape"], r["mesh"], r.get("variant")))
+                except json.JSONDecodeError:
+                    pass
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    for arch_id in archs:
+        spec = get_arch(arch_id)
+        shapes = spec.shapes if args.shape == "all" else [args.shape]
+        for shape_id in shapes:
+            if shape_id not in spec.shapes:
+                print(f"SKIP {arch_id} x {shape_id}: {spec.notes}", flush=True)
+                continue
+            for mp in meshes:
+                mesh_name = "2x16x16" if mp else "16x16"
+                if (arch_id, shape_id, mesh_name, args.tag) in done:
+                    print(f"CACHED {arch_id} x {shape_id} x {mesh_name}", flush=True)
+                    continue
+                print(f"RUN {arch_id} x {shape_id} x {mesh_name} ...", flush=True)
+                try:
+                    if args.extrapolate:
+                        L1, L2 = (int(x) for x in args.extrapolate.split(","))
+                        rec = run_cell_extrapolated(arch_id, shape_id, mp, L1, L2,
+                                                    overrides=overrides)
+                    else:
+                        rec = run_cell(arch_id, shape_id, mp, args.microbatches,
+                                       unroll=args.unroll, overrides=overrides)
+                    if args.tag:
+                        rec["variant"] = args.tag
+                    rec["ok"] = True
+                except Exception as e:  # noqa: BLE001 — record and continue
+                    rec = {
+                        "arch": arch_id, "shape": shape_id, "mesh": mesh_name,
+                        "ok": False, "error": f"{type(e).__name__}: {e}",
+                        "trace": traceback.format_exc()[-2000:],
+                    }
+                with open(args.out, "a") as f:
+                    f.write(json.dumps(rec) + "\n")
+                status = "OK" if rec.get("ok") else "FAIL"
+                print(
+                    f"{status} {arch_id} x {shape_id} x {mesh_name} "
+                    f"compile={rec.get('compile_s', '-')}s "
+                    f"flops/dev={rec.get('flops_per_device', 0):.3e} "
+                    f"coll={rec.get('collective_bytes_total', 0):.3e}B",
+                    flush=True,
+                )
+
+
+if __name__ == "__main__":
+    main()

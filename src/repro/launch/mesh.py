@@ -1,0 +1,40 @@
+"""Mesh factories (assignment-mandated shapes).
+
+``make_production_mesh`` is a FUNCTION (never module-level state) so
+importing this module touches no jax device state.  Single-pod: 16x16
+(data, model) = 256 chips.  Multi-pod: 2x16x16 (pod, data, model) = 512
+chips; the ``pod`` axis composes with ``data`` for batch/FSDP sharding
+and carries the hierarchical (DCN) gradient reduction.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+
+def _auto(n):
+    return (jax.sharding.AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over whatever devices exist (tests / examples)."""
+    n = len(jax.devices())
+    data = min(data, n)
+    model = max(1, min(model, n // data))
+    return jax.make_mesh((data, model), ("data", "model"), axis_types=_auto(2))
+
+
+def mesh_axes(mesh) -> Tuple[Tuple[str, ...], str]:
+    """Returns (batch/FSDP axes, tensor axis) for a mesh from this module."""
+    names = mesh.axis_names
+    if "pod" in names:
+        return ("pod", "data"), "model"
+    return ("data",), "model"

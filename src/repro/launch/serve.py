@@ -1,0 +1,57 @@
+"""Serving launcher: build (or load) a DeepMapping store and run the
+batched LookupServer over synthetic request traffic.
+
+    PYTHONPATH=src python -m repro.launch.serve --dataset tpcds_customer_demographics \
+        --requests 100 --store-dir /tmp/dm_store
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="tpcds_customer_demographics")
+    ap.add_argument("--requests", type=int, default=100)
+    ap.add_argument("--request-size", type=int, default=1000)
+    ap.add_argument("--store-dir", default=None)
+    ap.add_argument("--variant", default="DM-Z", choices=["DM-Z", "DM-L", "DM-R"])
+    args = ap.parse_args()
+
+    import numpy as np
+
+    from benchmarks import common as C
+    from repro.core.serialize import load_store, save_store
+    from repro.serve import LookupServer
+
+    table = C.DATASETS[args.dataset]()
+    if args.store_dir and os.path.isdir(args.store_dir):
+        store = load_store(args.store_dir)
+        print(f"loaded store from {args.store_dir}")
+    else:
+        store = C.dm_store(args.dataset, args.variant)
+        if args.store_dir:
+            save_store(store, args.store_dir)
+    print(
+        f"store: ratio={store.compression_ratio():.4f} "
+        f"memorized={store.memorized_fraction():.1%} "
+        f"bytes={store.size_bytes():,}"
+    )
+
+    server = LookupServer(store)
+    rng = np.random.default_rng(0)
+    reqs = [rng.choice(table.keys, size=args.request_size) for _ in range(args.requests)]
+    results = server.lookup_many(reqs)
+    ok = sum(int(e.all()) for _, e in results)
+    s = server.stats
+    print(
+        f"served {s.requests} requests ({s.keys:,} keys) in {s.total_s:.2f}s "
+        f"-> {s.qps():,.0f} keys/s; all-found={ok}/{len(reqs)}; "
+        f"infer={s.infer_s:.2f}s aux={s.aux_s:.2f}s"
+    )
+
+
+if __name__ == "__main__":
+    main()

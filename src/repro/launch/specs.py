@@ -1,0 +1,86 @@
+"""ShapeDtypeStruct input factories for every (arch × shape) dry-run
+cell — weak-type-correct, shardable, zero allocation.
+
+Shape semantics (DESIGN.md §5): ``train_4k``/``prefill_32k`` lower the
+full forward; ``decode_32k``/``long_500k`` lower ``decode_step`` with a
+cache of ``seq_len``.  Enc-dec splits: train 2048/2048, prefill
+32768 frames + 1024 dec, decode vs dec-KV ``seq_len`` + 4096 cross-KV.
+VLM cells prepend 576 stub patch embeddings.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, get_arch
+from repro.models.config import ModelConfig
+from repro.serve.serve_step import make_cache_factory
+from repro.train.optimizer import adamw
+from repro.train.train_step import init_state
+
+NUM_PATCHES = 576
+ENCDEC_DECODE_ENC_LEN = 4096
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def input_specs(arch_id: str, shape_id: str) -> Dict:
+    """Batch input ShapeDtypeStructs for one cell (tokens/frames/embeds
+    for train/prefill; tokens for decode — the cache comes from
+    :func:`cache_specs`)."""
+    cfg = get_arch(arch_id).config
+    sh = SHAPES[shape_id]
+    S, B, kind = sh["seq_len"], sh["global_batch"], sh["kind"]
+    act_dt = cfg.dtype
+
+    if cfg.is_encoder_decoder:
+        if kind == "train":
+            return {
+                "frames": _sds((B, S // 2, cfg.d_model), act_dt),
+                "tokens": _sds((B, S // 2), jnp.int32),
+            }
+        if kind == "prefill":
+            return {
+                "frames": _sds((B, S, cfg.d_model), act_dt),
+                "tokens": _sds((B, 1024), jnp.int32),
+            }
+        return {"tokens": _sds((B, 1), jnp.int32)}
+
+    if kind in ("train", "prefill"):
+        spec = {"tokens": _sds((B, S), jnp.int32)}
+        if cfg.modality == "vision":
+            spec["patch_embeds"] = _sds((B, NUM_PATCHES, cfg.d_model), act_dt)
+        return spec
+    return {"tokens": _sds((B, 1), jnp.int32)}
+
+
+def cache_specs(arch_id: str, shape_id: str) -> Dict:
+    """Decode-cell cache ShapeDtypeStructs via eval_shape (no alloc)."""
+    cfg = get_arch(arch_id).config
+    sh = SHAPES[shape_id]
+    S, B = sh["seq_len"], sh["global_batch"]
+    factory = make_cache_factory(cfg)
+    if cfg.is_encoder_decoder:
+        return jax.eval_shape(
+            lambda: factory(B, max_len=S, enc_len=ENCDEC_DECODE_ENC_LEN)
+        )
+    return jax.eval_shape(lambda: factory(batch=B, max_len=S))
+
+
+def state_specs(arch_id: str, optimizer: adamw):
+    """TrainState ShapeDtypeStructs via eval_shape (no alloc)."""
+    cfg = get_arch(arch_id).config
+    return jax.eval_shape(lambda: init_state(cfg, optimizer, seed=0))
+
+
+def params_specs(arch_id: str):
+    cfg = get_arch(arch_id).config
+    from repro.models import DecoderLM, EncDecLM
+
+    model = EncDecLM(cfg) if cfg.is_encoder_decoder else DecoderLM(cfg)
+    return jax.eval_shape(lambda: model.init(0))

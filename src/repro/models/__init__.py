@@ -1,0 +1,13 @@
+"""Model substrate: the assigned LM architecture families.
+
+Pure-functional JAX (params as pytrees, stacked leading layer dim for
+``lax.scan``).  Families: dense GQA decoders, MLA + MoE (DeepSeek-V3),
+GQA + MoE (Llama-4), RWKV6 (attention-free), RG-LRU hybrid
+(RecurrentGemma), sliding/global mixes (Gemma-3), encoder-decoder
+(Seamless).  Modality frontends are stubs per the assignment: callers
+supply precomputed patch/frame embeddings.
+"""
+
+from repro.models.config import ModelConfig  # noqa: F401
+from repro.models.transformer import DecoderLM  # noqa: F401
+from repro.models.encdec import EncDecLM  # noqa: F401

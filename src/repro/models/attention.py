@@ -1,0 +1,346 @@
+"""Attention variants: GQA (full/causal, sliding-window, decode), and
+MLA (DeepSeek-V3 multi-head latent attention with compressed KV cache).
+
+Memory discipline for long contexts (the 32k-prefill cells):
+* full causal attention runs FLASH-style — ``lax.scan`` over KV chunks
+  with running max/sum, so live memory is O(S · chunk) not O(S²);
+* sliding-window attention runs BANDED — queries are chunked to the
+  window size and attend only to (own chunk, previous chunk), which is
+  exact for window ≤ chunk and skips far blocks entirely (a 32× FLOP
+  cut for gemma3's 1024-window locals at 32k).
+Decode attends one query against the cache with a length mask; under
+pjit a sequence-sharded cache turns the softmax reductions into
+all-reduces automatically (flash-decoding-style combine).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+NEG_INF = -2.0e38
+
+
+def _constrain_batch_sharded(t: jnp.ndarray, cfg) -> jnp.ndarray:
+    """Pin a tensor to (batch: data axes, rest: replicated) — explicit
+    tensor-axis replication for attention intermediates (§Perf).  Tries
+    multi-pod then single-pod batch axes; no-op without an ambient mesh."""
+    if not getattr(cfg, "attn_replicated", False):
+        return t
+    from jax.sharding import PartitionSpec as P
+
+    rest = (None,) * (t.ndim - 1)
+    for batch_axes in (("pod", "data"), ("data",)):
+        try:
+            return jax.lax.with_sharding_constraint(t, P(batch_axes, *rest))
+        except (RuntimeError, ValueError, KeyError):
+            continue
+    return t
+
+
+# --------------------------------------------------------------------------
+# parameter init
+# --------------------------------------------------------------------------
+
+
+def gqa_init(rng, cfg) -> Dict:
+    d, H, K, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    r = jax.random.split(rng, 4)
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "wq": L.dense_init(r[0], d, H * hd, dt, bias=cfg.qkv_bias),
+        "wk": L.dense_init(r[1], d, K * hd, dt, bias=cfg.qkv_bias),
+        "wv": L.dense_init(r[2], d, K * hd, dt, bias=cfg.qkv_bias),
+        "wo": L.dense_init(r[3], H * hd, d, dt),
+    }
+
+
+def mla_init(rng, cfg) -> Dict:
+    d, H = cfg.d_model, cfg.num_heads
+    nope, rope, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    ql, kvl = cfg.q_lora_rank, cfg.kv_lora_rank
+    r = jax.random.split(rng, 8)
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "wq_a": L.dense_init(r[0], d, ql, dt),
+        "q_norm": L.rmsnorm_init(ql, dt),
+        "wq_b": L.dense_init(r[1], ql, H * (nope + rope), dt),
+        "wkv_a": L.dense_init(r[2], d, kvl + rope, dt),
+        "kv_norm": L.rmsnorm_init(kvl, dt),
+        "wk_b": L.dense_init(r[3], kvl, H * nope, dt),
+        "wv_b": L.dense_init(r[4], kvl, H * vd, dt),
+        "wo": L.dense_init(r[5], H * vd, d, dt),
+    }
+
+
+# --------------------------------------------------------------------------
+# core attention math
+# --------------------------------------------------------------------------
+
+
+def _flash_attend(q, k, v, q_positions, kv_positions, window: int, kv_chunk: int,
+                  causal: bool = True, chunk_remat: bool = False):
+    """Chunked causal softmax attention with running normalization.
+
+    q (B,S,K,G,hd); k (B,T,K,hd); v (B,T,K,vd) — vd may differ from hd
+    (MLA).  positions broadcastable (B,S)/(B,T).  window > 0 restricts to
+    [pos-window+1, pos].  Returns (B,S,K,G,vd).
+    """
+    B, S, K, G, hd = q.shape
+    vd = v.shape[-1]
+    T = k.shape[1]
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    nchunks = (T + kv_chunk - 1) // kv_chunk
+    Tp = nchunks * kv_chunk
+    k = jnp.pad(k, ((0, 0), (0, Tp - T), (0, 0), (0, 0)))
+    v = jnp.pad(v, ((0, 0), (0, Tp - T), (0, 0), (0, 0)))
+    kv_pos = jnp.pad(kv_positions, ((0, 0), (0, Tp - T)), constant_values=2**30)
+    k = k.reshape(B, nchunks, kv_chunk, K, hd).transpose(1, 0, 2, 3, 4)
+    v = v.reshape(B, nchunks, kv_chunk, K, vd).transpose(1, 0, 2, 3, 4)
+    kv_pos = kv_pos.reshape(B, nchunks, kv_chunk).transpose(1, 0, 2)
+
+    def step(carry, inp):
+        m, l, acc = carry  # running max (B,S,K,G), denom, weighted sum
+        kc, vc, pc = inp
+        s = jnp.einsum("bskgh,bckh->bskgc", q.astype(jnp.float32), kc.astype(jnp.float32))
+        s = s * scale
+        if causal:
+            valid = pc[:, None, :] <= q_positions[:, :, None]  # (B,S,C)
+            if window > 0:
+                valid &= pc[:, None, :] > (q_positions[:, :, None] - window)
+        else:
+            valid = jnp.broadcast_to(
+                (pc < 2**29)[:, None, :], (pc.shape[0], q_positions.shape[1], pc.shape[1])
+            )
+        s = jnp.where(valid[:, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.sum(axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bskgc,bckh->bskgh", p, vc.astype(jnp.float32)
+        )
+        return (m_new, l, acc), None
+
+    if chunk_remat:
+        # backward recomputes per-chunk softmax instead of saving
+        # O(S x chunk x heads) fp32 residuals per layer (§Perf)
+        step = jax.checkpoint(step)
+    m0 = jnp.full((B, S, K, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, S, K, G), jnp.float32)
+    a0 = jnp.zeros((B, S, K, G, vd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (k, v, kv_pos))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.astype(q.dtype)
+
+
+def _banded_attend(q, k, v, positions, window: int):
+    """Exact sliding-window attention via (chunk, prev-chunk) banding.
+
+    Requires S % window == 0 (caller pads).  q (B,S,K,G,hd), k/v (B,S,K,hd).
+    """
+    B, S, K, G, hd = q.shape
+    w = window
+    nc = S // w
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    qc = q.reshape(B, nc, w, K, G, hd)
+    kc = k.reshape(B, nc, w, K, hd)
+    vc = v.reshape(B, nc, w, K, hd)
+    pos_c = positions.reshape(B, nc, w)
+    # previous chunk (zeros before chunk 0)
+    kp = jnp.concatenate([jnp.zeros_like(kc[:, :1]), kc[:, :-1]], axis=1)
+    vp = jnp.concatenate([jnp.zeros_like(vc[:, :1]), vc[:, :-1]], axis=1)
+    pp = jnp.concatenate([jnp.full_like(pos_c[:, :1], 2**30), pos_c[:, :-1]], axis=1)
+    kk = jnp.concatenate([kp, kc], axis=2)      # (B,nc,2w,K,hd)
+    vv = jnp.concatenate([vp, vc], axis=2)
+    pk = jnp.concatenate([pp, pos_c], axis=2)   # (B,nc,2w)
+    s = jnp.einsum("bnwkgh,bnckh->bnwkgc", qc.astype(jnp.float32), kk.astype(jnp.float32))
+    s = s * scale
+    valid = (pk[:, :, None, :] <= pos_c[:, :, :, None]) & (
+        pk[:, :, None, :] > pos_c[:, :, :, None] - w
+    )
+    s = jnp.where(valid[:, :, :, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bnwkgc,bnckh->bnwkgh", p, vv.astype(jnp.float32))
+    return out.reshape(B, S, K, G, hd).astype(q.dtype)
+
+
+def _decode_attend(q, k_cache, v_cache, length):
+    """q (B,1,K,G,hd) vs cache (B,T,K,hd); positions < length attend."""
+    B, _, K, G, hd = q.shape
+    T = k_cache.shape[1]
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    s = jnp.einsum(
+        "bskgh,btkh->bskgt", q.astype(jnp.float32), k_cache.astype(jnp.float32)
+    ) * scale
+    mask = jnp.arange(T)[None, :] < length[:, None]  # (B,T)
+    s = jnp.where(mask[:, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bskgt,btkh->bskgh", p, v_cache.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# GQA block
+# --------------------------------------------------------------------------
+
+
+def gqa_apply(
+    p: Dict,
+    cfg,
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    window: jnp.ndarray | int = 0,
+    cache: Optional[Dict] = None,
+    kv_chunk: int = 1024,
+    causal: bool = True,
+) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """x (B,S,d).  cache = {'k': (B,T,K,hd), 'v': ..., 'len': scalar} for
+    decode (S==1).  ``causal=False`` gives bidirectional attention
+    (encoder use).  Returns (out (B,S,d), updated cache)."""
+    B, S, d = x.shape
+    H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    G = H // K
+    q = _constrain_batch_sharded(L.dense(p["wq"], x), cfg).reshape(B, S, H, hd)
+    k = _constrain_batch_sharded(L.dense(p["wk"], x), cfg).reshape(B, S, K, hd)
+    v = _constrain_batch_sharded(L.dense(p["wv"], x), cfg).reshape(B, S, K, hd)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    qg = q.reshape(B, S, K, G, hd)
+
+    if cache is not None:
+        idx = cache["len"]  # scalar int32: same step across batch
+        k_cache = jax.lax.dynamic_update_slice(cache["k"], k, (0, idx, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(cache["v"], v, (0, idx, 0, 0))
+        length = jnp.full((B,), idx + S, jnp.int32)
+        if isinstance(window, int) and window > 0:
+            # windowed decode: only last `window` positions attend
+            lo = jnp.maximum(length - window, 0)
+            T = k_cache.shape[1]
+            mask_lo = jnp.arange(T)[None, :] >= lo[:, None]
+            out = _decode_attend_window(qg, k_cache, v_cache, length, mask_lo)
+        else:
+            out = _decode_attend(qg, k_cache, v_cache, length)
+        new_cache = {"k": k_cache, "v": v_cache, "len": idx + S}
+    else:
+        if causal and isinstance(window, int) and window > 0 and S % window == 0 and S > window:
+            out = _banded_attend(qg, k, v, positions, window)
+        else:
+            w = window if isinstance(window, int) else 0
+            out = _flash_attend(qg, k, v, positions, positions, w, kv_chunk,
+                                causal=causal, chunk_remat=cfg.flash_remat)
+        new_cache = None
+
+    out = _constrain_batch_sharded(out.reshape(B, S, H * hd), cfg)
+    return L.dense(p["wo"], out), new_cache
+
+
+def _decode_attend_window(q, k_cache, v_cache, length, mask_lo):
+    B, _, K, G, hd = q.shape
+    T = k_cache.shape[1]
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    s = jnp.einsum(
+        "bskgh,btkh->bskgt", q.astype(jnp.float32), k_cache.astype(jnp.float32)
+    ) * scale
+    mask = (jnp.arange(T)[None, :] < length[:, None]) & mask_lo
+    s = jnp.where(mask[:, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bskgt,btkh->bskgh", p, v_cache.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def gqa_init_cache(cfg, batch: int, max_len: int, dtype=None) -> Dict:
+    dt = jnp.dtype(dtype or cfg.dtype)
+    K, hd = cfg.num_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, max_len, K, hd), dt),
+        "v": jnp.zeros((batch, max_len, K, hd), dt),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+# --------------------------------------------------------------------------
+# MLA block (DeepSeek-V3)
+# --------------------------------------------------------------------------
+
+
+def mla_apply(
+    p: Dict,
+    cfg,
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    cache: Optional[Dict] = None,
+    kv_chunk: int = 1024,
+) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """Multi-head latent attention.  The cache stores ONLY the compressed
+    latent (kv_lora_rank) + shared rope key (qk_rope_dim) per token —
+    the architecture's memory win.  Decode uses the absorbed-matmul
+    formulation (q projected into latent space), never re-expanding K."""
+    B, S, d = x.shape
+    H = cfg.num_heads
+    nope, rope, vd, kvl = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim, cfg.kv_lora_rank
+
+    q = L.dense(p["wq_b"], L.rmsnorm(p["q_norm"], L.dense(p["wq_a"], x), cfg.norm_eps))
+    q = q.reshape(B, S, H, nope + rope)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = L.apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv_a = L.dense(p["wkv_a"], x)  # (B,S,kvl+rope)
+    c_kv = L.rmsnorm(p["kv_norm"], kv_a[..., :kvl], cfg.norm_eps)
+    k_rope = L.apply_rope(kv_a[..., None, kvl:], positions, cfg.rope_theta)  # (B,S,1,rope)
+
+    wk_b = p["wk_b"]["w"].reshape(kvl, H, nope)
+    wv_b = p["wv_b"]["w"].reshape(kvl, H, vd)
+
+    if cache is None:
+        # Expanded path for train/prefill: standard attention math.
+        k_nope = jnp.einsum("bsc,chn->bshn", c_kv, wk_b)
+        v = jnp.einsum("bsc,chv->bshv", c_kv, wv_b)
+        k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (B, S, H, rope))], axis=-1)
+        qf = jnp.concatenate([q_nope, q_rope], axis=-1)
+        qg = qf.reshape(B, S, H, 1, nope + rope)
+        # _flash_attend is dim-agnostic on v (vd != nope+rope is fine).
+        out = _flash_attend(
+            qg, k, v, positions, positions, 0, kv_chunk,
+            chunk_remat=cfg.flash_remat,
+        ).reshape(B, S, H * vd)
+        new_cache = None
+    else:
+        # Absorbed decode: score = [q_nope @ wk_b] · c_kv + q_rope · k_rope.
+        idx = cache["len"]
+        c_cache = jax.lax.dynamic_update_slice(cache["c_kv"], c_kv, (0, idx, 0))
+        r_cache = jax.lax.dynamic_update_slice(
+            cache["k_rope"], k_rope[:, :, 0, :], (0, idx, 0)
+        )
+        q_lat = jnp.einsum("bshn,chn->bshc", q_nope.astype(jnp.float32), wk_b.astype(jnp.float32))
+        scale = 1.0 / jnp.sqrt(nope + rope).astype(jnp.float32)
+        s = (
+            jnp.einsum("bshc,btc->bsht", q_lat, c_cache.astype(jnp.float32))
+            + jnp.einsum(
+                "bshr,btr->bsht", q_rope.astype(jnp.float32), r_cache.astype(jnp.float32)
+            )
+        ) * scale
+        T = c_cache.shape[1]
+        mask = jnp.arange(T)[None, :] < (idx + S)
+        s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+        pr = jax.nn.softmax(s, axis=-1)
+        o_lat = jnp.einsum("bsht,btc->bshc", pr, c_cache.astype(jnp.float32))
+        out = jnp.einsum("bshc,chv->bshv", o_lat, wv_b.astype(jnp.float32))
+        out = out.reshape(B, S, H * vd).astype(x.dtype)
+        new_cache = {"c_kv": c_cache, "k_rope": r_cache, "len": idx + S}
+
+    return L.dense(p["wo"], out), new_cache
+
+
+def mla_init_cache(cfg, batch: int, max_len: int, dtype=None) -> Dict:
+    dt = jnp.dtype(dtype or cfg.dtype)
+    return {
+        "c_kv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dt),
+        "k_rope": jnp.zeros((batch, max_len, cfg.qk_rope_dim), dt),
+        "len": jnp.zeros((), jnp.int32),
+    }

@@ -1,0 +1,204 @@
+"""Encoder-decoder transformer (Seamless-M4T backbone).
+
+The audio frontend is a STUB per the assignment: the encoder consumes
+precomputed frame embeddings (B, S_enc, d) directly.  The decoder is a
+standard causal transformer with cross-attention to the encoder output;
+its serving cache carries both self-attn KV and the (static) projected
+cross-attn KV.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+
+
+def _xattn_init(rng, cfg) -> Dict:
+    d, H, K, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    r = jax.random.split(rng, 4)
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "wq": L.dense_init(r[0], d, H * hd, dt),
+        "wk": L.dense_init(r[1], d, K * hd, dt),
+        "wv": L.dense_init(r[2], d, K * hd, dt),
+        "wo": L.dense_init(r[3], H * hd, d, dt),
+    }
+
+
+def _xattn(p, cfg, x, enc_k, enc_v, enc_mask=None):
+    """Cross attention: queries from decoder x, keys/values precomputed
+    from encoder output (B, S_enc, K, hd)."""
+    B, S, d = x.shape
+    H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    G = H // K
+    q = L.dense(p["wq"], x).reshape(B, S, K, G, hd)
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    s = jnp.einsum("bskgh,btkh->bskgt", q.astype(jnp.float32), enc_k.astype(jnp.float32)) * scale
+    if enc_mask is not None:
+        s = jnp.where(enc_mask[:, None, None, None, :], s, A.NEG_INF)
+    pr = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bskgt,btkh->bskgh", pr, enc_v.astype(jnp.float32))
+    return L.dense(p["wo"], o.reshape(B, S, H * hd).astype(x.dtype))
+
+
+def _enc_layer_init(rng, cfg) -> Dict:
+    r = jax.random.split(rng, 2)
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "ln1": L.rmsnorm_init(cfg.d_model, dt),
+        "attn": A.gqa_init(r[0], cfg),
+        "ln2": L.rmsnorm_init(cfg.d_model, dt),
+        "ffn": L.mlp_init(r[1], cfg.d_model, cfg.d_ff, dt),
+    }
+
+
+def _dec_layer_init(rng, cfg) -> Dict:
+    r = jax.random.split(rng, 3)
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "ln1": L.rmsnorm_init(cfg.d_model, dt),
+        "attn": A.gqa_init(r[0], cfg),
+        "ln_x": L.rmsnorm_init(cfg.d_model, dt),
+        "xattn": _xattn_init(r[1], cfg),
+        "ln2": L.rmsnorm_init(cfg.d_model, dt),
+        "ffn": L.mlp_init(r[2], cfg.d_model, cfg.d_ff, dt),
+    }
+
+
+class EncDecLM:
+    def __init__(self, cfg: ModelConfig):
+        assert cfg.is_encoder_decoder
+        self.cfg = cfg
+
+    def init(self, seed: int = 0) -> Dict:
+        cfg = self.cfg
+        rng = jax.random.PRNGKey(seed)
+        dt = jnp.dtype(cfg.dtype)
+        re, rd, rh = jax.random.split(rng, 3)
+        params = {
+            "embed": L.embedding_init(rh, cfg.vocab_size, cfg.d_model, dt),
+            "enc_layers": L.stacked_init(_enc_layer_init, re, cfg.enc_layers, cfg),
+            "enc_norm": L.rmsnorm_init(cfg.d_model, dt),
+            "dec_layers": L.stacked_init(_dec_layer_init, rd, cfg.dec_layers, cfg),
+            "dec_norm": L.rmsnorm_init(cfg.d_model, dt),
+            "lm_head": L.dense_init(jax.random.fold_in(rh, 1), cfg.d_model, cfg.vocab_size, dt),
+        }
+        return params
+
+    # ---------------------------------------------------------------- encode
+    def encode(self, params: Dict, frames: jnp.ndarray, remat: bool = True) -> jnp.ndarray:
+        """frames (B, S_enc, d) — stub frontend embeddings. Bidirectional."""
+        cfg = self.cfg
+        B, S, _ = frames.shape
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+        def layer(x, p):
+            h, _ = A.gqa_apply(
+                p["attn"], cfg, L.rmsnorm(p["ln1"], x, cfg.norm_eps), positions,
+                window=0, cache=None, causal=False,  # bidirectional encoder
+            )
+            x = x + h
+            x = x + L.mlp(p["ffn"], L.rmsnorm(p["ln2"], x, cfg.norm_eps))
+            return x, None
+
+        body = jax.checkpoint(layer) if remat else layer
+        x, _ = jax.lax.scan(
+            body, frames.astype(jnp.dtype(cfg.dtype)), params["enc_layers"],
+            unroll=cfg.enc_layers if cfg.scan_unroll else 1,
+        )
+        return L.rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+    # ---------------------------------------------------------------- decode (teacher-forced)
+    def apply(
+        self, params: Dict, frames: jnp.ndarray, tokens: jnp.ndarray, remat: bool = True
+    ) -> jnp.ndarray:
+        """Training forward: encode frames, teacher-forced decode tokens."""
+        cfg = self.cfg
+        enc = self.encode(params, frames, remat=remat)
+        B, S = tokens.shape
+        x = L.embed(params["embed"], tokens)
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+        def layer(x, p):
+            h, _ = A.gqa_apply(
+                p["attn"], cfg, L.rmsnorm(p["ln1"], x, cfg.norm_eps), positions,
+                window=0, cache=None,
+            )
+            x = x + h
+            K, hd = cfg.num_kv_heads, cfg.head_dim
+            ek = L.dense(p["xattn"]["wk"], enc).reshape(B, -1, K, hd)
+            ev = L.dense(p["xattn"]["wv"], enc).reshape(B, -1, K, hd)
+            x = x + _xattn(p["xattn"], cfg, L.rmsnorm(p["ln_x"], x, cfg.norm_eps), ek, ev)
+            x = x + L.mlp(p["ffn"], L.rmsnorm(p["ln2"], x, cfg.norm_eps))
+            return x, None
+
+        body = jax.checkpoint(layer) if remat else layer
+        x, _ = jax.lax.scan(
+            body, x, params["dec_layers"],
+            unroll=cfg.dec_layers if cfg.scan_unroll else 1,
+        )
+        x = L.rmsnorm(params["dec_norm"], x, cfg.norm_eps)
+        return L.dense(params["lm_head"], x)
+
+    # ---------------------------------------------------------------- serving
+    def init_cache(self, batch: int, max_len: int, enc_len: int) -> Dict:
+        cfg = self.cfg
+        Ld = cfg.dec_layers
+        K, hd = cfg.num_kv_heads, cfg.head_dim
+        dt = jnp.dtype(cfg.dtype)
+        return {
+            "k": jnp.zeros((Ld, batch, max_len, K, hd), dt),
+            "v": jnp.zeros((Ld, batch, max_len, K, hd), dt),
+            "enc_k": jnp.zeros((Ld, batch, enc_len, K, hd), dt),
+            "enc_v": jnp.zeros((Ld, batch, enc_len, K, hd), dt),
+            "len": jnp.zeros((), jnp.int32),
+        }
+
+    def prime_cache(self, params: Dict, cache: Dict, frames: jnp.ndarray) -> Dict:
+        """Project encoder output into every decoder layer's cross KV."""
+        cfg = self.cfg
+        enc = self.encode(params, frames, remat=False)
+        B = enc.shape[0]
+        K, hd = cfg.num_kv_heads, cfg.head_dim
+
+        def per_layer(p):
+            ek = L.dense(p["xattn"]["wk"], enc).reshape(B, -1, K, hd)
+            ev = L.dense(p["xattn"]["wv"], enc).reshape(B, -1, K, hd)
+            return ek, ev
+
+        ek, ev = jax.vmap(per_layer)(params["dec_layers"])
+        return dict(cache, enc_k=ek, enc_v=ev)
+
+    def decode_step(self, params: Dict, cache: Dict, tokens: jnp.ndarray):
+        cfg = self.cfg
+        B = tokens.shape[0]
+        x = L.embed(params["embed"], tokens)
+        idx = cache["len"]
+        positions = jnp.broadcast_to(idx[None, None], (B, 1)).astype(jnp.int32)
+
+        def layer(x, xs):
+            p, kc, vc, ek, ev = xs
+            c = {"k": kc, "v": vc, "len": idx}
+            h, c2 = A.gqa_apply(
+                p["attn"], cfg, L.rmsnorm(p["ln1"], x, cfg.norm_eps), positions,
+                window=0, cache=c,
+            )
+            x = x + h
+            x = x + _xattn(p["xattn"], cfg, L.rmsnorm(p["ln_x"], x, cfg.norm_eps), ek, ev)
+            x = x + L.mlp(p["ffn"], L.rmsnorm(p["ln2"], x, cfg.norm_eps))
+            return x, (c2["k"], c2["v"])
+
+        x, (nk, nv) = jax.lax.scan(
+            layer, x,
+            (params["dec_layers"], cache["k"], cache["v"], cache["enc_k"], cache["enc_v"]),
+            unroll=cfg.dec_layers if cfg.scan_unroll else 1,
+        )
+        x = L.rmsnorm(params["dec_norm"], x, cfg.norm_eps)
+        logits = L.dense(params["lm_head"], x)
+        return logits, dict(cache, k=nk, v=nv, len=idx + 1)

@@ -1,0 +1,29 @@
+"""Modality frontend STUBS (per assignment: the transformer backbone is
+the deliverable; vision/audio preprocessing provides precomputed
+embeddings).
+
+These generate deterministic pseudo-embeddings shaped exactly like the
+real frontends would emit: CLIP-style patch embeddings for phi-3-vision,
+conformer-frame embeddings for seamless-m4t.  The dry-run's
+``input_specs()`` uses only their shapes."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def vision_patch_embeds(
+    batch: int, num_patches: int, d_model: int, seed: int = 0, dtype=jnp.bfloat16
+) -> jnp.ndarray:
+    """Stub CLIP tower output: (batch, num_patches, d_model)."""
+    rng = jax.random.PRNGKey(seed)
+    return (0.02 * jax.random.normal(rng, (batch, num_patches, d_model))).astype(dtype)
+
+
+def audio_frame_embeds(
+    batch: int, num_frames: int, d_model: int, seed: int = 0, dtype=jnp.bfloat16
+) -> jnp.ndarray:
+    """Stub speech-frontend output: (batch, num_frames, d_model)."""
+    rng = jax.random.PRNGKey(seed + 1)
+    return (0.02 * jax.random.normal(rng, (batch, num_frames, d_model))).astype(dtype)

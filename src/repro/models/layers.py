@@ -1,0 +1,115 @@
+"""Shared neural building blocks (pure JAX, pytree params).
+
+Init functions take an ``rng`` and return param subtrees; ``stacked_init``
+vmaps an init over the layer dimension so blocks can run under
+``lax.scan`` (one compilation regardless of depth — essential for the
+dry-run's compile-time budget at 61-layer/512-device scale).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _dtype(name: str):
+    return jnp.dtype(name)
+
+
+# -- initializers -------------------------------------------------------------
+
+
+def dense_init(rng, in_dim: int, out_dim: int, dtype, bias: bool = False) -> Dict:
+    scale = jnp.sqrt(1.0 / in_dim)
+    p = {"w": (jax.random.normal(rng, (in_dim, out_dim), jnp.float32) * scale).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((out_dim,), dtype)
+    return p
+
+
+def dense(p: Dict, x: jnp.ndarray) -> jnp.ndarray:
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def embedding_init(rng, vocab: int, dim: int, dtype) -> Dict:
+    return {"table": (jax.random.normal(rng, (vocab, dim), jnp.float32) * 0.02).astype(dtype)}
+
+
+def embed(p: Dict, ids: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(p["table"], ids, axis=0)
+
+
+def rmsnorm_init(dim: int, dtype) -> Dict:
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm(p: Dict, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def stacked_init(init_fn: Callable, rng, num: int, *args, **kwargs):
+    """vmap an init over a leading layer dimension for scan."""
+    rngs = jax.random.split(rng, num)
+    return jax.vmap(lambda r: init_fn(r, *args, **kwargs))(rngs)
+
+
+# -- rotary embeddings ----------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)
+    angles = positions[..., :, None, None].astype(jnp.float32) * freqs  # (...,S,1,hd/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -- gated MLP -------------------------------------------------------------------
+
+
+def mlp_init(rng, d_model: int, d_ff: int, dtype) -> Dict:
+    r1, r2, r3 = jax.random.split(rng, 3)
+    return {
+        "gate": dense_init(r1, d_model, d_ff, dtype),
+        "up": dense_init(r2, d_model, d_ff, dtype),
+        "down": dense_init(r3, d_ff, d_model, dtype),
+    }
+
+
+def mlp(p: Dict, x: jnp.ndarray) -> jnp.ndarray:
+    return dense(p["down"], jax.nn.silu(dense(p["gate"], x)) * dense(p["up"], x))
+
+
+# -- misc -------------------------------------------------------------------------
+
+
+def softcap(x: jnp.ndarray, cap: float) -> jnp.ndarray:
+    if cap <= 0:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def cross_entropy_loss(logits: jnp.ndarray, labels: jnp.ndarray, mask=None) -> jnp.ndarray:
+    """Mean token CE in fp32; logits (..., V), labels (...) int32."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, labels[..., None].astype(jnp.int32), axis=-1)[..., 0]
+    nll = lse - picked
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,235 @@
+"""Recurrent sequence mixers: RWKV6 ("Finch", data-dependent decay
+linear attention) and RG-LRU (RecurrentGemma's gated linear recurrence
+with temporal conv).  Both carry O(1)-per-token state — these are the
+families that make the 500k-context decode cell feasible.
+
+Training/prefill run the recurrences as ``lax.scan`` over sequence
+CHUNKS with intra-chunk parallel math (chunked WKV), so sequential
+depth is S/chunk, not S.  Decode is a single recurrence step against a
+carried state.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+# --------------------------------------------------------------------------
+# RWKV6 (arXiv:2404.05892) — time-mix with data-dependent decay + channel-mix
+# --------------------------------------------------------------------------
+
+
+def rwkv_init(rng, cfg) -> Dict:
+    d = cfg.d_model
+    H = cfg.num_heads
+    dh = d // H
+    r = jax.random.split(rng, 10)
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        # time-mix lerp coefficients (per-channel, data-independent part)
+        "mu_r": jnp.full((d,), 0.5, dt),
+        "mu_k": jnp.full((d,), 0.5, dt),
+        "mu_v": jnp.full((d,), 0.5, dt),
+        "mu_w": jnp.full((d,), 0.5, dt),
+        "mu_g": jnp.full((d,), 0.5, dt),
+        "wr": L.dense_init(r[0], d, d, dt),
+        "wk": L.dense_init(r[1], d, d, dt),
+        "wv": L.dense_init(r[2], d, d, dt),
+        "wg": L.dense_init(r[3], d, d, dt),
+        "ww": L.dense_init(r[4], d, d, dt),           # data-dependent decay
+        "w_bias": jnp.full((d,), -6.0, dt),            # decay bias (slow default)
+        "u": (0.1 * jax.random.normal(r[5], (H, dh), jnp.float32)).astype(dt),  # bonus
+        "wo": L.dense_init(r[6], d, d, dt),
+        "ln_x": L.rmsnorm_init(d, dt),
+    }
+
+
+def _rwkv_chunk_step(state, inputs, H, dh):
+    """One sequence-chunk of the WKV6 recurrence, sequential inside the
+    chunk (per-token state update — faithful to data-dependent decay)."""
+
+    def token_step(s, tok):
+        r, k, v, w, u = tok  # (H,dh) each except u (H,dh)
+        # s: (H, dh, dh) state.  out = r · (s + u ⊙ k v^T); s' = diag(w) s + k v^T
+        kv = k[:, :, None] * v[:, None, :]            # (H,dh,dh)
+        out = jnp.einsum("hi,hij->hj", r, s + u[:, :, None] * kv)
+        s = w[:, :, None] * s + kv
+        return s, out
+
+    return jax.lax.scan(token_step, state, inputs)
+
+
+def rwkv_apply(
+    p: Dict, cfg, x: jnp.ndarray, state: Optional[Dict] = None
+) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """Time-mix block.  x (B,S,d).  state carries (wkv (B,H,dh,dh),
+    x_prev (B,d)) for decode; None for train (zero init)."""
+    B, S, d = x.shape
+    H = cfg.num_heads
+    dh = d // H
+
+    x_prev = (
+        state["x_prev"][:, None, :]
+        if state is not None
+        else jnp.zeros((B, 1, d), x.dtype)
+    )
+    xs = jnp.concatenate([x_prev, x[:, :-1, :]], axis=1)  # token shift
+
+    def mix(mu):
+        return x + (xs - x) * mu
+
+    r = L.dense(p["wr"], mix(p["mu_r"])).reshape(B, S, H, dh)
+    k = L.dense(p["wk"], mix(p["mu_k"])).reshape(B, S, H, dh)
+    v = L.dense(p["wv"], mix(p["mu_v"])).reshape(B, S, H, dh)
+    g = jax.nn.silu(L.dense(p["wg"], mix(p["mu_g"])))
+    # data-dependent decay in (0,1): exp(-exp(...)) parameterization
+    w = jnp.exp(-jnp.exp((L.dense(p["ww"], mix(p["mu_w"])) + p["w_bias"]).astype(jnp.float32)))
+    w = w.reshape(B, S, H, dh).astype(jnp.float32)
+
+    s0 = (
+        state["wkv"].astype(jnp.float32)
+        if state is not None
+        else jnp.zeros((B, H, dh, dh), jnp.float32)
+    )
+    seq_first = lambda t: t.astype(jnp.float32).transpose(1, 0, 2, 3)  # (S,B,H,dh)
+    inputs = (seq_first(r), seq_first(k), seq_first(v), seq_first(w),
+              jnp.broadcast_to(p["u"].astype(jnp.float32), (S, B, H, dh)))
+
+    def batch_scan(s0b, rb, kb, vb, wb, ub):
+        return _rwkv_chunk_step(s0b, (rb, kb, vb, wb, ub), H, dh)
+
+    sT, out = jax.vmap(batch_scan, in_axes=(0, 1, 1, 1, 1, 1), out_axes=(0, 1))(
+        s0, *inputs
+    )
+    out = out.transpose(1, 0, 2, 3).reshape(B, S, d).astype(x.dtype)  # (S,B,H,dh)->(B,S,d)
+    out = L.rmsnorm(p["ln_x"], out, cfg.norm_eps) * g
+    out = L.dense(p["wo"], out)
+    new_state = {"wkv": sT.astype(x.dtype), "x_prev": x[:, -1, :]} if state is not None else None
+    return out, new_state
+
+
+def rwkv_channel_init(rng, cfg) -> Dict:
+    d, dff = cfg.d_model, cfg.d_ff
+    r = jax.random.split(rng, 2)
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "mu_k": jnp.full((d,), 0.5, dt),
+        "mu_r": jnp.full((d,), 0.5, dt),
+        "wk": L.dense_init(r[0], d, dff, dt),
+        "wv": L.dense_init(r[1], dff, d, dt),
+        "wr": L.dense_init(jax.random.fold_in(r[0], 1), d, d, dt),
+    }
+
+
+def rwkv_channel_apply(
+    p: Dict, cfg, x: jnp.ndarray, x_prev: Optional[jnp.ndarray] = None
+) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
+    B, S, d = x.shape
+    xp = x_prev[:, None, :] if x_prev is not None else jnp.zeros((B, 1, d), x.dtype)
+    xs = jnp.concatenate([xp, x[:, :-1, :]], axis=1)
+    k = L.dense(p["wk"], x + (xs - x) * p["mu_k"])
+    kv = L.dense(p["wv"], jnp.square(jax.nn.relu(k)))
+    rgate = jax.nn.sigmoid(L.dense(p["wr"], x + (xs - x) * p["mu_r"]))
+    out = rgate * kv
+    return out, (x[:, -1, :] if x_prev is not None else None)
+
+
+def rwkv_init_state(cfg, batch: int, dtype=None) -> Dict:
+    dt = jnp.dtype(dtype or cfg.dtype)
+    H = cfg.num_heads
+    dh = cfg.d_model // H
+    return {
+        "wkv": jnp.zeros((batch, H, dh, dh), dt),
+        "x_prev": jnp.zeros((batch, cfg.d_model), dt),
+        "x_prev_ffn": jnp.zeros((batch, cfg.d_model), dt),
+    }
+
+
+# --------------------------------------------------------------------------
+# RG-LRU (RecurrentGemma, arXiv:2402.19427) — gated linear recurrence
+# --------------------------------------------------------------------------
+
+_C_RGLRU = 8.0  # paper's fixed scaling constant
+
+
+def rglru_init(rng, cfg) -> Dict:
+    d = cfg.d_model
+    rd = cfg.rglru_dim or d
+    r = jax.random.split(rng, 6)
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "w_in_x": L.dense_init(r[0], d, rd, dt),      # recurrence branch
+        "w_in_g": L.dense_init(r[1], d, rd, dt),      # gate branch (GeLU)
+        "conv_w": (0.1 * jax.random.normal(r[2], (cfg.conv_width, rd), jnp.float32)).astype(dt),
+        "conv_b": jnp.zeros((rd,), dt),
+        "wa_gate": L.dense_init(r[3], rd, rd, dt),    # recurrence gate r_t
+        "wx_gate": L.dense_init(r[4], rd, rd, dt),    # input gate i_t
+        "a_param": jnp.full((rd,), -4.0, jnp.float32),  # Λ logit (slow decay)
+        "w_out": L.dense_init(r[5], rd, d, dt),
+    }
+
+
+def rglru_apply(
+    p: Dict, cfg, x: jnp.ndarray, state: Optional[Dict] = None
+) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """Recurrent block: in-proj -> temporal conv -> RG-LRU -> gated out.
+
+    state = {'h': (B,rd), 'conv': (B,conv_width-1,rd)} for decode."""
+    B, S, d = x.shape
+    rd = cfg.rglru_dim or d
+    cw = cfg.conv_width
+
+    xb = L.dense(p["w_in_x"], x)                       # (B,S,rd)
+    gate_branch = jax.nn.gelu(L.dense(p["w_in_g"], x))
+
+    # temporal conv (causal, width cw)
+    if state is not None:
+        ctx = jnp.concatenate([state["conv"], xb], axis=1)
+    else:
+        ctx = jnp.concatenate([jnp.zeros((B, cw - 1, rd), xb.dtype), xb], axis=1)
+    conv = sum(ctx[:, i : i + S, :] * p["conv_w"][i] for i in range(cw)) + p["conv_b"]
+
+    # RG-LRU gates
+    r_t = jax.nn.sigmoid(L.dense(p["wa_gate"], conv))
+    i_t = jax.nn.sigmoid(L.dense(p["wx_gate"], conv))
+    log_a = -_C_RGLRU * jax.nn.softplus(p["a_param"]) * r_t.astype(jnp.float32)
+    a = jnp.exp(log_a)
+    gated_x = (conv * i_t).astype(jnp.float32)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6))
+
+    h0 = (
+        state["h"].astype(jnp.float32)
+        if state is not None
+        else jnp.zeros((B, rd), jnp.float32)
+    )
+
+    def step(h, inp):
+        a_t, bx_t = inp
+        h = a_t * h + bx_t
+        return h, h
+
+    bx = (beta * gated_x).transpose(1, 0, 2)  # (S,B,rd)
+    hT, hs = jax.lax.scan(step, h0, (a.transpose(1, 0, 2), bx))
+    hs = hs.transpose(1, 0, 2).astype(x.dtype)  # (B,S,rd)
+
+    out = L.dense(p["w_out"], hs * gate_branch)
+    new_state = (
+        {"h": hT.astype(x.dtype), "conv": ctx[:, S : S + cw - 1, :] if S >= cw - 1 else ctx[:, -(cw - 1):, :]}
+        if state is not None
+        else None
+    )
+    return out, new_state
+
+
+def rglru_init_state(cfg, batch: int, dtype=None) -> Dict:
+    dt = jnp.dtype(dtype or cfg.dtype)
+    rd = cfg.rglru_dim or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, rd), dt),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, rd), dt),
+    }

@@ -1,0 +1,366 @@
+"""Decoder-only LM assembly for every assigned family.
+
+Depth is organized into SEGMENTS of repeated block-pattern GROUPS:
+
+* dense/moe/ssm archs: one segment, pattern ``("attn",)`` or ``("rwkv",)``;
+* gemma3: pattern = six layers (5 × window-1024 local + 1 global) —
+  static per-position windows inside the group keep banded-vs-flash
+  selection static under scan;
+* recurrentgemma: pattern ``("rglru","rglru","attn")``;
+* deepseek: a 3-layer dense-FFN prefix segment + a 58-layer MoE segment.
+
+Each segment's groups run under ``lax.scan`` over stacked params (one
+compile per segment regardless of depth); remainder layers that don't
+fill a group are unrolled.  KV/recurrent caches are stacked per group
+and threaded through the scan as xs/ys.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import ssm as S
+from repro.models.config import ModelConfig
+
+
+# --------------------------------------------------------------------------
+# depth plan
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    pattern: Tuple[str, ...]       # block kinds within one group
+    windows: Tuple[int, ...]       # per-position window (attn blocks)
+    moe: Tuple[bool, ...]          # per-position: MoE FFN?
+    groups: int                    # number of scanned groups
+    remainder: Tuple[str, ...]     # trailing unrolled block kinds
+    rem_windows: Tuple[int, ...]
+    rem_moe: Tuple[bool, ...]
+
+
+def plan_segments(cfg: ModelConfig) -> List[Segment]:
+    L_ = cfg.num_layers
+    blocks = cfg.layer_blocks
+    windows = cfg.layer_window
+    moe_flags = tuple(
+        cfg.is_moe and i >= cfg.first_dense_layers and blocks[i] == "attn"
+        for i in range(L_)
+    )
+    segs: List[Segment] = []
+    if cfg.is_moe and cfg.first_dense_layers:
+        fd = cfg.first_dense_layers
+        segs.append(
+            Segment(
+                pattern=blocks[:1] * 1, windows=windows[:1], moe=(False,),
+                groups=0, remainder=blocks[:fd], rem_windows=windows[:fd],
+                rem_moe=(False,) * fd,
+            )
+        )
+        blocks, windows, moe_flags = blocks[fd:], windows[fd:], moe_flags[fd:]
+    # pattern period = lcm of block and window patterns
+    import math
+
+    P = math.lcm(len(cfg.block_pattern), len(cfg.window_pattern))
+    n = len(blocks)
+    groups = n // P
+    rem = n - groups * P
+    segs.append(
+        Segment(
+            pattern=blocks[:P],
+            windows=windows[:P],
+            moe=moe_flags[:P],
+            groups=groups,
+            remainder=blocks[groups * P :],
+            rem_windows=windows[groups * P :],
+            rem_moe=moe_flags[groups * P :],
+        )
+    )
+    return segs
+
+
+# --------------------------------------------------------------------------
+# per-block init / apply / cache
+# --------------------------------------------------------------------------
+
+
+def _block_init(rng, cfg: ModelConfig, kind: str, moe: bool) -> Dict:
+    dt = jnp.dtype(cfg.dtype)
+    r = jax.random.split(rng, 2)
+    p: Dict = {"ln1": L.rmsnorm_init(cfg.d_model, dt), "ln2": L.rmsnorm_init(cfg.d_model, dt)}
+    if kind == "attn":
+        p["attn"] = A.mla_init(r[0], cfg) if cfg.use_mla else A.gqa_init(r[0], cfg)
+        p["ffn"] = M.moe_init(r[1], cfg) if moe else L.mlp_init(r[1], cfg.d_model, cfg.d_ff, dt)
+    elif kind == "rwkv":
+        p["attn"] = S.rwkv_init(r[0], cfg)
+        p["ffn"] = S.rwkv_channel_init(r[1], cfg)
+    elif kind == "rglru":
+        p["attn"] = S.rglru_init(r[0], cfg)
+        p["ffn"] = L.mlp_init(r[1], cfg.d_model, cfg.d_ff, dt)
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def _block_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int) -> Dict:
+    if kind == "attn":
+        if cfg.use_mla:
+            c = A.mla_init_cache(cfg, batch, max_len)
+        else:
+            c = A.gqa_init_cache(cfg, batch, max_len)
+        c.pop("len")
+        return c
+    if kind == "rwkv":
+        s = S.rwkv_init_state(cfg, batch)
+        return s
+    if kind == "rglru":
+        return S.rglru_init_state(cfg, batch)
+    raise ValueError(kind)
+
+
+def _block_apply(
+    p: Dict,
+    cfg: ModelConfig,
+    kind: str,
+    moe: bool,
+    window: int,
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    cache: Optional[Dict],
+    cache_len,
+) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    h_in = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    new_cache = None
+    if kind == "attn":
+        c = dict(cache, len=cache_len) if cache is not None else None
+        if cfg.use_mla:
+            h, c2 = A.mla_apply(p["attn"], cfg, h_in, positions, cache=c)
+        else:
+            h, c2 = A.gqa_apply(p["attn"], cfg, h_in, positions, window=window, cache=c)
+        if c2 is not None:
+            c2.pop("len")
+            new_cache = c2
+        x = x + h
+        f_in = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+        f = M.moe_apply(p["ffn"], cfg, f_in) if moe else L.mlp(p["ffn"], f_in)
+        x = x + f
+    elif kind == "rwkv":
+        st = (
+            {"wkv": cache["wkv"], "x_prev": cache["x_prev"]}
+            if cache is not None
+            else None
+        )
+        h, st2 = S.rwkv_apply(p["attn"], cfg, h_in, state=st)
+        x = x + h
+        f_in = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+        xp = cache["x_prev_ffn"] if cache is not None else None
+        f, xp2 = S.rwkv_channel_apply(p["ffn"], cfg, f_in, x_prev=xp)
+        x = x + f
+        if cache is not None:
+            new_cache = {"wkv": st2["wkv"], "x_prev": st2["x_prev"], "x_prev_ffn": xp2}
+    elif kind == "rglru":
+        st = cache
+        h, st2 = S.rglru_apply(p["attn"], cfg, h_in, state=st)
+        x = x + h
+        f = L.mlp(p["ffn"], L.rmsnorm(p["ln2"], x, cfg.norm_eps))
+        x = x + f
+        new_cache = st2
+    else:
+        raise ValueError(kind)
+    return x, new_cache
+
+
+# --------------------------------------------------------------------------
+# the decoder
+# --------------------------------------------------------------------------
+
+
+class DecoderLM:
+    """Functional decoder: ``init`` -> params, ``apply`` -> logits,
+    ``init_cache``/``decode_step`` for serving."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.segments = plan_segments(cfg)
+
+    @property
+    def padded_vocab(self) -> int:
+        m = self.cfg.vocab_pad_multiple
+        v = self.cfg.vocab_size
+        return v if m <= 0 else ((v + m - 1) // m) * m
+
+    # ------------------------------------------------------------- params
+    def init(self, seed: int = 0) -> Dict:
+        cfg = self.cfg
+        rng = jax.random.PRNGKey(seed)
+        r_embed, r_head = jax.random.split(jax.random.fold_in(rng, 17), 2)
+        dt = jnp.dtype(cfg.dtype)
+        vp = self.padded_vocab
+        params: Dict = {
+            "embed": L.embedding_init(r_embed, vp, cfg.d_model, dt),
+            "final_norm": L.rmsnorm_init(cfg.d_model, dt),
+            "segments": [],
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = L.dense_init(r_head, cfg.d_model, vp, dt)
+        for si, seg in enumerate(self.segments):
+            seg_params: Dict = {"groups": None, "remainder": []}
+            if seg.groups > 0:
+                def group_init(r):
+                    rs = jax.random.split(r, len(seg.pattern))
+                    return [
+                        _block_init(rs[i], cfg, seg.pattern[i], seg.moe[i])
+                        for i in range(len(seg.pattern))
+                    ]
+
+                rngs = jax.random.split(jax.random.fold_in(rng, 100 + si), seg.groups)
+                seg_params["groups"] = jax.vmap(group_init)(rngs)
+            for ri, kind in enumerate(seg.remainder):
+                seg_params["remainder"].append(
+                    _block_init(
+                        jax.random.fold_in(rng, 1000 + 31 * si + ri),
+                        cfg, kind, seg.rem_moe[ri],
+                    )
+                )
+            params["segments"].append(seg_params)
+        return params
+
+    # ------------------------------------------------------------- forward
+    def apply(
+        self,
+        params: Dict,
+        tokens: jnp.ndarray,
+        prefix_embeds: Optional[jnp.ndarray] = None,
+        remat: Optional[bool] = None,
+    ) -> jnp.ndarray:
+        """tokens (B,S) -> logits (B,S,V).  ``prefix_embeds`` (B,P,d)
+        replaces the first P token embeddings (modality-frontend stub:
+        vision patches / audio frames)."""
+        cfg = self.cfg
+        x = L.embed(params["embed"], tokens)
+        if prefix_embeds is not None:
+            P = prefix_embeds.shape[1]
+            x = jnp.concatenate([prefix_embeds.astype(x.dtype), x[:, P:, :]], axis=1)
+        B, S_len, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(S_len, dtype=jnp.int32)[None], (B, S_len))
+        use_remat = cfg.remat != "none" if remat is None else remat
+
+        x = self._run_blocks(params, x, positions, caches=None, cache_len=None,
+                             use_remat=use_remat)[0]
+        x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        return self._logits(params, x)
+
+    def _logits(self, params: Dict, x: jnp.ndarray) -> jnp.ndarray:
+        cfg = self.cfg
+        if cfg.tie_embeddings:
+            logits = x @ params["embed"]["table"].T
+        else:
+            logits = L.dense(params["lm_head"], x)
+        logits = L.softcap(logits, cfg.logit_softcap)
+        if self.padded_vocab != cfg.vocab_size:
+            # mask padded classes (keeps the vocab dim shardable)
+            col = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+            logits = jnp.where(col < cfg.vocab_size, logits, -1e9)
+        return logits
+
+    def _run_blocks(self, params, x, positions, caches, cache_len, use_remat):
+        """Shared depth walk for full-sequence and decode paths."""
+        cfg = self.cfg
+        new_caches: List = []
+        for si, seg in enumerate(self.segments):
+            seg_params = params["segments"][si]
+            seg_cache = caches[si] if caches is not None else None
+            new_seg_cache = {"groups": None, "remainder": []}
+
+            if seg.groups > 0:
+                def group_body(x, xs):
+                    gp, gc = xs
+                    outs = []
+                    for bi, kind in enumerate(seg.pattern):
+                        c = gc[bi] if gc is not None else None
+                        x, nc = _block_apply(
+                            gp[bi], cfg, kind, seg.moe[bi], seg.windows[bi],
+                            x, positions, c, cache_len,
+                        )
+                        outs.append(nc)
+                    return x, outs
+
+                if use_remat:
+                    group_body = jax.checkpoint(group_body)
+
+                def scan_fn(x, xs):
+                    return group_body(x, xs)
+
+                xs = (
+                    (seg_params["groups"], seg_cache["groups"])
+                    if seg_cache is not None
+                    else (seg_params["groups"], None)
+                )
+                unroll = seg.groups if cfg.scan_unroll else 1
+                if seg_cache is not None:
+                    x, group_caches = jax.lax.scan(scan_fn, x, xs, unroll=unroll)
+                    new_seg_cache["groups"] = group_caches
+                else:
+                    def scan_nocache(x, gp):
+                        out, _ = group_body(x, (gp, None))
+                        return out, None
+
+                    x, _ = jax.lax.scan(
+                        scan_nocache, x, seg_params["groups"], unroll=unroll
+                    )
+
+            for ri, kind in enumerate(seg.remainder):
+                c = seg_cache["remainder"][ri] if seg_cache is not None else None
+                x, nc = _block_apply(
+                    seg_params["remainder"][ri], cfg, kind, seg.rem_moe[ri],
+                    seg.rem_windows[ri], x, positions, c, cache_len,
+                )
+                new_seg_cache["remainder"].append(nc)
+            new_caches.append(new_seg_cache)
+        return x, new_caches
+
+    # ------------------------------------------------------------- serving
+    def init_cache(self, batch: int, max_len: int) -> Dict:
+        cfg = self.cfg
+        caches = []
+        for seg in self.segments:
+            seg_cache: Dict = {"groups": None, "remainder": []}
+            if seg.groups > 0:
+                def one_group():
+                    return [
+                        _block_cache(cfg, kind, batch, max_len) for kind in seg.pattern
+                    ]
+
+                # stack over groups
+                proto = one_group()
+                seg_cache["groups"] = jax.tree.map(
+                    lambda a: jnp.broadcast_to(a, (seg.groups,) + a.shape), proto
+                )
+            for kind in seg.remainder:
+                seg_cache["remainder"].append(_block_cache(cfg, kind, batch, max_len))
+            caches.append(seg_cache)
+        return {"layers": caches, "len": jnp.zeros((), jnp.int32)}
+
+    def decode_step(
+        self, params: Dict, cache: Dict, tokens: jnp.ndarray
+    ) -> Tuple[jnp.ndarray, Dict]:
+        """tokens (B,1) one new token per sequence -> (logits (B,1,V), cache)."""
+        cfg = self.cfg
+        x = L.embed(params["embed"], tokens)
+        B = x.shape[0]
+        idx = cache["len"]
+        positions = jnp.broadcast_to(idx[None, None], (B, 1)).astype(jnp.int32)
+        x, new_caches = self._run_blocks(
+            params, x, positions, caches=cache["layers"], cache_len=idx,
+            use_remat=False,
+        )
+        x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        return self._logits(params, x), {"layers": new_caches, "len": idx + 1}

@@ -1,0 +1,51 @@
+"""Inference steps for the assigned LM architectures.
+
+``make_prefill_step`` lowers the full forward over the prompt (logits
+for every position — cache materialization is the decode path's first
+iteration in this framework).  ``make_decode_step`` lowers one-token
+decode against a KV/recurrent cache of a given length — the unit the
+``decode_32k``/``long_500k`` dry-run cells compile.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, Tuple
+
+from repro.models import DecoderLM, EncDecLM
+from repro.models.config import ModelConfig
+
+
+def make_prefill_step(cfg: ModelConfig) -> Callable:
+    if cfg.is_encoder_decoder:
+        model = EncDecLM(cfg)
+
+        def prefill(params: Dict, batch: Dict):
+            return model.apply(params, batch["frames"], batch["tokens"], remat=False)
+
+        return prefill
+    model = DecoderLM(cfg)
+
+    def prefill(params: Dict, batch: Dict):
+        return model.apply(
+            params, batch["tokens"], prefix_embeds=batch.get("patch_embeds"),
+            remat=False,
+        )
+
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig) -> Callable:
+    """(params, cache, tokens (B,1)) -> (logits (B,1,V), new cache)."""
+    if cfg.is_encoder_decoder:
+        model = EncDecLM(cfg)
+        return model.decode_step
+    model = DecoderLM(cfg)
+    return model.decode_step
+
+
+def make_cache_factory(cfg: ModelConfig) -> Callable:
+    if cfg.is_encoder_decoder:
+        model = EncDecLM(cfg)
+        return model.init_cache
+    model = DecoderLM(cfg)
+    return model.init_cache

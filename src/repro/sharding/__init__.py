@@ -1,0 +1,8 @@
+"""Partitioning rules: params/batch/cache PartitionSpecs per arch."""
+
+from repro.sharding.partition import (  # noqa: F401
+    batch_shardings,
+    cache_shardings,
+    param_shardings,
+    state_shardings,
+)

@@ -1,0 +1,10 @@
+"""Shared storage substrate: compression codecs + bounded memory pool.
+
+Used by both the DeepMapping auxiliary table (``repro.core.aux_table``)
+and the paper's baselines (``repro.baselines``), so that compression and
+eviction behaviour are identical across compared systems — the paper's
+benchmark discipline (§V-A4/A5).
+"""
+
+from repro.storage.codecs import CODECS, Codec, get_codec  # noqa: F401
+from repro.storage.pool import MemoryPool  # noqa: F401

@@ -1,0 +1,61 @@
+"""Compression codec registry.
+
+The paper evaluates Dictionary encoding, Gzip, Z-Standard and LZMA
+(§V-A3) and tunes the compression level per use-case (§V-A4): zstd
+level 1 for small-batch / latency-dominated workloads, higher levels
+when decompression is off the critical path.  Codec identity strings
+(``"zstd"``, ``"lzma"``, ...) are stable across save/load.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import gzip
+import lzma
+import zlib
+from typing import Callable, Dict
+
+import zstandard
+
+
+@dataclasses.dataclass(frozen=True)
+class Codec:
+    name: str
+    compress: Callable[[bytes], bytes]
+    decompress: Callable[[bytes], bytes]
+
+
+def _zstd(level: int) -> Codec:
+    def comp(data: bytes, _level=level) -> bytes:
+        return zstandard.ZstdCompressor(level=_level).compress(data)
+
+    def decomp(data: bytes) -> bytes:
+        return zstandard.ZstdDecompressor().decompress(data)
+
+    return Codec(f"zstd{'' if level == 3 else level}", comp, decomp)
+
+
+CODECS: Dict[str, Codec] = {
+    "none": Codec("none", lambda b: b, lambda b: b),
+    "zstd": _zstd(3),
+    "zstd1": _zstd(1),
+    "zstd9": _zstd(9),
+    "gzip": Codec(
+        "gzip",
+        lambda b: gzip.compress(b, compresslevel=6),
+        gzip.decompress,
+    ),
+    "zlib": Codec("zlib", lambda b: zlib.compress(b, 6), zlib.decompress),
+    "lzma": Codec(
+        "lzma",
+        lambda b: lzma.compress(b, preset=6),
+        lzma.decompress,
+    ),
+}
+
+
+def get_codec(name: str) -> Codec:
+    try:
+        return CODECS[name]
+    except KeyError:
+        raise KeyError(f"unknown codec {name!r}; have {sorted(CODECS)}") from None

@@ -1,0 +1,15 @@
+"""Training substrate: optimizers, schedules, checkpointing, fault
+tolerance, gradient compression.  Built from scratch (no optax/orbax) —
+shared by the DeepMapping mapping-model trainer and the LM train steps.
+"""
+
+from repro.train.optimizer import (  # noqa: F401
+    OptState,
+    adam_init,
+    adam_update,
+    adamw,
+    clip_by_global_norm,
+    cosine_schedule,
+    exponential_decay,
+    warmup_cosine,
+)

@@ -1,0 +1,142 @@
+"""Optimizers and LR schedules, pure JAX on pytrees.
+
+Written from scratch (optax is not a dependency).  The API is a pair of
+``init``/``update`` functions over arbitrary pytrees plus a tiny
+``GradientTransform`` combinator so train steps can compose clipping,
+weight decay and the base rule — enough surface for both the paper's
+mapping-model trainer (Adam, lr 1e-3, decay 0.999 — §V-A6) and the LM
+substrate (AdamW + warmup-cosine).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray  # scalar int32
+    mu: object  # first-moment pytree
+    nu: object  # second-moment pytree
+
+
+def _zeros_like_tree(params):
+    return jax.tree.map(jnp.zeros_like, params)
+
+
+def adam_init(params) -> OptState:
+    return OptState(
+        step=jnp.zeros((), jnp.int32),
+        mu=_zeros_like_tree(params),
+        nu=_zeros_like_tree(params),
+    )
+
+
+def adam_update(
+    grads,
+    state: OptState,
+    params,
+    lr: jnp.ndarray | float,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+):
+    """One AdamW step. Returns (new_params, new_state).
+
+    ``weight_decay`` is decoupled (AdamW); 0 recovers plain Adam, which
+    is what the paper's §V-A6 training uses.
+    """
+    step = state.step + 1
+    stepf = step.astype(jnp.float32)
+    bc1 = 1.0 - jnp.power(b1, stepf)
+    bc2 = 1.0 - jnp.power(b2, stepf)
+
+    mu = jax.tree.map(lambda m, g: b1 * m + (1.0 - b1) * g, state.mu, grads)
+    nu = jax.tree.map(lambda v, g: b2 * v + (1.0 - b2) * (g * g), state.nu, grads)
+
+    def upd(p, m, v):
+        mhat = m / bc1
+        vhat = v / bc2
+        delta = mhat / (jnp.sqrt(vhat) + eps)
+        if weight_decay:
+            delta = delta + weight_decay * p
+        return (p - lr * delta).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, mu, nu)
+    return new_params, OptState(step=step, mu=mu, nu=nu)
+
+
+@dataclasses.dataclass(frozen=True)
+class adamw:  # noqa: N801 — factory with function-like name
+    """Bound AdamW rule: ``opt = adamw(lr=...); opt.init / opt.update``."""
+
+    lr: float | Callable[[jnp.ndarray], jnp.ndarray] = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    max_grad_norm: Optional[float] = None
+
+    def init(self, params) -> OptState:
+        return adam_init(params)
+
+    def update(self, grads, state: OptState, params):
+        if self.max_grad_norm is not None:
+            grads, _ = clip_by_global_norm(grads, self.max_grad_norm)
+        lr = self.lr(state.step) if callable(self.lr) else self.lr
+        return adam_update(
+            grads,
+            state,
+            params,
+            lr=lr,
+            b1=self.b1,
+            b2=self.b2,
+            eps=self.eps,
+            weight_decay=self.weight_decay,
+        )
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))
+    )
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-12))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads), norm
+
+
+# -- schedules ---------------------------------------------------------------
+
+
+def exponential_decay(base_lr: float, decay: float) -> Callable:
+    """Paper §V-A6: model lr 0.001 decayed by 0.999 per iteration."""
+
+    def sched(step):
+        return base_lr * jnp.power(decay, step.astype(jnp.float32))
+
+    return sched
+
+
+def cosine_schedule(base_lr: float, total_steps: int, final_frac: float = 0.1) -> Callable:
+    def sched(step):
+        frac = jnp.clip(step.astype(jnp.float32) / max(1, total_steps), 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        return base_lr * (final_frac + (1.0 - final_frac) * cos)
+
+    return sched
+
+
+def warmup_cosine(
+    base_lr: float, warmup_steps: int, total_steps: int, final_frac: float = 0.1
+) -> Callable:
+    cos = cosine_schedule(base_lr, max(1, total_steps - warmup_steps), final_frac)
+
+    def sched(step):
+        stepf = step.astype(jnp.float32)
+        warm = base_lr * stepf / max(1, warmup_steps)
+        return jnp.where(step < warmup_steps, warm, cos(step - warmup_steps))
+
+    return sched

@@ -1,0 +1,119 @@
+"""Train step factory for every architecture family.
+
+``make_train_step(spec_cfg, optimizer, microbatches)`` returns a pure
+``(state, batch) -> (state, metrics)`` suitable for ``jax.jit`` with
+in/out shardings.  Losses are next-token cross-entropy (teacher-forced
+for enc-dec); MoE models add the load-balance auxiliary loss.  Gradient
+accumulation over microbatches runs as a ``lax.scan`` so activation
+memory is bounded by one microbatch.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import DecoderLM, EncDecLM
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+from repro.train.optimizer import OptState, adamw
+
+
+class TrainState(NamedTuple):
+    params: Dict
+    opt: OptState
+
+
+def init_state(cfg: ModelConfig, optimizer: adamw, seed: int = 0) -> TrainState:
+    model = EncDecLM(cfg) if cfg.is_encoder_decoder else DecoderLM(cfg)
+    params = model.init(seed)
+    return TrainState(params=params, opt=optimizer.init(params))
+
+
+def _lm_loss(model: DecoderLM, params: Dict, batch: Dict) -> jnp.ndarray:
+    tokens = batch["tokens"]
+    prefix = batch.get("patch_embeds")
+    logits = model.apply(params, tokens, prefix_embeds=prefix)
+    labels = tokens[:, 1:]
+    lg = logits[:, :-1]
+    mask = None
+    if prefix is not None:
+        # prefix positions carry embeddings, not predictable tokens
+        P = prefix.shape[1]
+        pos = jnp.arange(labels.shape[1])[None, :]
+        mask = (pos >= P).astype(jnp.float32) * jnp.ones_like(labels, jnp.float32)
+    return L.cross_entropy_loss(lg, labels, mask)
+
+
+def _encdec_loss(model: EncDecLM, params: Dict, batch: Dict) -> jnp.ndarray:
+    logits = model.apply(params, batch["frames"], batch["tokens"])
+    return L.cross_entropy_loss(logits[:, :-1], batch["tokens"][:, 1:])
+
+
+def make_loss_fn(cfg: ModelConfig) -> Tuple[Callable, object]:
+    if cfg.is_encoder_decoder:
+        model = EncDecLM(cfg)
+        base = functools.partial(_encdec_loss, model)
+    else:
+        model = DecoderLM(cfg)
+        base = functools.partial(_lm_loss, model)
+
+    if cfg.is_moe:
+        from repro.models import moe as M
+
+        def loss_fn(params, batch):
+            loss = base(params, batch)
+            # one representative router (first MoE layer) keeps the aux
+            # term O(1); production would sum over layers.
+            seg = params["segments"][-1]
+            if seg["groups"] is not None:
+                router_p = jax.tree.map(lambda a: a[0], seg["groups"][0]["ffn"])
+                x = L.embed(params["embed"], batch["tokens"])
+                loss = loss + 0.01 * M.aux_load_balance_loss(router_p, cfg, x)
+            return loss
+
+        return loss_fn, model
+    return base, model
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    optimizer: adamw,
+    microbatches: int = 1,
+) -> Callable[[TrainState, Dict], Tuple[TrainState, Dict]]:
+    loss_fn, _ = make_loss_fn(cfg)
+
+    def single(params, batch):
+        return jax.value_and_grad(loss_fn)(params, batch)
+
+    def train_step(state: TrainState, batch: Dict) -> Tuple[TrainState, Dict]:
+        if microbatches <= 1:
+            loss, grads = single(state.params, batch)
+        else:
+            def reshape(x):
+                b = x.shape[0]
+                return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+
+            micro = jax.tree.map(reshape, batch)
+
+            def acc_step(carry, mb):
+                loss_acc, grad_acc = carry
+                loss, grads = single(state.params, mb)
+                return (
+                    loss_acc + loss / microbatches,
+                    jax.tree.map(lambda a, g: a + g / microbatches, grad_acc, grads),
+                ), None
+
+            zero = jax.tree.map(jnp.zeros_like, state.params)
+            (loss, grads), _ = jax.lax.scan(acc_step, (jnp.zeros(()), zero), micro)
+        new_params, new_opt = optimizer.update(grads, state.opt, state.params)
+        gnorm = jnp.sqrt(
+            sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))
+        )
+        return TrainState(new_params, new_opt), {"loss": loss, "grad_norm": gnorm}
+
+    return train_step

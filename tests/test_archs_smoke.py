@@ -1,0 +1,138 @@
+"""Per-assigned-architecture smoke tests (assignment deliverable f):
+instantiate the REDUCED config of the same family, run one forward and
+one train step on CPU, assert output shapes + no NaNs; decode step for
+decoder-bearing archs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, list_archs
+from repro.models import DecoderLM, EncDecLM
+from repro.serve.serve_step import make_cache_factory, make_decode_step
+from repro.train.optimizer import adamw
+from repro.train.train_step import init_state, make_train_step
+
+ALL_ARCHS = list_archs()
+
+
+def smoke_batch(cfg, B=2, S=16, seed=0):
+    rng = np.random.default_rng(seed)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)))}
+    if cfg.modality == "vision":
+        batch["patch_embeds"] = jnp.asarray(
+            rng.normal(size=(B, 4, cfg.d_model)).astype(np.float32)
+        )
+    if cfg.is_encoder_decoder:
+        batch = {
+            "frames": jnp.asarray(rng.normal(size=(B, S, cfg.d_model)).astype(np.float32)),
+            "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S))),
+        }
+    return batch
+
+
+def test_registry_complete():
+    assert set(ALL_ARCHS) == {
+        "rwkv6-7b", "phi-3-vision-4.2b", "recurrentgemma-2b", "qwen2-7b",
+        "granite-3-2b", "tinyllama-1.1b", "gemma3-1b", "deepseek-v3-671b",
+        "llama4-scout-17b-a16e", "seamless-m4t-medium",
+    }
+
+
+@pytest.mark.parametrize("arch_id", ALL_ARCHS)
+def test_full_config_exact_dims(arch_id):
+    """The full configs carry the EXACT assigned dimensions."""
+    expect = {
+        "rwkv6-7b": (32, 4096, 14336, 65536),
+        "phi-3-vision-4.2b": (32, 3072, 8192, 32064),
+        "recurrentgemma-2b": (26, 2560, 7680, 256000),
+        "qwen2-7b": (28, 3584, 18944, 152064),
+        "granite-3-2b": (40, 2048, 8192, 49155),
+        "tinyllama-1.1b": (22, 2048, 5632, 32000),
+        "gemma3-1b": (26, 1152, 6912, 262144),
+        "deepseek-v3-671b": (61, 7168, 2048, 129280),
+        "llama4-scout-17b-a16e": (48, 5120, 8192, 202048),
+        "seamless-m4t-medium": (24, 1024, 4096, 256206),
+    }[arch_id]
+    cfg = get_arch(arch_id).config
+    dff = cfg.moe_d_ff if cfg.is_moe else cfg.d_ff
+    assert (cfg.num_layers, cfg.d_model, dff, cfg.vocab_size) == expect
+
+
+@pytest.mark.parametrize("arch_id", ALL_ARCHS)
+def test_smoke_forward_no_nans(arch_id):
+    spec = get_arch(arch_id)
+    cfg = spec.smoke
+    batch = smoke_batch(cfg)
+    if cfg.is_encoder_decoder:
+        m = EncDecLM(cfg)
+        params = m.init(0)
+        logits = m.apply(params, batch["frames"], batch["tokens"], remat=False)
+    else:
+        m = DecoderLM(cfg)
+        params = m.init(0)
+        logits = m.apply(params, batch["tokens"],
+                         prefix_embeds=batch.get("patch_embeds"), remat=False)
+    B, S = batch["tokens"].shape
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32)))), "NaN/Inf in logits"
+
+
+@pytest.mark.parametrize("arch_id", ALL_ARCHS)
+def test_smoke_train_step(arch_id):
+    spec = get_arch(arch_id)
+    cfg = spec.smoke
+    opt = adamw(lr=1e-3, max_grad_norm=1.0)
+    state = init_state(cfg, opt, seed=0)
+    step = jax.jit(make_train_step(cfg, opt))
+    batch = smoke_batch(cfg)
+    new_state, metrics = step(state, batch)
+    assert bool(jnp.isfinite(metrics["loss"])), f"loss NaN for {arch_id}"
+    assert float(metrics["grad_norm"]) > 0
+    # params actually moved
+    moved = any(
+        not np.allclose(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(state.params), jax.tree.leaves(new_state.params))
+    )
+    assert moved
+
+    # loss decreases over a few steps on a fixed batch (memorization sanity)
+    s = new_state
+    first = float(metrics["loss"])
+    for _ in range(3):
+        s, metrics = step(s, batch)
+    assert float(metrics["loss"]) < first
+
+
+@pytest.mark.parametrize("arch_id", ALL_ARCHS)
+def test_smoke_decode_step(arch_id):
+    spec = get_arch(arch_id)
+    cfg = spec.smoke
+    B = 2
+    if cfg.is_encoder_decoder:
+        m = EncDecLM(cfg)
+        params = m.init(0)
+        frames = jnp.ones((B, 8, cfg.d_model), jnp.float32)
+        cache = m.prime_cache(params, m.init_cache(B, max_len=8, enc_len=8), frames)
+        decode = make_decode_step(cfg)
+    else:
+        m = DecoderLM(cfg)
+        params = m.init(0)
+        cache = make_cache_factory(cfg)(batch=B, max_len=8)
+        decode = make_decode_step(cfg)
+    tok = jnp.zeros((B, 1), jnp.int32)
+    logits, cache2 = decode(params, cache, tok)
+    assert logits.shape == (B, 1, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+    assert int(cache2["len"]) == 1
+
+
+@pytest.mark.parametrize("arch_id", ALL_ARCHS)
+def test_shape_assignments(arch_id):
+    spec = get_arch(arch_id)
+    assert "train_4k" in spec.shapes
+    if arch_id in ("rwkv6-7b", "recurrentgemma-2b", "gemma3-1b"):
+        assert "long_500k" in spec.shapes
+    else:
+        assert "long_500k" not in spec.shapes

@@ -1,0 +1,68 @@
+import numpy as np
+import pytest
+
+from repro.baselines import BASELINE_FACTORIES, ArrayStore, HashStore
+from repro.data import synthetic_multi_column
+from repro.data.tpch import orders_like
+from repro.storage import MemoryPool
+
+
+@pytest.fixture(scope="module")
+def table():
+    return synthetic_multi_column(n=5000, correlation="high", seed=1)
+
+
+@pytest.fixture(scope="module")
+def string_table():
+    return orders_like(n=2000)
+
+
+class TestBaselineStores:
+    @pytest.mark.parametrize("name", sorted(BASELINE_FACTORIES))
+    def test_exact_lookup_all(self, name, table):
+        store = BASELINE_FACTORIES[name](table, partition_bytes=4096)
+        q = table.keys[:: max(1, table.num_rows // 500)]
+        vals, exists = store.lookup(q)
+        assert exists.all()
+        for col in table.columns:
+            np.testing.assert_array_equal(vals[col], table.columns[col][:: max(1, table.num_rows // 500)])
+
+    @pytest.mark.parametrize("name", ["AB", "ABC-Z", "HB", "HBC-Z"])
+    def test_missing_keys(self, name, table):
+        store = BASELINE_FACTORIES[name](table, partition_bytes=4096)
+        missing = np.array([table.max_key + 10, table.max_key + 11], dtype=np.int64)
+        _, exists = store.lookup(missing)
+        assert not exists.any()
+
+    @pytest.mark.parametrize("name", ["ABC-Z", "ABC-L", "ABC-G", "ABC-D"])
+    def test_compression_shrinks(self, name, table):
+        ab = BASELINE_FACTORIES["AB"](table, partition_bytes=65536)
+        abc = BASELINE_FACTORIES[name](table, partition_bytes=65536)
+        assert abc.size_bytes() < ab.size_bytes()
+
+    def test_string_columns(self, string_table):
+        for name in ["AB", "ABC-Z", "HB"]:
+            store = BASELINE_FACTORIES[name](string_table, partition_bytes=8192)
+            q = string_table.keys[:100]
+            vals, exists = store.lookup(q)
+            assert exists.all()
+            got = vals["o_orderstatus"].astype(str)
+            np.testing.assert_array_equal(
+                got, string_table.columns["o_orderstatus"][:100].astype(str)
+            )
+
+    def test_shared_pool_pressure(self, table):
+        pool = MemoryPool(budget_bytes=16 * 1024)
+        store = ArrayStore.build(table, codec="zstd", partition_bytes=4096, pool=pool)
+        vals, exists = store.lookup(table.keys)
+        assert exists.all()
+        assert pool.evictions > 0
+
+    def test_hash_store_partition_count(self, table):
+        hs = HashStore.build(table, codec="none", partition_bytes=2048)
+        assert len(hs._partitions) > 1
+
+    def test_column_projection(self, table):
+        store = ArrayStore.build(table, codec="zstd")
+        vals, _ = store.lookup(table.keys[:10], columns=["v0"])
+        assert set(vals) == {"v0"}

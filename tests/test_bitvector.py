@@ -1,0 +1,50 @@
+import numpy as np
+import pytest
+
+from repro.core.bitvector import BitVector
+
+
+class TestBitVector:
+    def test_set_test(self):
+        bv = BitVector(1000)
+        keys = np.array([0, 63, 64, 65, 999])
+        bv.set(keys, True)
+        assert bv.test(keys).all()
+        assert not bv.test(np.array([1, 62, 66, 998])).any()
+        assert bv.count() == 5
+
+    def test_unset(self):
+        bv = BitVector.from_keys(np.arange(100))
+        bv.set(np.arange(0, 100, 2), False)
+        assert bv.count() == 50
+        assert bv.test(np.array([1, 3, 99])).all()
+        assert not bv.test(np.array([0, 2, 98])).any()
+
+    def test_grow_on_set(self):
+        bv = BitVector(10)
+        bv.set(np.array([1_000_000]), True)
+        assert bv.capacity == 1_000_001
+        assert bv.test(np.array([1_000_000]))[0]
+        assert not bv.test(np.array([999_999]))[0]
+
+    def test_out_of_domain_false(self):
+        bv = BitVector.from_keys(np.array([5]))
+        out = bv.test(np.array([-3, 100, 5]))
+        assert out.tolist() == [False, False, True]
+
+    def test_serialize_roundtrip(self):
+        keys = np.random.default_rng(0).permutation(10_000)[:777]
+        bv = BitVector.from_keys(keys, capacity=10_000)
+        bv2 = BitVector.from_bytes(bv.to_bytes())
+        assert bv2.capacity == bv.capacity
+        np.testing.assert_array_equal(bv2.words, bv.words)
+
+    def test_compressed_at_rest_smaller_for_sparse(self):
+        bv = BitVector(1 << 20)
+        bv.set(np.array([17]), True)
+        assert bv.size_bytes() < bv.runtime_bytes() / 10
+
+    def test_empty(self):
+        bv = BitVector(0)
+        assert bv.count() == 0
+        assert bv.test(np.array([0, 1])).tolist() == [False, False]

@@ -1,0 +1,75 @@
+import numpy as np
+import pytest
+
+from repro.core.encoding import KeyEncoder, ValueCodec, build_codecs, onehot_digits
+import jax.numpy as jnp
+
+
+class TestKeyEncoder:
+    def test_width_covers_domain(self):
+        enc = KeyEncoder(max_key=999, base=10)
+        assert enc.width == 3 and enc.capacity == 1000
+        enc = KeyEncoder(max_key=1000, base=10)
+        assert enc.width == 4
+
+    def test_digits_roundtrip(self):
+        enc = KeyEncoder(max_key=99999, base=10)
+        keys = np.array([0, 7, 123, 99999, 40205], dtype=np.int64)
+        d = enc.digits(keys)
+        recon = (d * enc._divisors[None, :]).sum(axis=1)
+        np.testing.assert_array_equal(recon, keys)
+
+    @pytest.mark.parametrize("base", [2, 10, 16, 64])
+    def test_bases(self, base):
+        enc = KeyEncoder(max_key=12345, base=base)
+        keys = np.arange(0, 12346, 997, dtype=np.int64)
+        d = enc.digits(keys)
+        assert d.min() >= 0 and d.max() < base
+        recon = (d.astype(np.int64) * enc._divisors[None, :]).sum(axis=1)
+        np.testing.assert_array_equal(recon, keys)
+
+    def test_out_of_range_raises(self):
+        enc = KeyEncoder(max_key=99, base=10)
+        with pytest.raises(ValueError):
+            enc.digits(np.array([100]))
+        with pytest.raises(ValueError):
+            enc.digits(np.array([-1]))
+
+    def test_onehot_matches_digits(self):
+        enc = KeyEncoder(max_key=999, base=10)
+        keys = np.array([42, 0, 999])
+        oh = enc.onehot(keys)
+        assert oh.shape == (3, 30)
+        np.testing.assert_array_equal(oh.sum(axis=1), [3, 3, 3])
+        d = enc.digits(keys)
+        oh2 = np.asarray(onehot_digits(jnp.asarray(d), 10))
+        np.testing.assert_array_equal(oh, oh2)
+
+    def test_digits_jax_matches_numpy(self):
+        enc = KeyEncoder(max_key=88888, base=7)
+        keys = np.array([0, 1, 88888, 1234], dtype=np.int64)
+        np.testing.assert_array_equal(
+            np.asarray(enc.digits_jax(jnp.asarray(keys))), enc.digits(keys)
+        )
+
+
+class TestValueCodec:
+    def test_factorize_decode(self):
+        vals = np.array(["b", "a", "b", "c"])
+        c = ValueCodec("col", vals)
+        assert c.cardinality == 3
+        np.testing.assert_array_equal(c.decode(c.codes), vals)
+
+    def test_encode_unseen(self):
+        c = ValueCodec("col", np.array([1, 2, 3]))
+        codes, known = c.encode(np.array([2, 99]))
+        assert known.tolist() == [True, False] and codes[1] == -1
+        c.extend(np.array([99]))
+        codes, known = c.encode(np.array([99]))
+        assert known.all() and c.decode(codes)[0] == 99
+
+    def test_build_codecs_order(self):
+        cols = {"x": np.array([1, 1, 2]), "y": np.array(["p", "q", "p"])}
+        codecs = build_codecs(cols)
+        assert set(codecs) == {"x", "y"}
+        assert codecs["y"].cardinality == 2

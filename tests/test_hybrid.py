@@ -1,0 +1,165 @@
+import os
+
+import numpy as np
+import pytest
+
+from conftest import make_periodic_table, make_random_table
+from repro.core import DeepMappingConfig, DeepMappingStore, Table
+from repro.core.serialize import load_store, save_store
+from repro.core.trainer import TrainConfig
+
+FAST = DeepMappingConfig(
+    shared=(64, 64), private=(16,), train=TrainConfig(epochs=25, batch_size=512)
+)
+
+
+class TestBuildAndLookup:
+    def test_lossless_on_all_keys(self, small_store):
+        """Desideratum #1: 100% accuracy regardless of model quality."""
+        table, store = small_store
+        vals, exists = store.lookup(table.keys)
+        assert exists.all()
+        for name, col in table.columns.items():
+            np.testing.assert_array_equal(vals[name], col)
+
+    def test_no_spurious_results(self, small_store):
+        """Non-existing keys must return NULL (no hallucination)."""
+        table, store = small_store
+        missing = table.keys[:64] + 1  # stride-2 keys -> odd keys absent
+        _, exists = store.lookup(missing)
+        assert not exists.any()
+
+    def test_low_correlation_data_still_lossless(self):
+        table = make_random_table(n=400)
+        store = DeepMappingStore.build(table, FAST)
+        vals, exists = store.lookup(table.keys)
+        assert exists.all()
+        np.testing.assert_array_equal(vals["col0"], table.columns["col0"])
+
+    def test_column_projection(self, small_store):
+        table, store = small_store
+        vals, _ = store.lookup(table.keys[:10], columns=("col1",))
+        assert set(vals) == {"col1"}
+
+    def test_eq1_accounting(self, small_store):
+        _, store = small_store
+        bd = store.size_breakdown()
+        assert set(bd) == {"model", "aux_table", "exist_bitvector", "decode_map"}
+        assert store.size_bytes() == sum(bd.values())
+        assert store.compression_ratio() == store.size_bytes() / store.raw_bytes
+
+    def test_stats_breakdown_populated(self, small_store):
+        table, store = small_store
+        store.lookup(table.keys[:100])
+        s = store.last_stats
+        assert s.total() > 0 and s.infer_s >= 0 and s.aux_s >= 0
+
+
+class TestModifications:
+    @pytest.fixture()
+    def store(self):
+        return DeepMappingStore.build(make_periodic_table(n=600), FAST)
+
+    def test_insert_lookup(self, store):
+        cap = store.vexist.capacity
+        keys = np.array([cap + 5, cap + 6], dtype=np.int64)
+        cols = {"col0": np.array([1, 2], np.int32), "col1": np.array([0, 1], np.int32)}
+        store.insert(keys, cols)
+        vals, exists = store.lookup(keys)
+        assert exists.all()
+        np.testing.assert_array_equal(vals["col0"], cols["col0"])
+
+    def test_insert_existing_raises(self, store):
+        k = np.array([0], dtype=np.int64)
+        with pytest.raises(ValueError):
+            store.insert(k, {"col0": np.array([1]), "col1": np.array([1])})
+
+    def test_insert_unseen_category(self, store):
+        keys = np.array([10**6], dtype=np.int64)
+        store.insert(keys, {"col0": np.array([99], np.int32), "col1": np.array([0], np.int32)})
+        vals, exists = store.lookup(keys)
+        assert exists.all() and vals["col0"][0] == 99
+
+    def test_delete(self, store):
+        k = np.array([0, 2], dtype=np.int64)
+        n0 = store.num_rows
+        store.delete(k)
+        _, exists = store.lookup(k)
+        assert not exists.any()
+        assert store.num_rows == n0 - 2
+        store.delete(k)  # idempotent
+        assert store.num_rows == n0 - 2
+
+    def test_update(self, store):
+        k = np.array([0], dtype=np.int64)
+        store.update(k, {"col0": np.array([3], np.int32), "col1": np.array([2], np.int32)})
+        vals, exists = store.lookup(k)
+        assert exists.all() and vals["col0"][0] == 3 and vals["col1"][0] == 2
+
+    def test_update_nonexistent_raises(self, store):
+        with pytest.raises(ValueError):
+            store.update(
+                np.array([10**7]), {"col0": np.array([1]), "col1": np.array([1])}
+            )
+
+    def test_retrain_trigger_and_rebuild(self):
+        cfg = DeepMappingConfig(
+            shared=(64,),
+            private=(),
+            train=TrainConfig(epochs=15, batch_size=512),
+            retrain_after_modified_bytes=1,
+        )
+        store = DeepMappingStore.build(make_periodic_table(n=400), cfg)
+        assert not store.should_retrain()
+        cap = store.vexist.capacity
+        store.insert(
+            np.array([cap + 1], dtype=np.int64),
+            {"col0": np.array([0], np.int32), "col1": np.array([0], np.int32)},
+        )
+        assert store.should_retrain()
+        new = store.retrain()
+        _, exists = new.lookup(np.array([cap + 1], dtype=np.int64))
+        assert exists.all()
+        assert new.num_rows == store.num_rows
+
+    def test_mixed_workload_consistency(self, store):
+        """Insert+update+delete interleaved; final state must be exact."""
+        rng = np.random.default_rng(3)
+        cap = store.vexist.capacity
+        ins = np.arange(cap + 10, cap + 60, dtype=np.int64)
+        store.insert(
+            ins,
+            {
+                "col0": rng.integers(0, 5, 50).astype(np.int32),
+                "col1": rng.integers(0, 3, 50).astype(np.int32),
+            },
+        )
+        upd_vals = {
+            "col0": rng.integers(0, 5, 25).astype(np.int32),
+            "col1": rng.integers(0, 3, 25).astype(np.int32),
+        }
+        store.update(ins[:25], upd_vals)
+        store.delete(ins[25:40])
+        vals, exists = store.lookup(ins)
+        assert exists[:25].all() and not exists[25:40].any() and exists[40:].all()
+        np.testing.assert_array_equal(vals["col0"][:25], upd_vals["col0"])
+
+
+class TestSerialization:
+    def test_roundtrip(self, small_store, tmp_path):
+        table, store = small_store
+        p = os.path.join(tmp_path, "store")
+        save_store(store, p)
+        s2 = load_store(p)
+        v1, e1 = store.lookup(table.keys[:200])
+        v2, e2 = s2.lookup(table.keys[:200])
+        np.testing.assert_array_equal(e1, e2)
+        for c in v1:
+            np.testing.assert_array_equal(v1[c], v2[c])
+
+    def test_atomicity_tmp_cleanup(self, small_store, tmp_path):
+        _, store = small_store
+        p = os.path.join(tmp_path, "store")
+        save_store(store, p)
+        save_store(store, p)  # overwrite is atomic
+        assert not os.path.exists(p + ".tmp")

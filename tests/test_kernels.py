@@ -1,0 +1,172 @@
+"""Per-kernel validation: shape sweeps against the pure-jnp oracles in
+``repro.kernels.ref`` (interpret=True on CPU), plus hypothesis property
+tests on the packing/padding invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.bitvector import BitVector
+from repro.core.encoding import KeyEncoder
+from repro.core.model import MLPSpec, init_params
+from repro.kernels import bitvector_test, fused_mlp_codes, fused_mlp_logits
+from repro.kernels.ops import check_vmem_budget
+from repro.kernels.ref import (
+    ref_bitvector_test,
+    ref_fused_mlp_codes,
+    ref_fused_mlp_logits,
+)
+
+
+def make_model(shared, private, cards, base=10, width=5, seed=0):
+    spec = MLPSpec(
+        base=base,
+        width=width,
+        shared=shared,
+        private={f"t{i}": private for i in range(len(cards))},
+        out_cards={f"t{i}": c for i, c in enumerate(cards)},
+    )
+    return spec, init_params(spec, seed=seed)
+
+
+SHAPE_SWEEP = [
+    # (shared, private, cards, base, n)
+    ((64, 32), (16,), (7,), 10, 300),
+    ((48,), (), (5, 3), 10, 64),
+    ((), (24,), (9,), 10, 257),       # no shared trunk: head-first embed
+    ((), (), (4,), 10, 128),          # degenerate: input -> logits
+    ((32, 32), (16, 8), (300,), 10, 100),  # card > 256
+    ((16,), (8,), (3, 5, 7), 2, 500),  # binary digit base
+    ((128,), (64,), (11,), 16, 1000),  # hex base, larger batch
+]
+
+
+class TestFusedMLP:
+    @pytest.mark.parametrize("shared,private,cards,base,n", SHAPE_SWEEP)
+    def test_logits_match_oracle(self, shared, private, cards, base, n):
+        spec, params = make_model(shared, private, cards, base=base)
+        rng = np.random.default_rng(42)
+        digits = jnp.asarray(
+            rng.integers(0, base, size=(n, spec.width)).astype(np.int32)
+        )
+        got = fused_mlp_logits(params, spec, digits)
+        want = ref_fused_mlp_logits(params, digits, spec)
+        for t in spec.tasks:
+            assert got[t].shape == want[t].shape
+            np.testing.assert_allclose(got[t], want[t], rtol=1e-5, atol=1e-5)
+
+    @pytest.mark.parametrize("shared,private,cards,base,n", SHAPE_SWEEP)
+    def test_codes_match_oracle(self, shared, private, cards, base, n):
+        spec, params = make_model(shared, private, cards, base=base)
+        rng = np.random.default_rng(7)
+        digits = jnp.asarray(
+            rng.integers(0, base, size=(n, spec.width)).astype(np.int32)
+        )
+        got = fused_mlp_codes(params, spec, digits)
+        want = ref_fused_mlp_codes(params, digits, spec)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @pytest.mark.parametrize("tile_n", [8, 64, 256])
+    def test_tile_size_invariance(self, tile_n):
+        spec, params = make_model((32,), (16,), (6,))
+        digits = jnp.asarray(
+            np.random.default_rng(0).integers(0, 10, (100, 5)).astype(np.int32)
+        )
+        a = fused_mlp_codes(params, spec, digits, tile_n=tile_n)
+        b = ref_fused_mlp_codes(params, digits, spec)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_batch_not_multiple_of_tile(self):
+        spec, params = make_model((16,), (), (3,))
+        digits = jnp.asarray(
+            np.random.default_rng(1).integers(0, 10, (77, 5)).astype(np.int32)
+        )
+        got = fused_mlp_codes(params, spec, digits, tile_n=64)
+        assert got.shape == (77, 1)
+
+    def test_vmem_budget_rejects_oversized(self):
+        spec, params = make_model((2048, 2048), (2048,), (1000,))
+        with pytest.raises(ValueError, match="VMEM"):
+            check_vmem_budget(params, spec, tile_n=256)
+
+    def test_store_with_pallas_path_lossless(self):
+        """End-to-end: hybrid store built AND queried via the kernel."""
+        from conftest import make_periodic_table
+        from repro.core import DeepMappingConfig, DeepMappingStore
+        from repro.core.trainer import TrainConfig
+
+        table = make_periodic_table(n=500)
+        cfg = DeepMappingConfig(
+            shared=(48,),
+            private=(16,),
+            train=TrainConfig(epochs=10, batch_size=256),
+            use_pallas=True,
+        )
+        store = DeepMappingStore.build(table, cfg)
+        vals, exists = store.lookup(table.keys)
+        assert exists.all()
+        for c, col in table.columns.items():
+            np.testing.assert_array_equal(vals[c], col)
+
+
+class TestBitvectorKernel:
+    @pytest.mark.parametrize("capacity", [64, 100, 1000, 65536])
+    def test_matches_host_bitvector(self, capacity):
+        rng = np.random.default_rng(capacity)
+        keys = rng.choice(capacity, size=capacity // 3, replace=False)
+        bv = BitVector.from_keys(keys, capacity=capacity)
+        q = rng.integers(0, capacity, size=500).astype(np.int64)
+        got = bitvector_test(bv.words, jnp.asarray(q))
+        np.testing.assert_array_equal(np.asarray(got), bv.test(q))
+
+    def test_oracle_agrees_with_kernel(self):
+        rng = np.random.default_rng(3)
+        keys = rng.choice(4096, size=1000, replace=False)
+        bv = BitVector.from_keys(keys, capacity=4096)
+        words32 = jnp.asarray(bv.words.view(np.uint32))
+        q = jnp.asarray(rng.integers(0, 4096, size=256).astype(np.int32))
+        ref = ref_bitvector_test(words32, q)
+        got = bitvector_test(bv.words, q).astype(jnp.int32)
+        np.testing.assert_array_equal(np.asarray(ref), np.asarray(got))
+
+
+class TestKernelProperties:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        keys=st.lists(st.integers(0, 99999), min_size=1, max_size=64, unique=True),
+        probe=st.lists(st.integers(0, 99999), min_size=1, max_size=64),
+    )
+    def test_bitvector_membership_property(self, keys, probe):
+        bv = BitVector.from_keys(np.array(keys), capacity=100000)
+        got = np.asarray(bitvector_test(bv.words, jnp.asarray(np.array(probe))))
+        want = np.isin(np.array(probe), np.array(keys))
+        np.testing.assert_array_equal(got, want)
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        n=st.integers(1, 80),
+        base=st.sampled_from([2, 10, 16]),
+        card=st.integers(2, 40),
+        seed=st.integers(0, 2**16),
+    )
+    def test_fused_codes_in_range(self, n, base, card, seed):
+        spec, params = make_model((16,), (), (card,), base=base, seed=seed)
+        rng = np.random.default_rng(seed)
+        digits = jnp.asarray(rng.integers(0, base, (n, 5)).astype(np.int32))
+        codes = np.asarray(fused_mlp_codes(params, spec, digits))
+        assert codes.shape == (n, 1)
+        assert (codes >= 0).all() and (codes < card).all()
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**16))
+    def test_padding_is_exact(self, seed):
+        """Zero-padding to MXU alignment must not change any logit."""
+        spec, params = make_model((40,), (24,), (13,), seed=seed)
+        rng = np.random.default_rng(seed)
+        digits = jnp.asarray(rng.integers(0, 10, (33, 5)).astype(np.int32))
+        got = fused_mlp_logits(params, spec, digits)
+        want = ref_fused_mlp_logits(params, digits, spec)
+        np.testing.assert_allclose(got["t0"], want["t0"], rtol=1e-5, atol=1e-5)

@@ -1,0 +1,143 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.encoding import KeyEncoder, onehot_digits
+from repro.core.mhas import MHASConfig, SearchSpace, run_mhas
+from repro.core.mhas import controller as ctrl
+from repro.core.model import forward_onehot
+from repro.data import synthetic_multi_column
+
+
+@pytest.fixture(scope="module")
+def space():
+    return SearchSpace(
+        base=10, width=4, tasks=("a", "b"), out_cards=(5, 3),
+        layer_sizes=(8, 16, 32), max_layers=2,
+    )
+
+
+class TestSearchSpace:
+    def test_bank_shapes(self, space):
+        bank = space.init_bank(seed=0)
+        assert bank["trunk"][0]["w"].shape == (space.max_width, space.max_width)
+        assert bank["heads"]["a"]["out"]["w"].shape == (space.max_width, 5)
+
+    def test_tokens_to_arch_bounds(self, space):
+        tokens = np.array([2, 0, 1, 1, 2, 2, 0, 0, 0])
+        arch = space.tokens_to_arch(tokens)
+        assert arch["trunk_depth"] == 2
+        assert list(arch["trunk_sizes"]) == [8, 16]
+        assert arch["heads"]["a"]["depth"] == 1
+
+    @pytest.mark.parametrize("seed", [0, 1, 2, 3])
+    def test_masked_equals_sliced_child(self, space, seed):
+        """THE core MHAS invariant: the weight-shared masked forward must
+        equal the standalone sliced child model exactly."""
+        rng = np.random.default_rng(seed)
+        bank = space.init_bank(seed=seed)
+        tokens = rng.integers(0, 3, size=space.num_decisions)
+        arch = space.tokens_to_arch(tokens)
+        aa = space.arch_arrays(arch)
+
+        enc = KeyEncoder(max_key=9999, base=10)
+        keys = rng.integers(0, 10000, size=17).astype(np.int64)
+        oh = onehot_digits(jnp.asarray(enc.digits(keys)), 10)
+        oh_pad = jnp.pad(oh, ((0, 0), (0, space.max_width - oh.shape[-1])))
+
+        masked = space.forward(bank, oh_pad, aa)
+        child_params = space.extract_child_params(bank, arch)
+        spec = space.child_spec(arch)
+        sliced = forward_onehot(child_params, oh, spec)
+        for t in space.tasks:
+            np.testing.assert_allclose(masked[t], sliced[t], rtol=2e-5, atol=2e-5)
+
+    def test_child_num_params_matches_spec(self, space):
+        tokens = np.array([1, 2, 0, 2, 1, 1, 0, 0, 0])
+        arch = space.tokens_to_arch(tokens)
+        assert space.child_num_params(arch) == space.child_spec(arch).num_params()
+
+    def test_search_space_size_formula(self, space):
+        """Paper: |space| = N^{2M} * prod terms; here just sanity that the
+        decision sequence covers the space."""
+        assert space.num_decisions == (1 + 2) * (1 + 2)
+
+
+class TestController:
+    def test_sample_shapes_and_ranges(self, space):
+        cspec = ctrl.ControllerSpec.for_space(space)
+        params = ctrl.init_controller(cspec, seed=0)
+        tokens, logp, ent = ctrl.sample_arch(params, cspec, jax.random.PRNGKey(0))
+        assert tokens.shape == (space.num_decisions,)
+        kinds = space.decision_kinds()
+        for k, t in zip(kinds, np.asarray(tokens)):
+            limit = cspec.depth_choices if k == 0 else cspec.size_choices
+            assert 0 <= t < limit
+        assert jnp.isfinite(logp) and ent > 0
+
+    def test_logprob_matches_sample(self, space):
+        cspec = ctrl.ControllerSpec.for_space(space)
+        params = ctrl.init_controller(cspec, seed=0)
+        tokens, logp_s, _ = ctrl.sample_arch(params, cspec, jax.random.PRNGKey(1))
+        logp_r, _ = ctrl.logprob_of(params, cspec, tokens)
+        np.testing.assert_allclose(float(logp_s), float(logp_r), rtol=1e-5)
+
+    def test_logprob_differentiable(self, space):
+        cspec = ctrl.ControllerSpec.for_space(space)
+        params = ctrl.init_controller(cspec, seed=0)
+        tokens = jnp.zeros((space.num_decisions,), jnp.int32)
+        g = jax.grad(lambda p: ctrl.logprob_of(p, cspec, tokens)[0])(params)
+        assert all(bool(jnp.all(jnp.isfinite(x))) for x in jax.tree.leaves(g))
+
+    def test_different_rng_different_samples(self, space):
+        cspec = ctrl.ControllerSpec.for_space(space)
+        params = ctrl.init_controller(cspec, seed=0)
+        t1, _, _ = ctrl.sample_arch(params, cspec, jax.random.PRNGKey(0))
+        outs = [
+            np.asarray(ctrl.sample_arch(params, cspec, jax.random.PRNGKey(i))[0])
+            for i in range(8)
+        ]
+        assert any(not np.array_equal(outs[0], o) for o in outs[1:])
+
+
+class TestRunMHAS:
+    def test_end_to_end_small(self):
+        table = synthetic_multi_column(
+            n=1500, correlation="high", cardinalities=(3, 4), seed=0
+        )
+        cfg = MHASConfig(
+            layer_sizes=(8, 16),
+            total_iters=8,
+            model_iters=8,
+            controller_iters=2,
+            model_epochs_per_iter=1,
+            model_batch=512,
+            controller_batch=512,
+            controller_samples=2,
+            finetune_epochs=3,
+        )
+        res = run_mhas(table, cfg)
+        assert res.best_ratio < float("inf")
+        assert len(res.history) > 0
+        assert res.spec.tasks == ("v0", "v1")
+        # result is usable by the hybrid store
+        from repro.core import DeepMappingConfig, DeepMappingStore
+
+        store = DeepMappingStore.build(
+            table, DeepMappingConfig(), spec=res.spec, params=res.params
+        )
+        vals, exists = store.lookup(table.keys[:100])
+        assert exists.all()
+        np.testing.assert_array_equal(vals["v0"], table.columns["v0"][:100])
+
+    def test_history_records_ratio_progress(self):
+        table = synthetic_multi_column(n=1000, correlation="high", seed=1)
+        cfg = MHASConfig(
+            layer_sizes=(8,),
+            total_iters=4, model_iters=4, controller_iters=1,
+            model_epochs_per_iter=1, model_batch=256, controller_batch=256,
+            controller_samples=2, finetune_epochs=2,
+        )
+        res = run_mhas(table, cfg)
+        assert all("ratio" in h and "iter" in h for h in res.history)

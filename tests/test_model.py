@@ -1,0 +1,101 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.encoding import KeyEncoder
+from repro.core.model import (
+    MLPSpec,
+    count_params,
+    forward_digits,
+    forward_onehot,
+    init_params,
+    model_size_bytes,
+    predict_codes,
+)
+
+
+def make_spec(shared=(32, 16), private=(8,), cards=(5, 3), base=10, width=4):
+    return MLPSpec(
+        base=base,
+        width=width,
+        shared=shared,
+        private={f"c{i}": private for i in range(len(cards))},
+        out_cards={f"c{i}": c for i, c in enumerate(cards)},
+    )
+
+
+class TestMLPSpec:
+    def test_hashable_and_stable(self):
+        a = make_spec()
+        b = make_spec()
+        assert hash(a) == hash(b) and a == b
+        assert a.tasks == ("c0", "c1")
+
+    def test_num_params_matches_init(self):
+        spec = make_spec()
+        params = init_params(spec, seed=0)
+        assert count_params(params) == spec.num_params()
+        assert model_size_bytes(params) == spec.size_bytes()
+
+    @pytest.mark.parametrize(
+        "shared,private",
+        [((), ()), ((16,), ()), ((), (8,)), ((32, 16), (8, 4))],
+    )
+    def test_degenerate_depths(self, shared, private):
+        """DAG search space includes 0-hidden paths (input->output edge)."""
+        spec = make_spec(shared=shared, private=private)
+        params = init_params(spec)
+        digits = jnp.asarray(np.random.default_rng(0).integers(0, 10, (7, 4)), jnp.int32)
+        out = forward_digits(params, digits, spec)
+        assert out["c0"].shape == (7, 5) and out["c1"].shape == (7, 3)
+        assert count_params(params) == spec.num_params()
+
+
+class TestForward:
+    def test_gather_matches_onehot(self):
+        """The gather fast path must equal dense-on-one-hot exactly."""
+        enc = KeyEncoder(max_key=9999, base=10)
+        spec = make_spec(width=enc.width)
+        params = init_params(spec, seed=1)
+        keys = np.array([0, 42, 9999, 1234], dtype=np.int64)
+        digits = jnp.asarray(enc.digits(keys))
+        onehot = jnp.asarray(enc.onehot(keys))
+        out_d = forward_digits(params, digits, spec)
+        out_o = forward_onehot(params, onehot, spec)
+        for t in spec.tasks:
+            np.testing.assert_allclose(out_d[t], out_o[t], rtol=1e-5, atol=1e-5)
+
+    def test_predict_codes_shape_order(self):
+        spec = make_spec(cards=(5, 3))
+        params = init_params(spec)
+        digits = jnp.zeros((11, 4), jnp.int32)
+        codes = predict_codes(params, digits, spec)
+        assert codes.shape == (11, 2)
+        assert codes.dtype == jnp.int32
+        assert (codes[:, 0] < 5).all() and (codes[:, 1] < 3).all()
+
+    def test_jit_and_grad(self):
+        spec = make_spec()
+        params = init_params(spec)
+        digits = jnp.zeros((4, 4), jnp.int32)
+
+        @jax.jit
+        def loss(p):
+            out = forward_digits(p, digits, spec)
+            return sum(jnp.sum(v**2) for v in out.values())
+
+        g = jax.grad(loss)(params)
+        assert jnp.isfinite(loss(params))
+        flat = jax.tree.leaves(g)
+        assert all(jnp.all(jnp.isfinite(x)) for x in flat)
+
+    def test_no_nans_large_batch(self):
+        spec = make_spec(shared=(64,), private=())
+        params = init_params(spec)
+        digits = jnp.asarray(
+            np.random.default_rng(0).integers(0, 10, (4096, 4)), jnp.int32
+        )
+        out = forward_digits(params, digits, spec)
+        for v in out.values():
+            assert bool(jnp.all(jnp.isfinite(v)))

@@ -1,0 +1,114 @@
+"""Paper §III extensions: single-relation multi-key and cross-relation
+(star-schema) mappings."""
+
+import numpy as np
+import pytest
+
+from repro.core import DeepMappingConfig, Table
+from repro.core.multikey import MultiKeyMapping, RelationGraph
+from repro.core.trainer import TrainConfig
+
+FAST = DeepMappingConfig(
+    shared=(48,), private=(16,), train=TrainConfig(epochs=10, batch_size=512)
+)
+
+
+@pytest.fixture(scope="module")
+def orders():
+    n = 600
+    keys = np.arange(n, dtype=np.int64)
+    return Table(
+        keys=keys,
+        columns={
+            "order_no": (10_000 + keys * 3).astype(np.int64),  # alt unique key
+            "status": np.array(["F", "O", "P"])[(keys // 8) % 3],
+            "clerk": ((keys // 4) % 50).astype(np.int32),
+        },
+    )
+
+
+class TestMultiKeyMapping:
+    def test_lookup_by_alternate_key(self, orders):
+        mk = MultiKeyMapping.build(orders, [("order_no",)], FAST)
+        q = orders.columns["order_no"][:50]
+        vals, exists = mk.lookup(("order_no",), [q])
+        assert exists.all()
+        np.testing.assert_array_equal(vals["status"], orders.columns["status"][:50])
+        np.testing.assert_array_equal(vals["clerk"], orders.columns["clerk"][:50])
+
+    def test_multiple_choices_coexist(self, orders):
+        mk = MultiKeyMapping.build(orders, [("__key__",), ("order_no",)], FAST)
+        assert set(mk.key_choices) == {("__key__",), ("order_no",)}
+        v1, e1 = mk.lookup(("__key__",), [orders.keys[:20]])
+        v2, e2 = mk.lookup(("order_no",), [orders.columns["order_no"][:20]])
+        assert e1.all() and e2.all()
+        np.testing.assert_array_equal(v1["status"], v2["status"])
+
+    def test_missing_alt_keys_null(self, orders):
+        mk = MultiKeyMapping.build(orders, [("order_no",)], FAST)
+        _, exists = mk.lookup(("order_no",), [np.array([1, 2, 3], dtype=np.int64)])
+        assert not exists.any()
+
+    def test_non_unique_key_choice_rejected(self, orders):
+        with pytest.raises(ValueError, match="uniquely"):
+            MultiKeyMapping.build(orders, [("status",)], FAST)
+
+    def test_composite_string_key(self):
+        n = 200
+        keys = np.arange(n, dtype=np.int64)
+        t = Table(
+            keys=keys,
+            columns={
+                "region": np.array(["EU", "US"])[keys % 2],
+                "seq": (keys // 2).astype(np.int64),
+                "val": ((keys // 4) % 7).astype(np.int32),
+            },
+        )
+        mk = MultiKeyMapping.build(t, [("region", "seq")], FAST)
+        vals, exists = mk.lookup(
+            ("region", "seq"), [t.columns["region"][:30], t.columns["seq"][:30]]
+        )
+        assert exists.all()
+        np.testing.assert_array_equal(vals["val"], t.columns["val"][:30])
+        # unseen region string -> NULL, not crash
+        _, e = mk.lookup(("region", "seq"), [np.array(["XX"]), np.array([0])])
+        assert not e.any()
+
+
+class TestRelationGraph:
+    def test_star_schema_two_hop(self):
+        dim_keys = np.arange(40, dtype=np.int64)
+        dim = Table(
+            keys=dim_keys,
+            columns={"part_name": np.array([f"part{i % 10}" for i in dim_keys])},
+        )
+        n = 500
+        fact_keys = np.arange(n, dtype=np.int64)
+        fk = ((fact_keys * 7) % 40).astype(np.int32)
+        fact = Table(
+            keys=fact_keys,
+            columns={"part_sk": fk, "qty": ((fact_keys // 8) % 5).astype(np.int32)},
+        )
+        g = RelationGraph()
+        g.add_relation("part", dim, FAST)
+        g.add_relation("sales", fact, FAST)
+        g.add_foreign_key("sales", "part_sk", "part")
+
+        vals, exists = g.lookup_through("sales", fact_keys[:64], "part_sk",
+                                        columns=("part_name",))
+        assert exists.all()
+        want = dim.columns["part_name"][fk[:64]]
+        np.testing.assert_array_equal(vals["part_name"], want)
+
+    def test_unknown_fk_raises(self):
+        g = RelationGraph()
+        t = Table(keys=np.arange(10), columns={"x": np.zeros(10, np.int32)})
+        g.add_relation("a", t, FAST)
+        with pytest.raises(KeyError):
+            g.add_foreign_key("a", "x", "missing")
+
+    def test_size_accounting(self):
+        t = Table(keys=np.arange(50), columns={"x": (np.arange(50) % 3).astype(np.int32)})
+        g = RelationGraph()
+        g.add_relation("a", t, FAST)
+        assert g.size_bytes() > 0

@@ -1,0 +1,149 @@
+"""Hypothesis property tests on system-level invariants."""
+
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.core import Table
+from repro.core.aux_table import AuxTable
+from repro.core.bitvector import BitVector
+from repro.core.encoding import KeyEncoder, ValueCodec
+from repro.storage import MemoryPool, get_codec
+
+SET = settings(
+    max_examples=30, deadline=None,
+    suppress_health_check=[HealthCheck.too_slow],
+)
+
+
+class TestEncodingProperties:
+    @SET
+    @given(
+        keys=st.lists(st.integers(0, 10**12), min_size=1, max_size=50, unique=True),
+        base=st.sampled_from([2, 8, 10, 16]),
+    )
+    def test_digit_decomposition_bijective(self, keys, base):
+        keys = np.asarray(keys, dtype=np.int64)
+        enc = KeyEncoder(int(keys.max()), base=base)
+        d = enc.digits(keys)
+        recon = (d[:, : enc._digit_width].astype(np.int64) * enc._divisors).sum(axis=1)
+        np.testing.assert_array_equal(recon, keys)
+        # distinct keys -> distinct encodings
+        assert len(np.unique(d[:, : enc._digit_width], axis=0)) == len(keys)
+
+    @SET
+    @given(
+        vals=st.lists(
+            st.one_of(st.integers(-100, 100), st.text(max_size=5)),
+            min_size=1, max_size=60,
+        )
+    )
+    def test_value_codec_roundtrip(self, vals):
+        arr = np.asarray([str(v) for v in vals])
+        c = ValueCodec("x", arr)
+        np.testing.assert_array_equal(c.decode(c.codes), arr)
+        assert c.cardinality == len(set(arr.tolist()))
+
+
+class TestBitvectorProperties:
+    @SET
+    @given(
+        present=st.sets(st.integers(0, 5000), min_size=0, max_size=200),
+        probes=st.lists(st.integers(-10, 6000), min_size=1, max_size=100),
+    )
+    def test_membership_equals_set(self, present, probes):
+        bv = BitVector.from_keys(np.fromiter(present, np.int64, len(present)),
+                                 capacity=5001)
+        got = bv.test(np.asarray(probes, dtype=np.int64))
+        want = np.asarray([p in present for p in probes])
+        np.testing.assert_array_equal(got, want)
+
+    @SET
+    @given(present=st.sets(st.integers(0, 2000), min_size=1, max_size=100))
+    def test_serialization_identity(self, present):
+        bv = BitVector.from_keys(np.fromiter(present, np.int64, len(present)))
+        bv2 = BitVector.from_bytes(bv.to_bytes())
+        assert bv.count() == bv2.count()
+
+
+class TestAuxTableProperties:
+    @SET
+    @given(
+        rows=st.dictionaries(
+            st.integers(0, 10**6),
+            st.tuples(st.integers(0, 99), st.integers(0, 99)),
+            min_size=1, max_size=80,
+        ),
+        codec=st.sampled_from(["zstd", "none", "gzip"]),
+        part=st.sampled_from([64, 256, 4096]),
+    )
+    def test_aux_is_exact_map(self, rows, codec, part):
+        keys = np.fromiter(rows.keys(), np.int64, len(rows))
+        codes = np.asarray([rows[int(k)] for k in keys], dtype=np.int32)
+        aux = AuxTable.build(keys, codes, codec=codec, partition_bytes=part)
+        found, got = aux.get(keys)
+        assert found.all()
+        np.testing.assert_array_equal(got, codes)
+        absent = np.asarray([10**6 + 1, 10**6 + 2], dtype=np.int64)
+        f2, _ = aux.get(absent)
+        assert not f2.any()
+
+    @SET
+    @given(
+        rows=st.dictionaries(
+            st.integers(0, 10**4), st.integers(0, 9), min_size=2, max_size=50
+        ),
+        ops=st.lists(st.integers(0, 2), min_size=1, max_size=10),
+    )
+    def test_mutations_then_compact_is_identity(self, rows, ops):
+        keys = np.fromiter(rows.keys(), np.int64, len(rows))
+        codes = np.asarray([[rows[int(k)]] for k in keys], dtype=np.int32)
+        aux = AuxTable.build(keys, codes)
+        model = {int(k): int(v[0]) for k, v in zip(keys, codes)}
+        rng = np.random.default_rng(len(rows))
+        for op in ops:
+            k = int(rng.choice(keys))
+            if op == 0:
+                nk = int(rng.integers(10**5, 10**6))
+                aux.add(np.asarray([nk]), np.asarray([[7]], dtype=np.int32))
+                model[nk] = 7
+            elif op == 1 and k in model:
+                aux.remove(np.asarray([k]))
+                model.pop(k, None)
+            else:
+                aux.update(np.asarray([k]), np.asarray([[3]], dtype=np.int32))
+                model[k] = 3
+        before = {k: None for k in model}
+        probe = np.fromiter(model.keys(), np.int64, len(model))
+        f, got = aux.get(probe)
+        assert f.all()
+        np.testing.assert_array_equal(got[:, 0], [model[int(k)] for k in probe])
+        aux.compact()
+        f2, got2 = aux.get(probe)
+        np.testing.assert_array_equal(got, got2)
+        assert f2.all()
+
+
+class TestCodecProperties:
+    @SET
+    @given(
+        data=st.binary(min_size=0, max_size=5000),
+        name=st.sampled_from(["zstd", "zstd1", "gzip", "lzma", "zlib", "none"]),
+    )
+    def test_codec_roundtrip(self, data, name):
+        c = get_codec(name)
+        assert c.decompress(c.compress(data)) == data
+
+
+class TestMemoryPoolProperties:
+    @SET
+    @given(
+        sizes=st.lists(st.integers(1, 500), min_size=1, max_size=30),
+        budget=st.integers(100, 2000),
+    )
+    def test_budget_never_exceeded(self, sizes, budget):
+        pool = MemoryPool(budget)
+        for i, s in enumerate(sizes):
+            pool.get(i, lambda s=s: (bytes(s), s))
+            assert pool.used_bytes <= budget

@@ -1,0 +1,52 @@
+"""Paper §IV-E range queries: existence-index filter + batch inference."""
+
+import numpy as np
+import pytest
+
+from conftest import make_periodic_table
+from repro.core import DeepMappingConfig, DeepMappingStore
+from repro.core.trainer import TrainConfig
+
+
+@pytest.fixture(scope="module")
+def store_table():
+    table = make_periodic_table(n=1200, stride=3)  # keys 0,3,6,...
+    store = DeepMappingStore.build(
+        table,
+        DeepMappingConfig(shared=(64,), private=(16,),
+                          train=TrainConfig(epochs=15, batch_size=512)),
+    )
+    return table, store
+
+
+class TestRangeLookup:
+    def test_exact_range_contents(self, store_table):
+        table, store = store_table
+        keys, values = store.range_lookup(30, 91)
+        want = table.keys[(table.keys >= 30) & (table.keys < 91)]
+        np.testing.assert_array_equal(keys, want)
+        lut = dict(zip(table.keys.tolist(), table.columns["col0"].tolist()))
+        np.testing.assert_array_equal(
+            values["col0"], [lut[int(k)] for k in keys]
+        )
+
+    def test_empty_range(self, store_table):
+        _, store = store_table
+        keys, values = store.range_lookup(31, 32)  # stride-3 keys: none here
+        assert keys.size == 0
+
+    def test_range_beyond_domain_clamped(self, store_table):
+        table, store = store_table
+        keys, _ = store.range_lookup(0, 10**9)
+        assert keys.size == table.num_rows
+
+    def test_range_respects_deletes(self, store_table):
+        table, store = store_table
+        store.delete(np.array([60], dtype=np.int64))
+        keys, _ = store.range_lookup(55, 70)
+        assert 60 not in keys.tolist()
+
+    def test_column_projection(self, store_table):
+        _, store = store_table
+        _, values = store.range_lookup(0, 50, columns=("col1",))
+        assert set(values) == {"col1"}

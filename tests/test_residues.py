@@ -1,0 +1,135 @@
+"""Beyond-paper residue features: encoder widths, detection, and the
+hybrid-store integration (EXPERIMENTS.md §Perf, technique dimension)."""
+
+import numpy as np
+import pytest
+
+from repro.core import DeepMappingConfig, DeepMappingStore, Table
+from repro.core.encoding import KeyEncoder, detect_column_period, detect_residues
+from repro.core.trainer import TrainConfig
+from repro.data import customer_demographics_like
+
+
+class TestResidueEncoder:
+    def test_width_accounts_for_residues(self):
+        enc = KeyEncoder(max_key=999, base=10, residues=(7, 49))
+        assert enc.width == 3 + 1 + 2  # digits + 1-digit %7 + 2-digit %49
+
+    def test_residue_positions_carry_mod(self):
+        enc = KeyEncoder(max_key=999, base=10, residues=(7,))
+        keys = np.array([0, 6, 7, 13, 700])
+        d = enc.digits(keys)
+        np.testing.assert_array_equal(d[:, -1], keys % 7)
+
+    def test_multi_digit_residue_roundtrip(self):
+        enc = KeyEncoder(max_key=10**6 - 1, base=10, residues=(1372,))
+        keys = np.array([0, 1371, 1372, 987654], dtype=np.int64)
+        d = enc.digits(keys)
+        res_digits = d[:, -4:]  # 1371 needs 4 decimal digits
+        recon = (res_digits * np.array([1000, 100, 10, 1])).sum(axis=1)
+        np.testing.assert_array_equal(recon, keys % 1372)
+
+    def test_jax_matches_numpy(self):
+        import jax.numpy as jnp
+
+        enc = KeyEncoder(max_key=99999, base=10, residues=(7, 343))
+        keys = np.array([0, 1, 49, 342, 99999], dtype=np.int64)
+        np.testing.assert_array_equal(
+            np.asarray(enc.digits_jax(jnp.asarray(keys))), enc.digits(keys)
+        )
+
+    def test_onehot_consistent_with_digits(self):
+        enc = KeyEncoder(max_key=999, base=10, residues=(7,))
+        oh = enc.onehot(np.array([13]))
+        assert oh.shape == (1, enc.width * 10)
+        assert oh.sum() == enc.width
+
+    def test_invalid_residue_raises(self):
+        with pytest.raises(ValueError):
+            KeyEncoder(max_key=10, base=10, residues=(1,))
+
+
+class TestPeriodDetection:
+    def test_detects_simple_period(self):
+        keys = np.arange(5000, dtype=np.int64)
+        col = ((keys // 10) % 4).astype(np.int32)
+        p = detect_column_period(keys, col)
+        assert p == 40
+
+    def test_detects_stride_one(self):
+        keys = np.arange(1, 5001, dtype=np.int64)
+        col = ((keys - 1) % 7).astype(np.int32)
+        assert detect_column_period(keys, col) == 7
+
+    def test_tolerates_noise(self):
+        rng = np.random.default_rng(0)
+        keys = np.arange(8000, dtype=np.int64)
+        col = ((keys // 16) % 5).astype(np.int32)
+        flip = rng.random(8000) < 0.01
+        col[flip] = rng.integers(0, 5, int(flip.sum()))
+        assert detect_column_period(keys, col) == 80
+
+    def test_random_column_none(self):
+        rng = np.random.default_rng(1)
+        keys = np.arange(5000, dtype=np.int64)
+        col = rng.integers(0, 5, 5000).astype(np.int32)
+        assert detect_column_period(keys, col) is None
+
+    def test_constant_column(self):
+        keys = np.arange(100, dtype=np.int64)
+        assert detect_column_period(keys, np.zeros(100, np.int32)) == 1
+
+    def test_detect_residues_cross_product(self):
+        table = customer_demographics_like(n=30_000)
+        res = detect_residues(table.keys, table.columns, base=10)
+        assert 7 in res          # dep_college: stride 1, card 7
+        assert 49 in res         # dep_employed
+        assert len(res) >= 3
+
+    def test_position_cap_respected(self):
+        table = customer_demographics_like(n=30_000)
+        res = detect_residues(table.keys, table.columns, base=10, max_positions=3)
+        total = sum(len(str(r - 1)) for r in res)
+        assert total <= 3
+
+
+class TestStoreWithResidues:
+    def test_lossless_and_better_memorization(self):
+        table = customer_demographics_like(n=8000)
+        train = TrainConfig(epochs=25, batch_size=2048)
+        plain = DeepMappingStore.build(
+            table, DeepMappingConfig(shared=(64,), private=(16,), train=train)
+        )
+        auto = DeepMappingStore.build(
+            table,
+            DeepMappingConfig(shared=(64,), private=(16,), train=train,
+                              auto_residues=True),
+        )
+        # both lossless
+        for store in (plain, auto):
+            v, e = store.lookup(table.keys[:500])
+            assert e.all()
+            for c in table.columns:
+                np.testing.assert_array_equal(v[c], table.columns[c][:500])
+        assert auto.memorized_fraction() > plain.memorized_fraction()
+
+    def test_residue_store_serializes(self, tmp_path):
+        import os
+
+        from repro.core.serialize import load_store, save_store
+
+        table = customer_demographics_like(n=2000)
+        store = DeepMappingStore.build(
+            table,
+            DeepMappingConfig(shared=(32,), private=(), residues=(7, 49),
+                              train=TrainConfig(epochs=5, batch_size=512)),
+        )
+        p = os.path.join(tmp_path, "s")
+        save_store(store, p)
+        s2 = load_store(p)
+        assert s2.encoder.residues == (7, 49)
+        v1, e1 = store.lookup(table.keys[:100])
+        v2, e2 = s2.lookup(table.keys[:100])
+        np.testing.assert_array_equal(e1, e2)
+        for c in v1:
+            np.testing.assert_array_equal(v1[c], v2[c])

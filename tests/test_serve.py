@@ -1,0 +1,66 @@
+import numpy as np
+import pytest
+
+from conftest import make_periodic_table
+from repro.core import DeepMappingConfig, DeepMappingStore
+from repro.core.trainer import TrainConfig
+from repro.serve import LookupServer
+
+
+@pytest.fixture(scope="module")
+def server():
+    table = make_periodic_table(n=2000)
+    store = DeepMappingStore.build(
+        table,
+        DeepMappingConfig(shared=(64,), private=(16,),
+                          train=TrainConfig(epochs=15, batch_size=512)),
+    )
+    return table, LookupServer(store, max_batch=512)
+
+
+class TestLookupServer:
+    def test_single_request(self, server):
+        table, srv = server
+        vals, exists = srv.lookup(table.keys[:100])
+        assert exists.all()
+        np.testing.assert_array_equal(vals["col0"], table.columns["col0"][:100])
+
+    def test_merged_requests_scatter_correctly(self, server):
+        table, srv = server
+        rng = np.random.default_rng(0)
+        reqs = [rng.choice(table.keys, size=s) for s in (17, 300, 5)]
+        results = srv.lookup_many(reqs)
+        lut = dict(zip(table.keys.tolist(), table.columns["col0"].tolist()))
+        for req, (vals, exists) in zip(reqs, results):
+            assert exists.all()
+            for k, v in zip(req.tolist(), vals["col0"].tolist()):
+                assert lut[k] == v
+
+    def test_dedup_shares_inference(self, server):
+        table, srv = server
+        srv.stats.keys = 0
+        srv.stats.batches = 0
+        same = np.full(1000, int(table.keys[3]), dtype=np.int64)
+        out = srv.lookup_many([same, same])
+        assert all(e.all() for _, e in out)
+        # 2000 requested keys collapse into one device batch
+        assert srv.stats.batches == 1
+
+    def test_missing_keys_null(self, server):
+        table, srv = server
+        missing = np.array([table.max_key + 7, table.max_key + 9])
+        _, exists = srv.lookup(missing)
+        assert not exists.any()
+
+    def test_column_projection(self, server):
+        table, srv = server
+        vals, _ = srv.lookup(table.keys[:5], columns=("col1",))
+        assert set(vals) == {"col1"}
+
+    def test_stats_accumulate(self, server):
+        table, srv = server
+        srv.stats.requests = 0
+        srv.lookup(table.keys[:10])
+        srv.lookup(table.keys[:10])
+        assert srv.stats.requests == 2
+        assert srv.stats.qps() > 0

@@ -1,0 +1,295 @@
+"""Optimizer / checkpoint / fault-tolerance / compression / loader tests."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train.checkpoint import (
+    AsyncCheckpointer,
+    list_steps,
+    restore_checkpoint,
+    restore_latest,
+    save_checkpoint,
+)
+from repro.train.compression import (
+    compress_grads,
+    decompress_grads,
+    dequantize_int8,
+    ef_init,
+    quantize_int8,
+)
+from repro.train.fault_tolerance import StepWatchdog, run_training
+from repro.train.optimizer import (
+    adam_init,
+    adam_update,
+    adamw,
+    clip_by_global_norm,
+    cosine_schedule,
+    exponential_decay,
+    warmup_cosine,
+)
+
+
+class TestOptimizer:
+    def test_adam_converges_quadratic(self):
+        params = {"x": jnp.asarray(5.0), "y": jnp.asarray(-3.0)}
+        opt = adam_init(params)
+        for _ in range(300):
+            grads = jax.grad(lambda p: p["x"] ** 2 + (p["y"] - 1) ** 2)(params)
+            params, opt = adam_update(grads, opt, params, lr=0.05)
+        assert abs(float(params["x"])) < 0.05
+        assert abs(float(params["y"]) - 1) < 0.05
+
+    def test_weight_decay_shrinks(self):
+        params = {"w": jnp.ones((4,))}
+        opt = adam_init(params)
+        zero = {"w": jnp.zeros((4,))}
+        p1, _ = adam_update(zero, opt, params, lr=0.1, weight_decay=0.1)
+        assert float(p1["w"][0]) < 1.0
+
+    def test_clip_global_norm(self):
+        g = {"a": jnp.full((3,), 100.0)}
+        clipped, norm = clip_by_global_norm(g, 1.0)
+        cn = jnp.sqrt(sum(jnp.sum(x**2) for x in jax.tree.leaves(clipped)))
+        np.testing.assert_allclose(float(cn), 1.0, rtol=1e-5)
+        assert float(norm) > 100
+
+    def test_schedules(self):
+        s = exponential_decay(1e-3, 0.999)
+        assert float(s(jnp.asarray(0))) == pytest.approx(1e-3)
+        assert float(s(jnp.asarray(100))) < 1e-3
+        c = cosine_schedule(1.0, 100)
+        assert float(c(jnp.asarray(0))) == pytest.approx(1.0)
+        assert float(c(jnp.asarray(100))) == pytest.approx(0.1, abs=1e-6)
+        w = warmup_cosine(1.0, 10, 100)
+        assert float(w(jnp.asarray(5))) == pytest.approx(0.5)
+
+    def test_adamw_factory_with_clip(self):
+        opt = adamw(lr=0.1, max_grad_norm=1.0)
+        params = {"w": jnp.ones((2,))}
+        state = opt.init(params)
+        new, state = opt.update({"w": jnp.full((2,), 50.0)}, state, params)
+        assert float(jnp.abs(params["w"] - new["w"]).max()) <= 0.11
+
+
+def make_state():
+    return {
+        "params": {"w": np.arange(6, dtype=np.float32).reshape(2, 3)},
+        "opt": {"mu": np.zeros((2, 3), np.float32), "step": np.asarray(7)},
+    }
+
+
+class TestCheckpoint:
+    def test_roundtrip(self, tmp_path):
+        state = make_state()
+        save_checkpoint(str(tmp_path), 10, state)
+        step, restored = restore_latest(str(tmp_path), state)
+        assert step == 10
+        np.testing.assert_array_equal(restored["params"]["w"], state["params"]["w"])
+
+    def test_keep_k_prunes(self, tmp_path):
+        state = make_state()
+        for s in range(1, 6):
+            save_checkpoint(str(tmp_path), s, state, keep=2)
+        assert list_steps(str(tmp_path)) == [4, 5]
+
+    def test_atomic_no_tmp_left(self, tmp_path):
+        save_checkpoint(str(tmp_path), 1, make_state())
+        assert not any(d.endswith(".tmp") for d in os.listdir(tmp_path))
+
+    def test_restore_specific_step(self, tmp_path):
+        state = make_state()
+        save_checkpoint(str(tmp_path), 1, state, keep=5)
+        state2 = make_state()
+        state2["params"]["w"] += 100
+        save_checkpoint(str(tmp_path), 2, state2, keep=5)
+        r1 = restore_checkpoint(str(tmp_path), 1, state)
+        assert float(r1["params"]["w"][0, 0]) == 0.0
+
+    def test_restore_with_resharding(self, tmp_path):
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        state = make_state()
+        save_checkpoint(str(tmp_path), 3, state)
+        mesh = jax.make_mesh((1,), ("data",))
+        sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), state)
+        step, restored = restore_latest(str(tmp_path), state, shardings=sh)
+        assert isinstance(restored["params"]["w"], jax.Array)
+        np.testing.assert_array_equal(
+            np.asarray(restored["params"]["w"]), state["params"]["w"]
+        )
+
+    def test_async_checkpointer(self, tmp_path):
+        saver = AsyncCheckpointer(str(tmp_path), keep=2)
+        state = make_state()
+        for s in (10, 20, 30):
+            saver.save(s, state)
+        saver.wait()
+        assert list_steps(str(tmp_path)) == [20, 30]
+
+    def test_shape_mismatch_raises(self, tmp_path):
+        save_checkpoint(str(tmp_path), 1, make_state())
+        bad = make_state()
+        bad["params"]["w"] = np.zeros((3, 3), np.float32)
+        with pytest.raises(ValueError, match="shape mismatch"):
+            restore_checkpoint(str(tmp_path), 1, bad)
+
+
+class TestFaultTolerance:
+    def _toy_step(self):
+        def step_fn(state, batch):
+            w = state["w"] - 0.1 * (state["w"] - batch["target"])
+            return {"w": w}, {"loss": float(jnp.mean((w - batch["target"]) ** 2))}
+
+        return step_fn
+
+    def _batch_fn(self, step):
+        return {"target": jnp.asarray(float(step % 3))}
+
+    def test_runs_to_completion(self, tmp_path):
+        report = run_training(
+            self._toy_step(), {"w": jnp.asarray(10.0)}, self._batch_fn,
+            num_steps=25, ckpt_dir=str(tmp_path), ckpt_every=5, async_ckpt=False,
+        )
+        assert report.final_step == 25 and report.restarts == 0
+
+    def test_crash_recovery_replays(self, tmp_path):
+        crashed = {"done": False}
+
+        def fail_at(step):
+            if step == 13 and not crashed["done"]:
+                crashed["done"] = True
+                return True
+            return False
+
+        report = run_training(
+            self._toy_step(), {"w": jnp.asarray(10.0)}, self._batch_fn,
+            num_steps=20, ckpt_dir=str(tmp_path), ckpt_every=5,
+            fail_at=fail_at, async_ckpt=False,
+        )
+        assert report.restarts == 1
+        assert report.final_step == 20
+        # replayed steps 10-12 after restoring step-10 checkpoint
+        assert report.steps_run == 20 + 3
+
+    def test_too_many_failures_raises(self, tmp_path):
+        with pytest.raises(RuntimeError):
+            run_training(
+                self._toy_step(), {"w": jnp.asarray(0.0)}, self._batch_fn,
+                num_steps=5, ckpt_dir=str(tmp_path),
+                fail_at=lambda s: True, max_restarts=2, async_ckpt=False,
+            )
+
+    def test_watchdog_flags_straggler(self):
+        wd = StepWatchdog(factor=2.0, window=10)
+        for i in range(8):
+            wd.observe(i, 0.1)
+        ev = wd.observe(8, 0.5)
+        assert ev is not None and ev.step == 8
+
+
+class TestCompression:
+    def test_quantize_roundtrip_error_bounded(self):
+        x = jnp.asarray(np.random.default_rng(0).normal(size=(128,)).astype(np.float32))
+        q, s = quantize_int8(x)
+        err = jnp.abs(dequantize_int8(q, s) - x).max()
+        assert float(err) <= float(s) * 0.5 + 1e-6
+
+    def test_error_feedback_preserves_sum(self):
+        """EF invariant: transmitted + residual == accumulated intent."""
+        rng = np.random.default_rng(1)
+        grads = {"w": jnp.asarray(rng.normal(size=(64,)).astype(np.float32))}
+        ef = ef_init(grads)
+        total_sent = jnp.zeros((64,))
+        total_true = jnp.zeros((64,))
+        for _ in range(5):
+            g = {"w": jnp.asarray(rng.normal(size=(64,)).astype(np.float32))}
+            total_true = total_true + g["w"]
+            compressed, ef = compress_grads(g, ef)
+            total_sent = total_sent + decompress_grads(compressed)["w"]
+        # residual closes the gap exactly
+        np.testing.assert_allclose(
+            np.asarray(total_sent + ef.residual["w"]),
+            np.asarray(total_true),
+            rtol=1e-4, atol=1e-4,
+        )
+
+    def test_compression_ratio_is_4x(self):
+        g = {"w": jnp.zeros((1024,), jnp.float32)}
+        compressed, _ = compress_grads(g, ef_init(g))
+        q, s = compressed["w"]
+        assert q.dtype == jnp.int8 and q.nbytes == 1024  # vs 4096 fp32
+
+
+class TestLoader:
+    def test_deterministic_replay(self):
+        from repro.data.loader import LoaderConfig, TokenBatchLoader
+
+        toks = np.arange(10_000, dtype=np.int32) % 777
+        cfg = LoaderConfig(global_batch=8, seq_len=32, seed=3)
+        a = TokenBatchLoader(cfg, tokens=toks).batch_for_step(7)
+        b = TokenBatchLoader(cfg, tokens=toks).batch_for_step(7)
+        np.testing.assert_array_equal(a["tokens"], b["tokens"])
+
+    def test_process_sharding_partitions_batch(self):
+        from repro.data.loader import LoaderConfig, TokenBatchLoader
+
+        toks = np.arange(10_000, dtype=np.int32)
+        full = TokenBatchLoader(
+            LoaderConfig(global_batch=8, seq_len=16, seed=0), tokens=toks
+        ).batch_for_step(0)["tokens"]
+        parts = [
+            TokenBatchLoader(
+                LoaderConfig(global_batch=8, seq_len=16, seed=0,
+                             process_index=i, process_count=2),
+                tokens=toks,
+            ).batch_for_step(0)["tokens"]
+            for i in range(2)
+        ]
+        recombined = np.empty_like(full)
+        recombined[0::2] = parts[0]
+        recombined[1::2] = parts[1]
+        np.testing.assert_array_equal(recombined, full)
+
+
+class TestTokenStore:
+    def test_lossless_roundtrip(self):
+        from repro.core.hybrid import DeepMappingConfig
+        from repro.core.trainer import TrainConfig
+        from repro.data.tokens import DeepMappingTokenStore, make_structured_tokens
+
+        toks = make_structured_tokens(4000, vocab=64, run_len=16, seed=0)
+        store = DeepMappingTokenStore.build(
+            toks,
+            DeepMappingConfig(
+                shared=(64,), private=(16,),
+                train=TrainConfig(epochs=20, batch_size=1024),
+            ),
+        )
+        got = store.get(np.arange(4000))
+        np.testing.assert_array_equal(got.astype(np.int32), toks)
+        batch = store.get_batch(np.array([0, 100]), seq_len=32)
+        np.testing.assert_array_equal(batch[0], toks[:32])
+        np.testing.assert_array_equal(batch[1], toks[100:132])
+
+    def test_feeds_loader(self):
+        from repro.core.hybrid import DeepMappingConfig
+        from repro.core.trainer import TrainConfig
+        from repro.data.loader import LoaderConfig, TokenBatchLoader
+        from repro.data.tokens import DeepMappingTokenStore, make_structured_tokens
+
+        toks = make_structured_tokens(2000, vocab=32, run_len=8, seed=1)
+        store = DeepMappingTokenStore.build(
+            toks,
+            DeepMappingConfig(
+                shared=(32,), private=(),
+                train=TrainConfig(epochs=10, batch_size=512),
+            ),
+        )
+        cfg = LoaderConfig(global_batch=4, seq_len=64, seed=0)
+        via_store = TokenBatchLoader(cfg, store=store).batch_for_step(3)
+        via_raw = TokenBatchLoader(cfg, tokens=toks).batch_for_step(3)
+        np.testing.assert_array_equal(via_store["tokens"], via_raw["tokens"])
