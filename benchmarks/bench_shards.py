@@ -1,0 +1,122 @@
+"""Sharded-cluster scaling: build time, lookup QPS, and dirty-shard
+retrain cost vs. shard count (ROADMAP sharding direction; the cluster
+analogue of the paper's Fig. 7 serving measurements).
+
+Per shard count K (and both partition policies) this reports:
+
+* ``build_s``          — wall-clock to train all K shards (thread pool)
+* ``lookup QPS``       — batched scatter/gather lookup throughput
+* ``retrain_dirty_s``  — cost to absorb a localized modification burst:
+                         dirty ONE shard, retrain only it (K=1 pays the
+                         whole-relation rebuild — the sharding payoff)
+
+    PYTHONPATH=src:benchmarks python benchmarks/bench_shards.py
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+from typing import List, Sequence
+
+import numpy as np
+
+from benchmarks import common as C
+from repro.cluster import ClusterConfig, ShardedDeepMappingStore
+from repro.core import DeepMappingConfig, DeepMappingStore
+from repro.core.trainer import TrainConfig
+from repro.storage import MemoryPool
+
+SHARD_CFG = DeepMappingConfig(
+    shared=(128, 64),
+    private=(16,),
+    codec="zstd",
+    partition_bytes=64 * 1024,
+    train=TrainConfig(epochs=30, batch_size=4096),
+    retrain_after_modified_bytes=1,
+)
+
+
+def _build(table, k: int, policy: str, pool: MemoryPool):
+    if k == 1:
+        return DeepMappingStore.build(table, SHARD_CFG, pool=pool)
+    return ShardedDeepMappingStore.build(
+        table, SHARD_CFG, ClusterConfig(num_shards=k, policy=policy), pool=pool
+    )
+
+
+def _dirty_burst(table, store) -> float:
+    """Update a contiguous low-key slice (localized write burst), then
+    time the retrain that pays it back."""
+    n = max(8, table.num_rows // 100)
+    keys = np.sort(table.keys)[:n]
+    vals, exists = store.lookup(keys)
+    assert exists.all()
+    store.update(keys, vals)  # no-op values still charge modified bytes
+    t0 = time.perf_counter()
+    if isinstance(store, ShardedDeepMappingStore):
+        retrained = store.retrain()
+        assert retrained, "burst should dirty at least one shard"
+    else:
+        store.retrain()
+    return time.perf_counter() - t0
+
+
+def run(
+    dataset: str = "tpcds_customer_demographics",
+    shard_counts: Sequence[int] = (1, 2, 4, 8),
+    policies: Sequence[str] = ("range", "hash"),
+    batch: int = 10_000,
+    repeats: int = 3,
+) -> List[dict]:
+    table = C.DATASETS[dataset]()
+    rows = []
+    for k in shard_counts:
+        for policy in policies:
+            if k == 1 and policy != "range":
+                continue  # K=1 has no policy distinction
+            pool = MemoryPool(1 << 30)
+            t0 = time.perf_counter()
+            store = _build(table, k, policy, pool)
+            build_s = time.perf_counter() - t0
+
+            keys = C.query_keys(table, batch)
+            store.lookup(keys)  # warm jit
+            lookup_s = C.time_lookup(store, keys, repeats=repeats)
+            qps = keys.size / lookup_s
+
+            retrain_s = _dirty_burst(table, store)
+            label = f"shards[{dataset}]/K={k}/{policy if k > 1 else 'single'}"
+            C.emit(
+                f"{label}/lookup", lookup_s / keys.size * 1e6,
+                f"qps={qps:.0f};build_s={build_s:.2f};retrain_dirty_s={retrain_s:.2f}",
+            )
+            rows.append(
+                {
+                    "dataset": dataset, "shards": k, "policy": policy,
+                    "build_s": build_s, "lookup_qps": qps,
+                    "retrain_dirty_s": retrain_s,
+                    "ratio": store.compression_ratio(),
+                }
+            )
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--dataset", default="tpcds_customer_demographics",
+                    choices=sorted(C.DATASETS))
+    ap.add_argument("--shards", type=int, nargs="*", default=(1, 2, 4, 8))
+    ap.add_argument("--policies", nargs="*", default=("range", "hash"))
+    ap.add_argument("--batch", type=int, default=10_000)
+    args = ap.parse_args()
+    run(
+        dataset=args.dataset,
+        shard_counts=tuple(args.shards),
+        policies=tuple(args.policies),
+        batch=args.batch,
+    )
+
+
+if __name__ == "__main__":
+    main()

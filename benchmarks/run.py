@@ -12,6 +12,7 @@ Sections:
   fig6    — storage breakdown                               (paper Fig. 6)
   fig7    — latency breakdown                               (paper Fig. 7)
   fig9    — MHAS search progression                         (paper Fig. 9/10)
+  shards  — sharded cluster scaling: build / lookup QPS / dirty-shard retrain
   tokens  — beyond-paper: DeepMapping-compressed LM data pipeline
   roofline — assignment §Roofline terms from the dry-run records
 """
@@ -30,7 +31,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import bench_beyond, bench_breakdown, bench_lookup
-    from benchmarks import bench_mhas, bench_modify, bench_tokens, roofline
+    from benchmarks import bench_mhas, bench_modify, bench_shards
+    from benchmarks import bench_tokens, roofline
     from benchmarks import common as C
 
     datasets = list(C.DATASETS) if args.full else list(C.FAST_DATASETS)
@@ -47,6 +49,9 @@ def main() -> None:
         "fig6": lambda: bench_breakdown.run_storage(datasets=datasets),
         "fig7": lambda: bench_breakdown.run_latency(datasets=datasets),
         "fig9": lambda: bench_mhas.run(iters=None if args.full else 60),
+        "shards": lambda: bench_shards.run(
+            shard_counts=(1, 2, 4, 8) if args.full else (1, 4)
+        ),
         "tokens": lambda: bench_tokens.run(),
         "beyond": lambda: bench_beyond.run(),
         "roofline": lambda: roofline.run(),

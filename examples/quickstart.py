@@ -2,7 +2,14 @@
 look up keys, modify, and measure Eq. 1.
 
     PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py --shards 4 --policy range
+
+With ``--shards K > 1`` the same workload runs against the sharded
+cluster (``repro.cluster``): K per-partition stores built in parallel
+behind a scatter/gather router, with per-shard lazy retrain.
 """
+
+import argparse
 
 import numpy as np
 
@@ -11,6 +18,13 @@ from repro.core.trainer import TrainConfig
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--shards", type=int, default=1,
+                    help="number of cluster shards (1 = single store)")
+    ap.add_argument("--policy", default="range", choices=("range", "hash"),
+                    help="cluster partition policy (with --shards > 1)")
+    args = ap.parse_args()
+
     # A small relation: order_id -> (status, priority).  Values follow a
     # periodic pattern along the key (the paper's high-correlation regime).
     n = 20_000
@@ -29,7 +43,19 @@ def main() -> None:
         codec="zstd",
         train=TrainConfig(epochs=40, batch_size=4096),
     )
-    store = DeepMappingStore.build(table, cfg, verbose=True)
+    if args.shards > 1:
+        from repro.cluster import ClusterConfig, ShardedDeepMappingStore
+
+        store = ShardedDeepMappingStore.build(
+            table,
+            cfg,
+            ClusterConfig(num_shards=args.shards, policy=args.policy),
+            verbose=True,
+        )
+        print(f"  {store.num_shards} {args.policy} shards, "
+              f"rows/shard: {[s.num_rows for s in store.shards]}")
+    else:
+        store = DeepMappingStore.build(table, cfg, verbose=True)
 
     print("\n-- Eq.1 accounting ------------------------------")
     for k, v in store.size_breakdown().items():
@@ -62,6 +88,12 @@ def main() -> None:
     store.delete(np.array([2], dtype=np.int64))
     _, e = store.lookup(np.array([2]))
     print(f"  deleted key 2: exists={e[0]}")
+
+    if args.shards > 1:
+        print("\n-- Per-shard lazy retrain ------------------------")
+        print(f"  dirty shards after modifications: {store.dirty_shards() or 'none'}")
+        print(f"  range scatter [0, 1000): shards "
+              f"{store.partitioner.shards_for_range(0, 1000).tolist()}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,20 @@
+"""Sharded DeepMapping cluster: a relation range- or hash-partitioned
+into K independent :class:`~repro.core.hybrid.DeepMappingStore` shards
+behind a scatter/gather router — parallel build, per-shard lazy
+retrain, shared memory pool, directory-of-stores serialization.
+"""
+
+from repro.cluster.partitioner import (  # noqa: F401
+    HashPartitioner,
+    Partitioner,
+    RangePartitioner,
+    make_partitioner,
+    plan_range_partitions,
+)
+from repro.cluster.router import ShardBatch, ShardRouter  # noqa: F401
+from repro.cluster.sharded_store import (  # noqa: F401
+    ClusterConfig,
+    ShardedDeepMappingStore,
+    load_sharded_store,
+    save_sharded_store,
+)

@@ -1,0 +1,94 @@
+"""Scatter/gather routing for the sharded DeepMapping cluster.
+
+The router turns one batched request over arbitrary keys into at most
+one contiguous sub-batch per shard (scatter) and reassembles per-shard
+results back into request order (gather).  Routing is a pure function
+of the partitioner — the paper's batch discipline (§IV-B2: sort so
+each compressed partition is decompressed at most once per batch)
+extends here to: sort so each SHARD is visited at most once per batch.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, List, Tuple
+
+import numpy as np
+
+from repro.cluster.partitioner import Partitioner
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardBatch:
+    """One shard's slice of a scattered request.
+
+    ``positions`` indexes into the original request array; gather
+    writes this batch's results back through it.
+    """
+
+    shard_id: int
+    positions: np.ndarray  # (m,) int64 indices into the request
+    keys: np.ndarray       # (m,) int64 keys routed to this shard
+
+
+class ShardRouter:
+    """Routes key batches (and per-row column payloads) to shards."""
+
+    def __init__(self, partitioner: Partitioner):
+        self.partitioner = partitioner
+
+    @property
+    def num_shards(self) -> int:
+        return self.partitioner.num_shards
+
+    def scatter(self, keys: np.ndarray) -> List[ShardBatch]:
+        """Group a key batch by owning shard (one batch per touched
+        shard, shard-id ascending; empty shards are skipped)."""
+        keys = np.asarray(keys, dtype=np.int64)
+        if keys.size == 0:
+            return []
+        sid = self.partitioner.shard_of(keys)
+        order = np.argsort(sid, kind="stable")
+        sorted_sid = sid[order]
+        # Boundaries between runs of equal shard id.
+        cut = np.flatnonzero(np.diff(sorted_sid)) + 1
+        starts = np.concatenate([[0], cut])
+        ends = np.concatenate([cut, [sorted_sid.size]])
+        return [
+            ShardBatch(
+                shard_id=int(sorted_sid[s]),
+                positions=order[s:e],
+                keys=keys[order[s:e]],
+            )
+            for s, e in zip(starts, ends)
+        ]
+
+    @staticmethod
+    def take_columns(
+        columns: Dict[str, np.ndarray], positions: np.ndarray
+    ) -> Dict[str, np.ndarray]:
+        """Project per-row column payloads onto one shard's positions."""
+        return {name: col[positions] for name, col in columns.items()}
+
+    @staticmethod
+    def gather(
+        n: int, parts: Iterable[Tuple[ShardBatch, Dict[str, np.ndarray], np.ndarray]]
+    ) -> Tuple[Dict[str, np.ndarray], np.ndarray]:
+        """Reassemble per-shard ``(values, exists)`` into request order.
+
+        Concatenates in scatter order, then applies the inverse
+        permutation — this sidesteps per-column dtype preallocation
+        (shards may disagree on e.g. unicode widths of decode maps).
+        """
+        parts = list(parts)
+        exists = np.zeros(n, dtype=bool)
+        if not parts:
+            return {}, exists
+        positions = np.concatenate([b.positions for b, _, _ in parts])
+        inv = np.empty(n, dtype=np.int64)
+        inv[positions] = np.arange(positions.size)
+        values: Dict[str, np.ndarray] = {}
+        for name in parts[0][1]:
+            values[name] = np.concatenate([v[name] for _, v, _ in parts])[inv]
+        exists[positions] = np.concatenate([e for _, _, e in parts])
+        return values, exists

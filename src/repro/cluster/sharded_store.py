@@ -1,0 +1,355 @@
+"""``ShardedDeepMappingStore`` — a fleet of per-partition DeepMapping
+stores behind one ``DeepMappingStore``-shaped facade.
+
+Rationale (ROADMAP north star; RMI's tree-of-models; NeurStore's
+many-small-models storage): K small memorization MLPs each owning a
+key partition build faster (parallel, independent training), retrain
+locally (only dirty shards pay Algorithm-3/4/5 debt), and bound lookup
+tail latency (each shard's aux table and bitvector stay small).
+
+Invariants the router relies on:
+
+* routing is a pure function of the key — a key's owning shard never
+  changes between build and retrain (the partitioner is immutable);
+* every key belongs to exactly ONE shard, so scatter/gather is a
+  permutation and `(values, exists)` match a single store built on the
+  same table (NULL rows carry per-shard placeholder values — callers
+  must respect the ``exists`` mask, same contract as the single store);
+* all shards charge decompressed partitions to one shared
+  :class:`~repro.storage.pool.MemoryPool`, so cluster memory pressure
+  is bounded globally, not per shard.
+
+On-disk layout (atomic tmp+rename, shards reuse ``core/serialize.py``):
+
+    cluster/
+      manifest.msgpack   — version, partitioner state, shard dirs,
+                           per-shard counters
+      shard_00000/       — one ``core.serialize`` store directory
+      shard_00001/
+      ...
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import shutil
+from concurrent.futures import ThreadPoolExecutor
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import msgpack
+import numpy as np
+
+from repro.cluster.partitioner import Partitioner, make_partitioner
+from repro.cluster.router import ShardRouter
+from repro.core.hybrid import DeepMappingConfig, DeepMappingStore, LookupStats
+from repro.core.serialize import load_store, save_store
+from repro.core.table import Table
+from repro.storage import MemoryPool
+
+MANIFEST_VERSION = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterConfig:
+    """Cluster-level knobs (per-shard knobs stay in DeepMappingConfig)."""
+
+    num_shards: int = 4
+    policy: str = "range"          # "range" (planner-balanced) | "hash"
+    seed: int = 0                  # hash-policy mixing seed
+    max_workers: Optional[int] = None  # build/retrain thread pool size
+
+
+class ShardedDeepMappingStore:
+    """K independent :class:`DeepMappingStore` shards behind a router.
+
+    Drop-in for the single store everywhere the serving layer cares:
+    ``lookup`` / ``insert`` / ``delete`` / ``update`` / ``range_lookup``
+    / ``should_retrain`` / ``retrain`` / ``size_breakdown`` keep their
+    signatures and semantics.
+    """
+
+    def __init__(
+        self,
+        partitioner: Partitioner,
+        shards: List[DeepMappingStore],
+        cluster: ClusterConfig,
+        pool: MemoryPool,
+    ):
+        if partitioner.num_shards != len(shards):
+            raise ValueError(
+                f"partitioner maps to {partitioner.num_shards} shards, "
+                f"got {len(shards)} stores"
+            )
+        self.partitioner = partitioner
+        self.router = ShardRouter(partitioner)
+        self.shards = shards
+        self.cluster = cluster
+        self.pool = pool
+        self.last_stats = LookupStats()
+
+    # ------------------------------------------------------------------ build
+    @classmethod
+    def build(
+        cls,
+        table: Table,
+        config: DeepMappingConfig = DeepMappingConfig(),
+        cluster: ClusterConfig = ClusterConfig(),
+        pool: Optional[MemoryPool] = None,
+        verbose: bool = False,
+    ) -> "ShardedDeepMappingStore":
+        """Partition ``table`` and train every shard (thread pool).
+
+        The planner may return fewer than ``cluster.num_shards`` shards
+        on tiny/degenerate tables (quantile boundaries collapse); hash
+        partitioning of a small table raises if a shard would be empty
+        — lower ``num_shards`` or use the range policy there.
+        """
+        partitioner = make_partitioner(
+            cluster.policy, table.keys, cluster.num_shards, seed=cluster.seed
+        )
+        pool = pool if pool is not None else MemoryPool(1 << 30)
+        router = ShardRouter(partitioner)
+        batches = {b.shard_id: b for b in router.scatter(table.keys)}
+        missing = [i for i in range(partitioner.num_shards) if i not in batches]
+        if missing:
+            raise ValueError(
+                f"shards {missing} would be empty; lower num_shards or "
+                f"use the 'range' policy (planner guarantees non-empty)"
+            )
+        sub_tables = [
+            table.take(batches[i].positions) for i in range(partitioner.num_shards)
+        ]
+
+        def build_one(i: int) -> DeepMappingStore:
+            return DeepMappingStore.build(
+                sub_tables[i], config, pool=pool, verbose=False
+            )
+
+        with ThreadPoolExecutor(max_workers=cluster.max_workers) as ex:
+            shards = list(ex.map(build_one, range(partitioner.num_shards)))
+        store = cls(partitioner, shards, cluster, pool)
+        if verbose:
+            rows = [s.num_rows for s in shards]
+            print(
+                f"[cluster] built {len(shards)} {cluster.policy} shards, "
+                f"rows/shard min={min(rows)} max={max(rows)}, "
+                f"ratio {store.compression_ratio():.4f}"
+            )
+        return store
+
+    # ---------------------------------------------------------------- lookup
+    def lookup(
+        self, keys: np.ndarray, columns: Optional[Tuple[str, ...]] = None
+    ) -> Tuple[Dict[str, np.ndarray], np.ndarray]:
+        """Algorithm 1, scattered: route each key to its shard, batch
+        per shard, gather results back in request order."""
+        keys = np.asarray(keys, dtype=np.int64)
+        stats = LookupStats()
+        parts = []
+        for batch in self.router.scatter(keys):
+            shard = self.shards[batch.shard_id]
+            vals, exists = shard.lookup(batch.keys, columns)
+            s = shard.last_stats
+            stats.infer_s += s.infer_s
+            stats.exist_s += s.exist_s
+            stats.aux_s += s.aux_s
+            stats.decode_s += s.decode_s
+            parts.append((batch, vals, exists))
+        self.last_stats = stats
+        values, exists = ShardRouter.gather(keys.shape[0], parts)
+        if not values and keys.size == 0:
+            # Empty request: keep the column structure of the facade.
+            wanted = columns if columns is not None else tuple(self.shards[0].spec.tasks)
+            values = {
+                t: self.shards[0].codecs[t].decode(np.zeros(0, dtype=np.int32))
+                for t in self.shards[0].spec.tasks
+                if t in wanted
+            }
+        return values, exists
+
+    def range_lookup(
+        self, lo: int, hi: int, columns: Optional[Tuple[str, ...]] = None
+    ) -> Tuple[np.ndarray, Dict[str, np.ndarray]]:
+        """Range scatter (§IV-E): only shards whose ranges overlap
+        ``[lo, hi)`` scan their existence index (all shards under hash
+        partitioning); results merge in ascending key order."""
+        all_keys, all_vals = [], []
+        for sid in self.partitioner.shards_for_range(int(lo), int(hi)):
+            shard = self.shards[int(sid)]
+            keys = shard.vexist.keys_in_range(int(lo), int(hi))
+            if keys.size == 0:
+                continue
+            vals, exists = shard.lookup(keys, columns)
+            assert bool(exists.all())
+            all_keys.append(keys)
+            all_vals.append(vals)
+        if not all_keys:
+            return np.zeros(0, dtype=np.int64), {}
+        keys = np.concatenate(all_keys)
+        order = np.argsort(keys, kind="stable")
+        values = {
+            name: np.concatenate([v[name] for v in all_vals])[order]
+            for name in all_vals[0]
+        }
+        return keys[order], values
+
+    # ------------------------------------------------ modifications (Alg 3-5)
+    def insert(self, keys: np.ndarray, columns: Dict[str, np.ndarray]) -> None:
+        """Algorithm 3 per shard.  Validates against ALL shards before
+        mutating ANY, so a duplicate key cannot leave the cluster
+        half-inserted."""
+        keys = np.asarray(keys, dtype=np.int64)
+        batches = self.router.scatter(keys)
+        for b in batches:
+            if self.shards[b.shard_id].vexist.test(b.keys).any():
+                raise ValueError("insert of existing key; use update()")
+        for b in batches:
+            self.shards[b.shard_id].insert(
+                b.keys, ShardRouter.take_columns(columns, b.positions)
+            )
+
+    def delete(self, keys: np.ndarray) -> None:
+        """Algorithm 4 per shard (idempotent, like the single store)."""
+        keys = np.asarray(keys, dtype=np.int64)
+        for b in self.router.scatter(keys):
+            self.shards[b.shard_id].delete(b.keys)
+
+    def update(self, keys: np.ndarray, columns: Dict[str, np.ndarray]) -> None:
+        """Algorithm 5 per shard; all-exist validated before mutating."""
+        keys = np.asarray(keys, dtype=np.int64)
+        batches = self.router.scatter(keys)
+        for b in batches:
+            if not self.shards[b.shard_id].vexist.test(b.keys).all():
+                raise ValueError("update of non-existing key; use insert()")
+        for b in batches:
+            self.shards[b.shard_id].update(
+                b.keys, ShardRouter.take_columns(columns, b.positions)
+            )
+
+    # ------------------------------------------------------- lazy retrain
+    def dirty_shards(self) -> List[int]:
+        """Shard ids whose modified-bytes debt crossed the threshold."""
+        return [i for i, s in enumerate(self.shards) if s.should_retrain()]
+
+    def should_retrain(self) -> bool:
+        return bool(self.dirty_shards())
+
+    def retrain(
+        self, shard_ids: Optional[Sequence[int]] = None, verbose: bool = False
+    ) -> List[int]:
+        """Rebuild ONLY the given (default: dirty) shards, in place.
+
+        This is the sharding payoff over the single store's whole-
+        relation retrain: modification debt is paid per partition.
+        Returns the retrained shard ids.
+        """
+        ids = list(shard_ids) if shard_ids is not None else self.dirty_shards()
+
+        def retrain_one(i: int) -> DeepMappingStore:
+            return self.shards[i].retrain(verbose=False)
+
+        if ids:
+            with ThreadPoolExecutor(max_workers=self.cluster.max_workers) as ex:
+                rebuilt = list(ex.map(retrain_one, ids))
+            for i, store in zip(ids, rebuilt):
+                self.shards[i] = store
+        if verbose:
+            print(f"[cluster] retrained shards {ids}")
+        return ids
+
+    def materialize(self) -> Table:
+        """Reconstruct the full logical table, ascending key order."""
+        tables = [s.materialize() for s in self.shards]
+        keys = np.concatenate([t.keys for t in tables])
+        order = np.argsort(keys, kind="stable")
+        columns = {
+            name: np.concatenate([t.columns[name] for t in tables])[order]
+            for name in tables[0].columns
+        }
+        return Table(keys=keys[order], columns=columns)
+
+    # ------------------------------------------------------------- accounting
+    @property
+    def num_shards(self) -> int:
+        return len(self.shards)
+
+    @property
+    def num_rows(self) -> int:
+        return sum(s.num_rows for s in self.shards)
+
+    @property
+    def raw_bytes(self) -> int:
+        return sum(s.raw_bytes for s in self.shards)
+
+    @property
+    def modified_bytes(self) -> int:
+        return sum(s.modified_bytes for s in self.shards)
+
+    def size_breakdown(self) -> Dict[str, int]:
+        total: Dict[str, int] = {}
+        for s in self.shards:
+            for k, v in s.size_breakdown().items():
+                total[k] = total.get(k, 0) + v
+        return total
+
+    def size_bytes(self) -> int:
+        return sum(self.size_breakdown().values())
+
+    def compression_ratio(self) -> float:
+        return self.size_bytes() / max(1, self.raw_bytes)
+
+    def memorized_fraction(self) -> float:
+        aux_rows = sum(s.aux.num_rows for s in self.shards)
+        return 1.0 - aux_rows / max(1, self.num_rows)
+
+
+# ------------------------------------------------------------- serialization
+def save_sharded_store(store: ShardedDeepMappingStore, path: str) -> None:
+    """Directory-of-stores format: manifest + one ``core.serialize``
+    directory per shard.  Atomic (tmp + rename), like the single-store
+    format."""
+    tmp = path + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+
+    shard_dirs = [f"shard_{i:05d}" for i in range(store.num_shards)]
+    manifest = {
+        "version": MANIFEST_VERSION,
+        "partitioner": store.partitioner.to_state(),
+        "cluster": {
+            "num_shards": store.num_shards,
+            "policy": store.cluster.policy,
+            "seed": store.cluster.seed,
+        },
+        "shards": shard_dirs,
+    }
+    with open(os.path.join(tmp, "manifest.msgpack"), "wb") as f:
+        f.write(msgpack.packb(manifest))
+    for shard, d in zip(store.shards, shard_dirs):
+        save_store(shard, os.path.join(tmp, d))
+
+    if os.path.exists(path):
+        shutil.rmtree(path)
+    os.rename(tmp, path)
+
+
+def load_sharded_store(
+    path: str, pool: Optional[MemoryPool] = None
+) -> ShardedDeepMappingStore:
+    with open(os.path.join(path, "manifest.msgpack"), "rb") as f:
+        manifest = msgpack.unpackb(f.read())
+    if manifest["version"] > MANIFEST_VERSION:
+        raise ValueError(f"cluster manifest {manifest['version']} newer than reader")
+    pool = pool if pool is not None else MemoryPool(1 << 30)
+    partitioner = Partitioner.from_state(manifest["partitioner"])
+    shards = [
+        load_store(os.path.join(path, d), pool=pool) for d in manifest["shards"]
+    ]
+    cluster = ClusterConfig(
+        num_shards=manifest["cluster"]["num_shards"],
+        policy=manifest["cluster"]["policy"],
+        seed=manifest["cluster"]["seed"],
+    )
+    return ShardedDeepMappingStore(partitioner, shards, cluster, pool)

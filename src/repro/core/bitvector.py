@@ -12,7 +12,8 @@ A JAX-traceable ``test_bits`` twin lives in ``repro.kernels.bitvector``
 from __future__ import annotations
 
 import numpy as np
-import zstandard
+
+from repro.storage import get_codec
 
 
 class BitVector:
@@ -78,6 +79,21 @@ class BitVector:
     def count(self) -> int:
         return int(np.unpackbits(self._words.view(np.uint8)).sum())
 
+    def keys_in_range(
+        self, lo: int = 0, hi: int | None = None, chunk: int = 1 << 20
+    ) -> np.ndarray:
+        """All set keys in ``[lo, hi)``, ascending — the chunked
+        existence scan shared by range lookup, materialization, and the
+        cluster router's range scatter.  Scans ``chunk`` slots at a
+        time so the working set stays bounded."""
+        lo = max(0, int(lo))
+        hi = self._capacity if hi is None else min(int(hi), self._capacity)
+        parts = []
+        for start in range(lo, hi, chunk):
+            ks = np.arange(start, min(start + chunk, hi), dtype=np.int64)
+            parts.append(ks[self.test(ks)])
+        return np.concatenate(parts) if parts else np.zeros(0, dtype=np.int64)
+
     # -- storage accounting / (de)serialization -----------------------------
     @property
     def words(self) -> np.ndarray:
@@ -88,14 +104,12 @@ class BitVector:
 
     def to_bytes(self) -> bytes:
         header = np.array([self._capacity], dtype=np.int64).tobytes()
-        return header + zstandard.ZstdCompressor(level=3).compress(
-            self._words.tobytes()
-        )
+        return header + get_codec("zstd").compress(self._words.tobytes())
 
     @classmethod
     def from_bytes(cls, blob: bytes) -> "BitVector":
         capacity = int(np.frombuffer(blob[:8], dtype=np.int64)[0])
-        raw = zstandard.ZstdDecompressor().decompress(blob[8:])
+        raw = get_codec("zstd").decompress(blob[8:])
         bv = cls(capacity)
         bv._words = np.frombuffer(raw, dtype=np.uint64).copy()
         return bv

@@ -318,16 +318,7 @@ class DeepMappingStore:
 
         Returns (keys, values) for existing keys in the range.
         """
-        lo = max(0, int(lo))
-        hi = min(int(hi), self.vexist.capacity)
-        found_keys = []
-        chunk = 1 << 20
-        for start in range(lo, hi, chunk):
-            ks = np.arange(start, min(start + chunk, hi), dtype=np.int64)
-            found_keys.append(ks[self.vexist.test(ks)])
-        keys = (
-            np.concatenate(found_keys) if found_keys else np.zeros(0, dtype=np.int64)
-        )
+        keys = self.vexist.keys_in_range(lo, hi)
         values, exists = self.lookup(keys, columns)
         assert bool(exists.all())
         return keys, values
@@ -338,15 +329,7 @@ class DeepMappingStore:
 
     def materialize(self) -> Table:
         """Reconstruct the full logical table (used by retrain)."""
-        capacity = self.vexist.capacity
-        chunk = 1 << 20
-        key_parts = []
-        for start in range(0, capacity, chunk):
-            ks = np.arange(start, min(start + chunk, capacity), dtype=np.int64)
-            key_parts.append(ks[self.vexist.test(ks)])
-        keys = (
-            np.concatenate(key_parts) if key_parts else np.zeros(0, dtype=np.int64)
-        )
+        keys = self.vexist.keys_in_range()
         values, exists = self.lookup(keys)
         assert bool(exists.all())
         return Table(keys=keys, columns=values)

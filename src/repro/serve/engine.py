@@ -12,11 +12,14 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional, Tuple
+from typing import TYPE_CHECKING, Dict, List, Optional, Tuple, Union
 
 import numpy as np
 
 from repro.core.hybrid import DeepMappingStore
+
+if TYPE_CHECKING:  # avoid a serve -> cluster import at runtime
+    from repro.cluster.sharded_store import ShardedDeepMappingStore
 
 
 @dataclasses.dataclass
@@ -33,9 +36,21 @@ class ServeStats:
 
 
 class LookupServer:
-    """Merge-batch server over one or more DeepMapping stores."""
+    """Merge-batch server over a single or sharded DeepMapping store.
 
-    def __init__(self, store: DeepMappingStore, max_batch: int = 65536):
+    The store only needs the ``lookup(keys, columns) -> (values,
+    exists)`` / ``last_stats`` surface, which both
+    :class:`~repro.core.hybrid.DeepMappingStore` and
+    :class:`~repro.cluster.sharded_store.ShardedDeepMappingStore`
+    provide; merged batches arrive at the store sorted, so the sharded
+    store's scatter sees at most one contiguous run per shard.
+    """
+
+    def __init__(
+        self,
+        store: Union[DeepMappingStore, "ShardedDeepMappingStore"],
+        max_batch: int = 65536,
+    ):
         self.store = store
         self.max_batch = max_batch
         self.stats = ServeStats()

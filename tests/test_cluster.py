@@ -1,0 +1,345 @@
+"""Sharded cluster tests: routing invariants, single-store equivalence
+(including after interleaved modifications and per-shard retrain),
+manifest round-trip, shared-pool eviction pressure, serving."""
+
+import os
+
+import numpy as np
+import pytest
+
+from conftest import make_periodic_table, make_random_table
+from repro.cluster import (
+    ClusterConfig,
+    HashPartitioner,
+    Partitioner,
+    RangePartitioner,
+    ShardedDeepMappingStore,
+    ShardRouter,
+    load_sharded_store,
+    plan_range_partitions,
+    save_sharded_store,
+)
+from repro.core import DeepMappingConfig, DeepMappingStore
+from repro.core.trainer import TrainConfig
+from repro.serve import LookupServer
+from repro.storage import MemoryPool
+
+FAST = DeepMappingConfig(
+    shared=(64,), private=(16,), train=TrainConfig(epochs=15, batch_size=512)
+)
+
+
+def assert_equivalent(single, cluster, query_keys):
+    """(values, exists) equality on the existence-masked contract."""
+    v1, e1 = single.lookup(query_keys)
+    v2, e2 = cluster.lookup(query_keys)
+    np.testing.assert_array_equal(e1, e2)
+    assert set(v1) == set(v2)
+    for c in v1:
+        np.testing.assert_array_equal(v1[c][e1], v2[c][e2])
+
+
+class TestPartitioner:
+    def test_range_planner_balances_rows(self):
+        rng = np.random.default_rng(0)
+        # skewed key space: dense prefix + sparse tail
+        keys = np.unique(
+            np.concatenate([np.arange(500), rng.integers(10_000, 10**6, 500)])
+        ).astype(np.int64)
+        part = plan_range_partitions(keys, 4)
+        assert part.num_shards == 4
+        counts = np.bincount(part.shard_of(keys), minlength=4)
+        assert counts.min() >= len(keys) // 8  # quantile split, not width split
+
+    def test_range_assignment_is_contiguous(self):
+        part = RangePartitioner([100, 200])
+        sid = part.shard_of(np.array([0, 99, 100, 150, 199, 200, 10**9]))
+        np.testing.assert_array_equal(sid, [0, 0, 1, 1, 1, 2, 2])
+
+    def test_range_shards_for_range(self):
+        part = RangePartitioner([100, 200])
+        np.testing.assert_array_equal(part.shards_for_range(0, 50), [0])
+        np.testing.assert_array_equal(part.shards_for_range(50, 150), [0, 1])
+        np.testing.assert_array_equal(part.shards_for_range(0, 10**9), [0, 1, 2])
+        assert part.shards_for_range(5, 5).size == 0
+
+    def test_hash_is_deterministic_and_uniform(self):
+        part = HashPartitioner(8, seed=7)
+        keys = np.arange(0, 80_000, 2, dtype=np.int64)  # strided, low entropy
+        sid = part.shard_of(keys)
+        np.testing.assert_array_equal(sid, part.shard_of(keys))
+        counts = np.bincount(sid, minlength=8)
+        assert counts.min() > 0.8 * keys.size / 8  # mixer kills the stride
+
+    def test_state_roundtrip(self):
+        for part in (RangePartitioner([10, 20, 30]), HashPartitioner(5, seed=3)):
+            clone = Partitioner.from_state(part.to_state())
+            keys = np.arange(100, dtype=np.int64)
+            np.testing.assert_array_equal(part.shard_of(keys), clone.shard_of(keys))
+
+
+class TestRouter:
+    def test_scatter_partitions_request(self):
+        router = ShardRouter(HashPartitioner(4))
+        keys = np.arange(1000, dtype=np.int64)
+        batches = router.scatter(keys)
+        assert sum(b.keys.size for b in batches) == keys.size
+        recon = np.zeros_like(keys)
+        for b in batches:
+            recon[b.positions] = b.keys
+        np.testing.assert_array_equal(recon, keys)
+
+    def test_scatter_empty(self):
+        assert ShardRouter(HashPartitioner(4)).scatter(np.zeros(0, np.int64)) == []
+
+
+@pytest.fixture(scope="module", params=["range", "hash"])
+def equivalent_pair(request):
+    table = make_periodic_table(n=1600)
+    single = DeepMappingStore.build(table, FAST)
+    cluster = ShardedDeepMappingStore.build(
+        table, FAST, ClusterConfig(num_shards=4, policy=request.param)
+    )
+    return table, single, cluster
+
+
+class TestEquivalence:
+    def test_lookup_matches_single_store(self, equivalent_pair):
+        table, single, cluster = equivalent_pair
+        assert cluster.num_shards == 4
+        rng = np.random.default_rng(0)
+        q = np.concatenate(
+            [
+                rng.permutation(table.keys),      # every existing key, shuffled
+                table.keys[:100] + 1,             # stride-2 -> odd keys absent
+                np.array([10**8], dtype=np.int64),  # far out of domain
+            ]
+        )
+        assert_equivalent(single, cluster, q)
+
+    def test_range_lookup_matches_single_store(self, equivalent_pair):
+        table, single, cluster = equivalent_pair
+        lo, hi = int(table.keys[100]), int(table.keys[900])
+        k1, v1 = single.range_lookup(lo, hi)
+        k2, v2 = cluster.range_lookup(lo, hi)
+        np.testing.assert_array_equal(k1, k2)
+        for c in v1:
+            np.testing.assert_array_equal(v1[c], v2[c])
+
+    def test_accounting_aggregates(self, equivalent_pair):
+        _, _, cluster = equivalent_pair
+        bd = cluster.size_breakdown()
+        assert set(bd) == {"model", "aux_table", "exist_bitvector", "decode_map"}
+        assert cluster.size_bytes() == sum(bd.values())
+        assert 0.0 <= cluster.memorized_fraction() <= 1.0
+
+
+class TestModificationEquivalence:
+    @pytest.mark.parametrize("policy", ["range", "hash"])
+    def test_interleaved_modifications_match_single_store(self, policy):
+        table = make_periodic_table(n=900)
+        single = DeepMappingStore.build(table, FAST)
+        cluster = ShardedDeepMappingStore.build(
+            table, FAST, ClusterConfig(num_shards=4, policy=policy)
+        )
+        rng = np.random.default_rng(1)
+        base = int(table.keys.max())
+        ins = np.arange(base + 3, base + 103, dtype=np.int64)
+        cols = {
+            "col0": rng.integers(0, 5, ins.size).astype(np.int32),
+            "col1": rng.integers(0, 3, ins.size).astype(np.int32),
+        }
+        upd = {
+            "col0": rng.integers(0, 5, 40).astype(np.int32),
+            "col1": rng.integers(0, 3, 40).astype(np.int32),
+        }
+        for store in (single, cluster):
+            store.insert(ins, cols)
+            store.update(ins[:40], upd)
+            store.delete(ins[40:70])
+            store.delete(ins[40:70])  # idempotent
+            store.update(table.keys[:10], {c: v[:10] for c, v in upd.items()})
+            store.delete(table.keys[10:20])
+        q = np.concatenate([table.keys, ins, ins + 200])
+        assert_equivalent(single, cluster, q)
+        assert single.num_rows == cluster.num_rows
+
+    def test_insert_existing_raises_without_partial_mutation(self):
+        table = make_periodic_table(n=600)
+        cluster = ShardedDeepMappingStore.build(
+            table, FAST, ClusterConfig(num_shards=4, policy="range")
+        )
+        base = int(table.keys.max())
+        keys = np.array([base + 11, int(table.keys[0])], dtype=np.int64)  # 2nd exists
+        with pytest.raises(ValueError):
+            cluster.insert(
+                keys,
+                {"col0": np.array([1, 1], np.int32), "col1": np.array([1, 1], np.int32)},
+            )
+        _, exists = cluster.lookup(keys[:1])
+        assert not exists.any()  # no shard mutated before validation failed
+
+    def test_update_missing_raises(self):
+        table = make_periodic_table(n=600)
+        cluster = ShardedDeepMappingStore.build(
+            table, FAST, ClusterConfig(num_shards=4, policy="hash")
+        )
+        with pytest.raises(ValueError):
+            cluster.update(
+                np.array([10**7]), {"col0": np.array([1]), "col1": np.array([1])}
+            )
+
+
+class TestPerShardRetrain:
+    def test_only_dirty_shards_retrain(self):
+        cfg = DeepMappingConfig(
+            shared=(64,),
+            private=(16,),
+            train=TrainConfig(epochs=15, batch_size=512),
+            retrain_after_modified_bytes=1,
+        )
+        table = make_periodic_table(n=800)
+        cluster = ShardedDeepMappingStore.build(
+            table, cfg, ClusterConfig(num_shards=4, policy="range")
+        )
+        untouched = [id(s) for s in cluster.shards]
+        assert not cluster.should_retrain()
+        # Dirty exactly one shard: modify the lowest-range keys.
+        k = table.keys[:2]
+        cluster.update(
+            k, {"col0": np.array([1, 2], np.int32), "col1": np.array([0, 1], np.int32)}
+        )
+        dirty = cluster.dirty_shards()
+        assert dirty == [0]
+        retrained = cluster.retrain()
+        assert retrained == [0]
+        assert not cluster.should_retrain()
+        assert id(cluster.shards[0]) != untouched[0]
+        assert [id(s) for s in cluster.shards[1:]] == untouched[1:]
+        vals, exists = cluster.lookup(k)
+        assert exists.all()
+        np.testing.assert_array_equal(vals["col0"], [1, 2])
+
+    def test_equivalence_after_retrain(self):
+        cfg = DeepMappingConfig(
+            shared=(64,),
+            private=(16,),
+            train=TrainConfig(epochs=15, batch_size=512),
+            retrain_after_modified_bytes=1,
+        )
+        table = make_periodic_table(n=800)
+        single = DeepMappingStore.build(table, cfg)
+        cluster = ShardedDeepMappingStore.build(
+            table, cfg, ClusterConfig(num_shards=4, policy="hash")
+        )
+        base = int(table.keys.max())
+        ins = np.arange(base + 2, base + 42, dtype=np.int64)
+        cols = {
+            "col0": (ins % 5).astype(np.int32),
+            "col1": (ins % 3).astype(np.int32),
+        }
+        single.insert(ins, cols)
+        cluster.insert(ins, cols)
+        single = single.retrain()          # whole-relation rebuild
+        assert cluster.retrain()           # only dirty shards rebuild
+        assert_equivalent(single, cluster, np.concatenate([table.keys, ins, ins + 99]))
+
+
+class TestClusterSerialization:
+    def test_roundtrip(self, tmp_path):
+        table = make_periodic_table(n=800)
+        cluster = ShardedDeepMappingStore.build(
+            table, FAST, ClusterConfig(num_shards=4, policy="range")
+        )
+        p = os.path.join(tmp_path, "cluster")
+        save_sharded_store(cluster, p)
+        clone = load_sharded_store(p)
+        assert clone.num_shards == cluster.num_shards
+        assert clone.cluster.policy == "range"
+        q = np.concatenate([table.keys, table.keys[:64] + 1])
+        assert_equivalent(cluster, clone, q)
+        assert not os.path.exists(p + ".tmp")
+
+    def test_overwrite_is_atomic(self, tmp_path):
+        table = make_periodic_table(n=600)
+        cluster = ShardedDeepMappingStore.build(
+            table, FAST, ClusterConfig(num_shards=2, policy="hash")
+        )
+        p = os.path.join(tmp_path, "cluster")
+        save_sharded_store(cluster, p)
+        save_sharded_store(cluster, p)
+        assert not os.path.exists(p + ".tmp")
+        assert load_sharded_store(p).num_shards == 2
+
+
+class TestSharedMemoryPool:
+    def test_shards_share_one_pool_under_eviction(self):
+        table = make_random_table(n=1200, cards=(17, 11))
+        pool = MemoryPool(4096)  # tiny: forces partition eviction
+        cfg = DeepMappingConfig(
+            shared=(32,),
+            private=(8,),
+            partition_bytes=512,
+            train=TrainConfig(epochs=3, batch_size=512),
+        )
+        cluster = ShardedDeepMappingStore.build(
+            table, cfg, ClusterConfig(num_shards=4, policy="range"), pool=pool
+        )
+        assert all(s.aux.pool is pool for s in cluster.shards)
+        for _ in range(3):
+            vals, exists = cluster.lookup(table.keys)
+            assert exists.all()
+            np.testing.assert_array_equal(vals["col0"], table.columns["col0"])
+        assert pool.evictions > 0            # pressure actually happened
+        assert pool.used_bytes <= pool.budget_bytes
+
+
+class TestServeIntegration:
+    def test_lookup_server_over_sharded_store(self):
+        table = make_periodic_table(n=1200)
+        cluster = ShardedDeepMappingStore.build(
+            table, FAST, ClusterConfig(num_shards=4, policy="range")
+        )
+        srv = LookupServer(cluster, max_batch=256)
+        rng = np.random.default_rng(0)
+        reqs = [rng.choice(table.keys, size=s) for s in (31, 200, 7)]
+        results = srv.lookup_many(reqs)
+        lut = dict(zip(table.keys.tolist(), table.columns["col0"].tolist()))
+        for req, (vals, exists) in zip(reqs, results):
+            assert exists.all()
+            for k, v in zip(req.tolist(), vals["col0"].tolist()):
+                assert lut[k] == v
+        assert srv.stats.qps() > 0
+
+
+class TestBuildValidation:
+    def test_empty_hash_shard_raises(self):
+        table = make_periodic_table(n=6)
+        with pytest.raises(ValueError, match="empty"):
+            ShardedDeepMappingStore.build(
+                table, FAST, ClusterConfig(num_shards=64, policy="hash")
+            )
+
+    def test_range_planner_collapses_gracefully(self):
+        table = make_periodic_table(n=6)
+        cluster = ShardedDeepMappingStore.build(
+            table, FAST, ClusterConfig(num_shards=4, policy="range")
+        )
+        assert 1 <= cluster.num_shards <= 4
+        _, exists = cluster.lookup(table.keys)
+        assert exists.all()
+
+    def test_range_planner_more_shards_than_rows(self):
+        # num_shards > rows: quantile cuts hit the minimum key, which
+        # must not become a boundary (empty shard 0); count collapses.
+        part = plan_range_partitions(np.array([5, 10], dtype=np.int64), 4)
+        assert part.num_shards <= 2
+        counts = np.bincount(part.shard_of(np.array([5, 10])),
+                             minlength=part.num_shards)
+        assert counts.min() > 0
+        table = make_periodic_table(n=2)
+        cluster = ShardedDeepMappingStore.build(
+            table, FAST, ClusterConfig(num_shards=4, policy="range")
+        )
+        _, exists = cluster.lookup(table.keys)
+        assert exists.all()

@@ -105,8 +105,7 @@ class TestShardingRules:
         from jax.sharding import PartitionSpec
 
         cfg = get_arch("granite-3-2b").config
-        mesh = jax.make_mesh((1, 1), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = make_host_mesh(1, 1)
         shapes = specs_lib.params_specs("granite-3-2b")
         sh = param_shardings(cfg, mesh, shapes)
         embed = sh["embed"]["table"]
