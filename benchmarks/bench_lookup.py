@@ -12,7 +12,6 @@ from __future__ import annotations
 import argparse
 from typing import Dict, List
 
-import numpy as np
 
 from benchmarks import common as C
 from repro.storage import MemoryPool

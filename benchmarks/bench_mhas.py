@@ -8,7 +8,7 @@ import argparse
 import json
 import os
 import time
-from typing import Dict, List
+from typing import Dict
 
 from benchmarks import common as C
 from repro.configs.deepmapping_paper import BENCH_MHAS

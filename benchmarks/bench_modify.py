@@ -16,7 +16,7 @@ import numpy as np
 
 from benchmarks import common as C
 from repro.baselines import BASELINE_FACTORIES
-from repro.core import DeepMappingStore, Table
+from repro.core import Table
 from repro.data import synthetic_multi_column
 from repro.storage import MemoryPool
 

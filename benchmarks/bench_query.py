@@ -1,0 +1,144 @@
+"""Plan executor vs. legacy direct-lookup path (ISSUE 2 tentpole
+validation): does the unified query API cost anything on the hot path,
+and what do its two optimizations buy?
+
+Sections reported per dataset:
+
+* ``point``    — legacy ``store.lookup`` vs ``query().where_keys``
+                 (the plan layer should be noise);
+* ``project``  — full-column lookup vs 1-of-N projection pushdown
+                 (unselected private heads + decode skipped);
+* ``range``    — legacy ``range_lookup`` vs ``query().where_range``;
+* ``scan``     — full scan through the plan executor;
+* ``sharded``  — serial shard visits vs the thread-pool fan-out stage
+                 on a K-shard cluster.
+
+    PYTHONPATH=src:benchmarks python benchmarks/bench_query.py
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+from typing import List
+
+import numpy as np
+
+from benchmarks import common as C
+from repro.cluster import ClusterConfig, ShardedDeepMappingStore
+from repro.core import DeepMappingConfig
+from repro.core.trainer import TrainConfig
+from repro.storage import MemoryPool
+
+SHARDED_CFG = DeepMappingConfig(
+    shared=(128, 64),
+    private=(16,),
+    codec="zstd",
+    partition_bytes=64 * 1024,
+    train=TrainConfig(epochs=30, batch_size=4096),
+)
+
+
+def _median(fn, repeats: int) -> float:
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def run(
+    datasets=("tpcds_customer_demographics",),
+    batches=(1000, 10_000),
+    num_shards: int = 4,
+    repeats: int = 5,
+) -> List[dict]:
+    rows = []
+    for dataset in datasets:
+        table = C.DATASETS[dataset]()
+        store = C.dm_store(dataset, "DM-Z", pool=MemoryPool(1 << 30))
+        cols = tuple(store.columns)
+        one_col = (cols[0],)
+
+        for batch in batches:
+            keys = C.query_keys(table, batch)
+            # warm both paths (jit compile, pool fill) before timing
+            store.lookup(keys)
+            store.query().where_keys(keys).execute()
+
+            legacy = _median(lambda: store.lookup(keys), repeats)
+            plan = _median(
+                lambda: store.query().where_keys(keys).execute(), repeats
+            )
+            C.emit(f"query.point.legacy.{dataset}.{batch}", legacy * 1e6,
+                   f"{batch / legacy:.0f} keys/s")
+            C.emit(f"query.point.plan.{dataset}.{batch}", plan * 1e6,
+                   f"{batch / plan:.0f} keys/s; overhead "
+                   f"{100 * (plan - legacy) / legacy:+.1f}%")
+
+            if len(cols) > 1:
+                store.query().select(*one_col).where_keys(keys).execute()
+                proj = _median(
+                    lambda: store.query().select(*one_col).where_keys(keys).execute(),
+                    repeats,
+                )
+                res = store.query().select(*one_col).where_keys(keys).execute()
+                C.emit(
+                    f"query.project.{dataset}.{batch}", proj * 1e6,
+                    f"1/{len(cols)} cols; heads skipped "
+                    f"{len(res.explain.heads_skipped)}; "
+                    f"speedup {legacy / proj:.2f}x",
+                )
+            rows.append({"dataset": dataset, "batch": batch,
+                         "legacy_s": legacy, "plan_s": plan})
+
+        # range + scan
+        lo, hi = int(table.keys.min()), int(np.percentile(table.keys, 10))
+        store.range_lookup(lo, hi)
+        r_legacy = _median(lambda: store.range_lookup(lo, hi), repeats)
+        r_plan = _median(
+            lambda: store.query().where_range(lo, hi).execute(), repeats
+        )
+        n_range = store.query().where_range(lo, hi).execute().keys.shape[0]
+        C.emit(f"query.range.legacy.{dataset}", r_legacy * 1e6, f"{n_range} rows")
+        C.emit(f"query.range.plan.{dataset}", r_plan * 1e6,
+               f"overhead {100 * (r_plan - r_legacy) / r_legacy:+.1f}%")
+        s_plan = _median(lambda: store.query().scan().execute(), max(1, repeats // 2))
+        C.emit(f"query.scan.plan.{dataset}", s_plan * 1e6,
+               f"{table.num_rows / s_plan:.0f} rows/s")
+
+        # sharded: serial visits vs thread-pool fan-out
+        sharded = ShardedDeepMappingStore.build(
+            table, SHARDED_CFG, ClusterConfig(num_shards=num_shards),
+            pool=MemoryPool(1 << 30),
+        )
+        big = C.query_keys(table, max(batches))
+        sharded.query().where_keys(big).fanout(False).execute()
+        sharded.query().where_keys(big).fanout(True).execute()
+        sync_s = _median(
+            lambda: sharded.query().where_keys(big).fanout(False).execute(), repeats
+        )
+        async_s = _median(
+            lambda: sharded.query().where_keys(big).fanout(True).execute(), repeats
+        )
+        C.emit(f"query.sharded.sync.{dataset}.k{num_shards}", sync_s * 1e6,
+               f"{len(big) / sync_s:.0f} keys/s")
+        C.emit(f"query.sharded.fanout.{dataset}.k{num_shards}", async_s * 1e6,
+               f"{len(big) / async_s:.0f} keys/s; speedup {sync_s / async_s:.2f}x")
+        rows.append({"dataset": dataset, "sync_s": sync_s, "async_s": async_s})
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--datasets", nargs="*", default=["tpcds_customer_demographics"])
+    ap.add_argument("--batches", nargs="*", type=int, default=[1000, 10_000])
+    ap.add_argument("--shards", type=int, default=4)
+    args = ap.parse_args()
+    run(datasets=args.datasets, batches=tuple(args.batches),
+        num_shards=args.shards)
+
+
+if __name__ == "__main__":
+    main()

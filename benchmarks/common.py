@@ -7,7 +7,7 @@ from __future__ import annotations
 import hashlib
 import os
 import time
-from typing import Callable, Dict, Optional, Tuple
+from typing import Callable, Dict, Optional
 
 import numpy as np
 

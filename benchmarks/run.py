@@ -13,6 +13,8 @@ Sections:
   fig7    — latency breakdown                               (paper Fig. 7)
   fig9    — MHAS search progression                         (paper Fig. 9/10)
   shards  — sharded cluster scaling: build / lookup QPS / dirty-shard retrain
+  query   — plan executor vs legacy lookup (point/range/scan, projection
+            pushdown, sharded sync vs async fan-out)
   tokens  — beyond-paper: DeepMapping-compressed LM data pipeline
   roofline — assignment §Roofline terms from the dry-run records
 """
@@ -31,7 +33,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import bench_beyond, bench_breakdown, bench_lookup
-    from benchmarks import bench_mhas, bench_modify, bench_shards
+    from benchmarks import bench_mhas, bench_modify, bench_query, bench_shards
     from benchmarks import bench_tokens, roofline
     from benchmarks import common as C
 
@@ -51,6 +53,11 @@ def main() -> None:
         "fig9": lambda: bench_mhas.run(iters=None if args.full else 60),
         "shards": lambda: bench_shards.run(
             shard_counts=(1, 2, 4, 8) if args.full else (1, 4)
+        ),
+        "query": lambda: bench_query.run(
+            datasets=("tpcds_customer_demographics",),
+            batches=batches,
+            num_shards=8 if args.full else 4,
         ),
         "tokens": lambda: bench_tokens.run(),
         "beyond": lambda: bench_beyond.run(),

@@ -1,19 +1,22 @@
 """Quickstart: compress a table into a DeepMapping hybrid structure,
-look up keys, modify, and measure Eq. 1.
+query it through the unified plan API, modify, and measure Eq. 1.
 
     PYTHONPATH=src python examples/quickstart.py
     PYTHONPATH=src python examples/quickstart.py --shards 4 --policy range
 
-With ``--shards K > 1`` the same workload runs against the sharded
-cluster (``repro.cluster``): K per-partition stores built in parallel
-behind a scatter/gather router, with per-shard lazy retrain.
+Every store (single, sharded, baselines) implements the same
+``MappingStore`` protocol; ``repro.build`` picks single-vs-sharded from
+the cluster config and ``repro.open`` re-loads whatever was saved.
 """
 
 import argparse
+import os
+import tempfile
 
 import numpy as np
 
-from repro.core import DeepMappingConfig, DeepMappingStore, Table
+import repro
+from repro.core import DeepMappingConfig, Table
 from repro.core.trainer import TrainConfig
 
 
@@ -43,19 +46,15 @@ def main() -> None:
         codec="zstd",
         train=TrainConfig(epochs=40, batch_size=4096),
     )
+    cluster = None
     if args.shards > 1:
-        from repro.cluster import ClusterConfig, ShardedDeepMappingStore
+        from repro.cluster import ClusterConfig
 
-        store = ShardedDeepMappingStore.build(
-            table,
-            cfg,
-            ClusterConfig(num_shards=args.shards, policy=args.policy),
-            verbose=True,
-        )
+        cluster = ClusterConfig(num_shards=args.shards, policy=args.policy)
+    store = repro.build(table, cfg, cluster=cluster, verbose=True)
+    if args.shards > 1:
         print(f"  {store.num_shards} {args.policy} shards, "
               f"rows/shard: {[s.num_rows for s in store.shards]}")
-    else:
-        store = DeepMappingStore.build(table, cfg, verbose=True)
 
     print("\n-- Eq.1 accounting ------------------------------")
     for k, v in store.size_breakdown().items():
@@ -63,14 +62,28 @@ def main() -> None:
     print(f"  compression ratio: {store.compression_ratio():.4f}")
     print(f"  memorized by model: {store.memorized_fraction():.1%}")
 
-    print("\n-- Lookups (Algorithm 1) -------------------------")
+    print("\n-- Point query (Algorithm 1) ---------------------")
     q = np.array([0, 2, 128, 3, 999_999], dtype=np.int64)
-    vals, exists = store.lookup(q)
+    res = store.query().where_keys(q).execute()
     for i, k in enumerate(q):
-        if exists[i]:
-            print(f"  key {k}: status={vals['status'][i]} priority={vals['priority'][i]}")
+        if res.exists[i]:
+            print(f"  key {k}: status={res.values['status'][i]} "
+                  f"priority={res.values['priority'][i]}")
         else:
             print(f"  key {k}: NULL (existence bitvector)")
+    print(f"  plan: {' -> '.join(res.explain.plan)}")
+
+    print("\n-- Projection pushdown ---------------------------")
+    res = store.query().select("status").where_keys(table.keys[:1000]).execute()
+    print(f"  heads evaluated: {res.explain.heads_evaluated}, "
+          f"skipped: {res.explain.heads_skipped}")
+    print(f"  columns decoded: {res.explain.columns_decoded}, "
+          f"skipped: {res.explain.columns_skipped}")
+
+    print("\n-- Range query (§IV-E) ---------------------------")
+    res = store.query().select("priority").where_range(0, 1024).execute()
+    print(f"  [0, 1024) -> {res.keys.shape[0]} rows, "
+          f"priorities {sorted(set(res.values['priority'].tolist()))}")
 
     print("\n-- Modifications (Algorithms 3-5) ----------------")
     store.insert(
@@ -88,6 +101,14 @@ def main() -> None:
     store.delete(np.array([2], dtype=np.int64))
     _, e = store.lookup(np.array([2]))
     print(f"  deleted key 2: exists={e[0]}")
+
+    print("\n-- save / repro.open round-trip ------------------")
+    path = os.path.join(tempfile.mkdtemp(), "store")
+    store.save(path)
+    restored = repro.open(path)
+    res = restored.query().where_keys(np.array([0, 2, 10**6])).execute()
+    print(f"  reopened as {type(restored).__name__}; "
+          f"exists={res.exists.tolist()}")
 
     if args.shards > 1:
         print("\n-- Per-shard lazy retrain ------------------------")

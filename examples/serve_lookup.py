@@ -3,25 +3,44 @@ DeepMapping store, stand up the batched LookupServer, and push mixed
 batched request traffic through it — the paper-kind analogue of
 "serve a small model with batched requests".
 
+The server rides the unified query API: merged batches execute as
+point plans, so projection pushdown (only the requested column's model
+head runs) and — with ``--shards`` — the sharded thread-pool fan-out
+apply to served traffic too.
+
     PYTHONPATH=src python examples/serve_lookup.py
+    PYTHONPATH=src python examples/serve_lookup.py --shards 4
 """
+
+import argparse
 
 import numpy as np
 
-from repro.core import DeepMappingConfig, DeepMappingStore
+import repro
+from repro.core import DeepMappingConfig
 from repro.core.trainer import TrainConfig
 from repro.data import customer_demographics_like
 from repro.serve import LookupServer
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--shards", type=int, default=1)
+    args = ap.parse_args()
+
     table = customer_demographics_like(n=50_000)
-    store = DeepMappingStore.build(
+    cluster = None
+    if args.shards > 1:
+        from repro.cluster import ClusterConfig
+
+        cluster = ClusterConfig(num_shards=args.shards)
+    store = repro.build(
         table,
         DeepMappingConfig(
             shared=(128, 64), private=(16,), residues=(2, 5, 7),
             train=TrainConfig(epochs=30, batch_size=8192),
         ),
+        cluster=cluster,
         verbose=True,
     )
     server = LookupServer(store, max_batch=16384)
@@ -43,6 +62,16 @@ def main() -> None:
     s = server.stats
     print(f"throughput: {s.qps():,.0f} keys/s "
           f"(infer {s.infer_s:.3f}s, aux {s.aux_s:.3f}s, batches {s.batches})")
+
+    # the same traffic, expressed as one explicit plan
+    res = (
+        store.query()
+        .select("cd_education_status")
+        .where_keys(np.unique(np.concatenate(requests)))
+        .execute()
+    )
+    print(f"plan: {' -> '.join(res.explain.plan)}")
+    print(f"pushdown: heads skipped = {res.explain.heads_skipped}")
 
     # spot-check correctness against the source table
     req0, (vals0, e0) = requests[0], results[0]

@@ -1,8 +1,16 @@
 """repro — DeepMapping: learned data mapping for lossless compression and
 efficient lookup, built as a multi-pod JAX training/inference framework.
 
+Top-level entrypoints (lazy — see ``repro.api.entry``):
+
+- ``repro.open(path)``          — load any saved store (sniffs
+                                  single / sharded / baseline formats).
+- ``repro.build(table, config)`` — build a single or sharded store.
+
 Subpackages:
 
+- ``repro.api``       — the ``MappingStore`` protocol + plan-based query
+                        layer shared by every store implementation.
 - ``repro.core``      — the paper's hybrid learned structure (model, T_aux,
                         V_exist, f_decode, MHAS search, modifications).
 - ``repro.baselines`` — AB/ABC/HB/HBC comparison stores.
@@ -21,3 +29,13 @@ host platform before importing us).
 """
 
 __version__ = "1.0.0"
+
+
+def __getattr__(name):
+    # Lazy so `import repro` never drags in JAX (keeps import
+    # side-effect free for the dry-run's device pinning).
+    if name in ("open", "build"):
+        from repro.api import entry
+
+        return getattr(entry, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,15 @@
+"""Unified store API: the :class:`MappingStore` protocol, the
+plan-based query layer, and the ``repro.open`` / ``repro.build``
+entrypoints.
+
+Store implementations (``repro.core``, ``repro.cluster``,
+``repro.baselines``) subclass :class:`MappingStore`; this package never
+imports them at module level (they import us), so the dependency
+direction stays acyclic: ``api <- stores <- serve/benchmarks``.
+"""
+
+from repro.api.entry import build, open  # noqa: F401,A004
+from repro.api.executor import execute_plan  # noqa: F401
+from repro.api.plan import ExplainStats, QueryPlan, QueryResult  # noqa: F401
+from repro.api.protocol import CONFORMANCE_METHODS, MappingStore  # noqa: F401
+from repro.api.query import Query  # noqa: F401

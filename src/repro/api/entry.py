@@ -1,0 +1,77 @@
+"""Top-level entrypoints: ``repro.open(path)`` / ``repro.build(table, ...)``.
+
+``open`` sniffs the on-disk format and returns the right
+:class:`~repro.api.protocol.MappingStore` implementation:
+
+* directory with ``manifest.msgpack``  -> sharded cluster
+  (:func:`~repro.cluster.sharded_store.load_sharded_store`);
+* directory with ``meta.msgpack``      -> single DeepMapping store
+  (:func:`~repro.core.serialize.load_store`);
+* msgpack file with a ``kind`` header  -> AB/HB baseline store.
+
+``build`` trains/assembles a store from a :class:`~repro.core.table.Table`:
+a single :class:`DeepMappingStore` by default, or a sharded cluster when a
+:class:`~repro.cluster.sharded_store.ClusterConfig` with ``num_shards > 1``
+is given.  All imports are lazy so ``import repro`` stays side-effect
+free w.r.t. JAX device state.
+"""
+
+from __future__ import annotations
+
+import os
+
+
+def open(path: str, pool=None):  # noqa: A001 — deliberate builtin shadow inside repro.*
+    """Load any saved store, sniffing single-vs-sharded-vs-baseline."""
+    if os.path.isdir(path):
+        if os.path.exists(os.path.join(path, "manifest.msgpack")):
+            from repro.cluster.sharded_store import ShardedDeepMappingStore
+
+            return ShardedDeepMappingStore.load(path, pool=pool)
+        if os.path.exists(os.path.join(path, "meta.msgpack")):
+            from repro.core.hybrid import DeepMappingStore
+
+            return DeepMappingStore.load(path, pool=pool)
+        raise ValueError(
+            f"{path!r} is a directory but has neither a cluster manifest "
+            f"nor a store meta file"
+        )
+    if os.path.isfile(path):
+        from repro.baselines.partitioned import load_baseline_store
+
+        return load_baseline_store(path, pool=pool)
+    raise FileNotFoundError(path)
+
+
+def build(
+    table,
+    config=None,
+    cluster=None,
+    pool=None,
+    verbose: bool = False,
+    spec=None,
+    params=None,
+):
+    """Build a store from a table.
+
+    ``config`` is a :class:`~repro.core.hybrid.DeepMappingConfig`
+    (default-constructed when omitted); pass ``cluster`` (a
+    :class:`~repro.cluster.sharded_store.ClusterConfig`) with
+    ``num_shards > 1`` to build a sharded cluster instead of a single
+    store.  ``spec``/``params`` skip training (single store only,
+    e.g. from MHAS).
+    """
+    from repro.core.hybrid import DeepMappingConfig, DeepMappingStore
+
+    config = config if config is not None else DeepMappingConfig()
+    if cluster is not None and cluster.num_shards > 1:
+        from repro.cluster.sharded_store import ShardedDeepMappingStore
+
+        if spec is not None or params is not None:
+            raise ValueError("spec/params pre-seeding is single-store only")
+        return ShardedDeepMappingStore.build(
+            table, config, cluster, pool=pool, verbose=verbose
+        )
+    return DeepMappingStore.build(
+        table, config, pool=pool, spec=spec, params=params, verbose=verbose
+    )

@@ -1,0 +1,127 @@
+"""Query-plan IR for the unified store API.
+
+A :class:`QueryPlan` is the small declarative description the
+:class:`~repro.api.query.Query` builder compiles to and the executor
+(`repro.api.executor`) runs.  Plans have one *key source* (explicit
+keys, a key range, or a full scan), an optional column projection
+(pushed down so unselected columns are neither decoded nor — for
+DeepMapping stores — even evaluated by their private model heads), and
+an optional shard fan-out override.
+
+Execution produces a :class:`QueryResult` carrying per-plan
+:class:`ExplainStats` — the replacement for the mutable ``last_stats``
+side-channel: every result owns its own immutable stats object, so
+concurrent queries on one store cannot trample each other's timings.
+
+This module is dependency-light on purpose (numpy only): the store
+implementations import it, so it must not import them back.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+#: Valid ``QueryPlan.kind`` values.
+PLAN_KINDS = ("point", "range", "scan")
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryPlan:
+    """Declarative query description — what to fetch, not how.
+
+    ``kind`` selects the key source: ``"point"`` answers the explicit
+    ``keys`` array, ``"range"`` every existing key in ``[lo, hi)``,
+    ``"scan"`` every existing key.  ``columns`` is the projection
+    (``None`` = all columns); ``fanout`` overrides the sharded store's
+    parallel lookup fan-out (``None`` = store default, which is *on*
+    for plan execution and *off* for the legacy ``lookup`` shim).
+    """
+
+    kind: str
+    keys: Optional[np.ndarray] = None
+    lo: Optional[int] = None
+    hi: Optional[int] = None
+    columns: Optional[Tuple[str, ...]] = None
+    fanout: Optional[bool] = None
+
+    def __post_init__(self) -> None:
+        if self.kind not in PLAN_KINDS:
+            raise ValueError(f"unknown plan kind {self.kind!r}; have {PLAN_KINDS}")
+        if self.kind == "point" and self.keys is None:
+            raise ValueError("point plan needs keys")
+        if self.kind == "range" and (self.lo is None or self.hi is None):
+            raise ValueError("range plan needs lo and hi")
+
+    def source_stage(self) -> str:
+        """Human-readable key-source stage name for explain output."""
+        if self.kind == "point":
+            return f"keys[{0 if self.keys is None else len(self.keys)}]"
+        if self.kind == "range":
+            return f"range[{self.lo},{self.hi})"
+        return "scan"
+
+
+@dataclasses.dataclass
+class ExplainStats:
+    """Per-plan execution report (the paper's Fig. 7 latency breakdown,
+    plus pushdown and fan-out evidence).
+
+    ``plan`` lists the executed pipeline stages in order.
+    ``heads_evaluated``/``heads_skipped`` record which model private
+    heads ran (DeepMapping stores only — baselines always report all
+    heads skipped since they have no model); ``columns_decoded``/
+    ``columns_skipped`` record the decode projection every store type
+    honours.  Timings are seconds; under shard fan-out the per-stage
+    times are summed across shards (CPU time), while ``total_s`` is
+    wall clock.
+    """
+
+    kind: str = ""
+    plan: Tuple[str, ...] = ()
+    num_keys: int = 0
+    num_rows: int = 0
+    shards_visited: int = 0
+    async_fanout: bool = False
+    heads_evaluated: Tuple[str, ...] = ()
+    heads_skipped: Tuple[str, ...] = ()
+    columns_decoded: Tuple[str, ...] = ()
+    columns_skipped: Tuple[str, ...] = ()
+    route_s: float = 0.0
+    infer_s: float = 0.0
+    exist_s: float = 0.0
+    aux_s: float = 0.0
+    decode_s: float = 0.0
+    total_s: float = 0.0
+
+    def merge_timings(self, other: "ExplainStats") -> None:
+        """Accumulate another stats object's stage timings (shard
+        fan-out / server batch aggregation)."""
+        self.route_s += other.route_s
+        self.infer_s += other.infer_s
+        self.exist_s += other.exist_s
+        self.aux_s += other.aux_s
+        self.decode_s += other.decode_s
+
+
+@dataclasses.dataclass
+class QueryResult:
+    """Executed plan output.
+
+    ``values`` maps column name -> decoded array aligned with ``keys``;
+    ``exists`` is the existence mask (all-True for range/scan results,
+    whose keys come from the existence index).  Rows where ``exists``
+    is False carry placeholder values — callers must respect the mask,
+    the same contract as the legacy ``lookup``.
+    """
+
+    keys: np.ndarray
+    values: Dict[str, np.ndarray]
+    exists: np.ndarray
+    explain: ExplainStats
+
+    @property
+    def num_rows(self) -> int:
+        return int(self.exists.sum())

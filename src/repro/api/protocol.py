@@ -1,0 +1,157 @@
+"""The formal ``MappingStore`` protocol — one lookup contract over
+interchangeable store structures (learned-index tradition: RMI exposes
+one ``lookup`` over trees of models; NeurStore one model-store API).
+
+Every store in this repo — :class:`~repro.core.hybrid.DeepMappingStore`,
+:class:`~repro.cluster.sharded_store.ShardedDeepMappingStore`,
+:class:`~repro.baselines.array_store.ArrayStore`,
+:class:`~repro.baselines.hash_store.HashStore` — subclasses
+:class:`MappingStore` and is exercised by the shared conformance suite
+(``tests/test_store_protocol.py``).
+
+Conformance contract (what the suite checks):
+
+1. ``lookup(keys, columns) -> (values, exists)``: values aligned with
+   the request, NULL rows carry placeholder values and must be masked
+   by ``exists``; zero-length key batches return typed empty columns
+   and never reach inference/stack paths.
+2. ``insert`` raises on existing keys and mutates nothing on reject;
+   ``update`` raises on missing keys likewise; ``delete`` is
+   idempotent.  All accept zero-length batches as no-ops.
+3. ``range_lookup(lo, hi)`` / ``scan()`` return ``(keys, values)`` with
+   keys ascending and every key existing.
+4. ``size_breakdown()`` maps component name -> bytes and sums to
+   ``size_bytes()``.
+5. ``save(path)`` then ``type(store).load(path)`` (or ``repro.open``)
+   round-trips: identical query results.
+6. ``query()`` plans execute byte-identically to the direct methods,
+   including after interleaved insert/delete/update, and projection
+   pushdown (``select``) never changes selected-column bytes.
+"""
+
+from __future__ import annotations
+
+import abc
+import time
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.api.plan import ExplainStats
+
+#: Methods every conforming store must expose (used by the suite's
+#: surface check; behavioural checks live in the parametrized tests).
+CONFORMANCE_METHODS = (
+    "lookup",
+    "insert",
+    "delete",
+    "update",
+    "range_lookup",
+    "scan",
+    "size_breakdown",
+    "size_bytes",
+    "save",
+    "load",
+    "query",
+)
+
+
+class MappingStore(abc.ABC):
+    """Abstract base of every key->row store (learned or baseline)."""
+
+    # ------------------------------------------------------------- required
+    @property
+    @abc.abstractmethod
+    def columns(self) -> Tuple[str, ...]:
+        """Value column names, in the store's canonical order."""
+
+    @abc.abstractmethod
+    def lookup(
+        self, keys: np.ndarray, columns: Optional[Tuple[str, ...]] = None
+    ) -> Tuple[Dict[str, np.ndarray], np.ndarray]:
+        """Batched exact-match lookup -> ``(values, exists)``."""
+
+    @abc.abstractmethod
+    def insert(self, keys: np.ndarray, columns: Dict[str, np.ndarray]) -> None:
+        """Insert new rows; raises ``ValueError`` if any key exists."""
+
+    @abc.abstractmethod
+    def delete(self, keys: np.ndarray) -> None:
+        """Delete rows (idempotent: missing keys are ignored)."""
+
+    @abc.abstractmethod
+    def update(self, keys: np.ndarray, columns: Dict[str, np.ndarray]) -> None:
+        """Overwrite existing rows; raises ``ValueError`` on missing keys."""
+
+    @abc.abstractmethod
+    def size_breakdown(self) -> Dict[str, int]:
+        """Bytes per storage component (the paper's Fig. 6 accounting)."""
+
+    @abc.abstractmethod
+    def save(self, path: str) -> None:
+        """Persist to ``path`` (atomic).  ``type(store).load`` restores."""
+
+    @classmethod
+    @abc.abstractmethod
+    def load(cls, path: str, pool=None) -> "MappingStore":
+        """Restore a store saved by :meth:`save`."""
+
+    @abc.abstractmethod
+    def _range_keys(self, lo: int, hi: Optional[int]) -> np.ndarray:
+        """Existing keys in ``[lo, hi)`` ascending (``hi=None`` =
+        unbounded) — the key source for range/scan plans."""
+
+    # ------------------------------------------------------ shared surface
+    def _all_keys(self) -> np.ndarray:
+        return self._range_keys(0, None)
+
+    def range_lookup(
+        self, lo: int, hi: int, columns: Optional[Tuple[str, ...]] = None
+    ) -> Tuple[np.ndarray, Dict[str, np.ndarray]]:
+        """Paper §IV-E first approach: range-filter the existence index,
+        then answer the collected keys by batched lookup."""
+        keys = self._range_keys(int(lo), int(hi))
+        values, exists = self.lookup(keys, columns)
+        assert bool(exists.all())
+        return keys, values
+
+    def scan(
+        self, columns: Optional[Tuple[str, ...]] = None
+    ) -> Tuple[np.ndarray, Dict[str, np.ndarray]]:
+        """Full relation scan -> ``(keys, values)``, keys ascending."""
+        keys = self._all_keys()
+        values, exists = self.lookup(keys, columns)
+        assert bool(exists.all())
+        return keys, values
+
+    def size_bytes(self) -> int:
+        return sum(self.size_breakdown().values())
+
+    def query(self):
+        """Start a plan-based query: ``store.query().select(...)
+        .where_keys(ks) | .where_range(lo, hi) | .scan() .execute()``."""
+        from repro.api.query import Query  # local: avoids import cycle
+
+        return Query(self)
+
+    # ------------------------------------------------- executor stats hook
+    def _lookup_with_stats(
+        self,
+        keys: np.ndarray,
+        columns: Optional[Tuple[str, ...]] = None,
+        fanout: Optional[bool] = None,
+    ) -> Tuple[Dict[str, np.ndarray], np.ndarray, ExplainStats]:
+        """Lookup plus per-call :class:`ExplainStats` (no mutable
+        side-channel).  Default wraps :meth:`lookup` with coarse
+        timing; model-backed stores override with real stage
+        breakdowns.  ``fanout`` is advisory (sharded stores only)."""
+        t0 = time.perf_counter()
+        values, exists = self.lookup(keys, columns)
+        stats = ExplainStats(
+            plan=("lookup",),
+            heads_skipped=tuple(self.columns),  # no model heads ran
+            columns_decoded=tuple(values),
+            columns_skipped=tuple(c for c in self.columns if c not in values),
+        )
+        stats.decode_s = time.perf_counter() - t0
+        return values, exists, stats

@@ -1,0 +1,105 @@
+"""Fluent query builder over any :class:`~repro.api.protocol.MappingStore`.
+
+    values, exists = store.query().where_keys(ks).execute()
+    res = store.query().select("status").where_range(0, 10**6).execute()
+    res = store.query().scan().execute()
+
+A builder compiles to a :class:`~repro.api.plan.QueryPlan` (inspect it
+with :meth:`Query.plan`) and executes through the shared executor; the
+result's ``explain`` field reports the executed stages, pushdown
+evidence, and the latency breakdown.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.api.plan import QueryPlan, QueryResult
+
+
+class Query:
+    """One query under construction.  Builder methods return ``self``;
+    exactly one key source (``where_keys`` / ``where_range`` /
+    ``scan``) must be chosen before :meth:`execute`."""
+
+    def __init__(self, store):
+        self._store = store
+        self._kind: Optional[str] = None
+        self._keys: Optional[np.ndarray] = None
+        self._lo: Optional[int] = None
+        self._hi: Optional[int] = None
+        self._columns: Optional[Tuple[str, ...]] = None
+        self._fanout: Optional[bool] = None
+
+    # ------------------------------------------------------------ projection
+    def select(self, *columns: str) -> "Query":
+        """Project to the given columns (pushdown: unselected columns
+        are not decoded, and DeepMapping stores skip their private
+        model heads).  Accepts names or one iterable of names."""
+        if len(columns) == 1 and not isinstance(columns[0], str):
+            columns = tuple(columns[0])
+        if not columns:
+            raise ValueError("select() needs at least one column")
+        known = set(self._store.columns)
+        unknown = [c for c in columns if c not in known]
+        if unknown:
+            raise ValueError(
+                f"unknown column(s) {unknown}; store has {sorted(known)}"
+            )
+        self._columns = tuple(dict.fromkeys(columns))  # dedup, keep order
+        return self
+
+    # ------------------------------------------------------------ key source
+    def _set_kind(self, kind: str) -> None:
+        if self._kind is not None:
+            raise ValueError(
+                f"key source already set to {self._kind!r}; a query has "
+                f"exactly one of where_keys/where_range/scan"
+            )
+        self._kind = kind
+
+    def where_keys(self, keys: Sequence[int]) -> "Query":
+        """Point lookups for the given keys (request order preserved)."""
+        self._set_kind("point")
+        self._keys = np.asarray(keys, dtype=np.int64)
+        return self
+
+    def where_range(self, lo: int, hi: int) -> "Query":
+        """Every existing key in ``[lo, hi)``, ascending."""
+        self._set_kind("range")
+        self._lo, self._hi = int(lo), int(hi)
+        return self
+
+    def scan(self) -> "Query":
+        """Every existing key, ascending."""
+        self._set_kind("scan")
+        return self
+
+    # ------------------------------------------------------------- execution
+    def fanout(self, enabled: bool) -> "Query":
+        """Override the sharded store's parallel lookup fan-out (the
+        plan executor defaults it ON; single stores ignore it)."""
+        self._fanout = bool(enabled)
+        return self
+
+    def plan(self) -> QueryPlan:
+        """Compile to the IR without executing."""
+        if self._kind is None:
+            raise ValueError(
+                "no key source; call where_keys/where_range/scan first"
+            )
+        return QueryPlan(
+            kind=self._kind,
+            keys=self._keys,
+            lo=self._lo,
+            hi=self._hi,
+            columns=self._columns,
+            fanout=self._fanout,
+        )
+
+    def execute(self) -> QueryResult:
+        from repro.api.executor import execute_plan  # local: keep import light
+
+        return execute_plan(self._store, self.plan())

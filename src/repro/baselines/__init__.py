@@ -5,15 +5,18 @@
 * **HB**    — hash-based, uncompressed (pickled dict partitions);
 * **HBC-Z/L** — hash-based + Z-Standard/LZMA.
 
-All stores share the lookup contract of
-:class:`~repro.core.hybrid.DeepMappingStore` (``lookup(keys) ->
-(values, exists)``) and charge decompressed partitions to the same
+All stores implement the full :class:`~repro.api.protocol.MappingStore`
+protocol (lookup / insert / delete / update / range_lookup / scan /
+save / load / ``query()``) — modifications go through an overlay over
+the immutable partitions (`repro.baselines.partitioned`) — and charge
+decompressed partitions to the same
 :class:`~repro.storage.pool.MemoryPool`, so the benchmark comparisons
 see identical memory pressure (§V-A5 partition-size tuning applies).
 """
 
 from repro.baselines.array_store import ArrayStore  # noqa: F401
 from repro.baselines.hash_store import HashStore  # noqa: F401
+from repro.baselines.partitioned import PartitionedBaselineStore  # noqa: F401
 
 BASELINE_FACTORIES = {
     "AB": lambda table, pool=None, **kw: ArrayStore.build(table, codec="none", pool=pool, **kw),

@@ -7,14 +7,23 @@ array"), optionally dictionary-encodes values first (ABC-D) and/or
 compresses the buffer (ABC-G/Z/L).  Lookup binary-searches boundary
 keys for the partition, loads/decompresses it through the shared memory
 pool, then binary-searches inside (the paper's stated lookup cost).
+
+Modifications (insert/delete/update) and persistence come from
+:class:`~repro.baselines.partitioned.PartitionedBaselineStore`: the
+partitions stay immutable, an overlay patches lookups.
 """
 
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.baselines.partitioned import (
+    PartitionedBaselineStore,
+    _array_from_state,
+    _array_to_state,
+)
 from repro.core.encoding import ValueCodec
 from repro.core.table import Table
 from repro.storage import MemoryPool, get_codec
@@ -50,8 +59,10 @@ def _unpack_arrays(blob: bytes, names) -> Tuple[np.ndarray, Dict[str, np.ndarray
     return keys, cols
 
 
-class ArrayStore:
+class ArrayStore(PartitionedBaselineStore):
     """AB (codec='none'), ABC-D (dictionary=True), ABC-G/Z/L."""
+
+    kind = "array_store"
 
     def __init__(
         self,
@@ -71,6 +82,7 @@ class ArrayStore:
         self._boundaries = np.zeros(0, dtype=np.int64)
         self._decoders: Dict[str, ValueCodec] = {}
         self.num_rows = 0
+        self._init_overlay()
 
     @classmethod
     def build(
@@ -122,15 +134,13 @@ class ArrayStore:
 
         return self.pool.get(("ab", id(self), idx), loader)
 
-    def lookup(self, keys: np.ndarray, columns=None):
-        keys = np.asarray(keys, dtype=np.int64)
-        wanted = list(columns) if columns is not None else self.names
+    def _base_lookup(self, keys: np.ndarray, wanted: List[str]):
         n = keys.shape[0]
         exists = np.zeros(n, dtype=bool)
         out: Dict[str, np.ndarray] = {}
         gathered = {name: [] for name in wanted}
         gathered_idx = []
-        if self._partitions.__len__():
+        if self._partitions:
             pid = np.searchsorted(self._boundaries, keys, side="right") - 1
             order = np.argsort(pid, kind="stable")
             start = 0
@@ -174,8 +184,42 @@ class ArrayStore:
             out[name] = col
         return out, exists
 
-    def size_bytes(self) -> int:
-        total = sum(len(p) for p in self._partitions) + self._boundaries.nbytes
-        for vc in self._decoders.values():
-            total += vc.size_bytes()
-        return total
+    def _base_keys_in_range(self, lo: int, hi: Optional[int]) -> np.ndarray:
+        first, last = self._partition_span(lo, hi)
+        parts = []
+        for p in range(first, last + 1):
+            pkeys, _ = self._load(p)
+            a = int(np.searchsorted(pkeys, lo, side="left"))
+            b = pkeys.shape[0] if hi is None else int(np.searchsorted(pkeys, hi, side="left"))
+            if b > a:
+                parts.append(np.asarray(pkeys[a:b], dtype=np.int64))
+        return np.concatenate(parts) if parts else np.zeros(0, dtype=np.int64)
+
+    # ---------------------------------------------------------- accounting
+    def _extra_breakdown(self) -> Dict[str, int]:
+        return {"decode_map": sum(vc.size_bytes() for vc in self._decoders.values())}
+
+    # ---------------------------------------------------------- persistence
+    def _extra_state(self) -> Dict:
+        return {
+            "dictionary": self.dictionary,
+            "decoders": {
+                name: _array_to_state(vc.decode_map)
+                for name, vc in self._decoders.items()
+            },
+        }
+
+    @classmethod
+    def _construct(cls, state: Dict, pool: Optional[MemoryPool]) -> "ArrayStore":
+        store = cls(
+            state["names"],
+            state["codec"],
+            state["extra"]["dictionary"],
+            state["partition_bytes"],
+            pool,
+        )
+        for name, dm_state in state["extra"]["decoders"].items():
+            store._decoders[name] = ValueCodec.from_decode_map(
+                name, _array_from_state(dm_state)
+            )
+        return store

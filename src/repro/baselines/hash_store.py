@@ -6,21 +6,28 @@ serialized hash table", "state-of-the-art Pickle library"), which is
 what makes HB's deserialization cost dominate under memory pressure
 (paper §V-C).  Pickle here is confined to benchmark baselines on data we
 generate ourselves.
+
+Modifications (insert/delete/update) and persistence come from
+:class:`~repro.baselines.partitioned.PartitionedBaselineStore`: the
+partitions stay immutable, an overlay patches lookups.
 """
 
 from __future__ import annotations
 
 import pickle
-from typing import Dict, Optional
+from typing import Dict, List, Optional
 
 import numpy as np
 
+from repro.baselines.partitioned import PartitionedBaselineStore
 from repro.core.table import Table
 from repro.storage import MemoryPool, get_codec
 
 
-class HashStore:
+class HashStore(PartitionedBaselineStore):
     """HB (codec='none'), HBC-Z, HBC-L."""
+
+    kind = "hash_store"
 
     def __init__(self, names, codec: str, partition_bytes: int, pool: Optional[MemoryPool]):
         self.names = list(names)
@@ -31,6 +38,7 @@ class HashStore:
         self._partitions: list[bytes] = []
         self._boundaries = np.zeros(0, dtype=np.int64)
         self.num_rows = 0
+        self._init_overlay()
 
     @classmethod
     def build(
@@ -73,10 +81,8 @@ class HashStore:
 
         return self.pool.get(("hb", id(self), idx), loader)
 
-    def lookup(self, keys: np.ndarray, columns=None):
-        keys = np.asarray(keys, dtype=np.int64)
+    def _base_lookup(self, keys: np.ndarray, wanted: List[str]):
         names = sorted(self.names)
-        wanted = list(columns) if columns is not None else self.names
         n = keys.shape[0]
         exists = np.zeros(n, dtype=bool)
         rows: list = [None] * n
@@ -104,5 +110,20 @@ class HashStore:
             out[name] = np.asarray(vals)
         return out, exists
 
-    def size_bytes(self) -> int:
-        return sum(len(p) for p in self._partitions) + self._boundaries.nbytes
+    @classmethod
+    def _construct(cls, state: Dict, pool: Optional[MemoryPool]) -> "HashStore":
+        return cls(state["names"], state["codec"], state["partition_bytes"], pool)
+
+    def _base_keys_in_range(self, lo: int, hi: Optional[int]) -> np.ndarray:
+        first, last = self._partition_span(lo, hi)
+        parts = []
+        for p in range(first, last + 1):
+            d = self._load(p)
+            ks = np.fromiter(d.keys(), dtype=np.int64, count=len(d))
+            mask = ks >= lo
+            if hi is not None:
+                mask &= ks < hi
+            sel = ks[mask]
+            if sel.size:
+                parts.append(np.sort(sel))
+        return np.concatenate(parts) if parts else np.zeros(0, dtype=np.int64)

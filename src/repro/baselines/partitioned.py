@@ -1,0 +1,333 @@
+"""Shared machinery for the AB/HB baseline stores: partitioned
+immutable base + modification overlay + protocol persistence.
+
+The paper's baselines are build-once partitioned blobs.  To conform to
+the :class:`~repro.api.protocol.MappingStore` contract (insert /
+delete / update like the DeepMapping stores), both baselines layer a
+small in-memory **overlay** over the immutable partitions — the same
+discipline as an LSM memtable over sealed runs:
+
+* ``_overlay``  maps key -> row for inserted and updated rows;
+* ``_deleted``  masks keys whose base row was removed.
+
+Lookup answers from the partitions first, then patches overlay rows in
+and masks deleted keys out; range/scan key sources merge the overlay
+into the base partition scan.  ``save``/``load`` persist everything in
+one msgpack file (atomic ``os.replace``), self-describing via a
+``kind`` header that ``repro.open`` sniffs.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Dict, List, Optional, Tuple
+
+import msgpack
+import numpy as np
+
+from repro.api.protocol import MappingStore
+from repro.storage import MemoryPool
+
+BASELINE_FORMAT_VERSION = 1
+
+
+
+def _array_to_state(arr: np.ndarray) -> Dict:
+    """msgpack-friendly array state (raw bytes for numerics, item list
+    for strings/objects — no pickle)."""
+    arr = np.asarray(arr)
+    if arr.dtype == object or arr.dtype.kind in "US":
+        return {"enc": "items", "dtype": arr.dtype.str, "items": list(arr.tolist())}
+    return {"enc": "raw", "dtype": arr.dtype.str, "raw": arr.tobytes()}
+
+
+def _array_from_state(state: Dict) -> np.ndarray:
+    if state["enc"] == "items":
+        dt = np.dtype(state["dtype"])
+        return np.asarray(state["items"], dtype=object if dt == object else dt)
+    return np.frombuffer(state["raw"], dtype=np.dtype(state["dtype"])).copy()
+
+
+class PartitionedBaselineStore(MappingStore):
+    """Base class of :class:`ArrayStore` and :class:`HashStore`.
+
+    Subclasses provide the immutable-partition probe surface:
+
+    * ``kind``                        — format tag for save/open sniffing;
+    * ``_base_lookup(keys, wanted)``  — partition binary-search/hash probe;
+    * ``_base_keys_in_range(lo, hi)`` — ascending base keys in ``[lo, hi)``;
+    * ``_extra_state()`` / ``_construct(state, pool)`` — subclass fields.
+    """
+
+    kind: str = "abstract"
+
+    # Set by subclass __init__:
+    names: List[str]
+    codec_name: str
+    partition_bytes: int
+    pool: MemoryPool
+    _partitions: List[bytes]
+    _boundaries: np.ndarray
+    num_rows: int
+
+    def _init_overlay(self) -> None:
+        self._overlay: Dict[int, Dict[str, object]] = {}
+        self._deleted: set = set()
+        # Lazily-built int64 array of overlay+deleted keys — the
+        # vectorized lookup prefilter; mutations invalidate it.
+        self._touched_cache: Optional[np.ndarray] = None
+
+    def _touched_keys(self) -> np.ndarray:
+        if self._touched_cache is None:
+            n = len(self._overlay) + len(self._deleted)
+            self._touched_cache = np.fromiter(
+                (k for src in (self._overlay, self._deleted) for k in src),
+                dtype=np.int64,
+                count=n,
+            )
+        return self._touched_cache
+
+    # --------------------------------------------------------- probe hooks
+    def _base_lookup(
+        self, keys: np.ndarray, wanted: List[str]
+    ) -> Tuple[Dict[str, np.ndarray], np.ndarray]:
+        raise NotImplementedError
+
+    def _base_keys_in_range(self, lo: int, hi: Optional[int]) -> np.ndarray:
+        raise NotImplementedError
+
+    def _partition_span(self, lo: int, hi: Optional[int]) -> Tuple[int, int]:
+        """Partition-id range [first, last] overlapping ``[lo, hi)``
+        (binary search on boundary keys); (0, -1) when empty."""
+        if not self._partitions or (hi is not None and hi <= lo):
+            return 0, -1
+        first = max(0, int(np.searchsorted(self._boundaries, lo, side="right")) - 1)
+        if hi is None:
+            return first, len(self._partitions) - 1
+        last = int(np.searchsorted(self._boundaries, hi - 1, side="right")) - 1
+        return first, last
+
+    # ------------------------------------------------------------ protocol
+    @property
+    def columns(self) -> Tuple[str, ...]:
+        return tuple(self.names)
+
+    def lookup(
+        self, keys: np.ndarray, columns: Optional[Tuple[str, ...]] = None
+    ) -> Tuple[Dict[str, np.ndarray], np.ndarray]:
+        """Partition probe + overlay patch -> ``(values, exists)``."""
+        keys = np.asarray(keys, dtype=np.int64)
+        wanted = [c for c in self.names if columns is None or c in columns]
+        values, exists = self._base_lookup(keys, wanted)
+        if self._overlay or self._deleted:
+            # Vectorized prefilter: restrict the Python fix-up loop to
+            # keys that actually hit the (typically tiny) overlay state.
+            candidates = np.flatnonzero(np.isin(keys, self._touched_keys()))
+            fix_idx: List[int] = []
+            fix_rows: List[Dict[str, object]] = []
+            for i in candidates.tolist():
+                k = int(keys[i])
+                if k in self._deleted:
+                    exists[i] = False
+                else:
+                    row = self._overlay.get(k)
+                    if row is not None:
+                        exists[i] = True
+                        fix_idx.append(i)
+                        fix_rows.append(row)
+            if fix_idx:
+                for name in wanted:
+                    values[name] = _patch_column(
+                        values[name], fix_idx, [r[name] for r in fix_rows]
+                    )
+        return values, exists
+
+    def insert(self, keys: np.ndarray, columns: Dict[str, np.ndarray]) -> None:
+        keys = np.asarray(keys, dtype=np.int64)
+        if keys.size == 0:
+            return
+        if keys.min() < 0:
+            raise ValueError("keys must be non-negative")  # Table parity
+        if np.unique(keys).size != keys.size:
+            raise ValueError("duplicate keys in insert batch")
+        _, exists = self.lookup(keys, columns=())  # exists-only: skip decode
+        if exists.any():
+            raise ValueError("insert of existing key; use update()")
+        # Build every row before touching overlay state: a malformed
+        # columns dict must not leave the batch half-applied.
+        rows = [{n: columns[n][i] for n in self.names} for i in range(keys.size)]
+        for k, row in zip(keys.tolist(), rows):
+            self._deleted.discard(k)
+            self._overlay[k] = row
+        self.num_rows += int(keys.size)
+        self._touched_cache = None
+
+    def delete(self, keys: np.ndarray) -> None:
+        # unique: a key repeated in one batch deletes one row, not two
+        keys = np.unique(np.asarray(keys, dtype=np.int64))
+        if keys.size == 0:
+            return
+        _, exists = self.lookup(keys, columns=())  # exists-only: skip decode
+        for k in keys[exists].tolist():
+            # Mask the base row even when an overlay row shadowed it —
+            # removing only the overlay would resurrect the base value.
+            self._overlay.pop(k, None)
+            self._deleted.add(k)
+        self.num_rows -= int(exists.sum())
+        self._touched_cache = None
+
+    def update(self, keys: np.ndarray, columns: Dict[str, np.ndarray]) -> None:
+        keys = np.asarray(keys, dtype=np.int64)
+        if keys.size == 0:
+            return
+        _, exists = self.lookup(keys, columns=())  # exists-only: skip decode
+        if not exists.all():
+            raise ValueError("update of non-existing key; use insert()")
+        rows = [{n: columns[n][i] for n in self.names} for i in range(keys.size)]
+        for k, row in zip(keys.tolist(), rows):
+            self._overlay[k] = row
+        self._touched_cache = None
+
+    def _range_keys(self, lo: int, hi: Optional[int]) -> np.ndarray:
+        base = self._base_keys_in_range(int(lo), None if hi is None else int(hi))
+        if self._deleted:
+            dead = np.fromiter(self._deleted, dtype=np.int64, count=len(self._deleted))
+            base = base[np.isin(base, dead, invert=True)]
+        ovl = [
+            k for k in self._overlay if k >= lo and (hi is None or k < hi)
+        ]
+        if not ovl:
+            return base
+        # unique: an updated key appears in both base and overlay.
+        return np.unique(np.concatenate([base, np.asarray(ovl, dtype=np.int64)]))
+
+    def overlay_rows(self) -> int:
+        """Rows currently answered by the overlay (not the partitions)."""
+        return len(self._overlay)
+
+    # ---------------------------------------------------------- accounting
+    def _overlay_bytes(self) -> int:
+        total = 8 * len(self._deleted)
+        for row in self._overlay.values():
+            total += 8
+            for v in row.values():
+                if isinstance(v, (str, bytes)):
+                    total += len(v)
+                else:
+                    total += int(np.asarray(v).nbytes)
+        return total
+
+    def size_breakdown(self) -> Dict[str, int]:
+        out = {
+            "partitions": sum(len(p) for p in self._partitions),
+            "boundaries": int(self._boundaries.nbytes),
+            "overlay": self._overlay_bytes(),
+        }
+        out.update(self._extra_breakdown())
+        return out
+
+    def _extra_breakdown(self) -> Dict[str, int]:
+        return {}
+
+    # ---------------------------------------------------------- persistence
+    def _extra_state(self) -> Dict:
+        return {}
+
+    @classmethod
+    def _construct(
+        cls, state: Dict, pool: Optional[MemoryPool]
+    ) -> "PartitionedBaselineStore":
+        raise NotImplementedError
+
+    def save(self, path: str) -> None:
+        """One self-describing msgpack file (atomic ``os.replace``)."""
+        ovl_keys = sorted(self._overlay)
+        ovl_cols = {
+            n: _array_to_state(np.asarray([self._overlay[k][n] for k in ovl_keys]))
+            for n in self.names
+        } if ovl_keys else {}
+        state = {
+            "version": BASELINE_FORMAT_VERSION,
+            "kind": self.kind,
+            "names": list(self.names),
+            "codec": self.codec_name,
+            "partition_bytes": int(self.partition_bytes),
+            "num_rows": int(self.num_rows),
+            "boundaries": self._boundaries.tobytes(),
+            "partitions": list(self._partitions),
+            "overlay_keys": ovl_keys,
+            "overlay_cols": ovl_cols,
+            "deleted": sorted(self._deleted),
+            "extra": self._extra_state(),
+        }
+        tmp = path + ".tmp"
+        with open(tmp, "wb") as f:
+            f.write(msgpack.packb(state))
+        os.replace(tmp, path)
+
+    @classmethod
+    def load(
+        cls, path: str, pool: Optional[MemoryPool] = None
+    ) -> "PartitionedBaselineStore":
+        with open(path, "rb") as f:
+            state = msgpack.unpackb(f.read())
+        return cls.from_saved_state(state, pool=pool)
+
+    @classmethod
+    def from_saved_state(
+        cls, state: Dict, pool: Optional[MemoryPool] = None
+    ) -> "PartitionedBaselineStore":
+        """Restore from an already-unpacked state dict (lets
+        ``repro.open`` parse the file exactly once)."""
+        if state["version"] > BASELINE_FORMAT_VERSION:
+            raise ValueError(f"baseline format {state['version']} newer than reader")
+        if state["kind"] != cls.kind:
+            raise ValueError(
+                f"saved store holds a {state['kind']!r} store, not {cls.kind!r}"
+            )
+        store = cls._construct(state, pool)
+        store._partitions = list(state["partitions"])
+        store._boundaries = np.frombuffer(state["boundaries"], dtype=np.int64).copy()
+        store.num_rows = int(state["num_rows"])
+        store._init_overlay()
+        ovl_keys = state["overlay_keys"]
+        if ovl_keys:
+            cols = {n: _array_from_state(s) for n, s in state["overlay_cols"].items()}
+            for i, k in enumerate(ovl_keys):
+                store._overlay[int(k)] = {n: cols[n][i] for n in store.names}
+        store._deleted = set(int(k) for k in state["deleted"])
+        return store
+
+
+def load_baseline_store(
+    path: str, pool: Optional[MemoryPool] = None
+) -> PartitionedBaselineStore:
+    """Load a saved AB/HB store, parsing the file exactly once and
+    dispatching on its ``kind`` header (used by ``repro.open``)."""
+    from repro.baselines.array_store import ArrayStore
+    from repro.baselines.hash_store import HashStore
+
+    kinds = {ArrayStore.kind: ArrayStore, HashStore.kind: HashStore}
+    with open(path, "rb") as f:
+        state = msgpack.unpackb(f.read())
+    if not isinstance(state, dict) or state.get("kind") not in kinds:
+        raise ValueError(f"{path!r} is not a recognized baseline store file")
+    return kinds[state["kind"]].from_saved_state(state, pool=pool)
+
+
+def _patch_column(col: np.ndarray, idx: List[int], vals: List[object]) -> np.ndarray:
+    """Overwrite ``col[idx] = vals`` with dtype promotion so overlay
+    values never truncate (e.g. a longer string than the base column's
+    fixed itemsize)."""
+    va = np.asarray(vals)
+    if col.dtype == object or va.dtype == object:
+        col = col.astype(object)
+    else:
+        if col.dtype.kind == "S" and va.dtype.kind == "U":
+            va = np.char.encode(va, "utf-8")
+        dt = np.promote_types(col.dtype, va.dtype)
+        if dt != col.dtype:
+            col = col.astype(dt)
+    col = col.copy() if not col.flags.writeable else col
+    col[np.asarray(idx, dtype=np.int64)] = va
+    return col

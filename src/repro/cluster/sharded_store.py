@@ -34,12 +34,16 @@ from __future__ import annotations
 import dataclasses
 import os
 import shutil
+import threading
+import time
 from concurrent.futures import ThreadPoolExecutor
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import msgpack
 import numpy as np
 
+from repro.api.plan import ExplainStats
+from repro.api.protocol import MappingStore
 from repro.cluster.partitioner import Partitioner, make_partitioner
 from repro.cluster.router import ShardRouter
 from repro.core.hybrid import DeepMappingConfig, DeepMappingStore, LookupStats
@@ -60,13 +64,14 @@ class ClusterConfig:
     max_workers: Optional[int] = None  # build/retrain thread pool size
 
 
-class ShardedDeepMappingStore:
+class ShardedDeepMappingStore(MappingStore):
     """K independent :class:`DeepMappingStore` shards behind a router.
 
-    Drop-in for the single store everywhere the serving layer cares:
-    ``lookup`` / ``insert`` / ``delete`` / ``update`` / ``range_lookup``
-    / ``should_retrain`` / ``retrain`` / ``size_breakdown`` keep their
-    signatures and semantics.
+    Conforms to the :class:`~repro.api.protocol.MappingStore` protocol —
+    drop-in for the single store everywhere the serving layer cares.
+    Plan execution (``store.query()``) fans per-shard lookups out on a
+    thread pool so scatter/gather overlaps per-shard inference; the
+    legacy ``lookup`` shim stays serial for bit-for-bit continuity.
     """
 
     def __init__(
@@ -86,7 +91,9 @@ class ShardedDeepMappingStore:
         self.shards = shards
         self.cluster = cluster
         self.pool = pool
-        self.last_stats = LookupStats()
+        self.last_stats = LookupStats()  # deprecated; see LookupStats docs
+        self._fanout_pool: Optional[ThreadPoolExecutor] = None
+        self._fanout_lock = threading.Lock()
 
     # ------------------------------------------------------------------ build
     @classmethod
@@ -139,60 +146,121 @@ class ShardedDeepMappingStore:
         return store
 
     # ---------------------------------------------------------------- lookup
+    @property
+    def columns(self) -> Tuple[str, ...]:
+        return self.shards[0].spec.tasks
+
+    def _lookup_executor(self) -> ThreadPoolExecutor:
+        """Lazy, long-lived thread pool for the lookup fan-out stage.
+        Per-shard lookups are independent (distinct stores; the shared
+        MemoryPool is lock-protected) and JAX releases the GIL inside
+        compiled inference, so shard visits genuinely overlap."""
+        if self._fanout_pool is None:
+            with self._fanout_lock:  # two first-queries racing must not
+                if self._fanout_pool is None:  # each build (and leak) a pool
+                    workers = self.cluster.max_workers or min(
+                        len(self.shards), os.cpu_count() or 4
+                    )
+                    self._fanout_pool = ThreadPoolExecutor(
+                        max_workers=workers, thread_name_prefix="shard-lookup"
+                    )
+        return self._fanout_pool
+
+    def _lookup_with_stats(
+        self,
+        keys: np.ndarray,
+        columns: Optional[Tuple[str, ...]] = None,
+        fanout: Optional[bool] = None,
+    ) -> Tuple[Dict[str, np.ndarray], np.ndarray, ExplainStats]:
+        """Algorithm 1, scattered: route each key to its shard, answer
+        per-shard batches (in parallel when ``fanout``), gather results
+        back in request order."""
+        keys = np.asarray(keys, dtype=np.int64)
+        t0 = time.perf_counter()
+        batches = self.router.scatter(keys)
+        route_s = time.perf_counter() - t0
+        if not batches:
+            # Zero-length request: delegate to one shard for typed
+            # empty columns + per-head stats (no scatter, no inference).
+            values, exists, stats = self.shards[0]._lookup_with_stats(
+                keys[:0], columns
+            )
+            stats.plan = ("scatter[0]",) + stats.plan
+            stats.route_s += route_s
+            return values, np.zeros(keys.shape[0], dtype=bool), stats
+
+        use_fanout = bool(fanout) and len(batches) > 1
+
+        def visit(batch):
+            shard = self.shards[batch.shard_id]
+            vals, exists, stats = shard._lookup_with_stats(batch.keys, columns)
+            return batch, vals, exists, stats
+
+        if use_fanout:
+            parts = list(self._lookup_executor().map(visit, batches))
+        else:
+            parts = [visit(b) for b in batches]
+
+        agg = ExplainStats(
+            shards_visited=len(batches),
+            async_fanout=use_fanout,
+            route_s=route_s,
+            heads_evaluated=parts[0][3].heads_evaluated,
+            heads_skipped=parts[0][3].heads_skipped,
+            columns_decoded=parts[0][3].columns_decoded,
+            columns_skipped=parts[0][3].columns_skipped,
+        )
+        for _, _, _, s in parts:
+            agg.merge_timings(s)
+        agg.plan = (
+            f"scatter[{len(batches)} shards]",
+            "fanout" if use_fanout else "serial",
+        ) + parts[0][3].plan
+
+        t1 = time.perf_counter()
+        values, exists = ShardRouter.gather(
+            keys.shape[0], [(b, v, e) for b, v, e, _ in parts]
+        )
+        agg.route_s += time.perf_counter() - t1
+        return values, exists, agg
+
     def lookup(
         self, keys: np.ndarray, columns: Optional[Tuple[str, ...]] = None
     ) -> Tuple[Dict[str, np.ndarray], np.ndarray]:
-        """Algorithm 1, scattered: route each key to its shard, batch
-        per shard, gather results back in request order."""
-        keys = np.asarray(keys, dtype=np.int64)
-        stats = LookupStats()
-        parts = []
-        for batch in self.router.scatter(keys):
-            shard = self.shards[batch.shard_id]
-            vals, exists = shard.lookup(batch.keys, columns)
-            s = shard.last_stats
-            stats.infer_s += s.infer_s
-            stats.exist_s += s.exist_s
-            stats.aux_s += s.aux_s
-            stats.decode_s += s.decode_s
-            parts.append((batch, vals, exists))
-        self.last_stats = stats
-        values, exists = ShardRouter.gather(keys.shape[0], parts)
-        if not values and keys.size == 0:
-            # Empty request: keep the column structure of the facade.
-            wanted = columns if columns is not None else tuple(self.shards[0].spec.tasks)
-            values = {
-                t: self.shards[0].codecs[t].decode(np.zeros(0, dtype=np.int32))
-                for t in self.shards[0].spec.tasks
-                if t in wanted
-            }
+        """Legacy serial shim (prefer ``store.query()``, whose executor
+        fans out).  Still refreshes the deprecated ``last_stats``."""
+        values, exists, stats = self._lookup_with_stats(keys, columns, fanout=False)
+        self.last_stats = LookupStats.from_explain(stats)
         return values, exists
 
-    def range_lookup(
-        self, lo: int, hi: int, columns: Optional[Tuple[str, ...]] = None
-    ) -> Tuple[np.ndarray, Dict[str, np.ndarray]]:
+    def _range_keys(self, lo: int, hi: Optional[int]) -> np.ndarray:
         """Range scatter (§IV-E): only shards whose ranges overlap
         ``[lo, hi)`` scan their existence index (all shards under hash
-        partitioning); results merge in ascending key order."""
-        all_keys, all_vals = [], []
-        for sid in self.partitioner.shards_for_range(int(lo), int(hi)):
-            shard = self.shards[int(sid)]
-            keys = shard.vexist.keys_in_range(int(lo), int(hi))
-            if keys.size == 0:
-                continue
-            vals, exists = shard.lookup(keys, columns)
-            assert bool(exists.all())
-            all_keys.append(keys)
-            all_vals.append(vals)
-        if not all_keys:
-            return np.zeros(0, dtype=np.int64), {}
-        keys = np.concatenate(all_keys)
-        order = np.argsort(keys, kind="stable")
-        values = {
-            name: np.concatenate([v[name] for v in all_vals])[order]
-            for name in all_vals[0]
-        }
-        return keys[order], values
+        partitioning), in parallel on the fan-out pool; merged
+        ascending.  ``hi=None`` scans all shards unbounded (the scan
+        plan's key source)."""
+        if hi is None:
+            sids: List[int] = list(range(len(self.shards)))
+        else:
+            sids = [int(s) for s in self.partitioner.shards_for_range(int(lo), int(hi))]
+
+        def scan_one(s: int) -> np.ndarray:
+            return self.shards[s].vexist.keys_in_range(lo, hi)
+
+        if len(sids) > 1:
+            parts = list(self._lookup_executor().map(scan_one, sids))
+        else:
+            parts = [scan_one(s) for s in sids]
+        parts = [p for p in parts if p.size]
+        if not parts:
+            return np.zeros(0, dtype=np.int64)
+        merged = np.concatenate(parts)
+        if self.partitioner.policy != "range":
+            # Range shards are disjoint and visited in key order, so
+            # their concatenation is already ascending; hash shards
+            # interleave the domain and need the sort.
+            merged = np.sort(merged, kind="stable")
+        return merged
 
     # ------------------------------------------------ modifications (Alg 3-5)
     def insert(self, keys: np.ndarray, columns: Dict[str, np.ndarray]) -> None:
@@ -200,6 +268,10 @@ class ShardedDeepMappingStore:
         mutating ANY, so a duplicate key cannot leave the cluster
         half-inserted."""
         keys = np.asarray(keys, dtype=np.int64)
+        if np.unique(keys).size != keys.size:
+            # Checked at the facade: a per-shard duplicate raise could
+            # otherwise leave earlier shards mutated.
+            raise ValueError("duplicate keys in insert batch")
         batches = self.router.scatter(keys)
         for b in batches:
             if self.shards[b.shard_id].vexist.test(b.keys).any():
@@ -257,6 +329,18 @@ class ShardedDeepMappingStore:
         if verbose:
             print(f"[cluster] retrained shards {ids}")
         return ids
+
+    # ---------------------------------------------------------- persistence
+    def save(self, path: str) -> None:
+        """Protocol persistence — the manifest directory-of-stores
+        format (atomic tmp+rename)."""
+        save_sharded_store(self, path)
+
+    @classmethod
+    def load(
+        cls, path: str, pool: Optional[MemoryPool] = None
+    ) -> "ShardedDeepMappingStore":
+        return load_sharded_store(path, pool=pool)
 
     def materialize(self) -> Table:
         """Reconstruct the full logical table, ascending key order."""
@@ -322,6 +406,9 @@ def save_sharded_store(store: ShardedDeepMappingStore, path: str) -> None:
             "num_shards": store.num_shards,
             "policy": store.cluster.policy,
             "seed": store.cluster.seed,
+            # governs build/retrain AND lookup fan-out pools — an
+            # operator's concurrency cap must survive reload
+            "max_workers": store.cluster.max_workers,
         },
         "shards": shard_dirs,
     }
@@ -351,5 +438,7 @@ def load_sharded_store(
         num_shards=manifest["cluster"]["num_shards"],
         policy=manifest["cluster"]["policy"],
         seed=manifest["cluster"]["seed"],
+        # .get: PR-1-era manifests predate the field
+        max_workers=manifest["cluster"].get("max_workers"),
     )
     return ShardedDeepMappingStore(partitioner, shards, cluster, pool)

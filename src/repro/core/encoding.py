@@ -17,7 +17,7 @@ maps are the paper's ``f_decode`` and their bytes count toward Eq. 1.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, Sequence, Tuple
 
 import numpy as np
 
@@ -176,6 +176,17 @@ class ValueCodec:
             if c < 0:
                 known[i] = False
         return codes, known
+
+    @classmethod
+    def from_decode_map(cls, name: str, decode_map: np.ndarray) -> "ValueCodec":
+        """Rebuild a codec from its serialized ``decode_map`` (the load
+        paths of ``core.serialize`` and the baseline stores)."""
+        vc = cls.__new__(cls)
+        vc.name = name
+        vc.decode_map = decode_map
+        vc._codes = np.zeros(0, dtype=np.int32)  # codes only needed at build
+        vc._encode = {v: i for i, v in enumerate(decode_map.tolist())}
+        return vc
 
     def extend(self, values: np.ndarray) -> None:
         """Register new categories (used on insert of unseen values)."""

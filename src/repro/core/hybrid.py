@@ -28,6 +28,8 @@ from typing import Dict, Optional, Tuple
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api.plan import ExplainStats
+from repro.api.protocol import MappingStore
 from repro.core import model as model_lib
 from repro.core import trainer as trainer_lib
 from repro.core.aux_table import AuxTable
@@ -69,7 +71,13 @@ class DeepMappingConfig:
 
 @dataclasses.dataclass
 class LookupStats:
-    """Per-call latency breakdown — feeds the paper's Fig. 7 benchmark."""
+    """Per-call latency breakdown — feeds the paper's Fig. 7 benchmark.
+
+    DEPRECATED side-channel: ``store.last_stats`` is still refreshed by
+    the legacy ``lookup`` shim for old callers, but plan execution
+    (``store.query()``) returns an immutable per-plan
+    :class:`~repro.api.plan.ExplainStats` instead — prefer that.
+    """
 
     infer_s: float = 0.0
     exist_s: float = 0.0
@@ -78,6 +86,15 @@ class LookupStats:
 
     def total(self) -> float:
         return self.infer_s + self.exist_s + self.aux_s + self.decode_s
+
+    @classmethod
+    def from_explain(cls, stats: ExplainStats) -> "LookupStats":
+        return cls(
+            infer_s=stats.infer_s,
+            exist_s=stats.exist_s,
+            aux_s=stats.aux_s,
+            decode_s=stats.decode_s,
+        )
 
 
 def _make_predict_fn(params: Dict, spec: MLPSpec, config: "DeepMappingConfig"):
@@ -91,7 +108,7 @@ def _make_predict_fn(params: Dict, spec: MLPSpec, config: "DeepMappingConfig"):
     return lambda digits: trainer_lib.predict_codes_jit(params, digits, spec)
 
 
-class DeepMappingStore:
+class DeepMappingStore(MappingStore):
     """Hybrid learned KV store for one relation (single packed key)."""
 
     def __init__(
@@ -116,8 +133,11 @@ class DeepMappingStore:
         self.num_rows = int(num_rows)
         self.config = config
         self.modified_bytes = 0
-        self.last_stats = LookupStats()
+        self.last_stats = LookupStats()  # deprecated; see LookupStats docs
         self._bytes_per_row = raw_bytes / max(1, num_rows)
+        # Per-task-subset inference fns (projection pushdown skips
+        # private heads of unselected columns).
+        self._predict_fns: Dict[Tuple[str, ...], object] = {}
 
     # ------------------------------------------------------------------ build
     @classmethod
@@ -192,19 +212,113 @@ class DeepMappingStore:
         return store
 
     # ---------------------------------------------------------------- lookup
-    def _infer_codes(self, keys: np.ndarray) -> np.ndarray:
-        """Model predictions for (possibly out-of-capacity) keys."""
-        if not hasattr(self, "_predict_fn"):
-            self._predict_fn = _make_predict_fn(self.params, self.spec, self.config)
-        out = np.zeros((keys.shape[0], len(self.spec.tasks)), dtype=np.int32)
+    def _predict_for(self, tasks: Tuple[str, ...]):
+        """Inference fn evaluating only the given heads (projection
+        pushdown).  The shared trunk weights are reused verbatim; a
+        subset spec + params view drops the unselected private stacks,
+        so both the jit and Pallas paths skip their compute."""
+        fn = self._predict_fns.get(tasks)
+        if fn is None:
+            if tasks == self.spec.tasks:
+                spec, params = self.spec, self.params
+            else:
+                spec = MLPSpec(
+                    base=self.spec.base,
+                    width=self.spec.width,
+                    shared=self.spec.shared,
+                    private={t: self.spec.private_map[t] for t in tasks},
+                    out_cards={t: self.spec.card_map[t] for t in tasks},
+                    dtype=self.spec.dtype,
+                )
+                params = {
+                    "shared": self.params["shared"],
+                    "heads": {t: self.params["heads"][t] for t in tasks},
+                }
+            fn = _make_predict_fn(params, spec, self.config)
+            self._predict_fns[tasks] = fn
+        return fn
+
+    def _infer_codes(
+        self, keys: np.ndarray, tasks: Optional[Tuple[str, ...]] = None
+    ) -> np.ndarray:
+        """Model predictions for (possibly out-of-capacity) keys.
+
+        ``tasks`` restricts evaluation to a subset of heads (columns of
+        the result follow ``tasks`` order); ``None`` evaluates all.
+        """
+        tasks = self.spec.tasks if tasks is None else tuple(tasks)
+        out = np.zeros((keys.shape[0], len(tasks)), dtype=np.int32)
+        if keys.shape[0] == 0 or not tasks:
+            return out  # zero-length batches never reach JAX
+        predict_fn = self._predict_for(tasks)
         in_cap = keys < self.encoder.capacity
         idx = np.flatnonzero(in_cap)
         bs = self.config.inference_batch
         for start in range(0, idx.size, bs):
             sel = idx[start : start + bs]
             digits = self.encoder.digits(keys[sel])
-            out[sel] = np.asarray(self._predict_fn(jnp.asarray(digits)))
+            out[sel] = np.asarray(predict_fn(jnp.asarray(digits)))
         return out
+
+    @property
+    def columns(self) -> Tuple[str, ...]:
+        return self.spec.tasks
+
+    def _lookup_with_stats(
+        self,
+        keys: np.ndarray,
+        columns: Optional[Tuple[str, ...]] = None,
+        fanout: Optional[bool] = None,
+    ) -> Tuple[Dict[str, np.ndarray], np.ndarray, ExplainStats]:
+        """Algorithm 1 with projection pushdown and per-call stats.
+
+        Only the heads of requested columns are evaluated and only
+        those columns decoded; ``fanout`` is accepted for protocol
+        parity (single store has nothing to fan out).
+        """
+        keys = np.asarray(keys, dtype=np.int64)
+        all_tasks = self.spec.tasks
+        wanted = tuple(
+            t for t in all_tasks if columns is None or t in columns
+        )
+        skipped = tuple(t for t in all_tasks if t not in wanted)
+        stats = ExplainStats(
+            heads_evaluated=wanted,
+            heads_skipped=skipped,
+            columns_decoded=wanted,
+            columns_skipped=skipped,
+            plan=(
+                f"infer[{len(wanted)}/{len(all_tasks)} heads]",
+                "exist",
+                "aux_merge",
+                f"decode[{','.join(wanted)}]",
+            ),
+        )
+
+        t0 = time.perf_counter()
+        # line 3 (batch inference) — selected heads only.
+        pred = self._infer_codes(keys, tasks=wanted)
+        t1 = time.perf_counter()
+        exists = self.vexist.test(keys)                      # line 5 (existence check)
+        t2 = time.perf_counter()
+        # line 6-8: aux override for existing keys only.  T_aux rows
+        # carry codes for ALL tasks; project to the selected ones.
+        if keys.shape[0] and wanted:
+            exist_idx = np.flatnonzero(exists)
+            found, aux_codes = self.aux.get(keys[exist_idx])
+            task_idx = [all_tasks.index(t) for t in wanted]
+            pred[exist_idx[found]] = aux_codes[found][:, task_idx]
+        t3 = time.perf_counter()
+        # line 13: decode — selected columns only.
+        values: Dict[str, np.ndarray] = {}
+        for i, t in enumerate(wanted):
+            safe = np.where(exists, pred[:, i], 0)
+            values[t] = self.codecs[t].decode(safe)
+        t4 = time.perf_counter()
+
+        stats.infer_s, stats.exist_s = t1 - t0, t2 - t1
+        stats.aux_s, stats.decode_s = t3 - t2, t4 - t3
+        return values, exists, stats
 
     def lookup(
         self, keys: np.ndarray, columns: Optional[Tuple[str, ...]] = None
@@ -214,33 +328,11 @@ class DeepMappingStore:
         Returns ``(values, exists)``: per-column decoded arrays (rows
         where ``exists`` is False are NULL — filled with the column's
         code-0 value, callers must respect the mask) plus the existence
-        mask.
+        mask.  Prefer ``store.query()`` for per-call stats; this shim
+        still refreshes the deprecated ``last_stats`` side-channel.
         """
-        keys = np.asarray(keys, dtype=np.int64)
-        stats = LookupStats()
-
-        t0 = time.perf_counter()
-        pred = self._infer_codes(keys)                       # line 3 (batch inference)
-        t1 = time.perf_counter()
-        exists = self.vexist.test(keys)                      # line 5 (existence check)
-        t2 = time.perf_counter()
-        # line 6-8: aux override for existing keys only.
-        exist_idx = np.flatnonzero(exists)
-        found, aux_codes = self.aux.get(keys[exist_idx])
-        pred[exist_idx[found]] = aux_codes[found]
-        t3 = time.perf_counter()
-        # line 13: decode.
-        wanted = columns if columns is not None else self.spec.tasks
-        values: Dict[str, np.ndarray] = {}
-        for i, t in enumerate(self.spec.tasks):
-            if t in wanted:
-                safe = np.where(exists, pred[:, i], 0)
-                values[t] = self.codecs[t].decode(safe)
-        t4 = time.perf_counter()
-
-        stats.infer_s, stats.exist_s = t1 - t0, t2 - t1
-        stats.aux_s, stats.decode_s = t3 - t2, t4 - t3
-        self.last_stats = stats
+        values, exists, stats = self._lookup_with_stats(keys, columns)
+        self.last_stats = LookupStats.from_explain(stats)
         return values, exists
 
     # ------------------------------------------------ modifications (Alg 3-5)
@@ -264,6 +356,10 @@ class DeepMappingStore:
         """Algorithm 3. Pairs the model already generalizes to are NOT
         stored; the rest land in T_aux."""
         keys = np.asarray(keys, dtype=np.int64)
+        if keys.size == 0:
+            return
+        if np.unique(keys).size != keys.size:
+            raise ValueError("duplicate keys in insert batch")
         if self.vexist.test(keys).any():
             raise ValueError("insert of existing key; use update()")
         codes = self._encode_rows(columns)
@@ -278,7 +374,8 @@ class DeepMappingStore:
 
     def delete(self, keys: np.ndarray) -> None:
         """Algorithm 4. Existence bit off; purge from T_aux if present."""
-        keys = np.asarray(keys, dtype=np.int64)
+        # unique: a key repeated in one batch deletes one row, not two
+        keys = np.unique(np.asarray(keys, dtype=np.int64))
         present = self.vexist.test(keys)
         keys = keys[present]
         if keys.size == 0:
@@ -295,6 +392,8 @@ class DeepMappingStore:
         """Algorithm 5. Correctly-predicted updates drop any aux entry;
         the rest are upserted into T_aux."""
         keys = np.asarray(keys, dtype=np.int64)
+        if keys.size == 0:
+            return
         if not self.vexist.test(keys).all():
             raise ValueError("update of non-existing key; use insert()")
         codes = self._encode_rows(columns)
@@ -309,19 +408,10 @@ class DeepMappingStore:
             self.aux.update(keys[wrong], codes[wrong])   # lines 7-11
         self.modified_bytes += int(keys.shape[0] * self._bytes_per_row)
 
-    def range_lookup(
-        self, lo: int, hi: int, columns: Optional[Tuple[str, ...]] = None
-    ) -> Tuple[np.ndarray, Dict[str, np.ndarray]]:
-        """Paper §IV-E, first approach: range-filter the existence index
-        to collect keys in [lo, hi), then answer them by batch inference
-        (Algorithm 1).  Exact (not the approximate view-based variant).
-
-        Returns (keys, values) for existing keys in the range.
-        """
-        keys = self.vexist.keys_in_range(lo, hi)
-        values, exists = self.lookup(keys, columns)
-        assert bool(exists.all())
-        return keys, values
+    def _range_keys(self, lo: int, hi: Optional[int]) -> np.ndarray:
+        """Existence-index range filter (§IV-E) — key source for the
+        protocol's ``range_lookup``/``scan`` and the plan executor."""
+        return self.vexist.keys_in_range(lo, hi)
 
     def should_retrain(self) -> bool:
         thr = self.config.retrain_after_modified_bytes
@@ -329,9 +419,7 @@ class DeepMappingStore:
 
     def materialize(self) -> Table:
         """Reconstruct the full logical table (used by retrain)."""
-        keys = self.vexist.keys_in_range()
-        values, exists = self.lookup(keys)
-        assert bool(exists.all())
+        keys, values = self.scan()
         return Table(keys=keys, columns=values)
 
     def retrain(self, verbose: bool = False) -> "DeepMappingStore":
@@ -340,6 +428,20 @@ class DeepMappingStore:
         return DeepMappingStore.build(
             self.materialize(), self.config, pool=self.aux.pool, verbose=verbose
         )
+
+    # ---------------------------------------------------------- persistence
+    def save(self, path: str) -> None:
+        """Protocol persistence — the ``core.serialize`` directory
+        format (atomic tmp+rename)."""
+        from repro.core import serialize  # local: serialize imports us
+
+        serialize.save_store(self, path)
+
+    @classmethod
+    def load(cls, path: str, pool: Optional[MemoryPool] = None) -> "DeepMappingStore":
+        from repro.core import serialize
+
+        return serialize.load_store(path, pool=pool)
 
     # ------------------------------------------------------------- accounting
     def size_breakdown(self) -> Dict[str, int]:

@@ -18,7 +18,6 @@ from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.mhas.search_space import SearchSpace
 

@@ -19,7 +19,7 @@ from __future__ import annotations
 
 import os
 import shutil
-from typing import Dict, Tuple
+from typing import Dict
 
 import msgpack
 import numpy as np
@@ -175,12 +175,7 @@ def load_store(path: str, pool: MemoryPool | None = None) -> DeepMappingStore:
     codecs: Dict[str, ValueCodec] = {}
     for col in meta["columns"]:
         dm = np.load(os.path.join(path, f"decode_{col}.npy"), allow_pickle=False)
-        codec = ValueCodec.__new__(ValueCodec)
-        codec.name = col
-        codec.decode_map = dm
-        codec._codes = np.zeros(0, dtype=np.int32)  # codes only needed at build
-        codec._encode = {v: i for i, v in enumerate(dm.tolist())}
-        codecs[col] = codec
+        codecs[col] = ValueCodec.from_decode_map(col, dm)
 
     # Reconstruct the KeyEncoder with the same width/base/residues.
     base = meta["encoder"]["base"]

@@ -13,7 +13,6 @@ from typing import Dict, Optional
 import numpy as np
 
 from repro.data.tokens import DeepMappingTokenStore
-from repro.models.config import ModelConfig
 
 
 @dataclasses.dataclass

@@ -20,7 +20,7 @@ Layout contract (enforced by ops.py):
 from __future__ import annotations
 
 import functools
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp

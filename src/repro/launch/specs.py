@@ -10,13 +10,12 @@ VLM cells prepend 576 stub patch embeddings.
 
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs import SHAPES, get_arch
-from repro.models.config import ModelConfig
 from repro.serve.serve_step import make_cache_factory
 from repro.train.optimizer import adamw
 from repro.train.train_step import init_state

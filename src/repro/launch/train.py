@@ -33,7 +33,6 @@ def main() -> None:
     args = ap.parse_args()
 
     import jax
-    import numpy as np
 
     from repro.configs import get_arch
     from repro.data.loader import LoaderConfig, TokenBatchLoader

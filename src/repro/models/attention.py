@@ -15,7 +15,6 @@ all-reduces automatically (flash-decoding-style combine).
 
 from __future__ import annotations
 
-import functools
 from typing import Dict, Optional, Tuple
 
 import jax

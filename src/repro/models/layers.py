@@ -8,8 +8,7 @@ dry-run's compile-time budget at 61-layer/512-device scale).
 
 from __future__ import annotations
 
-import functools
-from typing import Callable, Dict, Optional, Tuple
+from typing import Callable, Dict
 
 import jax
 import jax.numpy as jnp

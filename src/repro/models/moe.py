@@ -13,7 +13,7 @@ which is the standard TPU-efficient formulation.
 
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

@@ -18,8 +18,7 @@ and threaded through the scan as xs/ys.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

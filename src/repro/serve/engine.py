@@ -12,14 +12,13 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import TYPE_CHECKING, Dict, List, Optional, Tuple, Union
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.hybrid import DeepMappingStore
-
-if TYPE_CHECKING:  # avoid a serve -> cluster import at runtime
-    from repro.cluster.sharded_store import ShardedDeepMappingStore
+from repro.api.executor import execute_plan
+from repro.api.plan import QueryPlan
+from repro.api.protocol import MappingStore
 
 
 @dataclasses.dataclass
@@ -36,19 +35,19 @@ class ServeStats:
 
 
 class LookupServer:
-    """Merge-batch server over a single or sharded DeepMapping store.
+    """Merge-batch server over any :class:`~repro.api.protocol.MappingStore`
+    (single, sharded, or baseline).
 
-    The store only needs the ``lookup(keys, columns) -> (values,
-    exists)`` / ``last_stats`` surface, which both
-    :class:`~repro.core.hybrid.DeepMappingStore` and
-    :class:`~repro.cluster.sharded_store.ShardedDeepMappingStore`
-    provide; merged batches arrive at the store sorted, so the sharded
-    store's scatter sees at most one contiguous run per shard.
+    Merged batches execute as point query plans, so the server gets the
+    unified pipeline — projection pushdown, sharded thread-pool fan-out,
+    per-plan stats — for free; merged batches arrive at the store
+    sorted, so the sharded store's scatter sees at most one contiguous
+    run per shard.
     """
 
     def __init__(
         self,
-        store: Union[DeepMappingStore, "ShardedDeepMappingStore"],
+        store: MappingStore,
         max_batch: int = 65536,
     ):
         self.store = store
@@ -68,24 +67,43 @@ class LookupServer:
     ) -> List[Tuple[Dict[str, np.ndarray], np.ndarray]]:
         """Merge several key-batch requests into deduplicated device
         batches; scatter results back per request."""
+        if not requests:
+            return []  # np.concatenate rejects an empty list
         t0 = time.perf_counter()
         lens = [len(r) for r in requests]
         merged = np.concatenate([np.asarray(r, dtype=np.int64) for r in requests])
         uniq, inverse = np.unique(merged, return_inverse=True)  # sorted + dedup
 
-        vals_u: Dict[str, np.ndarray] = {}
+        chunks: Dict[str, List[np.ndarray]] = {}
         exists_u = np.zeros(uniq.shape[0], dtype=bool)
+        cols = tuple(columns) if columns is not None else None
+        if uniq.shape[0] == 0:
+            # All requests zero-length: run one empty plan anyway so
+            # callers still get typed empty columns (same contract as
+            # the stores' own zero-batch lookups).
+            res = execute_plan(
+                self.store, QueryPlan(kind="point", keys=uniq, columns=cols)
+            )
+            for c, arr in res.values.items():
+                chunks[c] = [arr]
         for start in range(0, uniq.shape[0], self.max_batch):
             chunk = uniq[start : start + self.max_batch]
-            v, e = self.store.lookup(chunk, columns)
-            exists_u[start : start + self.max_batch] = e
-            for c, arr in v.items():
-                if c not in vals_u:
-                    vals_u[c] = np.zeros(uniq.shape[0], dtype=arr.dtype)
-                vals_u[c][start : start + self.max_batch] = arr
+            # Plan built directly (not via Query) so unknown column
+            # names degrade to "ignored" like the legacy lookup did.
+            res = execute_plan(
+                self.store, QueryPlan(kind="point", keys=chunk, columns=cols)
+            )
+            exists_u[start : start + self.max_batch] = res.exists
+            for c, arr in res.values.items():
+                chunks.setdefault(c, []).append(arr)
             self.stats.batches += 1
-            self.stats.infer_s += self.store.last_stats.infer_s
-            self.stats.aux_s += self.store.last_stats.aux_s
+            self.stats.infer_s += res.explain.infer_s
+            self.stats.aux_s += res.explain.aux_s
+        # Concatenate per column (rather than filling a preallocated
+        # buffer) so chunks that disagree on dtype — e.g. a baseline
+        # store's int placeholder chunk before a string chunk —
+        # promote instead of crashing or truncating.
+        vals_u = {c: np.concatenate(parts) for c, parts in chunks.items()}
 
         out: List[Tuple[Dict[str, np.ndarray], np.ndarray]] = []
         off = 0

@@ -9,7 +9,7 @@ decode against a KV/recurrent cache of a given length — the unit the
 
 from __future__ import annotations
 
-from typing import Callable, Dict, Tuple
+from typing import Callable, Dict
 
 from repro.models import DecoderLM, EncDecLM
 from repro.models.config import ModelConfig

@@ -24,7 +24,6 @@ from __future__ import annotations
 
 from typing import Dict, Tuple
 
-import jax
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 

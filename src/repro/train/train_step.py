@@ -10,9 +10,8 @@ memory is bounded by one microbatch.
 
 from __future__ import annotations
 
-import dataclasses
 import functools
-from typing import Callable, Dict, NamedTuple, Optional, Tuple
+from typing import Callable, Dict, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp

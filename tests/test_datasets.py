@@ -1,7 +1,7 @@
 import numpy as np
 import pytest
 
-from repro.core.table import Table, pack_composite_key
+from repro.core.table import pack_composite_key
 from repro.data import (
     catalog_sales_like,
     cropland_like,

@@ -2,18 +2,12 @@
 ``repro.launch.dryrun``; here we test the pieces that feed it)."""
 
 import jax
-import numpy as np
 import pytest
 
 from repro.configs import SHAPES, get_arch, list_archs
 from repro.launch import specs as specs_lib
 from repro.launch.mesh import make_host_mesh, mesh_axes
-from repro.sharding.partition import (
-    batch_shardings,
-    cache_shardings,
-    param_shardings,
-    state_shardings,
-)
+from repro.sharding.partition import param_shardings, state_shardings
 from repro.train.optimizer import adamw
 
 
@@ -101,7 +95,6 @@ class TestShardingRules:
     def test_divisibility_fallback(self):
         """granite vocab 49155 is not divisible by 16 — rule must fall
         back rather than emit an invalid spec."""
-        import numpy as np
         from jax.sharding import PartitionSpec
 
         cfg = get_arch("granite-3-2b").config

@@ -4,7 +4,7 @@ import numpy as np
 import pytest
 
 from conftest import make_periodic_table, make_random_table
-from repro.core import DeepMappingConfig, DeepMappingStore, Table
+from repro.core import DeepMappingConfig, DeepMappingStore
 from repro.core.serialize import load_store, save_store
 from repro.core.trainer import TrainConfig
 

@@ -2,7 +2,6 @@
 ``repro.kernels.ref`` (interpret=True on CPU), plus hypothesis property
 tests on the packing/padding invariants."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -12,7 +11,6 @@ from hypothesis import given, settings
 from hypothesis import strategies as st
 
 from repro.core.bitvector import BitVector
-from repro.core.encoding import KeyEncoder
 from repro.core.model import MLPSpec, init_params
 from repro.kernels import bitvector_test, fused_mlp_codes, fused_mlp_logits
 from repro.kernels.ops import check_vmem_budget

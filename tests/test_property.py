@@ -7,7 +7,6 @@ pytest.importorskip("hypothesis")
 from hypothesis import HealthCheck, given, settings
 from hypothesis import strategies as st
 
-from repro.core import Table
 from repro.core.aux_table import AuxTable
 from repro.core.bitvector import BitVector
 from repro.core.encoding import KeyEncoder, ValueCodec

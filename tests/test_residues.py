@@ -4,7 +4,7 @@ hybrid-store integration (EXPERIMENTS.md §Perf, technique dimension)."""
 import numpy as np
 import pytest
 
-from repro.core import DeepMappingConfig, DeepMappingStore, Table
+from repro.core import DeepMappingConfig, DeepMappingStore
 from repro.core.encoding import KeyEncoder, detect_column_period, detect_residues
 from repro.core.trainer import TrainConfig
 from repro.data import customer_demographics_like

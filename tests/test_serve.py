@@ -57,6 +57,22 @@ class TestLookupServer:
         vals, _ = srv.lookup(table.keys[:5], columns=("col1",))
         assert set(vals) == {"col1"}
 
+    def test_empty_request_list(self, server):
+        """Regression: lookup_many([]) crashed in np.concatenate."""
+        _, srv = server
+        assert srv.lookup_many([]) == []
+
+    def test_zero_length_requests(self, server):
+        _, srv = server
+        out = srv.lookup_many([np.zeros(0, dtype=np.int64)] * 3)
+        assert len(out) == 3
+        for vals, exists in out:
+            assert exists.shape == (0,)
+            # typed empty columns, same contract as the store itself
+            assert set(vals) == set(srv.store.columns)
+            for arr in vals.values():
+                assert arr.shape == (0,)
+
     def test_stats_accumulate(self, server):
         table, srv = server
         srv.stats.requests = 0

@@ -1,0 +1,382 @@
+"""Shared MappingStore conformance suite (ISSUE 2 satellite).
+
+One parametrized battery run against all four store implementations —
+DeepMappingStore, ShardedDeepMappingStore, ArrayStore, HashStore —
+checking the contract documented in ``repro.api.protocol``:
+
+* plan-based queries (point/range/scan) byte-identical to the legacy
+  direct methods, including after interleaved insert/delete/update;
+* projection pushdown equivalence (selected columns unchanged) plus
+  ExplainStats evidence that unselected columns skip decode and — for
+  model-backed stores — private-head compute;
+* zero-length batches through every mutation/lookup path;
+* save/load round-trip through ``store.save`` + ``repro.open``.
+"""
+
+import numpy as np
+import pytest
+
+import repro
+from repro.api import CONFORMANCE_METHODS, MappingStore
+from repro.baselines import ArrayStore, HashStore
+from repro.cluster import ClusterConfig, ShardedDeepMappingStore
+from repro.core import DeepMappingConfig, DeepMappingStore, Table
+from repro.core.trainer import TrainConfig
+
+STORE_KINDS = ("deepmapping", "sharded", "array", "hash")
+
+FAST = DeepMappingConfig(
+    shared=(48,), private=(8,), train=TrainConfig(epochs=10, batch_size=512)
+)
+# Mutation tests don't need model accuracy (T_aux corrects everything).
+TINY = DeepMappingConfig(
+    shared=(16,), private=(4,), train=TrainConfig(epochs=2, batch_size=512)
+)
+
+
+def make_table(n=1200, stride=3):
+    keys = np.arange(0, n * stride, stride, dtype=np.int64)
+    return Table(
+        keys=keys,
+        columns={
+            "a": ((keys // 16) % 5).astype(np.int32),
+            "b": ((keys // 32) % 3).astype(np.int32),
+            "c": ((keys // 8) % 7).astype(np.int32),
+        },
+    )
+
+
+def build_store(kind, table, config=FAST):
+    if kind == "deepmapping":
+        return DeepMappingStore.build(table, config)
+    if kind == "sharded":
+        return ShardedDeepMappingStore.build(
+            table, config, ClusterConfig(num_shards=3, policy="range")
+        )
+    if kind == "array":
+        return ArrayStore.build(table, codec="zstd", partition_bytes=4096)
+    if kind == "hash":
+        return HashStore.build(table, codec="none", partition_bytes=2048)
+    raise ValueError(kind)
+
+
+@pytest.fixture(scope="module")
+def table():
+    return make_table()
+
+
+@pytest.fixture(scope="module", params=STORE_KINDS)
+def ro_store(request, table):
+    """One read-only store per kind, built once per module."""
+    return request.param, build_store(request.param, table)
+
+
+def query_keys(table, rng=None):
+    rng = rng or np.random.default_rng(0)
+    present = rng.choice(table.keys, size=200)
+    missing = np.array([1, table.max_key + 5, table.max_key + 100], dtype=np.int64)
+    return np.concatenate([present, missing])
+
+
+def assert_same_result(legacy, plan_res, legacy_exists=None):
+    """Byte-identical values/exists between legacy and plan paths."""
+    values = plan_res.values
+    assert set(legacy) == set(values)
+    for c in legacy:
+        np.testing.assert_array_equal(legacy[c], values[c])
+        assert legacy[c].dtype == values[c].dtype
+        assert legacy[c].tobytes() == values[c].tobytes()
+    if legacy_exists is not None:
+        np.testing.assert_array_equal(legacy_exists, plan_res.exists)
+
+
+class TestConformanceSurface:
+    def test_is_mapping_store(self, ro_store):
+        _, store = ro_store
+        assert isinstance(store, MappingStore)
+        for name in CONFORMANCE_METHODS:
+            assert callable(getattr(store, name)), name
+
+    def test_columns_property(self, ro_store, table):
+        _, store = ro_store
+        assert set(store.columns) == set(table.columns)
+
+    def test_size_breakdown_sums(self, ro_store):
+        _, store = ro_store
+        bd = store.size_breakdown()
+        assert bd and all(v >= 0 for v in bd.values())
+        assert store.size_bytes() == sum(bd.values())
+
+
+class TestPlanEquivalence:
+    def test_point_query_matches_legacy(self, ro_store, table):
+        _, store = ro_store
+        q = query_keys(table)
+        legacy_v, legacy_e = store.lookup(q)
+        res = store.query().where_keys(q).execute()
+        assert_same_result(legacy_v, res, legacy_e)
+        assert res.explain.kind == "point"
+        assert res.explain.num_keys == q.shape[0]
+
+    def test_point_query_matches_table(self, ro_store, table):
+        _, store = ro_store
+        q = table.keys[::7]
+        res = store.query().where_keys(q).execute()
+        assert res.exists.all()
+        for c in table.columns:
+            np.testing.assert_array_equal(
+                res.values[c], table.columns[c][::7]
+            )
+
+    def test_range_query_matches_legacy(self, ro_store, table):
+        _, store = ro_store
+        lo, hi = int(table.keys[100]), int(table.keys[400])
+        keys_l, vals_l = store.range_lookup(lo, hi)
+        res = store.query().where_range(lo, hi).execute()
+        np.testing.assert_array_equal(keys_l, res.keys)
+        assert_same_result(vals_l, res)
+        assert res.exists.all()
+        # and both match the source table
+        expect = table.keys[(table.keys >= lo) & (table.keys < hi)]
+        np.testing.assert_array_equal(res.keys, expect)
+
+    def test_scan_matches_legacy_and_table(self, ro_store, table):
+        _, store = ro_store
+        keys_l, vals_l = store.scan()
+        res = store.query().scan().execute()
+        np.testing.assert_array_equal(keys_l, res.keys)
+        assert_same_result(vals_l, res)
+        srt = table.sorted_by_key()
+        np.testing.assert_array_equal(res.keys, srt.keys)
+        for c in srt.columns:
+            np.testing.assert_array_equal(res.values[c], srt.columns[c])
+
+    def test_fanout_off_identical(self, ro_store, table):
+        _, store = ro_store
+        q = query_keys(table)
+        res_on = store.query().where_keys(q).execute()
+        res_off = store.query().where_keys(q).fanout(False).execute()
+        assert_same_result(res_on.values, res_off, res_on.exists)
+        assert not res_off.explain.async_fanout
+
+
+class TestProjectionPushdown:
+    def test_selected_columns_unchanged(self, ro_store, table):
+        """2-of-N projection: selected column bytes identical to the
+        full-column lookup; ExplainStats shows the third column skipped
+        decode (and, for model-backed stores, head compute)."""
+        kind, store = ro_store
+        q = query_keys(table)
+        full_v, full_e = store.lookup(q)
+        res = store.query().select("a", "c").where_keys(q).execute()
+        assert set(res.values) == {"a", "c"}
+        for c in ("a", "c"):
+            assert full_v[c].tobytes() == res.values[c].tobytes()
+        np.testing.assert_array_equal(full_e, res.exists)
+        assert "b" in res.explain.columns_skipped
+        assert "b" not in res.explain.columns_decoded
+        if kind in ("deepmapping", "sharded"):
+            # the unselected private head was never evaluated
+            assert res.explain.heads_skipped == ("b",)
+            assert set(res.explain.heads_evaluated) == {"a", "c"}
+
+    def test_select_validates_columns(self, ro_store):
+        _, store = ro_store
+        with pytest.raises(ValueError, match="unknown column"):
+            store.query().select("nope").scan().execute()
+
+    def test_single_source_enforced(self, ro_store):
+        _, store = ro_store
+        with pytest.raises(ValueError, match="key source"):
+            store.query().where_keys([1]).scan()
+        with pytest.raises(ValueError, match="no key source"):
+            store.query().execute()
+
+
+class TestZeroLengthBatches:
+    def test_lookup_empty(self, ro_store):
+        _, store = ro_store
+        empty = np.zeros(0, dtype=np.int64)
+        values, exists = store.lookup(empty)
+        assert exists.shape == (0,)
+        for arr in values.values():
+            assert arr.shape == (0,)
+
+    def test_query_empty(self, ro_store):
+        _, store = ro_store
+        res = store.query().where_keys([]).execute()
+        assert res.exists.shape == (0,)
+        assert res.explain.num_keys == 0
+
+    def test_empty_range(self, ro_store):
+        _, store = ro_store
+        keys, values = store.range_lookup(5, 5)
+        assert keys.shape == (0,)
+
+    def test_mutations_empty(self, table):
+        # Mutating: build tiny fresh stores so ro_store stays pristine.
+        empty = np.zeros(0, dtype=np.int64)
+        no_cols = {c: np.zeros(0, dtype=np.int32) for c in table.columns}
+        for kind in STORE_KINDS:
+            store = build_store(kind, make_table(n=200), config=TINY)
+            before = store.num_rows
+            store.insert(empty, no_cols)
+            store.delete(empty)
+            store.update(empty, no_cols)
+            assert store.num_rows == before, kind
+
+
+class TestMutationValidation:
+    @pytest.mark.parametrize("kind", STORE_KINDS)
+    def test_duplicate_insert_batch_rejected(self, kind):
+        store = build_store(kind, make_table(n=200), config=TINY)
+        before = store.num_rows
+        dup = np.array([10**5, 10**5], dtype=np.int64)
+        cols = {c: np.zeros(2, dtype=np.int32) for c in store.columns}
+        with pytest.raises(ValueError, match="duplicate"):
+            store.insert(dup, cols)
+        assert store.num_rows == before
+        _, exists = store.lookup(dup[:1])
+        assert not exists[0]
+
+    @pytest.mark.parametrize("kind", STORE_KINDS)
+    def test_duplicate_delete_batch_counts_once(self, kind):
+        table = make_table(n=200)
+        store = build_store(kind, table, config=TINY)
+        victim = np.array([table.keys[3], table.keys[3]], dtype=np.int64)
+        store.delete(victim)
+        assert store.num_rows == table.num_rows - 1
+        assert store.scan()[0].shape[0] == store.num_rows
+
+    @pytest.mark.parametrize("kind", ("array", "hash"))
+    def test_malformed_columns_leave_store_unchanged(self, kind):
+        """A columns dict missing a column must not half-apply the
+        batch (or resurrect a deleted base row)."""
+        table = make_table(n=200)
+        store = build_store(kind, table, config=TINY)
+        victim = table.keys[:1]
+        store.delete(victim)
+        bad = {"a": np.zeros(1, dtype=np.int32)}  # missing b, c
+        with pytest.raises(KeyError):
+            store.insert(victim, bad)
+        _, exists = store.lookup(victim)
+        assert not exists[0]  # tombstone survived the failed insert
+        assert store.num_rows == table.num_rows - 1
+
+
+class TestInterleavedModifications:
+    @pytest.fixture(scope="class", params=STORE_KINDS)
+    def mutated(self, request):
+        """Fresh store per kind + the same interleaved mod sequence."""
+        kind = request.param
+        table = make_table(n=400, stride=3)
+        store = build_store(kind, table, config=TINY)
+        cols = lambda n, off: {  # noqa: E731
+            "a": (np.arange(n, dtype=np.int32) % 5) + off,
+            "b": (np.arange(n, dtype=np.int32) % 3) + off,
+            "c": (np.arange(n, dtype=np.int32) % 7) + off,
+        }
+        new_keys = np.asarray([2, 5, 10**6, 10**6 + 4], dtype=np.int64)
+        store.insert(new_keys, cols(4, 10))
+        store.update(table.keys[10:20], cols(10, 20))
+        store.delete(table.keys[30:40])
+        store.delete(new_keys[:1])
+        store.update(new_keys[3:4], cols(1, 30))
+        return kind, table, store, new_keys
+
+    def test_point_after_mods_matches_legacy(self, mutated):
+        kind, table, store, new_keys = mutated
+        q = np.concatenate([table.keys, new_keys])
+        legacy_v, legacy_e = store.lookup(q)
+        res = store.query().where_keys(q).execute()
+        assert_same_result(legacy_v, res, legacy_e)
+        # semantic spot checks
+        idx = {int(k): i for i, k in enumerate(q)}
+        assert not res.exists[idx[int(table.keys[35])]]       # deleted
+        assert not res.exists[idx[2]]                          # insert+delete
+        assert res.exists[idx[10**6 + 4]]                      # insert+update
+        assert int(res.values["a"][idx[10**6 + 4]]) == 30
+
+    def test_range_after_mods_matches_legacy(self, mutated):
+        kind, table, store, _ = mutated
+        lo, hi = 0, int(table.max_key) + 10
+        keys_l, vals_l = store.range_lookup(lo, hi)
+        res = store.query().where_range(lo, hi).execute()
+        np.testing.assert_array_equal(keys_l, res.keys)
+        assert_same_result(vals_l, res)
+        assert int(table.keys[35]) not in set(res.keys.tolist())
+
+    def test_scan_after_mods_counts(self, mutated):
+        kind, table, store, _ = mutated
+        keys, values = store.scan()
+        # 400 rows + 4 inserted - 10 deleted - 1 insert-then-deleted
+        assert keys.shape[0] == table.num_rows + 4 - 10 - 1
+        assert keys.shape[0] == store.num_rows
+        assert np.all(np.diff(keys) > 0)  # ascending, unique
+
+    def test_save_load_after_mods(self, mutated, tmp_path):
+        kind, table, store, new_keys = mutated
+        path = str(tmp_path / "mutated")
+        store.save(path)
+        restored = repro.open(path)
+        assert type(restored) is type(store)
+        q = np.concatenate([table.keys, new_keys])
+        v1, e1 = store.lookup(q)
+        v2, e2 = restored.lookup(q)
+        np.testing.assert_array_equal(e1, e2)
+        for c in v1:
+            np.testing.assert_array_equal(v1[c][e1], v2[c][e2])
+
+
+class TestSaveLoadRoundTrip:
+    def test_roundtrip_via_open(self, ro_store, table, tmp_path):
+        kind, store = ro_store
+        path = str(tmp_path / f"{kind}-store")
+        store.save(path)
+        restored = repro.open(path)
+        assert type(restored) is type(store)
+        q = query_keys(table)
+        res1 = store.query().where_keys(q).execute()
+        res2 = restored.query().where_keys(q).execute()
+        np.testing.assert_array_equal(res1.exists, res2.exists)
+        for c in res1.values:
+            np.testing.assert_array_equal(res1.values[c], res2.values[c])
+        assert restored.num_rows == store.num_rows
+
+
+class TestEntrypoints:
+    def test_build_single_vs_sharded(self):
+        table = make_table(n=200)
+        single = repro.build(table, TINY)
+        assert isinstance(single, DeepMappingStore)
+        sharded = repro.build(table, TINY, cluster=ClusterConfig(num_shards=2))
+        assert isinstance(sharded, ShardedDeepMappingStore)
+        q = table.keys[:50]
+        v1, e1 = single.lookup(q)
+        v2, e2 = sharded.lookup(q)
+        np.testing.assert_array_equal(e1, e2)
+        for c in v1:
+            np.testing.assert_array_equal(v1[c][e1], v2[c][e2])
+
+    def test_open_rejects_garbage(self, tmp_path):
+        with pytest.raises(FileNotFoundError):
+            repro.open(str(tmp_path / "nope"))
+        bad = tmp_path / "bad"
+        bad.mkdir()
+        with pytest.raises(ValueError):
+            repro.open(str(bad))
+
+
+class TestExplainStats:
+    def test_sharded_fanout_evidence(self, table):
+        store = build_store("sharded", table, config=TINY)
+        res = store.query().where_keys(table.keys[::5]).execute()
+        assert res.explain.shards_visited > 1
+        assert res.explain.async_fanout
+        assert any(s.startswith("scatter[") for s in res.explain.plan)
+
+    def test_timings_populated(self, ro_store, table):
+        _, store = ro_store
+        res = store.query().where_keys(table.keys[:64]).execute()
+        assert res.explain.total_s > 0
+        assert res.explain.num_rows == 64
