@@ -5,13 +5,25 @@ DeepMapping vs AB/ABC-*/HB/HBC-* under a bounded memory pool.
 pool holds ~5% of the raw data, so baselines pay partition reload +
 decompress on nearly every batch while the DeepMapping model stays
 resident.  ``--pool large`` is the fits-in-memory regime (Table II).
+
+``run_pipeline`` (ISSUE 3) benchmarks the engine hot path against the
+seed's staged composition on a synthetic 1M-row workload: fixed-size
+batches isolate the cached-weights + infer/aux-overlap win; a
+50-distinct-batch-size serving sweep additionally exposes the seed's
+compile-per-batch-size cost vs the engine's O(log N) buckets.  Results
+land in ``BENCH_lookup.json`` at the repo root (see benchmarks/run.py).
 """
 
 from __future__ import annotations
 
 import argparse
+import hashlib
+import json
+import os
+import time
 from typing import Dict, List
 
+import numpy as np
 
 from benchmarks import common as C
 from repro.storage import MemoryPool
@@ -55,12 +67,204 @@ def run(datasets=None, batches=(1000, 10_000, 100_000), pool_mode="small",
     return rows
 
 
+# --------------------------------------------------------------------------
+# ISSUE 3: staged vs pipelined lookup hot path
+# --------------------------------------------------------------------------
+def staged_lookup(store, keys: np.ndarray, shapes_seen: set):
+    """The seed repo's hot path, recomposed from primitives: host digit
+    featurization, per-call jit on the exact chunk shape (or per-call
+    weight re-pad on the Pallas path), serial host existence test, then
+    aux merge + decode — no weight cache, no bucketing, no overlap.
+    ``shapes_seen`` collects distinct device batch shapes (each one was
+    a fresh XLA compile for the seed)."""
+    import jax.numpy as jnp
+
+    from repro.core import trainer as trainer_lib
+
+    keys = np.asarray(keys, dtype=np.int64)
+    spec = store.spec
+    pred = np.zeros((keys.shape[0], len(spec.tasks)), dtype=np.int32)
+    in_cap = (keys >= 0) & (keys < store.encoder.capacity)
+    idx = np.flatnonzero(in_cap)
+    bs = store.config.inference_batch
+    for start in range(0, idx.size, bs):
+        sel = idx[start : start + bs]
+        digits = store.encoder.digits(keys[sel])
+        shapes_seen.add(digits.shape)
+        if store.config.use_pallas:
+            from repro.kernels import fused_mlp_codes
+
+            pred[sel] = np.asarray(
+                fused_mlp_codes(store.params, spec, jnp.asarray(digits))
+            )
+        else:
+            pred[sel] = np.asarray(
+                trainer_lib.predict_codes_jit(store.params, jnp.asarray(digits), spec)
+            )
+    exists = store.vexist.test(keys)
+    exist_idx = np.flatnonzero(exists)
+    found, aux_codes = store.aux.get(keys[exist_idx])
+    pred[exist_idx[found]] = aux_codes[found]
+    values = {
+        t: store.codecs[t].decode(np.where(exists, pred[:, i], 0))
+        for i, t in enumerate(spec.tasks)
+    }
+    return values, exists
+
+
+def _pipeline_store(n: int, use_pallas: bool):
+    """Build (or load cached) the synthetic n-row store for the
+    pipeline benchmark — periodic columns, tiny trunk, few epochs:
+    model quality is irrelevant here, only the serving path is timed."""
+    from repro.core import DeepMappingConfig, DeepMappingStore
+    from repro.core.serialize import load_store, save_store
+    from repro.core.trainer import TrainConfig
+    from repro.data import synthetic_multi_column
+
+    cfg = DeepMappingConfig(
+        shared=(64,), private=(),
+        train=TrainConfig(epochs=3, batch_size=16384),
+        use_pallas=use_pallas,
+    )
+    key = hashlib.sha1(
+        f"pipeline|{n}|{use_pallas}|ib{cfg.inference_batch}".encode()
+    ).hexdigest()[:12]
+    path = os.path.join(C.CACHE_DIR, f"lookup_pipeline_{key}")
+    if os.path.isdir(path):
+        return load_store(path)
+    table = synthetic_multi_column(n=n, correlation="high", cardinalities=(5, 3))
+    store = DeepMappingStore.build(table, cfg)
+    os.makedirs(C.CACHE_DIR, exist_ok=True)
+    save_store(store, path)
+    return load_store(path)
+
+
+def _timed(fn, batches) -> Dict:
+    """Run ``fn`` once per batch; return p50/p99 latency + QPS."""
+    lat = []
+    total_keys = 0
+    t0 = time.perf_counter()
+    for b in batches:
+        t1 = time.perf_counter()
+        fn(b)
+        lat.append(time.perf_counter() - t1)
+        total_keys += len(b)
+    wall = time.perf_counter() - t0
+    return {
+        "p50_s": float(np.percentile(lat, 50)),
+        "p99_s": float(np.percentile(lat, 99)),
+        "qps": total_keys / wall,
+        "keys": total_keys,
+        "wall_s": wall,
+    }
+
+
+def run_pipeline(
+    n: int = 1_000_000,
+    fixed_batch: int = 1 << 16,
+    fixed_repeats: int = 8,
+    sweep_sizes: int = 50,
+    use_pallas: bool = False,
+    seed: int = 0,
+) -> Dict:
+    """Staged (seed path) vs pipelined (engine) on the same store.
+
+    Two workloads: ``fixed`` replays one batch size (the win there is
+    cached weights + key-path featurization + infer/aux overlap);
+    ``mixed`` serves ``sweep_sizes`` DISTINCT batch sizes (additionally
+    exposing the seed's compile-per-size cost vs bucketing).
+    """
+    import jax
+
+    store = _pipeline_store(n, use_pallas)
+    rng = np.random.default_rng(seed)
+    all_keys = store.vexist.keys_in_range(0, None)
+
+    def sample(size):
+        return rng.choice(all_keys, size=size, replace=True)
+
+    fixed_batches = [sample(fixed_batch) for _ in range(fixed_repeats)]
+    sizes = np.unique(
+        np.exp(rng.uniform(np.log(256), np.log(16384), size=sweep_sizes * 2))
+        .astype(int)
+    )[:sweep_sizes]
+    mixed_batches = [sample(int(s)) for s in sizes]
+
+    results: Dict = {
+        "rows": int(n),
+        "backend": jax.default_backend(),
+        "use_pallas": bool(use_pallas),
+        "engine_path": None,
+        "staged": {}, "pipelined": {},
+    }
+
+    # --- staged (seed composition) ---
+    for name, batches in (("fixed", fixed_batches), ("mixed", mixed_batches)):
+        shapes: set = set()
+        r = _timed(lambda b: staged_lookup(store, b, shapes), batches)
+        r["compiles"] = len(shapes)
+        results["staged"][name] = r
+        C.emit(f"lookup/pipeline/staged/{name}", r["p50_s"] * 1e6,
+               f"qps={r['qps']:.0f} compiles={r['compiles']}")
+
+    # --- pipelined (engine) ---
+    for name, batches in (("fixed", fixed_batches), ("mixed", mixed_batches)):
+        eng = store.engine
+        base_compiles = eng.stats.compiles
+        r = _timed(lambda b: store.lookup(b), batches)
+        r["compiles"] = eng.stats.compiles  # cumulative distinct signatures
+        r["new_compiles"] = eng.stats.compiles - base_compiles
+        results["pipelined"][name] = r
+        C.emit(f"lookup/pipeline/pipelined/{name}", r["p50_s"] * 1e6,
+               f"qps={r['qps']:.0f} compiles={r['compiles']}")
+
+    t = store.engine.dispatch(all_keys[:8], want_exists=True)
+    store.engine.collect(t)
+    results["engine_path"] = t.path
+    results["speedup_fixed"] = (
+        results["pipelined"]["fixed"]["qps"] / results["staged"]["fixed"]["qps"]
+    )
+    results["speedup_mixed"] = (
+        results["pipelined"]["mixed"]["qps"] / results["staged"]["mixed"]["qps"]
+    )
+    results["compile_sweep"] = {
+        "distinct_batch_sizes": int(len(mixed_batches)),
+        "staged_compiles": results["staged"]["mixed"]["compiles"],
+        # apples-to-apples with staged_compiles: programs compiled BY
+        # the sweep itself (buckets warmed by the fixed workload are
+        # the cache working as designed, but excluded here)
+        "engine_compiles": results["pipelined"]["mixed"]["new_compiles"],
+        "engine_compiles_total": results["pipelined"]["mixed"]["compiles"],
+    }
+    C.emit(
+        "lookup/pipeline/summary", 0.0,
+        f"speedup_fixed={results['speedup_fixed']:.2f}x "
+        f"speedup_mixed={results['speedup_mixed']:.2f}x "
+        f"engine_compiles={results['compile_sweep']['engine_compiles']}"
+        f"/{results['compile_sweep']['engine_compiles_total']}",
+    )
+    return results
+
+
+def write_pipeline_json(results: Dict, path: str = "BENCH_lookup.json") -> None:
+    """Machine-readable perf record (CI uploads it as an artifact)."""
+    with open(path, "w") as f:
+        json.dump(results, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--pool", default="small", choices=["small", "large"])
     ap.add_argument("--datasets", nargs="*", default=None)
     ap.add_argument("--batches", nargs="*", type=int, default=[1000, 10_000])
+    ap.add_argument("--pipeline", action="store_true",
+                    help="run the staged-vs-pipelined hot-path comparison")
+    ap.add_argument("--pipeline-rows", type=int, default=1_000_000)
     args = ap.parse_args()
+    if args.pipeline:
+        write_pipeline_json(run_pipeline(n=args.pipeline_rows))
+        return
     run(datasets=args.datasets, batches=tuple(args.batches), pool_mode=args.pool)
 
 

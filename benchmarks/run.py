@@ -15,6 +15,10 @@ Sections:
   shards  — sharded cluster scaling: build / lookup QPS / dirty-shard retrain
   query   — plan executor vs legacy lookup (point/range/scan, projection
             pushdown, sharded sync vs async fan-out)
+  lookup_pipeline — staged (seed path) vs pipelined (inference engine)
+            hot-path comparison; writes BENCH_lookup.json at the repo
+            root (p50/p99 latency, QPS, compile counts) — the CI
+            smoke-bench job uploads it as the perf-trajectory artifact
   tokens  — beyond-paper: DeepMapping-compressed LM data pipeline
   roofline — assignment §Roofline terms from the dry-run records
 """
@@ -29,12 +33,14 @@ import traceback
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized lookup_pipeline run (fewer rows/batches)")
     ap.add_argument("--sections", nargs="*", default=None)
     args = ap.parse_args()
 
     from benchmarks import bench_beyond, bench_breakdown, bench_lookup
     from benchmarks import bench_mhas, bench_modify, bench_query, bench_shards
-    from benchmarks import bench_tokens, roofline
+    from benchmarks import roofline
     from benchmarks import common as C
 
     datasets = list(C.DATASETS) if args.full else list(C.FAST_DATASETS)
@@ -59,7 +65,20 @@ def main() -> None:
             batches=batches,
             num_shards=8 if args.full else 4,
         ),
-        "tokens": lambda: bench_tokens.run(),
+        # scaled down by default like every section; the acceptance-
+        # grade 1M-row record needs --full (CI smoke uses --smoke)
+        "lookup_pipeline": lambda: bench_lookup.write_pipeline_json(
+            bench_lookup.run_pipeline(
+                n=1_000_000 if args.full else 150_000,
+                fixed_repeats=4 if (args.smoke or not args.full) else 8,
+                sweep_sizes=50,
+            )
+        ),
+        # lazy: bench_tokens hard-imports zstandard (optional elsewhere);
+        # a host without it should still run every other section
+        "tokens": lambda: __import__(
+            "benchmarks.bench_tokens", fromlist=["run"]
+        ).run(),
         "beyond": lambda: bench_beyond.run(),
         "roofline": lambda: roofline.run(),
     }

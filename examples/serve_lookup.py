@@ -61,7 +61,9 @@ def main() -> None:
     print(f"\nserved {len(requests)} requests, {total:,} keys, {hits:,} hits")
     s = server.stats
     print(f"throughput: {s.qps():,.0f} keys/s "
-          f"(infer {s.infer_s:.3f}s, aux {s.aux_s:.3f}s, batches {s.batches})")
+          f"(infer {s.infer_s:.3f}s, exist {s.exist_s:.3f}s, "
+          f"aux {s.aux_s:.3f}s, decode {s.decode_s:.3f}s, "
+          f"batches {s.batches})")
 
     # the same traffic, expressed as one explicit plan
     res = (

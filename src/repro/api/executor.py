@@ -41,11 +41,14 @@ def execute_plan(store, plan: QueryPlan) -> QueryResult:
         keys = store._all_keys()
         route_s = time.perf_counter() - t0
 
-    # Stages 2-5: scatter / inference / aux merge / decode (store hook).
+    # Stages 2-5: scatter / inference / aux merge / decode (store hooks).
+    # dispatch/collect pair: device work is enqueued before the host
+    # half starts, so model-backed stores overlap inference of later
+    # chunks with aux-merge + decode of earlier ones (and callers that
+    # interleave several plans get cross-plan overlap for free).
     fanout = True if plan.fanout is None else plan.fanout
-    values, exists, stats = store._lookup_with_stats(
-        keys, plan.columns, fanout=fanout
-    )
+    handle = store._dispatch_lookup(keys, plan.columns, fanout=fanout)
+    values, exists, stats = store._collect_lookup(handle)
 
     stats.kind = plan.kind
     stats.plan = (plan.source_stage(),) + stats.plan

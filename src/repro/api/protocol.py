@@ -134,6 +134,24 @@ class MappingStore(abc.ABC):
 
         return Query(self)
 
+    # ------------------------------------------- async lookup pipeline hooks
+    def _dispatch_lookup(self, keys, columns=None, fanout=None):
+        """Begin an async lookup; :meth:`_collect_lookup` finishes it.
+
+        Model-backed stores override the pair so device inference for
+        one batch overlaps host aux-merge/decode of another (the
+        executor and serving engine dispatch batch *i+1* before
+        collecting batch *i*).  The default defers everything to
+        collect time — baseline stores have no device stage to
+        overlap, so dispatch/collect degenerates to a plain call."""
+        return (keys, columns, fanout)
+
+    def _collect_lookup(self, handle):
+        """Finish a lookup begun by :meth:`_dispatch_lookup` ->
+        ``(values, exists, ExplainStats)``."""
+        keys, columns, fanout = handle
+        return self._lookup_with_stats(keys, columns, fanout=fanout)
+
     # ------------------------------------------------- executor stats hook
     def _lookup_with_stats(
         self,

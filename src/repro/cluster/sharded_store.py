@@ -47,11 +47,26 @@ from repro.api.protocol import MappingStore
 from repro.cluster.partitioner import Partitioner, make_partitioner
 from repro.cluster.router import ShardRouter
 from repro.core.hybrid import DeepMappingConfig, DeepMappingStore, LookupStats
+from repro.core.inference import EngineCache
 from repro.core.serialize import load_store, save_store
 from repro.core.table import Table
 from repro.storage import MemoryPool
 
 MANIFEST_VERSION = 1
+
+
+@dataclasses.dataclass
+class _PendingShardedLookup:
+    """Scattered lookup in flight: every shard's device inference is
+    already enqueued (serial dispatch is cheap); collection gathers
+    per-shard host halves, in parallel under fan-out."""
+
+    keys: np.ndarray
+    batches: list
+    handles: list          # parallel to batches
+    route_s: float
+    use_fanout: bool
+    columns: Optional[Tuple[str, ...]]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -94,6 +109,13 @@ class ShardedDeepMappingStore(MappingStore):
         self.last_stats = LookupStats()  # deprecated; see LookupStats docs
         self._fanout_pool: Optional[ThreadPoolExecutor] = None
         self._fanout_lock = threading.Lock()
+        # One engine cache for the fleet: shard engines share a single
+        # EngineStats, so identical (architecture, bucket) signatures
+        # count as ONE compile cluster-wide and operators read one
+        # counter set.  Shards warm from build keep their weight caches.
+        self.engines = EngineCache()
+        for s in shards:
+            self.engines.adopt(s)
 
     # ------------------------------------------------------------------ build
     @classmethod
@@ -166,40 +188,55 @@ class ShardedDeepMappingStore(MappingStore):
                     )
         return self._fanout_pool
 
-    def _lookup_with_stats(
+    def _dispatch_lookup(
         self,
         keys: np.ndarray,
         columns: Optional[Tuple[str, ...]] = None,
         fanout: Optional[bool] = None,
-    ) -> Tuple[Dict[str, np.ndarray], np.ndarray, ExplainStats]:
-        """Algorithm 1, scattered: route each key to its shard, answer
-        per-shard batches (in parallel when ``fanout``), gather results
-        back in request order."""
+    ) -> _PendingShardedLookup:
+        """Scatter the batch and enqueue every shard's device inference
+        (cheap serial dispatch — the device work itself overlaps);
+        ``_collect_lookup`` gathers the host halves."""
         keys = np.asarray(keys, dtype=np.int64)
         t0 = time.perf_counter()
         batches = self.router.scatter(keys)
         route_s = time.perf_counter() - t0
+        use_fanout = bool(fanout) and len(batches) > 1
+        handles = [
+            self.shards[b.shard_id]._dispatch_lookup(b.keys, columns)
+            for b in batches
+        ]
+        return _PendingShardedLookup(
+            keys=keys, batches=batches, handles=handles, route_s=route_s,
+            use_fanout=use_fanout, columns=columns,
+        )
+
+    def _collect_lookup(
+        self, pending: _PendingShardedLookup
+    ) -> Tuple[Dict[str, np.ndarray], np.ndarray, ExplainStats]:
+        keys, batches = pending.keys, pending.batches
+        route_s, use_fanout = pending.route_s, pending.use_fanout
         if not batches:
             # Zero-length request: delegate to one shard for typed
             # empty columns + per-head stats (no scatter, no inference).
             values, exists, stats = self.shards[0]._lookup_with_stats(
-                keys[:0], columns
+                keys[:0], pending.columns
             )
             stats.plan = ("scatter[0]",) + stats.plan
             stats.route_s += route_s
             return values, np.zeros(keys.shape[0], dtype=bool), stats
 
-        use_fanout = bool(fanout) and len(batches) > 1
-
-        def visit(batch):
+        def visit(batch_handle):
+            batch, handle = batch_handle
             shard = self.shards[batch.shard_id]
-            vals, exists, stats = shard._lookup_with_stats(batch.keys, columns)
+            vals, exists, stats = shard._collect_lookup(handle)
             return batch, vals, exists, stats
 
+        pairs = list(zip(batches, pending.handles))
         if use_fanout:
-            parts = list(self._lookup_executor().map(visit, batches))
+            parts = list(self._lookup_executor().map(visit, pairs))
         else:
-            parts = [visit(b) for b in batches]
+            parts = [visit(p) for p in pairs]
 
         agg = ExplainStats(
             shards_visited=len(batches),
@@ -223,6 +260,17 @@ class ShardedDeepMappingStore(MappingStore):
         )
         agg.route_s += time.perf_counter() - t1
         return values, exists, agg
+
+    def _lookup_with_stats(
+        self,
+        keys: np.ndarray,
+        columns: Optional[Tuple[str, ...]] = None,
+        fanout: Optional[bool] = None,
+    ) -> Tuple[Dict[str, np.ndarray], np.ndarray, ExplainStats]:
+        """Algorithm 1, scattered: route each key to its shard, answer
+        per-shard batches (in parallel when ``fanout``), gather results
+        back in request order — the dispatch/collect pair back-to-back."""
+        return self._collect_lookup(self._dispatch_lookup(keys, columns, fanout))
 
     def lookup(
         self, keys: np.ndarray, columns: Optional[Tuple[str, ...]] = None
@@ -326,6 +374,7 @@ class ShardedDeepMappingStore(MappingStore):
                 rebuilt = list(ex.map(retrain_one, ids))
             for i, store in zip(ids, rebuilt):
                 self.shards[i] = store
+                self.engines.adopt(store)  # rebuilt shard joins fleet stats
         if verbose:
             print(f"[cluster] retrained shards {ids}")
         return ids

@@ -15,17 +15,25 @@ import numpy as np
 
 from repro.storage import get_codec
 
+# Per-byte popcounts — the count() fallback for numpy < 2.0 (no
+# ``np.bitwise_count``) that stays O(#words) memory: a 256-bin byte
+# histogram dotted with this table, instead of unpackbits' 8x blowup.
+_POPCOUNT8 = np.unpackbits(np.arange(256, dtype=np.uint8)[:, None], axis=1).sum(
+    axis=1, dtype=np.int64
+)
+
 
 class BitVector:
     """Dynamic packed bitvector over a non-negative integer key domain."""
 
-    __slots__ = ("_words", "_capacity")
+    __slots__ = ("_words", "_capacity", "_version")
 
     def __init__(self, capacity: int):
         if capacity < 0:
             raise ValueError("capacity must be >= 0")
         self._capacity = int(capacity)
         self._words = np.zeros((self._capacity + 63) // 64, dtype=np.uint64)
+        self._version = 0
 
     # -- construction ------------------------------------------------------
     @classmethod
@@ -51,10 +59,17 @@ class BitVector:
             self._words = grown
         self._capacity = capacity
 
+    @property
+    def version(self) -> int:
+        """Monotonic mutation counter — device-side caches of the word
+        array (``repro.core.inference``) re-upload when it changes."""
+        return self._version
+
     def set(self, keys: np.ndarray, value: bool) -> None:
         keys = np.asarray(keys, dtype=np.int64)
         if keys.size == 0:
             return
+        self._version += 1
         if keys.min() < 0:
             raise ValueError("negative key")
         self._grow_to(int(keys.max()) + 1)
@@ -77,7 +92,12 @@ class BitVector:
         return (bit.astype(bool)) & in_domain
 
     def count(self) -> int:
-        return int(np.unpackbits(self._words.view(np.uint8)).sum())
+        """Set-bit total in O(#words) memory (the old ``np.unpackbits``
+        materialized an 8x-larger bool array)."""
+        if hasattr(np, "bitwise_count"):  # numpy >= 2.0: per-word popcount
+            return int(np.bitwise_count(self._words).sum(dtype=np.int64))
+        counts = np.bincount(self._words.view(np.uint8), minlength=256)
+        return int(counts @ _POPCOUNT8)
 
     def keys_in_range(
         self, lo: int = 0, hi: int | None = None, chunk: int = 1 << 20

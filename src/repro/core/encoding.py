@@ -117,6 +117,17 @@ class KeyEncoder:
             parts.append(((v[..., None] // jnp.asarray(div)) % self.base).astype(jnp.int32))
         return jnp.concatenate(parts, axis=-1) if len(parts) > 1 else parts[0]
 
+    def position_ops(self) -> Tuple[Tuple[int, int], ...]:
+        """Per-position ``(modulus, divisor)`` pairs such that position
+        ``p``'s digit is ``((key % modulus) // divisor) % base`` — the
+        uniform form the fused lookup kernel evaluates in-device (main
+        digit positions use ``modulus = capacity``, a no-op for in-range
+        keys, so every position is the same three integer ops)."""
+        ops = [(self._capacity, int(d)) for d in self._divisors]
+        for r, divs in zip(self.residues, self._res_divisors):
+            ops.extend((int(r), int(d)) for d in divs)
+        return tuple(ops)
+
     def onehot(self, keys: np.ndarray, dtype=np.float32) -> np.ndarray:
         """(n,) keys -> (n, width*base) one-hot features (reference path)."""
         d = self.digits(keys)
@@ -189,11 +200,27 @@ class ValueCodec:
         return vc
 
     def extend(self, values: np.ndarray) -> None:
-        """Register new categories (used on insert of unseen values)."""
-        for v in np.asarray(values).tolist():
-            if v not in self._encode:
-                self._encode[v] = len(self._encode)
-                self.decode_map = np.append(self.decode_map, v)
+        """Register new categories (used on insert of unseen values).
+
+        One ``np.unique`` + one concatenate regardless of batch size;
+        new categories keep first-occurrence order, matching the code
+        assignment the old per-value ``np.append`` loop produced."""
+        values = np.asarray(values)
+        if values.size == 0:
+            return
+        uniq, first = np.unique(values, return_index=True)
+        fresh = [
+            v for v in uniq[np.argsort(first, kind="stable")].tolist()
+            if v not in self._encode
+        ]
+        if not fresh:
+            return
+        start = len(self._encode)
+        for off, v in enumerate(fresh):
+            self._encode[v] = start + off
+        # plain concatenate so dtype promotion (e.g. wider strings)
+        # matches what np.append did
+        self.decode_map = np.concatenate([self.decode_map, np.asarray(fresh)])
 
     def decode(self, codes: np.ndarray) -> np.ndarray:
         return self.decode_map[np.asarray(codes, dtype=np.int64)]

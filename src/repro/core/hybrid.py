@@ -25,7 +25,6 @@ import dataclasses
 import time
 from typing import Dict, Optional, Tuple
 
-import jax.numpy as jnp
 import numpy as np
 
 from repro.api.plan import ExplainStats
@@ -35,6 +34,7 @@ from repro.core import trainer as trainer_lib
 from repro.core.aux_table import AuxTable
 from repro.core.bitvector import BitVector
 from repro.core.encoding import KeyEncoder, ValueCodec, build_codecs
+from repro.core.inference import InferenceEngine
 from repro.core.model import MLPSpec
 from repro.core.table import Table
 from repro.storage import MemoryPool
@@ -97,15 +97,27 @@ class LookupStats:
         )
 
 
-def _make_predict_fn(params: Dict, spec: MLPSpec, config: "DeepMappingConfig"):
-    """Inference path factory: fused Pallas kernel or plain jit.  Both
-    build-time misclassification evaluation and lookup go through the
-    SAME function — T_aux corrects exactly the deployed model."""
-    if config.use_pallas:
-        from repro.kernels import fused_mlp_codes
+#: Device chunks in flight ahead of the host half.  Bounds device
+#: residency for huge scan/range batches (the window slides forward as
+#: chunks are collected) while still double-buffering the pipeline.
+DISPATCH_WINDOW = 2
 
-        return lambda digits: fused_mlp_codes(params, spec, digits)
-    return lambda digits: trainer_lib.predict_codes_jit(params, digits, spec)
+
+@dataclasses.dataclass
+class _PendingLookup:
+    """Handle returned by ``_dispatch_lookup``: device inference for
+    the first ``DISPATCH_WINDOW`` chunks is enqueued; the host half
+    (existence fallback, aux merge, decode) runs at ``_collect_lookup``
+    time, which tops the window up as it drains — device inference of
+    chunk *i+1* overlaps the host half of chunk *i*, with at most
+    ``DISPATCH_WINDOW`` chunks resident on device."""
+
+    keys: np.ndarray
+    wanted: Tuple[str, ...]
+    skipped: Tuple[str, ...]
+    tickets: list                      # [(start, InferTicket), ...] in flight
+    next_start: int                    # first key offset not yet dispatched
+    dispatch_s: float
 
 
 class DeepMappingStore(MappingStore):
@@ -135,9 +147,24 @@ class DeepMappingStore(MappingStore):
         self.modified_bytes = 0
         self.last_stats = LookupStats()  # deprecated; see LookupStats docs
         self._bytes_per_row = raw_bytes / max(1, num_rows)
-        # Per-task-subset inference fns (projection pushdown skips
-        # private heads of unselected columns).
-        self._predict_fns: Dict[Tuple[str, ...], object] = {}
+        # Device inference engine: padded-weight cache per task subset,
+        # bucketed batch compiles, dispatch/collect pipeline.  Lazy —
+        # build() attaches the warm engine it evaluated T_aux with; a
+        # cluster attaches engines from its shared EngineCache.
+        self._engine: Optional[InferenceEngine] = None
+
+    @property
+    def engine(self) -> InferenceEngine:
+        if self._engine is None:
+            self._engine = InferenceEngine.for_store(self)
+        return self._engine
+
+    def attach_engine(self, engine: InferenceEngine) -> None:
+        """Adopt an externally-built engine (build-time warm cache, or
+        a cluster's shared-stats engine); the engine's bitvector binding
+        (and its device word cache) is refreshed to this store's."""
+        engine.bind_vexist(self.vexist)
+        self._engine = engine
 
     # ------------------------------------------------------------------ build
     @classmethod
@@ -180,9 +207,16 @@ class DeepMappingStore(MappingStore):
             params, _, hist = trainer_lib.train(spec, digits, codes, config.train)
             if verbose:
                 print(f"[build] trained {len(hist)} epochs, final loss {hist[-1]:.5f}")
-        predict_fn = _make_predict_fn(params, spec, config)
-        wrong = trainer_lib.evaluate_misclassified(
-            params, digits, codes, spec, predict_fn=predict_fn
+        # Misclassification evaluation runs through the SAME engine that
+        # will serve lookups (fused Pallas kernel or jit twin), so T_aux
+        # always corrects exactly the deployed model; the warm weight
+        # cache is adopted by the store below.
+        engine = InferenceEngine(
+            encoder, spec, params,
+            use_pallas=config.use_pallas, max_bucket=config.inference_batch,
+        )
+        wrong = trainer_lib.evaluate_misclassified_engine(
+            engine, table.keys, codes, batch=config.inference_batch
         )
         aux = AuxTable.build(
             table.keys[wrong],
@@ -203,6 +237,7 @@ class DeepMappingStore(MappingStore):
             num_rows=table.num_rows,
             config=config,
         )
+        store.attach_engine(engine)
         if verbose:
             memorized = 1.0 - wrong.mean() if wrong.size else 1.0
             print(
@@ -212,32 +247,6 @@ class DeepMappingStore(MappingStore):
         return store
 
     # ---------------------------------------------------------------- lookup
-    def _predict_for(self, tasks: Tuple[str, ...]):
-        """Inference fn evaluating only the given heads (projection
-        pushdown).  The shared trunk weights are reused verbatim; a
-        subset spec + params view drops the unselected private stacks,
-        so both the jit and Pallas paths skip their compute."""
-        fn = self._predict_fns.get(tasks)
-        if fn is None:
-            if tasks == self.spec.tasks:
-                spec, params = self.spec, self.params
-            else:
-                spec = MLPSpec(
-                    base=self.spec.base,
-                    width=self.spec.width,
-                    shared=self.spec.shared,
-                    private={t: self.spec.private_map[t] for t in tasks},
-                    out_cards={t: self.spec.card_map[t] for t in tasks},
-                    dtype=self.spec.dtype,
-                )
-                params = {
-                    "shared": self.params["shared"],
-                    "heads": {t: self.params["heads"][t] for t in tasks},
-                }
-            fn = _make_predict_fn(params, spec, self.config)
-            self._predict_fns[tasks] = fn
-        return fn
-
     def _infer_codes(
         self, keys: np.ndarray, tasks: Optional[Tuple[str, ...]] = None
     ) -> np.ndarray:
@@ -245,24 +254,148 @@ class DeepMappingStore(MappingStore):
 
         ``tasks`` restricts evaluation to a subset of heads (columns of
         the result follow ``tasks`` order); ``None`` evaluates all.
+        Delegates to the :class:`InferenceEngine` (cached padded
+        weights, bucketed compiles, pipelined chunks).
         """
-        tasks = self.spec.tasks if tasks is None else tuple(tasks)
-        out = np.zeros((keys.shape[0], len(tasks)), dtype=np.int32)
-        if keys.shape[0] == 0 or not tasks:
-            return out  # zero-length batches never reach JAX
-        predict_fn = self._predict_for(tasks)
-        in_cap = keys < self.encoder.capacity
-        idx = np.flatnonzero(in_cap)
-        bs = self.config.inference_batch
-        for start in range(0, idx.size, bs):
-            sel = idx[start : start + bs]
-            digits = self.encoder.digits(keys[sel])
-            out[sel] = np.asarray(predict_fn(jnp.asarray(digits)))
-        return out
+        keys = np.asarray(keys, dtype=np.int64)
+        return self.engine.infer(keys, tasks)
 
     @property
     def columns(self) -> Tuple[str, ...]:
         return self.spec.tasks
+
+    def _dispatch_lookup(
+        self,
+        keys: np.ndarray,
+        columns: Optional[Tuple[str, ...]] = None,
+        fanout: Optional[bool] = None,
+    ) -> _PendingLookup:
+        """Stage 1 of Algorithm 1: enqueue device inference (+ fused
+        existence test) for the first chunks of the batch and return.
+        The host half runs in :meth:`_collect_lookup`; a caller that
+        dispatches batch *i+1* before collecting batch *i* overlaps
+        device inference with host aux-merge + decode.  At most
+        ``DISPATCH_WINDOW`` chunks are in flight (collect tops the
+        window up), so a full-relation scan never pins the whole key
+        set on device.  ``fanout`` is accepted for protocol parity
+        (nothing to fan out here)."""
+        keys = np.asarray(keys, dtype=np.int64)
+        all_tasks = self.spec.tasks
+        wanted = tuple(t for t in all_tasks if columns is None or t in columns)
+        skipped = tuple(t for t in all_tasks if t not in wanted)
+        t0 = time.perf_counter()
+        pending = _PendingLookup(
+            keys=keys, wanted=wanted, skipped=skipped, tickets=[],
+            next_start=0, dispatch_s=0.0,
+        )
+        if keys.shape[0] and wanted:
+            while (
+                len(pending.tickets) < DISPATCH_WINDOW
+                and pending.next_start < keys.shape[0]
+            ):
+                self._dispatch_next_chunk(pending)
+        pending.dispatch_s = time.perf_counter() - t0
+        return pending
+
+    def _dispatch_next_chunk(self, pending: _PendingLookup) -> None:
+        bs = self.config.inference_batch
+        start = pending.next_start
+        pending.tickets.append((
+            start,
+            self.engine.dispatch(
+                pending.keys[start : start + bs], pending.wanted,
+                want_exists=True,
+            ),
+        ))
+        pending.next_start = min(start + bs, pending.keys.shape[0])
+
+    def _collect_lookup(
+        self, pending: _PendingLookup
+    ) -> Tuple[Dict[str, np.ndarray], np.ndarray, ExplainStats]:
+        """Stage 2 of Algorithm 1: per chunk, block on the device
+        result, apply the aux-table override, and decode — while later
+        chunks keep executing on the device."""
+        keys, wanted, skipped = pending.keys, pending.wanted, pending.skipped
+        all_tasks = self.spec.tasks
+        n_chunks = max(
+            1, -(-keys.shape[0] // self.config.inference_batch)
+        ) if pending.tickets else 0
+        fused = bool(pending.tickets) and pending.tickets[0][1].path == "fused"
+        stats = ExplainStats(
+            heads_evaluated=wanted,
+            heads_skipped=skipped,
+            columns_decoded=wanted,
+            columns_skipped=skipped,
+            plan=(
+                f"infer[{len(wanted)}/{len(all_tasks)} heads,"
+                f"{pending.tickets[0][1].path if pending.tickets else 'none'}]",
+                "exist[fused]" if fused else "exist",
+                "aux_merge",
+                f"decode[{','.join(wanted)}]",
+                f"pipeline[{max(1, n_chunks)} chunks]",
+            ),
+        )
+        stats.infer_s = pending.dispatch_s
+
+        if not pending.tickets:
+            # Zero keys or empty projection: typed empty/zero columns,
+            # host existence only — never reaches JAX.
+            t1 = time.perf_counter()
+            exists = self.vexist.test(keys)
+            t2 = time.perf_counter()
+            values = {
+                t: self.codecs[t].decode(np.zeros(keys.shape[0], dtype=np.int32))
+                for t in wanted
+            }
+            stats.exist_s = t2 - t1
+            stats.decode_s = time.perf_counter() - t2
+            return values, exists, stats
+
+        task_idx = [all_tasks.index(t) for t in wanted]
+        exists_parts, value_parts = [], {t: [] for t in wanted}
+        while pending.tickets:
+            start, ticket = pending.tickets.pop(0)
+            # keep the device window full before blocking on this chunk
+            t0 = time.perf_counter()
+            while (
+                len(pending.tickets) < DISPATCH_WINDOW - 1
+                and pending.next_start < keys.shape[0]
+            ):
+                self._dispatch_next_chunk(pending)
+            t1 = time.perf_counter()
+            stats.infer_s += t1 - t0
+            pred, exists = self.engine.collect(ticket)      # line 3 (inference)
+            t2 = time.perf_counter()
+            if exists is None:                               # line 5 (existence)
+                exists = self.vexist.test(ticket.keys)
+            t3 = time.perf_counter()
+            # line 6-8: aux override for existing keys only.  T_aux rows
+            # carry codes for ALL tasks; project to the selected ones.
+            exist_idx = np.flatnonzero(exists)
+            found, aux_codes = self.aux.get(ticket.keys[exist_idx])
+            pred[exist_idx[found]] = aux_codes[found][:, task_idx]
+            t4 = time.perf_counter()
+            # line 13: decode — selected columns only.
+            for i, t in enumerate(wanted):
+                safe = np.where(exists, pred[:, i], 0)
+                value_parts[t].append(self.codecs[t].decode(safe))
+            t5 = time.perf_counter()
+            exists_parts.append(exists)
+            stats.infer_s += t2 - t1
+            stats.exist_s += t3 - t2
+            stats.aux_s += t4 - t3
+            stats.decode_s += t5 - t4
+
+        exists = (
+            exists_parts[0]
+            if len(exists_parts) == 1
+            else np.concatenate(exists_parts)
+        )
+        values = {
+            t: (parts[0] if len(parts) == 1 else np.concatenate(parts))
+            for t, parts in value_parts.items()
+        }
+        return values, exists, stats
 
     def _lookup_with_stats(
         self,
@@ -270,55 +403,10 @@ class DeepMappingStore(MappingStore):
         columns: Optional[Tuple[str, ...]] = None,
         fanout: Optional[bool] = None,
     ) -> Tuple[Dict[str, np.ndarray], np.ndarray, ExplainStats]:
-        """Algorithm 1 with projection pushdown and per-call stats.
-
-        Only the heads of requested columns are evaluated and only
-        those columns decoded; ``fanout`` is accepted for protocol
-        parity (single store has nothing to fan out).
-        """
-        keys = np.asarray(keys, dtype=np.int64)
-        all_tasks = self.spec.tasks
-        wanted = tuple(
-            t for t in all_tasks if columns is None or t in columns
-        )
-        skipped = tuple(t for t in all_tasks if t not in wanted)
-        stats = ExplainStats(
-            heads_evaluated=wanted,
-            heads_skipped=skipped,
-            columns_decoded=wanted,
-            columns_skipped=skipped,
-            plan=(
-                f"infer[{len(wanted)}/{len(all_tasks)} heads]",
-                "exist",
-                "aux_merge",
-                f"decode[{','.join(wanted)}]",
-            ),
-        )
-
-        t0 = time.perf_counter()
-        # line 3 (batch inference) — selected heads only.
-        pred = self._infer_codes(keys, tasks=wanted)
-        t1 = time.perf_counter()
-        exists = self.vexist.test(keys)                      # line 5 (existence check)
-        t2 = time.perf_counter()
-        # line 6-8: aux override for existing keys only.  T_aux rows
-        # carry codes for ALL tasks; project to the selected ones.
-        if keys.shape[0] and wanted:
-            exist_idx = np.flatnonzero(exists)
-            found, aux_codes = self.aux.get(keys[exist_idx])
-            task_idx = [all_tasks.index(t) for t in wanted]
-            pred[exist_idx[found]] = aux_codes[found][:, task_idx]
-        t3 = time.perf_counter()
-        # line 13: decode — selected columns only.
-        values: Dict[str, np.ndarray] = {}
-        for i, t in enumerate(wanted):
-            safe = np.where(exists, pred[:, i], 0)
-            values[t] = self.codecs[t].decode(safe)
-        t4 = time.perf_counter()
-
-        stats.infer_s, stats.exist_s = t1 - t0, t2 - t1
-        stats.aux_s, stats.decode_s = t3 - t2, t4 - t3
-        return values, exists, stats
+        """Algorithm 1 with projection pushdown and per-call stats —
+        the dispatch/collect pair run back-to-back (all chunks' device
+        work enqueued up front, host half trailing chunk by chunk)."""
+        return self._collect_lookup(self._dispatch_lookup(keys, columns, fanout))
 
     def lookup(
         self, keys: np.ndarray, columns: Optional[Tuple[str, ...]] = None

@@ -1,0 +1,506 @@
+"""Device-resident lookup inference engine (ISSUE 3 tentpole).
+
+The paper's latency claim (Fig. 7) assumes model evaluation is ONE
+dense batched device pass — but the seed hot path paid four hidden
+host costs per call: digit featurization in numpy, re-padding every
+weight tensor, a serial host existence check, and a fresh jit compile
+for every distinct batch size.  :class:`InferenceEngine` owns the whole
+device side of Algorithm 1 and removes all four:
+
+* **Cached padded weights.**  Per task-subset (projection pushdown),
+  the padded/flattened device weights and the subset spec/params view
+  are built once and reused by every subsequent call — the seed's
+  ``ops._pad_flat_weights``-per-call cost is gone from the hot path.
+* **Bucketed batch compiles.**  Batch sizes round up to powers of two
+  at or above ``tile_n``, so a workload with O(N) distinct batch sizes
+  compiles O(log N) programs.  ``EngineStats.compiles`` counts distinct
+  compiled (path, spec, bucket) signatures, deduplicated cluster-wide.
+* **Fused key-encode + existence kernel.**  With ``use_pallas`` the
+  engine ships RAW int32 keys; digit/residue decomposition happens
+  in-kernel from SMEM ``(modulus, divisor)`` scalars and the packed
+  existence words are tested in the same ``pallas_call`` — codes and
+  exist bits come back in one device round trip
+  (``repro.kernels.fused_mlp.fused_lookup_call``).  On the jit path the
+  decomposition moves in-graph instead (``_codes_from_keys_jit``).
+* **dispatch()/collect() pipeline.**  ``dispatch`` enqueues device
+  work and returns immediately (JAX async dispatch); ``collect``
+  blocks on the result.  Callers dispatch chunk ``i+1`` before
+  collecting chunk ``i``, so host aux-merge + decode of one chunk
+  overlaps device inference of the next — the two-stage software
+  pipeline ``serve/engine.py`` promises.
+
+Fallback ladder (never raises on eligibility, always answers):
+``fused`` needs ``use_pallas``, an attached :class:`BitVector`, key
+and word domains within int32, and the VMEM budget; ``pallas_digits``
+drops the in-kernel encode/exist (host digits, host exist);
+``jit_keys`` is the non-Pallas twin with in-graph decomposition;
+``jit_digits`` is the legacy host-featurized path for >int32 domains.
+Every path produces byte-identical codes/exists (tested in
+``tests/test_kernels.py::TestFusedLookupConformance``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import threading
+import weakref
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import model as model_lib
+from repro.core.model import MLPSpec
+from repro.kernels import fused_mlp as fm_kernel
+from repro.kernels import ops as kops
+
+INT32_MAX = 2**31 - 1
+
+#: Host work trails device dispatch by this many in-flight chunks.
+PIPELINE_DEPTH = 2
+
+
+@dataclasses.dataclass
+class EngineStats:
+    """Aggregate engine counters.  One instance may be shared by every
+    shard engine of a cluster (``EngineCache``), so compile signatures
+    are deduplicated cluster-wide — shards with identical architecture
+    and bucket shapes share one XLA program."""
+
+    dispatches: int = 0
+    fused_calls: int = 0
+    pallas_calls: int = 0
+    jit_calls: int = 0
+    host_featurize_calls: int = 0
+    weight_cache_misses: int = 0
+    word_uploads: int = 0
+
+    def __post_init__(self) -> None:
+        self._seen: set = set()
+        self._lock = threading.Lock()
+
+    @property
+    def compiles(self) -> int:
+        """Distinct compiled program signatures observed."""
+        return len(self._seen)
+
+    def note_compile(self, key: Tuple) -> None:
+        with self._lock:
+            self._seen.add(key)
+
+    def bump(self, field: str, amount: int = 1) -> None:
+        """Locked counter increment — shard engines under the fan-out
+        thread pool share this object, and a plain ``+=`` would lose
+        updates across threads."""
+        with self._lock:
+            setattr(self, field, getattr(self, field) + amount)
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "pos_ops", "capacity"))
+def _codes_from_keys_jit(
+    params: Dict,
+    keys: jnp.ndarray,
+    spec: MLPSpec,
+    pos_ops: Tuple[Tuple[int, int], ...],
+    capacity: int,
+) -> jnp.ndarray:
+    """jit twin of the fused kernel's key path: digit/residue
+    decomposition in-graph (no host featurization, HBM input is the
+    (n,) key vector), gather-forward, per-task argmax.  Rows outside
+    ``[0, capacity)`` are masked to code 0 — the ``_infer_codes``
+    zero-fill contract."""
+    in_cap = (keys >= 0) & (keys < capacity)
+    safe = jnp.where(in_cap, keys, 0)
+    cols = [
+        (((safe % mod) // div) % spec.base).astype(jnp.int32)[:, None]
+        for mod, div in pos_ops
+    ]
+    digits = jnp.concatenate(cols, axis=1)
+    codes = model_lib.predict_codes(params, digits, spec)
+    return jnp.where(in_cap[:, None], codes, 0)
+
+
+class _TaskEntry:
+    """Per-task-subset cache: subset spec + params view, and (lazily)
+    the padded flat device weights the Pallas paths reuse."""
+
+    __slots__ = ("spec", "params", "_flat", "_wbytes")
+
+    def __init__(self, spec: MLPSpec, params: Dict):
+        self.spec = spec
+        self.params = params
+        self._flat: Optional[Tuple[jnp.ndarray, ...]] = None
+        self._wbytes = 0
+
+    def flat(self) -> Tuple[Tuple[jnp.ndarray, ...], int]:
+        if self._flat is None:
+            self._flat, self._wbytes = kops.pad_flat_weights(self.params, self.spec)
+        return self._flat, self._wbytes
+
+    def card_pads(self) -> Tuple[Tuple[str, int], ...]:
+        cards = self.spec.card_map
+        return tuple(
+            (t, kops._round_up(cards[t], kops.LANE)) for t in self.spec.tasks
+        )
+
+
+@dataclasses.dataclass
+class InferTicket:
+    """In-flight device work handle returned by ``dispatch``."""
+
+    n: int
+    tasks: Tuple[str, ...]                 # requested column order
+    path: str
+    keys: np.ndarray                       # original int64 chunk keys
+    want_exists: bool = False
+    codes_dev: object = None               # device array / tuple, path-shaped
+    exists_dev: object = None              # (n_pad,) int32 device array (fused)
+    in_cap: Optional[np.ndarray] = None    # host mask (digits paths only)
+    task_order: Tuple[str, ...] = ()       # device result order (spec canonical)
+
+
+class InferenceEngine:
+    """Per-store device inference: weight cache, bucketing, pipeline.
+
+    One engine per :class:`~repro.core.hybrid.DeepMappingStore`
+    (weights are store-specific); a cluster shares one
+    :class:`EngineStats` across its shard engines via
+    :class:`EngineCache`.  ``vexist`` may be attached after
+    construction (build-time misclassification evaluation runs before
+    the bitvector exists).
+    """
+
+    def __init__(
+        self,
+        encoder,
+        spec: MLPSpec,
+        params: Dict,
+        vexist=None,
+        *,
+        use_pallas: bool = False,
+        tile_n: int = kops.DEFAULT_TILE_N,
+        max_bucket: int = 1 << 16,
+        interpret: Optional[bool] = None,
+        stats: Optional[EngineStats] = None,
+    ):
+        self.encoder = encoder
+        self.spec = spec
+        self.params = params
+        self.vexist = vexist
+        self.use_pallas = bool(use_pallas)
+        self.tile_n = int(tile_n)
+        self.max_bucket = max(int(max_bucket), self.tile_n)
+        self.interpret = kops._auto_interpret(interpret)
+        self.stats = stats if stats is not None else EngineStats()
+        self._lock = threading.Lock()
+        self._entries: Dict[Tuple[str, ...], _TaskEntry] = {}
+        self._pos_ops = tuple(encoder.position_ops())
+        self._pos_ops_dev = None           # lazy (width, 2) int32 device array
+        self._words_cache: Optional[Tuple[int, jnp.ndarray]] = None
+
+    def bind_vexist(self, vexist) -> None:
+        """Swap the engine's bitvector binding, dropping the device
+        word cache — its version key is only meaningful per bitvector
+        instance, so a stale entry could otherwise serve another
+        store's existence bits."""
+        with self._lock:
+            self.vexist = vexist
+            self._words_cache = None
+
+    @classmethod
+    def for_store(cls, store, stats: Optional[EngineStats] = None) -> "InferenceEngine":
+        cfg = store.config
+        return cls(
+            store.encoder,
+            store.spec,
+            store.params,
+            store.vexist,
+            use_pallas=cfg.use_pallas,
+            max_bucket=cfg.inference_batch,
+            stats=stats,
+        )
+
+    # ------------------------------------------------------------- caches
+    def _entry(self, tasks: Tuple[str, ...]) -> _TaskEntry:
+        entry = self._entries.get(tasks)
+        if entry is None:
+            with self._lock:
+                entry = self._entries.get(tasks)
+                if entry is None:
+                    if tasks == self.spec.tasks:
+                        spec, params = self.spec, self.params
+                    else:
+                        spec = MLPSpec(
+                            base=self.spec.base,
+                            width=self.spec.width,
+                            shared=self.spec.shared,
+                            private={t: self.spec.private_map[t] for t in tasks},
+                            out_cards={t: self.spec.card_map[t] for t in tasks},
+                            dtype=self.spec.dtype,
+                        )
+                        params = {
+                            "shared": self.params["shared"],
+                            "heads": {t: self.params["heads"][t] for t in tasks},
+                        }
+                    entry = _TaskEntry(spec, params)
+                    self._entries[tasks] = entry
+                    self.stats.bump("weight_cache_misses")
+        return entry
+
+    def _device_words(self) -> jnp.ndarray:
+        """Device copy of the packed existence words, re-uploaded only
+        when the bitvector's mutation counter moves."""
+        v = self.vexist
+        with self._lock:
+            cached = self._words_cache
+            if cached is None or cached[0] != v.version:
+                words32 = np.ascontiguousarray(v.words).view(np.uint32)
+                self._words_cache = (v.version, jnp.asarray(words32))
+                self.stats.bump("word_uploads")
+            return self._words_cache[1]
+
+    def _device_pos_ops(self) -> jnp.ndarray:
+        if self._pos_ops_dev is None:
+            self._pos_ops_dev = jnp.asarray(np.asarray(self._pos_ops, dtype=np.int32))
+        return self._pos_ops_dev
+
+    def _bucket(self, n: int) -> int:
+        b = self.tile_n
+        while b < n:
+            b <<= 1
+        return b
+
+    # -------------------------------------------------------- path choice
+    # Eligibility uses shape-derived byte counts (padded_weight_bytes),
+    # NOT entry.flat(): deciding against the Pallas path must not
+    # materialize — and permanently cache — a padded device weight copy
+    # the jit fallback never touches.
+    def _fused_eligible(self, entry: _TaskEntry) -> bool:
+        v = self.vexist
+        if v is None or self.encoder.capacity > INT32_MAX:
+            return False
+        if v.capacity > INT32_MAX + 1:
+            return False
+        vmem = (
+            kops.padded_weight_bytes(entry.spec)
+            + kops.activation_bytes(entry.spec, self.tile_n)
+            + int(v.words.nbytes)
+        )
+        return vmem <= kops.VMEM_BUDGET_BYTES
+
+    def _pallas_eligible(self, entry: _TaskEntry) -> bool:
+        return (
+            kops.padded_weight_bytes(entry.spec)
+            + kops.activation_bytes(entry.spec, self.tile_n)
+            <= kops.VMEM_BUDGET_BYTES
+        )
+
+    # ---------------------------------------------------- dispatch/collect
+    def dispatch(
+        self,
+        keys: np.ndarray,
+        tasks: Optional[Tuple[str, ...]] = None,
+        want_exists: bool = False,
+    ) -> InferTicket:
+        """Enqueue device inference for one key chunk; returns
+        immediately (JAX async dispatch).  ``want_exists`` additionally
+        requests existence bits — in-kernel on the fused path, host
+        ``BitVector.test`` at collect time otherwise."""
+        keys = np.asarray(keys, dtype=np.int64)
+        tasks = self.spec.tasks if tasks is None else tuple(tasks)
+        n = keys.shape[0]
+        if n == 0 or not tasks:
+            return InferTicket(n=n, tasks=tasks, path="empty", keys=keys,
+                               want_exists=want_exists)
+        self.stats.bump("dispatches")
+        # MLPSpec canonicalizes task order, so the subset entry (and the
+        # device result columns) follow spec order; collect() permutes
+        # back to the requested order.
+        canon = tuple(t for t in self.spec.tasks if t in frozenset(tasks))
+        entry = self._entry(canon)
+        bucket = self._bucket(n)
+
+        if self.use_pallas and want_exists and self._fused_eligible(entry):
+            ticket = self._dispatch_fused(keys, tasks, entry, bucket)
+        elif self.use_pallas and self._pallas_eligible(entry):
+            ticket = self._dispatch_pallas_digits(keys, tasks, entry, bucket,
+                                                  want_exists)
+        elif self.encoder.capacity <= INT32_MAX:
+            ticket = self._dispatch_jit_keys(keys, tasks, entry, bucket,
+                                             want_exists)
+        else:
+            ticket = self._dispatch_jit_digits(keys, tasks, entry, bucket,
+                                               want_exists)
+        ticket.task_order = entry.spec.tasks
+        return ticket
+
+    def _keys_i32(self, keys: np.ndarray, bucket: int) -> np.ndarray:
+        """int32 view with a -1 sentinel for unrepresentable keys (they
+        are masked to code 0 / exist 0 in-graph, which matches the host
+        contract because the gated domains fit int32); padding rows get
+        the same sentinel."""
+        kp = np.full(bucket, -1, dtype=np.int32)
+        valid = (keys >= 0) & (keys <= INT32_MAX)
+        kp[: keys.shape[0]] = np.where(valid, keys, -1).astype(np.int32)
+        return kp
+
+    def _dispatch_fused(self, keys, tasks, entry, bucket) -> InferTicket:
+        flat, _ = entry.flat()
+        words = self._device_words()
+        self.stats.bump("fused_calls")
+        self.stats.note_compile(
+            ("fused", entry.spec, self.encoder.capacity, bucket, words.shape[0])
+        )
+        codes, exists = kops.fused_lookup(
+            flat, entry.spec, jnp.asarray(self._keys_i32(keys, bucket)),
+            self._device_pos_ops(), words, self.encoder.capacity,
+            tile_n=self.tile_n, interpret=self.interpret,
+        )
+        return InferTicket(n=keys.shape[0], tasks=tasks, path="fused",
+                           keys=keys, want_exists=True,
+                           codes_dev=codes, exists_dev=exists)
+
+    def _dispatch_jit_keys(self, keys, tasks, entry, bucket, want_exists):
+        self.stats.bump("jit_calls")
+        self.stats.note_compile(
+            ("jit_keys", entry.spec, self.encoder.capacity, bucket)
+        )
+        codes = _codes_from_keys_jit(
+            entry.params, jnp.asarray(self._keys_i32(keys, bucket)),
+            entry.spec, self._pos_ops, self.encoder.capacity,
+        )
+        return InferTicket(n=keys.shape[0], tasks=tasks, path="jit_keys",
+                           keys=keys, want_exists=want_exists, codes_dev=codes)
+
+    def _host_digits(self, keys: np.ndarray, bucket: int):
+        """Legacy host featurization for >int32 domains: digits of
+        in-capacity keys, zero rows elsewhere."""
+        self.stats.bump("host_featurize_calls")
+        in_cap = (keys >= 0) & (keys < self.encoder.capacity)
+        dp = np.zeros((bucket, self.encoder.width), dtype=np.int32)
+        idx = np.flatnonzero(in_cap)
+        if idx.size:
+            dp[idx] = self.encoder.digits(keys[idx])
+        return dp, in_cap
+
+    def _dispatch_pallas_digits(self, keys, tasks, entry, bucket, want_exists):
+        flat, _ = entry.flat()
+        dp, in_cap = self._host_digits(keys, bucket)
+        self.stats.bump("pallas_calls")
+        self.stats.note_compile(("pallas_digits", entry.spec, bucket))
+        outs = fm_kernel.fused_mlp_call(
+            jnp.asarray(dp), flat, entry.spec, self.tile_n,
+            kops._round_up(entry.spec.base, kops.LANE), entry.card_pads(),
+            emit_codes=True, interpret=self.interpret,
+        )
+        return InferTicket(n=keys.shape[0], tasks=tasks, path="pallas_digits",
+                           keys=keys, want_exists=want_exists,
+                           codes_dev=outs, in_cap=in_cap)
+
+    def _dispatch_jit_digits(self, keys, tasks, entry, bucket, want_exists):
+        from repro.core import trainer as trainer_lib  # local: trainer imports us
+
+        dp, in_cap = self._host_digits(keys, bucket)
+        self.stats.bump("jit_calls")
+        self.stats.note_compile(("jit_digits", entry.spec, bucket))
+        codes = trainer_lib.predict_codes_jit(
+            entry.params, jnp.asarray(dp), entry.spec
+        )
+        return InferTicket(n=keys.shape[0], tasks=tasks, path="jit_digits",
+                           keys=keys, want_exists=want_exists,
+                           codes_dev=codes, in_cap=in_cap)
+
+    def collect(self, ticket: InferTicket):
+        """Block on a ticket -> ``(codes (n, m) int32, exists | None)``.
+        ``exists`` is a bool array ONLY when the fused kernel computed
+        it on-device; on every other path it is None and the caller
+        runs (and times) the host ``BitVector.test`` itself — keeping
+        the existence stage visible in per-stage stats."""
+        n = ticket.n
+        if ticket.path == "empty":
+            return np.zeros((n, len(ticket.tasks)), dtype=np.int32), None
+
+        if ticket.path == "pallas_digits":
+            codes = np.concatenate(
+                [np.asarray(o)[:n] for o in ticket.codes_dev], axis=1
+            )
+        else:
+            codes = np.asarray(ticket.codes_dev)[:n]
+        if ticket.task_order and ticket.tasks != ticket.task_order:
+            # requested projection order differs from spec canonical
+            perm = [ticket.task_order.index(t) for t in ticket.tasks]
+            codes = codes[:, perm]
+        if not codes.flags.writeable:
+            codes = codes.copy()  # callers patch the aux override in place
+        if ticket.in_cap is not None and not ticket.in_cap.all():
+            codes[~ticket.in_cap] = 0
+
+        exists = None
+        if ticket.path == "fused":
+            exists = np.asarray(ticket.exists_dev)[:n].astype(bool)
+        return codes, exists
+
+    # ------------------------------------------------------- convenience
+    def infer(
+        self, keys: np.ndarray, tasks: Optional[Tuple[str, ...]] = None
+    ) -> np.ndarray:
+        """Codes for a key batch of any size: chunks of ``max_bucket``
+        flow through the dispatch/collect pipeline (host copy-out of
+        chunk *i* overlaps device inference of chunk *i+1*)."""
+        keys = np.asarray(keys, dtype=np.int64)
+        tasks = self.spec.tasks if tasks is None else tuple(tasks)
+        n = keys.shape[0]
+        out = np.zeros((n, len(tasks)), dtype=np.int32)
+        if n == 0 or not tasks:
+            return out
+        pending = []
+        for start in range(0, n, self.max_bucket):
+            pending.append(
+                (start, self.dispatch(keys[start : start + self.max_bucket], tasks))
+            )
+            if len(pending) >= PIPELINE_DEPTH:
+                s, t = pending.pop(0)
+                out[s : s + t.n], _ = self.collect(t)
+        for s, t in pending:
+            out[s : s + t.n], _ = self.collect(t)
+        return out
+
+
+class EngineCache:
+    """Store -> engine map with ONE shared :class:`EngineStats`.
+
+    A sharded cluster attaches this to every shard so (a) compile
+    signatures dedupe cluster-wide — same architecture + bucket = one
+    XLA program — and (b) operators read one counter set for the whole
+    fleet.  Weak keys: dropping a shard drops its engine."""
+
+    def __init__(self) -> None:
+        self.stats = EngineStats()
+        self._engines: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
+        self._lock = threading.Lock()
+
+    def engine_for(self, store) -> InferenceEngine:
+        eng = self._engines.get(store)
+        if eng is None:
+            with self._lock:
+                eng = self._engines.get(store)
+                if eng is None:
+                    eng = InferenceEngine.for_store(store, stats=self.stats)
+                    self._engines[store] = eng
+        return eng
+
+    def adopt(self, store) -> InferenceEngine:
+        """Bind ``store``'s engine into this cache.  A store that
+        already owns an engine (e.g. warm from build) keeps its weight
+        cache and just switches to the shared stats; otherwise a fresh
+        engine is attached."""
+        eng = getattr(store, "_engine", None)
+        if eng is not None:
+            eng.stats = self.stats
+            self._engines[store] = eng
+            return eng
+        eng = self.engine_for(store)
+        store.attach_engine(eng)
+        return eng

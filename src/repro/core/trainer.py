@@ -115,27 +115,31 @@ def predict_codes_jit(params: Dict, digits: jnp.ndarray, spec: MLPSpec) -> jnp.n
     return model_lib.predict_codes(params, digits, spec)
 
 
-def evaluate_misclassified(
-    params: Dict,
-    digits: np.ndarray,
+def evaluate_misclassified_engine(
+    engine,
+    keys: np.ndarray,
     codes: np.ndarray,
-    spec: MLPSpec,
     batch: int = 1 << 16,
-    predict_fn=None,
 ) -> np.ndarray:
-    """Row mask of tuples the model gets wrong in ANY column (§IV-B1).
-
-    These rows become T_aux.  Batched so multi-GB tables don't blow
-    device memory.  ``predict_fn`` lets the hybrid store pass its
-    deployed inference path (e.g. the fused Pallas kernel) so the aux
-    table corrects exactly what lookup will run.
-    """
-    if predict_fn is None:
-        predict_fn = lambda d: predict_codes_jit(params, d, spec)
-    n = digits.shape[0]
+    """Row mask of tuples the model gets wrong in ANY column (§IV-B1);
+    these rows become T_aux.  Drives the deployed
+    :class:`~repro.core.inference.InferenceEngine` from raw keys as a
+    two-stage pipeline: the device infers chunk *i+1* while the host
+    compares chunk *i* against the true codes.  Because the engine is
+    the SAME object the store will serve lookups with, T_aux corrects
+    exactly the deployed inference path — including its weight padding
+    and argmax tie-breaking."""
+    keys = np.asarray(keys, dtype=np.int64)
+    n = keys.shape[0]
     wrong = np.zeros(n, dtype=bool)
+    pending: list = []
     for start in range(0, n, batch):
-        d = jnp.asarray(digits[start : start + batch])
-        pred = np.asarray(predict_fn(d))
-        wrong[start : start + batch] = (pred != codes[start : start + batch]).any(axis=1)
+        pending.append((start, engine.dispatch(keys[start : start + batch])))
+        if len(pending) >= 2:  # two-stage pipeline: host trails by one
+            s, t = pending.pop(0)
+            pred, _ = engine.collect(t)
+            wrong[s : s + t.n] = (pred != codes[s : s + t.n]).any(axis=1)
+    for s, t in pending:
+        pred, _ = engine.collect(t)
+        wrong[s : s + t.n] = (pred != codes[s : s + t.n]).any(axis=1)
     return wrong

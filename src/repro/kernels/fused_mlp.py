@@ -8,6 +8,17 @@ encoding of key digits is materialized per-tile in VMEM as an
 (TILE_N, base) compare-with-iota and immediately consumed by the MXU —
 it never exists in HBM (DESIGN.md §3).
 
+Two entrypoints share the forward body:
+
+* ``fused_mlp_call``    — digits in, logits/codes out (the original
+  kernel; still the reference-shaped staged path).
+* ``fused_lookup_call`` — RAW int32 keys in, per-task argmax codes AND
+  existence bits out.  Digit/residue decomposition happens in-kernel
+  from per-position ``(modulus, divisor)`` scalars held in SMEM, so the
+  HBM input shrinks from ``(N, width)`` int32 to ``(N,)`` keys, and the
+  packed existence-bitvector word array rides in the same
+  ``pallas_call`` (Algorithm 1 lines 3+5 in one device round trip).
+
 Layout contract (enforced by ops.py):
 * every dense dimension padded to multiples of 128 (MXU lane width);
 * batch tiles of ``tile_n`` rows (multiple of 8, default 256);
@@ -25,6 +36,13 @@ from typing import Dict, List, Tuple
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+try:  # TPU memory spaces; interpret mode accepts them on any backend
+    from jax.experimental.pallas import tpu as pltpu
+
+    _SMEM = pltpu.SMEM
+except Exception:  # pragma: no cover — pallas build without TPU support
+    _SMEM = None
 
 from repro.core.model import MLPSpec
 
@@ -58,6 +76,62 @@ def _apply_embed(w_ref, b_ref, digits, base_pad):
     return acc + b_ref[...]
 
 
+def _forward_tile(
+    digits,
+    w_refs,
+    spec: MLPSpec,
+    trunk_kinds,
+    head_kinds,
+    base_pad: int,
+    emit_codes: bool,
+) -> List[jnp.ndarray]:
+    """Whole-model forward on one batch tile: per-task codes (n, 1)
+    int32 when ``emit_codes`` else logits (n, card_pad).  Shared by the
+    digits-in and keys-in kernels so both paths compute bit-identical
+    results."""
+    cards = spec.card_map
+    it = iter(w_refs)
+    outs: List[jnp.ndarray] = []
+
+    x = None
+    for kind in trunk_kinds:
+        w_ref, b_ref = next(it), next(it)
+        if kind == "embed":
+            x = _apply_embed(w_ref, b_ref, digits, base_pad)
+        else:
+            x = jnp.dot(x, w_ref[...], preferred_element_type=jnp.float32) + b_ref[...]
+        x = jnp.maximum(x, 0.0)
+
+    for t in spec.tasks:
+        h = x
+        for kind in head_kinds[t]:
+            w_ref, b_ref = next(it), next(it)
+            if kind == "embed":
+                h = jnp.maximum(_apply_embed(w_ref, b_ref, digits, base_pad), 0.0)
+            elif kind == "dense":
+                h = jnp.maximum(
+                    jnp.dot(h, w_ref[...], preferred_element_type=jnp.float32)
+                    + b_ref[...],
+                    0.0,
+                )
+            elif kind == "embed_out":
+                h = _apply_embed(w_ref, b_ref, digits, base_pad)
+            else:  # dense_out
+                h = (
+                    jnp.dot(h, w_ref[...], preferred_element_type=jnp.float32)
+                    + b_ref[...]
+                )
+        if emit_codes:
+            # mask padded logit columns, reduce to codes in-kernel
+            card = cards[t]
+            col = jax.lax.broadcasted_iota(jnp.int32, h.shape, 1)
+            masked = jnp.where(col < card, h, -jnp.inf)
+            outs.append(jnp.argmax(masked, axis=-1).astype(jnp.int32)[:, None])
+        else:
+            outs.append(h)
+    return outs
+
+
 def make_fused_kernel(
     spec: MLPSpec,
     base_pad: int,
@@ -66,52 +140,17 @@ def make_fused_kernel(
 ):
     """Build the kernel body for this model structure (static closure)."""
     trunk_kinds, head_kinds = _plan(spec)
-    n_trunk = len(trunk_kinds)
-    cards = spec.card_map
 
     def kernel(digits_ref, *refs):
         n_heads = len(spec.tasks)
         out_refs = refs[len(refs) - n_heads :]
         w_refs = list(refs[: len(refs) - n_heads])
-        it = iter(w_refs)
-        digits = digits_ref[...]
-
-        x = None
-        for kind in trunk_kinds:
-            w_ref, b_ref = next(it), next(it)
-            if kind == "embed":
-                x = _apply_embed(w_ref, b_ref, digits, base_pad)
-            else:
-                x = jnp.dot(x, w_ref[...], preferred_element_type=jnp.float32) + b_ref[...]
-            x = jnp.maximum(x, 0.0)
-
-        for ti, t in enumerate(spec.tasks):
-            h = x
-            for kind in head_kinds[t]:
-                w_ref, b_ref = next(it), next(it)
-                if kind == "embed":
-                    h = jnp.maximum(_apply_embed(w_ref, b_ref, digits, base_pad), 0.0)
-                elif kind == "dense":
-                    h = jnp.maximum(
-                        jnp.dot(h, w_ref[...], preferred_element_type=jnp.float32)
-                        + b_ref[...],
-                        0.0,
-                    )
-                elif kind == "embed_out":
-                    h = _apply_embed(w_ref, b_ref, digits, base_pad)
-                else:  # dense_out
-                    h = (
-                        jnp.dot(h, w_ref[...], preferred_element_type=jnp.float32)
-                        + b_ref[...]
-                    )
-            if emit_codes:
-                # mask padded logit columns, reduce to codes in-kernel
-                card = cards[t]
-                col = jax.lax.broadcasted_iota(jnp.int32, h.shape, 1)
-                masked = jnp.where(col < card, h, -jnp.inf)
-                out_refs[ti][...] = jnp.argmax(masked, axis=-1).astype(jnp.int32)[:, None]
-            else:
-                out_refs[ti][...] = h
+        outs = _forward_tile(
+            digits_ref[...], w_refs, spec, trunk_kinds, head_kinds, base_pad,
+            emit_codes,
+        )
+        for ti in range(n_heads):
+            out_refs[ti][...] = outs[ti]
 
     return kernel
 
@@ -164,3 +203,122 @@ def fused_mlp_call(
         out_shape=out_shapes,
         interpret=interpret,
     )(digits, *flat_weights)
+
+
+# --------------------------------------------------------------------------
+# Fused key-encode + inference + existence kernel (one round trip lookup)
+# --------------------------------------------------------------------------
+def make_fused_lookup_kernel(
+    spec: MLPSpec,
+    base_pad: int,
+    capacity: int,
+    n_words32: int,
+):
+    """Kernel body answering Algorithm 1 lines 3+5 from raw int32 keys.
+
+    Per tile: decompose keys into digit/residue positions from the SMEM
+    ``(modulus, divisor)`` table, run the whole multi-task model, argmax
+    to codes, and test the VMEM-resident packed existence words — codes
+    and exist bits leave in the same HBM write set.  Keys outside
+    ``[0, capacity)`` get code 0 (the host zero-fill contract of
+    ``_infer_codes``) and keys outside the word domain exist=0, exactly
+    matching ``BitVector.test``.
+    """
+    trunk_kinds, head_kinds = _plan(spec)
+    width = spec.width
+    base = spec.base
+    n_heads = len(spec.tasks)
+
+    def kernel(keys_ref, ops_ref, words_ref, *refs):
+        # refs = weights..., codes outs (one per task), exists out
+        exist_ref = refs[-1]
+        out_refs = refs[len(refs) - 1 - n_heads : -1]
+        w_refs = list(refs[: len(refs) - 1 - n_heads])
+
+        keys = keys_ref[...]
+        in_cap = (keys >= 0) & (keys < capacity)
+        safe = jnp.where(in_cap, keys, 0)
+
+        # In-kernel digit/residue decomposition.  Every position is the
+        # same three integer ops on scalars prefetched to SMEM; main
+        # digit positions carry modulus == capacity (a no-op for keys
+        # already clamped into [0, capacity)).
+        cols = []
+        for p in range(width):
+            mod = ops_ref[p, 0]
+            div = ops_ref[p, 1]
+            cols.append((((safe % mod) // div) % base).astype(jnp.int32)[:, None])
+        digits = jnp.concatenate(cols, axis=1)
+
+        outs = _forward_tile(
+            digits, w_refs, spec, trunk_kinds, head_kinds, base_pad,
+            emit_codes=True,
+        )
+        for ti in range(n_heads):
+            out_refs[ti][...] = jnp.where(in_cap[:, None], outs[ti], 0)
+
+        # Existence test against the packed words (Algorithm 1 line 5).
+        # Bits past BitVector.capacity are never set, so the word-domain
+        # mask alone reproduces BitVector.test byte-for-byte.
+        in_dom = (keys >= 0) & (jax.lax.shift_right_logical(keys, 5) < n_words32)
+        sk = jnp.where(in_dom, keys, 0)
+        w = jnp.take(words_ref[...], jax.lax.shift_right_logical(sk, 5), axis=0)
+        bits = jnp.bitwise_and(
+            jax.lax.shift_right_logical(w, jnp.bitwise_and(sk, 31).astype(jnp.uint32)),
+            jnp.uint32(1),
+        )
+        exist_ref[...] = bits.astype(jnp.int32) * in_dom.astype(jnp.int32)
+
+    return kernel
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("spec", "tile_n", "base_pad", "capacity", "interpret"),
+)
+def fused_lookup_call(
+    keys: jnp.ndarray,
+    pos_ops: jnp.ndarray,
+    words32: jnp.ndarray,
+    flat_weights: Tuple[jnp.ndarray, ...],
+    spec: MLPSpec,
+    tile_n: int,
+    base_pad: int,
+    capacity: int,
+    interpret: bool,
+):
+    """keys (N_pad,) int32; pos_ops (width, 2) int32 [(mod, div)…];
+    words32 (n_words32,) uint32; flat_weights in plan order (padded).
+
+    Returns ``(codes, exists)``: codes (N_pad, num_tasks) int32, exists
+    (N_pad,) int32 0/1 — one device round trip for the whole batch.
+    """
+    n = keys.shape[0]
+    assert n % tile_n == 0
+    grid = (n // tile_n,)
+    kernel = make_fused_lookup_kernel(spec, base_pad, capacity, words32.shape[0])
+
+    smem_kwargs = {"memory_space": _SMEM} if _SMEM is not None else {}
+    in_specs = [
+        pl.BlockSpec((tile_n,), lambda i: (i,)),
+        pl.BlockSpec(pos_ops.shape, lambda i: (0, 0), **smem_kwargs),
+        pl.BlockSpec(words32.shape, lambda i: (0,)),
+    ]
+    for w in flat_weights:
+        in_specs.append(pl.BlockSpec(w.shape, lambda i, nd=w.ndim: (0,) * nd))
+
+    out_shapes = [jax.ShapeDtypeStruct((n, 1), jnp.int32) for _ in spec.tasks]
+    out_specs = [pl.BlockSpec((tile_n, 1), lambda i: (i, 0)) for _ in spec.tasks]
+    out_shapes.append(jax.ShapeDtypeStruct((n,), jnp.int32))
+    out_specs.append(pl.BlockSpec((tile_n,), lambda i: (i,)))
+
+    outs = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(keys, pos_ops, words32, *flat_weights)
+    codes = jnp.concatenate(outs[:-1], axis=1)
+    return codes, outs[-1]

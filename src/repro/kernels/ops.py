@@ -69,16 +69,57 @@ def _pad_flat_weights(params: Dict, spec: MLPSpec) -> Tuple[Tuple[jnp.ndarray, .
     return tuple(flat), nbytes
 
 
-def check_vmem_budget(params: Dict, spec: MLPSpec, tile_n: int) -> None:
-    _, wbytes = _pad_flat_weights(params, spec)
+#: Public alias — the inference engine caches this call's result per
+#: task subset so the hot path never re-pads (see repro.core.inference).
+pad_flat_weights = _pad_flat_weights
+
+
+def padded_weight_bytes(spec: MLPSpec) -> int:
+    """Byte count :func:`pad_flat_weights` would produce, from shapes
+    alone — eligibility/budget decisions must not materialize (and
+    cache) a padded device copy that the chosen path never uses."""
+    total = 0
+
+    def dense(in_dim: int, out_dim: int, embed: bool) -> int:
+        o = _round_up(out_dim, LANE)
+        if embed:  # rank-3 (width, base_pad, h_pad) + bias
+            return spec.width * _round_up(spec.base, LANE) * o + o
+        return _round_up(in_dim, LANE) * o + o
+
+    d = None
+    for h in spec.shared:
+        total += dense(d or 0, h, embed=d is None)
+        d = h
+    trunk = d
+    priv, cards = spec.private_map, spec.card_map
+    for t in spec.tasks:
+        d = trunk
+        for h in priv[t]:
+            total += dense(d or 0, h, embed=d is None)
+            d = h
+        total += dense(d or 0, cards[t], embed=d is None)
+    return total * 4  # fp32
+
+
+def activation_bytes(spec: MLPSpec, tile_n: int) -> int:
+    """Per-tile activation VMEM footprint (with ~double buffering)."""
     widths = [spec.feature_dim, *spec.shared]
     for t, sizes in spec.private:
         widths.extend(sizes)
-    act_bytes = tile_n * _round_up(max(widths), LANE) * 4 * 3  # ~double buffering
-    if wbytes + act_bytes > VMEM_BUDGET_BYTES:
+    return tile_n * _round_up(max(widths), LANE) * 4 * 3
+
+
+def check_vmem_budget(
+    params: Dict, spec: MLPSpec, tile_n: int, extra_bytes: int = 0
+) -> None:
+    """Raise if weights + activations (+ ``extra_bytes``, e.g. the fused
+    lookup kernel's resident existence words) exceed the VMEM cap."""
+    _, wbytes = _pad_flat_weights(params, spec)
+    total = wbytes + activation_bytes(spec, tile_n) + extra_bytes
+    if total > VMEM_BUDGET_BYTES:
         raise ValueError(
             f"model too large for VMEM-resident fused kernel "
-            f"({(wbytes + act_bytes) / 2**20:.1f} MiB > "
+            f"({total / 2**20:.1f} MiB > "
             f"{VMEM_BUDGET_BYTES / 2**20:.0f} MiB); use the jnp path"
         )
 
@@ -129,6 +170,31 @@ def fused_mlp_codes(
         emit_codes=True, interpret=_auto_interpret(interpret),
     )
     return jnp.concatenate([o[:n] for o in outs], axis=1)
+
+
+def fused_lookup(
+    flat_weights: Tuple[jnp.ndarray, ...],
+    spec: MLPSpec,
+    keys_i32: jnp.ndarray,
+    pos_ops: jnp.ndarray,
+    words32: jnp.ndarray,
+    capacity: int,
+    tile_n: int = DEFAULT_TILE_N,
+    interpret: Optional[bool] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One-round-trip lookup kernel call: padded int32 keys in,
+    ``(codes (N_pad, m) int32, exists (N_pad,) int32)`` out.
+
+    Unlike :func:`fused_mlp_codes` this takes ALREADY-padded device
+    weights (the engine's per-task-subset cache), a device-resident
+    ``pos_ops``/``words32``, and an already bucket-padded key batch —
+    the wrapper adds no per-call host work.  Caller slices padding off.
+    """
+    assert keys_i32.shape[0] % tile_n == 0
+    return fm_kernel.fused_lookup_call(
+        keys_i32, pos_ops, words32, tuple(flat_weights), spec, tile_n,
+        _round_up(spec.base, LANE), int(capacity), _auto_interpret(interpret),
+    )
 
 
 def bitvector_test(

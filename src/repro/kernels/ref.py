@@ -30,6 +30,24 @@ def ref_fused_mlp_codes(params: Dict, digits: jnp.ndarray, spec: MLPSpec) -> jnp
     )
 
 
+def ref_fused_lookup(params: Dict, keys, encoder, vexist, spec: MLPSpec):
+    """Oracle for the fused key->codes+exists kernel: host digit
+    featurization + plain model forward + host BitVector test — the
+    seed repo's staged reference path.  Returns ``(codes (n, m) int32
+    numpy, exists (n,) bool numpy)``; out-of-capacity rows carry code 0
+    (the ``_infer_codes`` zero-fill contract)."""
+    import numpy as np
+
+    keys = np.asarray(keys, dtype=np.int64)
+    codes = np.zeros((keys.shape[0], len(spec.tasks)), dtype=np.int32)
+    in_cap = (keys >= 0) & (keys < encoder.capacity)
+    idx = np.flatnonzero(in_cap)
+    if idx.size:
+        digits = jnp.asarray(encoder.digits(keys[idx]))
+        codes[idx] = np.asarray(ref_fused_mlp_codes(params, digits, spec))
+    return codes, vexist.test(keys)
+
+
 def ref_bitvector_test(words: jnp.ndarray, keys: jnp.ndarray) -> jnp.ndarray:
     """words (n_words,) uint32 packed LSB-first; keys (n,) int32."""
     w = words[keys >> 5]

@@ -49,7 +49,8 @@ def main() -> None:
     print(
         f"served {s.requests} requests ({s.keys:,} keys) in {s.total_s:.2f}s "
         f"-> {s.qps():,.0f} keys/s; all-found={ok}/{len(reqs)}; "
-        f"infer={s.infer_s:.2f}s aux={s.aux_s:.2f}s"
+        f"infer={s.infer_s:.2f}s exist={s.exist_s:.2f}s "
+        f"aux={s.aux_s:.2f}s decode={s.decode_s:.2f}s"
     )
 
 

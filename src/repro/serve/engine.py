@@ -3,9 +3,17 @@
 Requests (key batches) are queued, merged into device-sized batches,
 deduplicated, sorted (so each T_aux partition is decompressed at most
 once per batch — §IV-B2), answered via the hybrid store, and scattered
-back to requesters.  Single-threaded synchronous core with an async
-facade; the device inference and host aux validation overlap across
-consecutive merged batches.
+back to requesters.
+
+Merged batches run as a two-stage software pipeline over the store's
+``_dispatch_lookup``/``_collect_lookup`` hooks: batch *i+1*'s device
+work is enqueued (JAX async dispatch returns immediately) before batch
+*i*'s host half — existence fallback, aux merge, decode, scatter —
+runs, so consecutive merged batches overlap while the sliding window
+keeps at most two batches in flight (device residency stays bounded
+for arbitrarily large merged requests).  For baseline stores the hooks
+degenerate to plain synchronous calls (no device stage to overlap), so
+the pipeline is a no-op there.
 """
 
 from __future__ import annotations
@@ -28,7 +36,9 @@ class ServeStats:
     batches: int = 0
     total_s: float = 0.0
     infer_s: float = 0.0
+    exist_s: float = 0.0
     aux_s: float = 0.0
+    decode_s: float = 0.0
 
     def qps(self) -> float:
         return self.keys / self.total_s if self.total_s else 0.0
@@ -38,11 +48,12 @@ class LookupServer:
     """Merge-batch server over any :class:`~repro.api.protocol.MappingStore`
     (single, sharded, or baseline).
 
-    Merged batches execute as point query plans, so the server gets the
-    unified pipeline — projection pushdown, sharded thread-pool fan-out,
-    per-plan stats — for free; merged batches arrive at the store
-    sorted, so the sharded store's scatter sees at most one contiguous
-    run per shard.
+    Merged batches execute through the store's dispatch/collect hooks,
+    so the server gets the unified pipeline — projection pushdown,
+    sharded thread-pool fan-out, infer/aux overlap across consecutive
+    merged batches, per-batch stats — for free; merged batches arrive
+    at the store sorted, so the sharded store's scatter sees at most
+    one contiguous run per shard.
     """
 
     def __init__(
@@ -66,7 +77,8 @@ class LookupServer:
         columns: Optional[Tuple[str, ...]] = None,
     ) -> List[Tuple[Dict[str, np.ndarray], np.ndarray]]:
         """Merge several key-batch requests into deduplicated device
-        batches; scatter results back per request."""
+        batches; scatter results back per request.  Device inference of
+        batch *i+1* overlaps the host half of batch *i*."""
         if not requests:
             return []  # np.concatenate rejects an empty list
         t0 = time.perf_counter()
@@ -86,19 +98,33 @@ class LookupServer:
             )
             for c, arr in res.values.items():
                 chunks[c] = [arr]
-        for start in range(0, uniq.shape[0], self.max_batch):
-            chunk = uniq[start : start + self.max_batch]
-            # Plan built directly (not via Query) so unknown column
-            # names degrade to "ignored" like the legacy lookup did.
-            res = execute_plan(
-                self.store, QueryPlan(kind="point", keys=chunk, columns=cols)
-            )
-            exists_u[start : start + self.max_batch] = res.exists
-            for c, arr in res.values.items():
+        # Two-stage pipeline over a small sliding window of batches:
+        # dispatch batch i+1's device work before collecting batch i,
+        # without enqueueing the whole merged request at once (the
+        # store layer bounds per-batch residency; this bounds batches).
+        # Columns pass straight to the hook so unknown names degrade to
+        # "ignored", like the legacy lookup did; fanout=True keeps the
+        # sharded store's thread-pool fan-out, matching plan execution.
+        def collect(start, handle):
+            vals, exists, stats = self.store._collect_lookup(handle)
+            exists_u[start : start + self.max_batch] = exists
+            for c, arr in vals.items():
                 chunks.setdefault(c, []).append(arr)
             self.stats.batches += 1
-            self.stats.infer_s += res.explain.infer_s
-            self.stats.aux_s += res.explain.aux_s
+            self.stats.infer_s += stats.infer_s
+            self.stats.exist_s += stats.exist_s
+            self.stats.aux_s += stats.aux_s
+            self.stats.decode_s += stats.decode_s
+
+        window: List = []
+        for start in range(0, uniq.shape[0], self.max_batch):
+            window.append((start, self.store._dispatch_lookup(
+                uniq[start : start + self.max_batch], cols, fanout=True
+            )))
+            if len(window) >= 2:  # one batch in flight ahead of the host
+                collect(*window.pop(0))
+        for start, handle in window:
+            collect(start, handle)
         # Concatenate per column (rather than filling a preallocated
         # buffer) so chunks that disagree on dtype — e.g. a baseline
         # store's int placeholder chunk before a string chunk —

@@ -47,3 +47,31 @@ class TestBitVector:
         bv = BitVector(0)
         assert bv.count() == 0
         assert bv.test(np.array([0, 1])).tolist() == [False, False]
+
+
+class TestCountAndVersion:
+    def test_count_matches_unpackbits(self):
+        rng = np.random.default_rng(5)
+        keys = rng.choice(100_000, size=33_333, replace=False)
+        bv = BitVector.from_keys(keys, capacity=100_000)
+        assert bv.count() == 33_333
+        want = int(np.unpackbits(bv.words.view(np.uint8)).sum())
+        assert bv.count() == want
+
+    def test_count_empty_and_full_word_edges(self):
+        assert BitVector(0).count() == 0
+        bv = BitVector.from_keys(np.arange(64))  # exactly one full word
+        assert bv.count() == 64
+        bv.set(np.array([63]), False)
+        assert bv.count() == 63
+
+    def test_version_bumps_on_mutation(self):
+        bv = BitVector.from_keys(np.array([1, 5]))
+        v0 = bv.version
+        bv.set(np.array([2]), True)
+        assert bv.version > v0
+        v1 = bv.version
+        bv.set(np.array([2]), False)
+        assert bv.version > v1
+        bv.set(np.array([], dtype=np.int64), True)  # no-op: unchanged
+        assert bv.version > v1 and bv.version == v1 + 1

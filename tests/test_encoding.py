@@ -73,3 +73,48 @@ class TestValueCodec:
         codecs = build_codecs(cols)
         assert set(codecs) == {"x", "y"}
         assert codecs["y"].cardinality == 2
+
+
+class TestValueCodecExtend:
+    def test_batch_extend_first_occurrence_order(self):
+        """Vectorized extend must assign codes in first-occurrence
+        order, exactly like the old per-value np.append loop."""
+        vc = ValueCodec("c", np.array([10, 20]))
+        vc.extend(np.array([99, 20, 77, 99, 42, 77]))
+        np.testing.assert_array_equal(vc.decode_map, [10, 20, 99, 77, 42])
+        codes, known = vc.encode(np.array([42, 99, 77, 10]))
+        assert known.all()
+        np.testing.assert_array_equal(codes, [4, 2, 3, 0])
+
+    def test_extend_strings_widen(self):
+        vc = ValueCodec("c", np.array(["ab", "cd"]))
+        vc.extend(np.array(["longer-string", "ab"]))
+        assert vc.decode_map[2] == "longer-string"
+        np.testing.assert_array_equal(vc.decode(np.array([0, 2])),
+                                      ["ab", "longer-string"])
+
+    def test_extend_empty_noop(self):
+        vc = ValueCodec("c", np.array([1, 2]))
+        vc.extend(np.array([], dtype=np.int64))
+        assert vc.cardinality == 2
+
+    def test_large_batch_single_concatenate(self):
+        vc = ValueCodec("c", np.array([0]))
+        vals = np.arange(5000)
+        vc.extend(vals)
+        assert vc.cardinality == 5000
+        np.testing.assert_array_equal(vc.decode(vc.encode(vals)[0]), vals)
+
+
+class TestPositionOps:
+    @pytest.mark.parametrize("residues", [(), (7,), (5, 12)])
+    def test_position_ops_reproduce_digits(self, residues):
+        enc = KeyEncoder(99_999, base=10, residues=residues)
+        keys = np.random.default_rng(0).integers(0, 100_000, 500).astype(np.int64)
+        want = enc.digits(keys)
+        ops = enc.position_ops()
+        assert len(ops) == enc.width
+        got = np.stack(
+            [((keys % mod) // div) % enc.base for mod, div in ops], axis=1
+        ).astype(np.int32)
+        np.testing.assert_array_equal(got, want)

@@ -145,6 +145,94 @@ class TestModifications:
         np.testing.assert_array_equal(vals["col0"][:25], upd_vals["col0"])
 
 
+class TestPipelinedLookupConformance:
+    """The engine pipeline (cached weights, bucketing, dispatch/collect,
+    fused kernel) must be invisible: lookup results byte-identical to
+    the reference staged composition, including after interleaved
+    modifications, on both the Pallas and jit paths."""
+
+    @staticmethod
+    def _reference_lookup(store, keys):
+        """The seed repo's staged path, recomposed from primitives:
+        host digits + jnp forward + host exist + aux merge + decode."""
+        from repro.kernels.ref import ref_fused_lookup
+
+        keys = np.asarray(keys, dtype=np.int64)
+        pred, exists = ref_fused_lookup(
+            store.params, keys, store.encoder, store.vexist, store.spec
+        )
+        exist_idx = np.flatnonzero(exists)
+        found, aux_codes = store.aux.get(keys[exist_idx])
+        pred[exist_idx[found]] = aux_codes[found]
+        values = {
+            t: store.codecs[t].decode(np.where(exists, pred[:, i], 0))
+            for i, t in enumerate(store.spec.tasks)
+        }
+        return values, exists
+
+    @pytest.mark.parametrize("use_pallas", [False, True])
+    def test_byte_identical_after_interleaved_mods(self, use_pallas):
+        table = make_periodic_table(n=700)
+        cfg = DeepMappingConfig(
+            shared=(48,), private=(16,),
+            train=TrainConfig(epochs=10, batch_size=256),
+            use_pallas=use_pallas,
+            inference_batch=256,  # several pipeline chunks per lookup
+        )
+        store = DeepMappingStore.build(table, cfg)
+        rng = np.random.default_rng(0)
+        cap = store.vexist.capacity
+        ins = np.arange(cap + 3, cap + 40, dtype=np.int64)
+        store.insert(ins, {
+            "col0": rng.integers(0, 5, ins.size).astype(np.int32),
+            "col1": rng.integers(0, 3, ins.size).astype(np.int32),
+        })
+        store.update(np.concatenate([table.keys[:20], ins[:5]]), {
+            "col0": rng.integers(0, 5, 25).astype(np.int32),
+            "col1": rng.integers(0, 3, 25).astype(np.int32),
+        })
+        store.delete(np.concatenate([table.keys[30:40], ins[30:]]))
+
+        probe = np.concatenate([
+            table.keys, ins, ins + 1, np.array([cap + 10**6, 2**40], np.int64)
+        ])
+        got_vals, got_exists = store.lookup(probe)
+        want_vals, want_exists = self._reference_lookup(store, probe)
+        np.testing.assert_array_equal(got_exists, want_exists)
+        for c in want_vals:
+            np.testing.assert_array_equal(got_vals[c], want_vals[c])
+
+    def test_pallas_and_jit_paths_agree(self):
+        table = make_periodic_table(n=500)
+        kw = dict(shared=(48,), private=(16,),
+                  train=TrainConfig(epochs=10, batch_size=256))
+        a = DeepMappingStore.build(table, DeepMappingConfig(use_pallas=True, **kw))
+        b = DeepMappingStore.build(table, DeepMappingConfig(use_pallas=False, **kw))
+        keys = np.concatenate([table.keys, table.keys[:50] + 1])
+        va, ea = a.lookup(keys)
+        vb, eb = b.lookup(keys)
+        np.testing.assert_array_equal(ea, eb)
+        for c in va:
+            np.testing.assert_array_equal(va[c], vb[c])
+
+    def test_engine_weight_cache_warm_from_build(self):
+        table = make_periodic_table(n=400)
+        store = DeepMappingStore.build(table, FAST)
+        # build's misclassification evaluation already populated the
+        # all-tasks entry; lookups must not re-pad
+        misses0 = store.engine.stats.weight_cache_misses
+        store.lookup(table.keys[:100])
+        store.lookup(table.keys[:200])
+        assert store.engine.stats.weight_cache_misses == misses0
+
+    def test_bucketed_compiles_across_batch_sizes(self):
+        table = make_periodic_table(n=600)
+        store = DeepMappingStore.build(table, FAST)
+        for n in (1, 3, 17, 40, 77, 130, 200, 311, 400, 555):
+            store.lookup(table.keys[:n])
+        assert store.engine.stats.compiles <= 6
+
+
 class TestSerialization:
     def test_roundtrip(self, small_store, tmp_path):
         table, store = small_store

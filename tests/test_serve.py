@@ -80,3 +80,14 @@ class TestLookupServer:
         srv.lookup(table.keys[:10])
         assert srv.stats.requests == 2
         assert srv.stats.qps() > 0
+
+    def test_stats_record_all_pipeline_stages(self, server):
+        """Regression: exist_s/decode_s used to be dropped on the floor."""
+        table, srv = server
+        srv.stats = type(srv.stats)()
+        srv.lookup(table.keys[:200])
+        s = srv.stats
+        assert s.infer_s > 0 and s.decode_s > 0
+        assert s.exist_s >= 0 and s.aux_s >= 0
+        # fused existence runs in-kernel (exist_s ~ 0); host path times it
+        assert s.total_s > 0
