@@ -15,6 +15,10 @@ Sections:
   shards  — sharded cluster scaling: build / lookup QPS / dirty-shard retrain
   query   — plan executor vs legacy lookup (point/range/scan, projection
             pushdown, sharded sync vs async fan-out)
+  query_stream — streaming operator pipeline: multi-plan pipelined vs
+            serial, value-predicate pushdown vs post-hoc filter; writes
+            BENCH_query.json at the repo root (uploaded by the CI
+            smoke-bench job alongside BENCH_lookup.json)
   lookup_pipeline — staged (seed path) vs pipelined (inference engine)
             hot-path comparison; writes BENCH_lookup.json at the repo
             root (p50/p99 latency, QPS, compile counts) — the CI
@@ -73,6 +77,9 @@ def main() -> None:
                 fixed_repeats=4 if (args.smoke or not args.full) else 8,
                 sweep_sizes=50,
             )
+        ),
+        "query_stream": lambda: bench_query.write_query_json(
+            bench_query.run_streaming(smoke=args.smoke)
         ),
         # lazy: bench_tokens hard-imports zstandard (optional elsewhere);
         # a host without it should still run every other section

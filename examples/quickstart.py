@@ -1,12 +1,13 @@
 """Quickstart: compress a table into a DeepMapping hybrid structure,
-query it through the unified plan API, modify, and measure Eq. 1.
+query it through the streaming plan API — projection and value-
+predicate pushdown, cross-store federation — modify, and measure Eq. 1.
 
     PYTHONPATH=src python examples/quickstart.py
     PYTHONPATH=src python examples/quickstart.py --shards 4 --policy range
 
-Every store (single, sharded, baselines) implements the same
-``MappingStore`` protocol; ``repro.build`` picks single-vs-sharded from
-the cluster config and ``repro.open`` re-loads whatever was saved.
+Every store (single, sharded, baselines, federated) implements the
+same ``MappingStore`` protocol; ``repro.build`` picks single-vs-sharded
+from the cluster config and ``repro.open`` re-loads whatever was saved.
 """
 
 import argparse
@@ -85,6 +86,27 @@ def main() -> None:
     print(f"  [0, 1024) -> {res.keys.shape[0]} rows, "
           f"priorities {sorted(set(res.values['priority'].tolist()))}")
 
+    print("\n-- Value-predicate pushdown (.where) -------------")
+    # Pushed below decode: the predicate evaluates on argmax codes, so
+    # non-matching rows are never decoded (see rows_decoded evidence).
+    res = (
+        store.query().select("priority")
+        .where("status", "==", "F").where("priority", ">=", 3)
+        .scan().execute()
+    )
+    ref = (
+        store.query().select("priority")
+        .where("status", "==", "F").where("priority", ">=", 3)
+        .pushdown(False).scan().execute()  # post-hoc reference filter
+    )
+    assert res.keys.tobytes() == ref.keys.tobytes()
+    print(f"  status=='F' AND priority>=3 -> {res.keys.shape[0]} rows")
+    print(f"  pushdown decoded {res.explain.rows_decoded}/{res.explain.num_keys} "
+          f"rows; post-hoc decoded {ref.explain.rows_decoded}")
+    print("  operators: " + " -> ".join(
+        f"{o.name}[{o.rows_in}->{o.rows_out}]" for o in res.explain.operators
+    ))
+
     print("\n-- Modifications (Algorithms 3-5) ----------------")
     store.insert(
         np.array([10**6], dtype=np.int64),
@@ -109,6 +131,32 @@ def main() -> None:
     res = restored.query().where_keys(np.array([0, 2, 10**6])).execute()
     print(f"  reopened as {type(restored).__name__}; "
           f"exists={res.exists.tolist()}")
+
+    print("\n-- Cross-store federation ------------------------")
+    # Two stores over disjoint key spaces behind one plan surface: the
+    # DeepMapping store keeps its keys, a HashStore replica owns a
+    # second key range starting at 10**7.
+    from repro.api import FederatedStore
+    from repro.baselines import HashStore
+
+    hi_keys = np.arange(10**7, 10**7 + 5000, 2, dtype=np.int64)
+    hi_table = Table(
+        keys=hi_keys,
+        columns={
+            "status": np.array(["F", "O", "P"])[(hi_keys // 64) % 3],
+            "priority": ((hi_keys // 128) % 5).astype(np.int32),
+        },
+    )
+    fed = FederatedStore(
+        [store, HashStore.build(hi_table)],
+        mode="partition",
+        boundaries=[10**7],
+    )
+    res = fed.query().where("priority", "==", 4).where_range(0, 10**8).execute()
+    print(f"  {fed.num_rows:,} rows across {len(fed.members)} member stores")
+    print(f"  priority==4 over both members -> {res.keys.shape[0]} rows "
+          f"(min key {res.keys.min()}, max key {res.keys.max()})")
+    print(f"  plan: {' -> '.join(res.explain.plan[:3])} ...")
 
     if args.shards > 1:
         print("\n-- Per-shard lazy retrain ------------------------")

@@ -3,13 +3,16 @@ DeepMapping store, stand up the batched LookupServer, and push mixed
 batched request traffic through it — the paper-kind analogue of
 "serve a small model with batched requests".
 
-The server rides the unified query API: merged batches execute as
-point plans, so projection pushdown (only the requested column's model
-head runs) and — with ``--shards`` — the sharded thread-pool fan-out
-apply to served traffic too.
+The server rides the streaming query executor: merged batches become
+morselized point plans, so projection pushdown (only the requested
+column's model head runs), value-predicate pushdown (``.where``), and
+— with ``--shards`` — the sharded thread-pool fan-out apply to served
+traffic too.  ``--replica`` federates the DeepMapping primary with a
+HashStore replica (round-robin morsel routing) and serves through the
+federation.
 
     PYTHONPATH=src python examples/serve_lookup.py
-    PYTHONPATH=src python examples/serve_lookup.py --shards 4
+    PYTHONPATH=src python examples/serve_lookup.py --shards 4 --replica
 """
 
 import argparse
@@ -17,6 +20,8 @@ import argparse
 import numpy as np
 
 import repro
+from repro.api import FederatedStore
+from repro.baselines import HashStore
 from repro.core import DeepMappingConfig
 from repro.core.trainer import TrainConfig
 from repro.data import customer_demographics_like
@@ -26,6 +31,9 @@ from repro.serve import LookupServer
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--shards", type=int, default=1)
+    ap.add_argument("--replica", action="store_true",
+                    help="serve through a DM-primary + HashStore-replica "
+                         "federation (round-robin morsel routing)")
     args = ap.parse_args()
 
     table = customer_demographics_like(n=50_000)
@@ -43,6 +51,13 @@ def main() -> None:
         cluster=cluster,
         verbose=True,
     )
+    if args.replica:
+        store = FederatedStore(
+            [store, HashStore.build(table)],
+            mode="replicate",
+            policy="round_robin",
+        )
+        print(f"federated: {len(store.members)} replicas, round-robin routing")
     server = LookupServer(store, max_batch=16384)
 
     rng = np.random.default_rng(0)
@@ -74,6 +89,24 @@ def main() -> None:
     )
     print(f"plan: {' -> '.join(res.explain.plan)}")
     print(f"pushdown: heads skipped = {res.explain.heads_skipped}")
+
+    # value-predicate pushdown: filter on a column the projection
+    # doesn't even return — its head is evaluated at code level, and
+    # non-matching rows are never decoded.  Query the DM store
+    # directly: round-robin federation routing could hand the morsel
+    # to the hash replica, whose overlay-view filter decodes all rows.
+    dm = store.members[0] if args.replica else store
+    res = (
+        dm.query()
+        .select("cd_purchase_estimate")
+        .where("cd_dep_count", ">=", 4)
+        .where_keys(np.unique(np.concatenate(requests)))
+        .execute()
+    )
+    print(f"where(cd_dep_count>=4): {res.keys.shape[0]} rows; "
+          f"decoded {res.explain.rows_decoded}/{res.explain.num_keys} rows "
+          f"(predicate head evaluated: "
+          f"{'cd_dep_count' in res.explain.heads_evaluated})")
 
     # spot-check correctness against the source table
     req0, (vals0, e0) = requests[0], results[0]

@@ -1,6 +1,6 @@
 """Unified store API: the :class:`MappingStore` protocol, the
-plan-based query layer, and the ``repro.open`` / ``repro.build``
-entrypoints.
+plan-based streaming query layer, cross-store federation, and the
+``repro.open`` / ``repro.build`` entrypoints.
 
 Store implementations (``repro.core``, ``repro.cluster``,
 ``repro.baselines``) subclass :class:`MappingStore`; this package never
@@ -9,7 +9,21 @@ direction stays acyclic: ``api <- stores <- serve/benchmarks``.
 """
 
 from repro.api.entry import build, open  # noqa: F401,A004
-from repro.api.executor import execute_plan  # noqa: F401
-from repro.api.plan import ExplainStats, QueryPlan, QueryResult  # noqa: F401
+from repro.api.executor import (  # noqa: F401
+    MorselResult,
+    execute_plan,
+    execute_plan_staged,
+    execute_plans,
+    stream_plan,
+)
+from repro.api.federated import FederatedStore  # noqa: F401
+from repro.api.plan import (  # noqa: F401
+    ExplainStats,
+    OperatorStats,
+    Predicate,
+    QueryPlan,
+    QueryResult,
+    evaluate_predicates,
+)
 from repro.api.protocol import CONFORMANCE_METHODS, MappingStore  # noqa: F401
 from repro.api.query import Query  # noqa: F401

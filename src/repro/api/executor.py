@@ -1,62 +1,395 @@
-"""Shared plan executor.
+"""Streaming operator-pipeline executor.
 
-Every plan runs the same pipeline regardless of store type:
+Every plan compiles to the same small operator IR regardless of store
+type:
 
-    key source  ->  (shard scatter)  ->  batched inference + existence
-    + aux merge ->  decode projection ->  gather
+    KeySource -> (ShardScatter) -> Infer -> Exist -> AuxMerge
+              -> Filter -> Decode -> Gather
 
-The store-specific middle is behind two protocol hooks:
-``_range_keys(lo, hi)`` resolves range/scan key sources against the
-store's existence index, and ``_lookup_with_stats(keys, columns,
-fanout)`` answers a key batch with per-stage stats.  The sharded store
-implements the scatter + thread-pool fan-out inside its hook; the
-executor stays oblivious.
+and is executed **morsel-at-a-time**: the key stream is cut into
+``plan.morsel_rows()`` chunks, each chunk's device work is enqueued
+through the store's ``_dispatch_lookup`` hook before the previous
+chunk's host half (existence fallback, aux merge, predicate filter,
+decode) is collected — so model-backed stores overlap device inference
+of morsel *i+1* with host work of morsel *i*.  :func:`execute_plans`
+extends the same window **across plans**: while plan A's host half
+runs, plans B..'s device work keeps executing, which is where
+multi-plan pipelines win over running ``execute_plan`` in a loop.
+
+The store-specific middle stages stay behind the two protocol hooks
+(``_dispatch_lookup``/``_collect_lookup``); the sharded store
+implements scatter + thread-pool fan-out inside its hook, the
+federated store per-member scatter — the executor stays oblivious.
+
+Value predicates (``Query.where``) ride the same hooks: with
+``plan.pushdown`` (default) the store evaluates them below decode
+(code-level on DeepMapping stores — non-matching rows are never
+decoded; overlay-view on baselines) and returns a ``match`` selector;
+with ``pushdown=False`` the executor runs the **post-hoc reference
+path** — decode everything, filter on decoded values — kept for
+byte-equality testing and as the semantics oracle.
 
 Plan execution defaults the sharded fan-out ON (overlapping per-shard
 inference — ``Query.fanout(False)`` restores serial visits); the
 legacy ``store.lookup`` shim stays serial for bit-for-bit continuity.
+:func:`execute_plan_staged` keeps the pre-streaming one-shot path as a
+reference implementation for the equivalence suite.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import time
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.api.plan import QueryPlan, QueryResult
+from repro.api.plan import (
+    ExplainStats,
+    OperatorStats,
+    Predicate,
+    QueryPlan,
+    QueryResult,
+    columns_with_predicates,
+    evaluate_predicates,
+)
+from repro.api.protocol import _check_index_agreement
+
+#: Morsels in flight ahead of the host half, per plan.  Matches the
+#: store-level DISPATCH_WINDOW so device residency stays bounded.
+MORSEL_WINDOW = 2
+
+
+@dataclasses.dataclass
+class MorselResult:
+    """One collected morsel of a streaming plan.
+
+    ``keys``/``values``/``exists`` are aligned with the morsel's slice
+    of the key stream; ``match`` is the pushed-down predicate selector
+    (``None`` = no predicates — every existing row is a result row).
+    """
+
+    index: int
+    start: int
+    keys: np.ndarray
+    values: Dict[str, np.ndarray]
+    exists: np.ndarray
+    match: Optional[np.ndarray]
+    stats: ExplainStats
+
+
+def _resolve_keys(store, plan: QueryPlan) -> Tuple[np.ndarray, float]:
+    """KeySource operator: materialize the plan's key stream."""
+    t0 = time.perf_counter()
+    if plan.kind == "point":
+        keys = np.asarray(plan.keys, dtype=np.int64)
+    elif plan.kind == "range":
+        keys = store._range_keys(int(plan.lo), int(plan.hi))
+    else:  # scan
+        keys = store._all_keys()
+    return keys, time.perf_counter() - t0
+
+
+class PlanStream:
+    """One plan's morsel state machine.
+
+    Splits the key stream into morsels and drives the store's
+    dispatch/collect hooks with an explicit in-flight window.  The
+    multiplexers (:func:`stream_plan`, :func:`execute_plans`) call
+    :meth:`dispatch_one` / :meth:`collect_one` in whatever order keeps
+    the most device work in flight.
+    """
+
+    def __init__(self, store, plan: QueryPlan):
+        self.store = store
+        self.plan = plan
+        self.keys, self.route_s = _resolve_keys(store, plan)
+        self.morsel = plan.morsel_rows()
+        self.fanout = True if plan.fanout is None else plan.fanout
+        self.preds: Tuple[Predicate, ...] = (
+            plan.predicates if plan.pushdown else ()
+        )
+        # Post-hoc filtering evaluates on decoded values, so the
+        # predicate columns must be decoded even when the projection
+        # excludes them (_finalize_morsel drops them after filtering).
+        self.columns = plan.columns
+        if plan.predicates and not plan.pushdown:
+            self.columns = columns_with_predicates(plan.columns, plan.predicates)
+        self.num_morsels = max(1, -(-self.keys.shape[0] // self.morsel))
+        self._next_dispatch = 0
+        self._next_collect = 0
+        self._inflight: List[Tuple[int, object]] = []  # (morsel index, handle)
+
+    # ------------------------------------------------------------- state
+    @property
+    def dispatch_done(self) -> bool:
+        return self._next_dispatch >= self.num_morsels
+
+    @property
+    def done(self) -> bool:
+        return self._next_collect >= self.num_morsels
+
+    @property
+    def inflight(self) -> int:
+        return len(self._inflight)
+
+    # ------------------------------------------------------------- steps
+    def dispatch_one(self) -> bool:
+        """Enqueue the next morsel's device work; False when drained."""
+        if self.dispatch_done:
+            return False
+        i = self._next_dispatch
+        chunk = self.keys[i * self.morsel : (i + 1) * self.morsel]
+        handle = self.store._dispatch_lookup(
+            chunk, self.columns, fanout=self.fanout, predicates=self.preds
+        )
+        self._inflight.append((i, handle))
+        self._next_dispatch += 1
+        return True
+
+    def collect_one(self) -> MorselResult:
+        """Block on the oldest in-flight morsel's host half."""
+        if not self._inflight:
+            raise RuntimeError("collect_one with no morsel in flight")
+        i, handle = self._inflight.pop(0)
+        values, exists, match, stats = self.store._collect_lookup(handle)
+        start = i * self.morsel
+        self._next_collect += 1
+        return MorselResult(
+            index=i,
+            start=start,
+            keys=self.keys[start : start + self.morsel],
+            values=values,
+            exists=exists,
+            match=match,
+            stats=stats,
+        )
+
+
+# --------------------------------------------------------------- finalize
+def _finalize_morsel(plan: QueryPlan, morsel: MorselResult) -> MorselResult:
+    """The ONE place ``pushdown(False)`` semantics live: filter on the
+    decoded values (the byte-equality oracle for pushdown) and drop
+    the pred-only columns, so every consumer (``stream_plan``,
+    ``execute_plan``, ``execute_plans``) sees the same match contract
+    — never silently unfiltered rows.  Also enforces the range/scan
+    existence-index invariant for every morsel consumer, streaming
+    included."""
+    if plan.kind != "point":
+        _check_index_agreement(f"{plan.kind} plan", morsel.exists)
+    if plan.predicates and not plan.pushdown:
+        morsel.match = evaluate_predicates(
+            plan.predicates, morsel.values, morsel.exists, morsel.stats
+        )
+        if plan.columns is not None:
+            morsel.values = {c: morsel.values[c] for c in plan.columns}
+    return morsel
+
+
+def _stream_run(run: PlanStream, window: int) -> Iterator[MorselResult]:
+    while not run.done:
+        while run.inflight < window and run.dispatch_one():
+            pass
+        yield _finalize_morsel(run.plan, run.collect_one())
+
+
+def stream_plan(
+    store, plan: QueryPlan, window: int = MORSEL_WINDOW
+) -> Iterator[MorselResult]:
+    """Execute ``plan`` as a morsel stream (generator).
+
+    Keeps up to ``window`` morsels' device work in flight ahead of the
+    host half; yields morsels in key-stream order (post-hoc predicates
+    already applied as ``match`` selectors).  Callers that only need
+    the final relation should use :func:`execute_plan`; streaming
+    consumers (the serving engine, federated gathers) get bounded
+    memory and early rows from this form.
+    """
+    return _stream_run(PlanStream(store, plan), window)
+
+
+def _concat(parts: List[np.ndarray]) -> np.ndarray:
+    return parts[0] if len(parts) == 1 else np.concatenate(parts)
+
+
+class _Gatherer:
+    """Gather operator: accumulate finalized morsels (post-hoc filter
+    already applied by :func:`_finalize_morsel`) into one QueryResult."""
+
+    def __init__(self, plan: QueryPlan):
+        self.plan = plan
+        self.stats = ExplainStats(kind=plan.kind)
+        self.key_parts: List[np.ndarray] = []
+        self.exists_parts: List[np.ndarray] = []
+        self.value_parts: Dict[str, List[np.ndarray]] = {}
+        self.inner_plan: Tuple[str, ...] = ()
+        self.t0 = time.perf_counter()
+
+    def add(self, morsel: MorselResult) -> None:
+        t0 = time.perf_counter()
+        if morsel.match is not None:
+            sel = morsel.match
+            self.key_parts.append(morsel.keys[sel])
+            self.exists_parts.append(morsel.exists[sel])
+            for c, arr in morsel.values.items():
+                self.value_parts.setdefault(c, []).append(arr[sel])
+        else:
+            self.key_parts.append(morsel.keys)
+            self.exists_parts.append(morsel.exists)
+            for c, arr in morsel.values.items():
+                self.value_parts.setdefault(c, []).append(arr)
+        if not self.inner_plan:
+            self.inner_plan = morsel.stats.plan
+        self.stats.merge_timings(morsel.stats)
+        self.stats.morsels += 1
+        self.stats.gather_s += time.perf_counter() - t0
+
+    def finish(self, run: PlanStream) -> QueryResult:
+        t0 = time.perf_counter()
+        keys = (
+            _concat(self.key_parts)
+            if self.key_parts
+            else np.zeros(0, dtype=np.int64)
+        )
+        exists = (
+            _concat(self.exists_parts)
+            if self.exists_parts
+            else np.zeros(0, dtype=bool)
+        )
+        values = {c: _concat(parts) for c, parts in self.value_parts.items()}
+        stats = self.stats
+        stats.gather_s += time.perf_counter() - t0
+        stats.num_keys = int(run.keys.shape[0])
+        stats.num_rows = int(exists.sum())
+        stats.route_s += run.route_s
+        filtered = bool(self.plan.predicates)
+        stats.plan = (
+            (run.plan.source_stage(),)
+            + self.inner_plan
+            + ((f"filter[{','.join(stats.predicates)}]",) if filtered else ())
+            + (f"gather[{stats.morsels} morsels]",)
+        )
+        stats.total_s = time.perf_counter() - self.t0
+        n = stats.num_keys
+        ops = [OperatorStats("key_source", 0, n, stats.route_s)]
+        if stats.shards_visited:
+            ops.append(OperatorStats("shard_scatter", n, n, 0.0))
+        ops.append(OperatorStats("infer", n, n, stats.infer_s))
+        ops.append(OperatorStats("exist", n, n, stats.exist_s))
+        ops.append(OperatorStats("aux_merge", n, n, stats.aux_s))
+        if filtered:
+            ops.append(OperatorStats("filter", n, stats.rows_matched, stats.filter_s))
+        ops.append(
+            OperatorStats("decode", stats.rows_decoded, stats.rows_decoded,
+                          stats.decode_s)
+        )
+        ops.append(OperatorStats("gather", n, keys.shape[0], stats.gather_s))
+        stats.operators = tuple(ops)
+        return QueryResult(keys=keys, values=values, exists=exists, explain=stats)
 
 
 def execute_plan(store, plan: QueryPlan) -> QueryResult:
-    """Run ``plan`` against ``store`` -> :class:`QueryResult`."""
+    """Run ``plan`` against ``store`` -> :class:`QueryResult` (the
+    morsel stream, fully gathered)."""
+    run = PlanStream(store, plan)
+    gatherer = _Gatherer(plan)
+    for morsel in _stream_run(run, MORSEL_WINDOW):
+        gatherer.add(morsel)
+    return gatherer.finish(run)
+
+
+def execute_plans(
+    pairs: Sequence[Tuple[object, QueryPlan]],
+    window: int = MORSEL_WINDOW,
+    max_inflight: int = 16,
+) -> List[QueryResult]:
+    """Run several plans — possibly against several stores — through
+    ONE interleaved morsel pipeline.
+
+    Dispatch is round-robin across plans: every live plan keeps up to
+    ``window`` morsels of device work in flight, and collections
+    rotate, so while one plan's host half (aux merge, filter, decode)
+    runs, every other plan's device inference keeps executing.  This is
+    the cross-plan overlap ``execute_plan`` in a loop cannot give: a
+    serial loop drains plan *i* completely (device idle during its last
+    host half) before plan *i+1* dispatches anything.
+
+    ``window`` bounds residency per plan; ``max_inflight`` bounds the
+    FLEET — the aggregate morsels in flight never exceed it, so a
+    64-plan batch cannot pin 64x``window`` morsels on device (top-up is
+    round-robin one morsel at a time, keeping the budget fair across
+    plans).
+
+    Results arrive in input order, each identical to what
+    ``execute_plan`` would have produced alone.
+    """
+    max_inflight = max(1, int(max_inflight))
+    runs = [PlanStream(store, plan) for store, plan in pairs]
+    gatherers = [_Gatherer(plan) for _, plan in pairs]
+    results: List[Optional[QueryResult]] = [None] * len(runs)
+    live = list(range(len(runs)))
+    rounds = 0
+    while live:
+        # Phase 1: top up every live plan's dispatch window — device
+        # work from ALL plans is enqueued before any host half blocks —
+        # round-robin one morsel per pass, under the global budget.
+        # The starting plan rotates per round so a fleet larger than
+        # the budget cannot starve its tail: budget freed by the head
+        # plans' collections is offered to a different plan each time.
+        total = sum(runs[i].inflight for i in live)
+        start = rounds % len(live)
+        order = live[start:] + live[:start]
+        topped = True
+        while topped and total < max_inflight:
+            topped = False
+            for i in order:
+                if total >= max_inflight:
+                    break
+                run = runs[i]
+                if run.inflight < window and run.dispatch_one():
+                    total += 1
+                    topped = True
+        # Phase 2: collect one morsel per live plan, round-robin.
+        still = []
+        for i in live:
+            run = runs[i]
+            if run.inflight:
+                gatherers[i].add(_finalize_morsel(run.plan, run.collect_one()))
+            if run.done:
+                results[i] = gatherers[i].finish(run)
+            else:
+                still.append(i)
+        live = still
+        rounds += 1
+    return results  # type: ignore[return-value]
+
+
+def execute_plan_staged(store, plan: QueryPlan) -> QueryResult:
+    """Legacy one-shot path (pre-streaming executor), kept as the
+    reference implementation for the byte-equality suite: the whole
+    key stream answered as a single batch through
+    ``_lookup_with_stats``, predicates applied post-hoc."""
     t0 = time.perf_counter()
-
-    # Stage 1: key source.
-    if plan.kind == "point":
-        keys = np.asarray(plan.keys, dtype=np.int64)
-        route_s = 0.0
-    elif plan.kind == "range":
-        keys = store._range_keys(int(plan.lo), int(plan.hi))
-        route_s = time.perf_counter() - t0
-    else:  # scan
-        keys = store._all_keys()
-        route_s = time.perf_counter() - t0
-
-    # Stages 2-5: scatter / inference / aux merge / decode (store hooks).
-    # dispatch/collect pair: device work is enqueued before the host
-    # half starts, so model-backed stores overlap inference of later
-    # chunks with aux-merge + decode of earlier ones (and callers that
-    # interleave several plans get cross-plan overlap for free).
+    keys, route_s = _resolve_keys(store, plan)
+    num_keys = int(keys.shape[0])
+    selected = plan.columns
+    need = columns_with_predicates(selected, plan.predicates)
     fanout = True if plan.fanout is None else plan.fanout
-    handle = store._dispatch_lookup(keys, plan.columns, fanout=fanout)
-    values, exists, stats = store._collect_lookup(handle)
-
+    values, exists, stats = store._lookup_with_stats(keys, need, fanout=fanout)
+    if plan.kind != "point":
+        _check_index_agreement(f"{plan.kind} plan", exists)
+    if plan.predicates:
+        match = evaluate_predicates(plan.predicates, values, exists, stats)
+        keys, exists = keys[match], exists[match]
+        values = {
+            c: arr[match]
+            for c, arr in values.items()
+            if selected is None or c in selected
+        }
     stats.kind = plan.kind
     stats.plan = (plan.source_stage(),) + stats.plan
-    stats.num_keys = int(keys.shape[0])
+    stats.num_keys = num_keys
     stats.num_rows = int(exists.sum())
     stats.route_s += route_s
     stats.total_s = time.perf_counter() - t0
-    if plan.kind != "point":
-        # Range/scan keys come from the existence index, so every one exists.
-        assert bool(exists.all())
     return QueryResult(keys=keys, values=values, exists=exists, explain=stats)

@@ -1,0 +1,325 @@
+"""Cross-store federation: one plan over several member stores.
+
+:class:`FederatedStore` composes N :class:`~repro.api.protocol.MappingStore`
+members — any mix of DeepMapping, sharded, and baseline stores —
+behind the same protocol surface, so every query-layer feature (plans,
+projection + predicate pushdown, the streaming executor, the serving
+engine) runs unchanged against the federation.  Two composition modes:
+
+* ``mode="partition"`` — members own **disjoint key ranges** split at
+  ``boundaries`` (sorted ints, one fewer than members; member *i* owns
+  ``[boundaries[i-1], boundaries[i])`` with open ends).  Lookups
+  scatter per member and gather back in request order; range/scan key
+  sources concatenate the members' ascending streams; mutations route
+  to the owning member.  E.g. two sharded clusters over disjoint key
+  spaces behind one facade.
+
+* ``mode="replicate"`` — every member holds the **same relation**
+  (e.g. a DeepMapping primary + a HashStore replica).  Each dispatched
+  morsel is answered by ONE member: ``policy="primary"`` always asks
+  member 0 (deterministic), ``policy="round_robin"`` rotates members
+  per dispatch so a morsel stream load-balances across replicas while
+  earlier morsels' host halves are still draining.  Mutations apply to
+  every member, keeping replicas in sync.
+
+Federation invariants:
+
+* members expose identical column sets (checked at construction);
+* partition members' key ranges are disjoint by construction — a key
+  is answered by exactly one member, so scatter/gather is a
+  permutation (the sharded-cluster invariant, one level up);
+* replicate members agree on content (the caller's responsibility —
+  e.g. built from one table or kept in sync through the facade);
+  *values* equality across replicas is semantic, not byte-level
+  (different store types may decode to different dtypes).
+
+A federation is a runtime composition, not a storage format: ``save``
+is intentionally unsupported — persist the members individually and
+recompose.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.api.plan import ExplainStats
+from repro.api.protocol import MappingStore
+from repro.api.routing import gather_parts, group_runs
+
+MODES = ("partition", "replicate")
+POLICIES = ("primary", "round_robin")
+
+
+class _PendingFederatedLookup:
+    """Per-member dispatches in flight for one request batch."""
+
+    __slots__ = ("keys", "parts", "route_s", "predicates", "member_ids")
+
+    def __init__(self, keys, parts, route_s, predicates, member_ids):
+        self.keys = keys
+        self.parts = parts          # [(member, positions, handle), ...]
+        self.route_s = route_s
+        self.predicates = predicates
+        self.member_ids = member_ids
+
+
+class FederatedStore(MappingStore):
+    """One logical store over several member stores (see module doc)."""
+
+    def __init__(
+        self,
+        members: Sequence[MappingStore],
+        mode: str = "partition",
+        boundaries: Optional[Sequence[int]] = None,
+        policy: str = "primary",
+    ):
+        if not members:
+            raise ValueError("federation needs at least one member store")
+        if mode not in MODES:
+            raise ValueError(f"unknown federation mode {mode!r}; have {MODES}")
+        if policy not in POLICIES:
+            raise ValueError(f"unknown routing policy {policy!r}; have {POLICIES}")
+        cols = tuple(members[0].columns)
+        for i, m in enumerate(members[1:], 1):
+            # set equality: different store types canonicalize column
+            # ORDER differently (MLPSpec sorts tasks, baselines keep
+            # table order); values are keyed by name, so order is
+            # presentation only and member 0's wins.
+            if set(m.columns) != set(cols):
+                raise ValueError(
+                    f"member {i} columns {tuple(m.columns)} != member 0 "
+                    f"columns {cols}; federation needs one schema"
+                )
+        if mode == "partition":
+            if boundaries is None or len(boundaries) != len(members) - 1:
+                raise ValueError(
+                    "partition mode needs len(members)-1 sorted boundaries"
+                )
+            b = [int(x) for x in boundaries]
+            if sorted(b) != b:
+                raise ValueError(f"boundaries must be ascending: {b}")
+            self.boundaries = np.asarray(b, dtype=np.int64)
+        else:
+            if boundaries is not None:
+                raise ValueError("replicate mode takes no boundaries")
+            self.boundaries = None
+        self.members = list(members)
+        self.mode = mode
+        self.policy = policy
+        self._columns = cols
+        self._rr = 0  # round-robin cursor (replicate mode)
+
+    # --------------------------------------------------------------- routing
+    def _member_of(self, keys: np.ndarray) -> np.ndarray:
+        return np.searchsorted(self.boundaries, keys, side="right")
+
+    def _scatter(self, keys: np.ndarray) -> List[Tuple[int, np.ndarray]]:
+        """Partition-mode scatter -> ``[(member_id, positions), ...]``
+        (ascending member id; empty members skipped).  Zero-length
+        batches scatter to nobody — mutations stay no-ops."""
+        if keys.shape[0] == 0:
+            return []
+        return group_runs(self._member_of(keys))
+
+    def _pick_replica(self) -> int:
+        if self.policy == "primary":
+            return 0
+        i = self._rr % len(self.members)
+        self._rr += 1
+        return i
+
+    # -------------------------------------------------------------- protocol
+    @property
+    def columns(self) -> Tuple[str, ...]:
+        return self._columns
+
+    def _dispatch_lookup(self, keys, columns=None, fanout=None, predicates=()):
+        """Per-member scatter: every touched member's device work is
+        enqueued before any host half runs, so a federated morsel
+        overlaps member inference the same way the sharded store
+        overlaps shard inference."""
+        keys = np.asarray(keys, dtype=np.int64)
+        t0 = time.perf_counter()
+        if self.mode == "replicate" or keys.shape[0] == 0:
+            mid = self._pick_replica() if self.mode == "replicate" else 0
+            groups = [(mid, np.arange(keys.shape[0], dtype=np.int64))]
+        else:
+            groups = self._scatter(keys)
+        route_s = time.perf_counter() - t0
+        parts = [
+            (
+                m,
+                pos,
+                self.members[m]._dispatch_lookup(
+                    keys[pos], columns, fanout=fanout, predicates=predicates
+                ),
+            )
+            for m, pos in groups
+        ]
+        return _PendingFederatedLookup(
+            keys, parts, route_s, tuple(predicates), [m for m, _ in groups]
+        )
+
+    def _collect_lookup(self, pending: _PendingFederatedLookup):
+        """Streaming gather: collect each member's host half and
+        permute results back to request order."""
+        n = pending.keys.shape[0]
+        agg = ExplainStats(route_s=pending.route_s)
+        collected = []
+        member_plan: Tuple[str, ...] = ()
+        for m, pos, handle in pending.parts:
+            values, exists, match, stats = self.members[m]._collect_lookup(handle)
+            # Namespace member-local shard ids before the union: two
+            # sharded members both have a "shard 0", and deduping them
+            # would under-report the federation's true fan-out.
+            stats.shard_ids = tuple(f"m{m}:{s}" for s in stats.shard_ids)
+            agg.merge_timings(stats)
+            if not member_plan:
+                member_plan = stats.plan
+            collected.append((pos, values, exists, match))
+        t0 = time.perf_counter()
+        if pending.predicates and any(m is None for _, _, _, m in collected):
+            # Contract: a member given predicates must return a match
+            # selector; substituting "nothing matched" would silently
+            # drop rows instead of surfacing the broken member hook.
+            raise RuntimeError(
+                "federation member returned match=None for a predicated "
+                "lookup; its _collect_lookup violates the hook contract"
+            )
+        if len(collected) == 1 and np.array_equal(
+            collected[0][0], np.arange(n, dtype=np.int64)
+        ):
+            # One member answered the whole batch in request order
+            # (always true in replicate mode): the inverse permutation
+            # is the identity — skip the per-column fancy-index copies.
+            _, values, exists, match = collected[0]
+        else:
+            values, exists = gather_parts(
+                n, ((p, v, e) for p, v, e, _ in collected)
+            )
+            match = None
+            if pending.predicates:
+                match = np.zeros(n, dtype=bool)
+                for pos, _, _, m in collected:
+                    match[pos] = m
+        agg.gather_s += time.perf_counter() - t0
+        agg.plan = (
+            f"federate[{self.mode}:"
+            f"{','.join(str(m) for m in pending.member_ids)}]",
+        ) + member_plan
+        return values, exists, match, agg
+
+    def lookup(
+        self, keys: np.ndarray, columns: Optional[Tuple[str, ...]] = None
+    ) -> Tuple[Dict[str, np.ndarray], np.ndarray]:
+        values, exists, _, _ = self._collect_lookup(
+            self._dispatch_lookup(keys, columns)
+        )
+        return values, exists
+
+    def _range_keys(self, lo: int, hi: Optional[int]) -> np.ndarray:
+        if self.mode == "replicate":
+            return self.members[0]._range_keys(lo, hi)
+        parts = []
+        for i, m in enumerate(self.members):
+            m_lo = lo if i == 0 else max(lo, int(self.boundaries[i - 1]))
+            m_hi = hi if i == len(self.members) - 1 else (
+                int(self.boundaries[i])
+                if hi is None
+                else min(hi, int(self.boundaries[i]))
+            )
+            if m_hi is not None and m_hi <= m_lo:
+                continue
+            part = m._range_keys(m_lo, m_hi)
+            if part.size:
+                parts.append(part)
+        if not parts:
+            return np.zeros(0, dtype=np.int64)
+        # members are ordered by boundary, so concatenation is ascending
+        return np.concatenate(parts)
+
+    # ---------------------------------------------------------- mutations
+    # Validated against EVERY affected member before mutating ANY
+    # (same discipline as the sharded facade): a rejected batch must
+    # leave the federation untouched, not half-mutated up to the
+    # member that raised.
+    def insert(self, keys: np.ndarray, columns: Dict[str, np.ndarray]) -> None:
+        keys = np.asarray(keys, dtype=np.int64)
+        if keys.size and np.unique(keys).size != keys.size:
+            raise ValueError("duplicate keys in insert batch")
+        if self.mode == "replicate":
+            # every member validates (a drifted replica must reject the
+            # batch BEFORE any member mutates, or replicas diverge more)
+            for m in self.members:
+                if m.lookup(keys, columns=())[1].any():
+                    raise ValueError("insert of existing key; use update()")
+            for m in self.members:
+                m.insert(keys, columns)
+            return
+        batches = self._scatter(keys)
+        for mid, pos in batches:
+            if self.members[mid].lookup(keys[pos], columns=())[1].any():
+                raise ValueError("insert of existing key; use update()")
+        for mid, pos in batches:
+            self.members[mid].insert(
+                keys[pos], {c: v[pos] for c, v in columns.items()}
+            )
+
+    def delete(self, keys: np.ndarray) -> None:
+        """Idempotent like the members — no validation needed."""
+        keys = np.asarray(keys, dtype=np.int64)
+        if self.mode == "replicate":
+            for m in self.members:
+                m.delete(keys)
+            return
+        for mid, pos in self._scatter(keys):
+            self.members[mid].delete(keys[pos])
+
+    def update(self, keys: np.ndarray, columns: Dict[str, np.ndarray]) -> None:
+        keys = np.asarray(keys, dtype=np.int64)
+        if self.mode == "replicate":
+            for m in self.members:
+                if not m.lookup(keys, columns=())[1].all():
+                    raise ValueError("update of non-existing key; use insert()")
+            for m in self.members:
+                m.update(keys, columns)
+            return
+        batches = self._scatter(keys)
+        for mid, pos in batches:
+            if not self.members[mid].lookup(keys[pos], columns=())[1].all():
+                raise ValueError("update of non-existing key; use insert()")
+        for mid, pos in batches:
+            self.members[mid].update(
+                keys[pos], {c: v[pos] for c, v in columns.items()}
+            )
+
+    # --------------------------------------------------------- accounting
+    @property
+    def num_rows(self) -> int:
+        if self.mode == "replicate":
+            return int(self.members[0].num_rows)
+        return int(sum(m.num_rows for m in self.members))
+
+    def size_breakdown(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for i, m in enumerate(self.members):
+            for k, v in m.size_breakdown().items():
+                out[f"member{i}.{k}"] = v
+        return out
+
+    # -------------------------------------------------------- persistence
+    def save(self, path: str) -> None:
+        raise NotImplementedError(
+            "a federation is a runtime composition; save each member "
+            "store individually and recompose with FederatedStore(...)"
+        )
+
+    @classmethod
+    def load(cls, path: str, pool=None) -> "FederatedStore":
+        raise NotImplementedError(
+            "load the member stores individually (repro.open) and "
+            "recompose with FederatedStore(...)"
+        )

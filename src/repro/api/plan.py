@@ -1,17 +1,25 @@
 """Query-plan IR for the unified store API.
 
 A :class:`QueryPlan` is the small declarative description the
-:class:`~repro.api.query.Query` builder compiles to and the executor
-(`repro.api.executor`) runs.  Plans have one *key source* (explicit
-keys, a key range, or a full scan), an optional column projection
-(pushed down so unselected columns are neither decoded nor — for
-DeepMapping stores — even evaluated by their private model heads), and
-an optional shard fan-out override.
+:class:`~repro.api.query.Query` builder compiles to and the streaming
+executor (`repro.api.executor`) runs.  Plans have one *key source*
+(explicit keys, a key range, or a full scan), an optional column
+projection (pushed down so unselected columns are neither decoded nor —
+for DeepMapping stores — even evaluated by their private model heads),
+an optional conjunction of **value predicates** (pushed down so
+non-matching rows are never decoded on model-backed stores), a shard
+fan-out override, and a morsel size controlling how the executor
+chunks the key stream.
 
 Execution produces a :class:`QueryResult` carrying per-plan
 :class:`ExplainStats` — the replacement for the mutable ``last_stats``
 side-channel: every result owns its own immutable stats object, so
 concurrent queries on one store cannot trample each other's timings.
+Stats now include a per-operator breakdown (:class:`OperatorStats`
+rows) mirroring the executor's operator IR:
+
+    KeySource -> (ShardScatter) -> Infer -> Exist -> AuxMerge
+              -> Filter -> Decode -> Gather
 
 This module is dependency-light on purpose (numpy only): the store
 implementations import it, so it must not import them back.
@@ -20,12 +28,128 @@ implementations import it, so it must not import them back.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Dict, Optional, Tuple
 
 import numpy as np
 
 #: Valid ``QueryPlan.kind`` values.
 PLAN_KINDS = ("point", "range", "scan")
+
+#: Valid ``Predicate.op`` values (vectorized numpy comparisons).
+PREDICATE_OPS = ("==", "!=", "<", "<=", ">", ">=", "in")
+
+#: Default executor morsel size (rows per streamed chunk).  Matches the
+#: default ``DeepMappingConfig.inference_batch`` so one morsel maps to
+#: one device chunk on the model-backed stores.
+DEFAULT_MORSEL = 1 << 16
+
+
+@dataclasses.dataclass(frozen=True)
+class Predicate:
+    """One value predicate ``column <op> value`` (conjunctions are
+    tuples of these on the plan).
+
+    ``op`` is one of :data:`PREDICATE_OPS`; ``"in"`` takes an iterable
+    ``value``.  Evaluation is vectorized numpy either over decoded
+    values (:meth:`mask`) or — the DeepMapping pushdown — over a
+    column's decode map once, yielding a boolean table indexed by code
+    (:meth:`code_table`), so per-row evaluation is a single gather on
+    int32 argmax codes *before* any row is decoded.
+    """
+
+    column: str
+    op: str
+    value: object
+
+    def __post_init__(self) -> None:
+        if self.op not in PREDICATE_OPS:
+            raise ValueError(f"unknown predicate op {self.op!r}; have {PREDICATE_OPS}")
+        if self.op == "in":
+            if isinstance(self.value, (str, bytes)):
+                # tuple("NEW") would silently become ('N','E','W')
+                raise ValueError(
+                    f"'in' needs an iterable of values, got the single "
+                    f"string {self.value!r}; use '==' or pass a list"
+                )
+            # freeze the membership list so the plan stays hashable
+            object.__setattr__(self, "value", tuple(self.value))
+
+    def _coerced(self, arr: np.ndarray):
+        """Align the literal with the column dtype (str literals vs a
+        bytes column, as produced by non-dictionary object columns)."""
+        v = self.value
+        if arr.dtype.kind == "S":
+            enc = lambda x: x.encode("utf-8") if isinstance(x, str) else x  # noqa: E731
+            return tuple(enc(x) for x in v) if self.op == "in" else enc(v)
+        return v
+
+    def mask(self, arr: np.ndarray) -> np.ndarray:
+        """Vectorized evaluation over an array of column values."""
+        arr = np.asarray(arr)
+        v = self._coerced(arr)
+        if self.op == "==":
+            out = arr == v
+        elif self.op == "!=":
+            out = arr != v
+        elif self.op == "<":
+            out = arr < v
+        elif self.op == "<=":
+            out = arr <= v
+        elif self.op == ">":
+            out = arr > v
+        elif self.op == ">=":
+            out = arr >= v
+        else:  # in
+            out = np.isin(arr, np.asarray(list(v)))
+        return np.asarray(out, dtype=bool)
+
+    def code_table(self, decode_map: np.ndarray) -> np.ndarray:
+        """Boolean table over codes: ``table[code]`` == predicate holds
+        for ``decode_map[code]``.  One evaluation per *distinct value*
+        instead of per row — the learned-store pushdown."""
+        return self.mask(decode_map)
+
+    def describe(self) -> str:
+        return f"{self.column}{self.op}{self.value!r}"
+
+
+def columns_with_predicates(
+    columns: Optional[Tuple[str, ...]],
+    predicates: Tuple[Predicate, ...],
+) -> Optional[Tuple[str, ...]]:
+    """The decode set for post-hoc predicate evaluation: the selected
+    columns extended by predicate-only columns (``None`` = all columns,
+    which already includes them).  The one definition every post-hoc
+    site shares, so the pushdown-vs-posthoc byte-equality oracle can
+    never silently compare different projections."""
+    if columns is None or not predicates:
+        return columns
+    return tuple(columns) + tuple(
+        p.column for p in predicates if p.column not in columns
+    )
+
+
+def evaluate_predicates(
+    predicates: Tuple[Predicate, ...],
+    values: Dict[str, np.ndarray],
+    exists: np.ndarray,
+    stats: "ExplainStats",
+) -> np.ndarray:
+    """AND-conjunction of ``predicates`` over decoded ``values`` —
+    THE post-hoc evaluator (executor morsels, the staged reference
+    path, and the stores' generic overlay-view fallback all call this
+    one function, so conjunction semantics cannot drift).  Records
+    ``filter_s``/``predicates``/``rows_matched`` on ``stats`` and
+    returns the row selector (``exists`` AND every predicate)."""
+    t0 = time.perf_counter()
+    match = exists.copy()
+    for p in predicates:
+        match &= p.mask(values[p.column])
+    stats.filter_s += time.perf_counter() - t0
+    stats.predicates = tuple(p.describe() for p in predicates)
+    stats.rows_matched += int(match.sum())
+    return match
 
 
 @dataclasses.dataclass(frozen=True)
@@ -35,9 +159,15 @@ class QueryPlan:
     ``kind`` selects the key source: ``"point"`` answers the explicit
     ``keys`` array, ``"range"`` every existing key in ``[lo, hi)``,
     ``"scan"`` every existing key.  ``columns`` is the projection
-    (``None`` = all columns); ``fanout`` overrides the sharded store's
-    parallel lookup fan-out (``None`` = store default, which is *on*
-    for plan execution and *off* for the legacy ``lookup`` shim).
+    (``None`` = all columns); ``predicates`` is an AND-conjunction of
+    value predicates — a plan with predicates returns ONLY matching
+    rows (``exists`` all-True).  ``pushdown`` routes predicate
+    evaluation into the store hooks (code-level on DeepMapping stores,
+    overlay-view on baselines); ``pushdown=False`` keeps the post-hoc
+    reference path: decode everything, filter after — byte-identical
+    results, more rows decoded.  ``fanout`` overrides the sharded
+    store's parallel lookup fan-out; ``morsel`` overrides the executor
+    chunk size (``None`` = :data:`DEFAULT_MORSEL`).
     """
 
     kind: str
@@ -45,7 +175,10 @@ class QueryPlan:
     lo: Optional[int] = None
     hi: Optional[int] = None
     columns: Optional[Tuple[str, ...]] = None
+    predicates: Tuple[Predicate, ...] = ()
+    pushdown: bool = True
     fanout: Optional[bool] = None
+    morsel: Optional[int] = None
 
     def __post_init__(self) -> None:
         if self.kind not in PLAN_KINDS:
@@ -54,6 +187,8 @@ class QueryPlan:
             raise ValueError("point plan needs keys")
         if self.kind == "range" and (self.lo is None or self.hi is None):
             raise ValueError("range plan needs lo and hi")
+        if self.morsel is not None and self.morsel < 1:
+            raise ValueError("morsel size must be >= 1")
 
     def source_stage(self) -> str:
         """Human-readable key-source stage name for explain output."""
@@ -63,47 +198,108 @@ class QueryPlan:
             return f"range[{self.lo},{self.hi})"
         return "scan"
 
+    def morsel_rows(self) -> int:
+        return DEFAULT_MORSEL if self.morsel is None else int(self.morsel)
+
+
+@dataclasses.dataclass(frozen=True)
+class OperatorStats:
+    """One executed operator's row in the explain output."""
+
+    name: str
+    rows_in: int
+    rows_out: int
+    seconds: float
+
+
+def _union(a: Tuple[str, ...], b: Tuple[str, ...]) -> Tuple[str, ...]:
+    """Order-preserving union of two evidence tuples."""
+    seen = dict.fromkeys(a)
+    seen.update(dict.fromkeys(b))
+    return tuple(seen)
+
 
 @dataclasses.dataclass
 class ExplainStats:
     """Per-plan execution report (the paper's Fig. 7 latency breakdown,
-    plus pushdown and fan-out evidence).
+    plus pushdown, fan-out, and per-operator evidence).
 
-    ``plan`` lists the executed pipeline stages in order.
+    ``plan`` lists the executed pipeline stages in order; ``operators``
+    is the structured per-operator breakdown (rows in/out + seconds)
+    the executor assembles after the morsel stream drains.
     ``heads_evaluated``/``heads_skipped`` record which model private
     heads ran (DeepMapping stores only — baselines always report all
     heads skipped since they have no model); ``columns_decoded``/
     ``columns_skipped`` record the decode projection every store type
-    honours.  Timings are seconds; under shard fan-out the per-stage
-    times are summed across shards (CPU time), while ``total_s`` is
-    wall clock.
+    honours; ``predicates`` the pushed-down value filters and
+    ``rows_decoded`` how many rows actually reached a decode call
+    (strictly fewer than ``num_keys`` under selective pushdown).
+    Timings are seconds; under shard fan-out / morsel merging the
+    per-stage times are summed (CPU time), while ``total_s`` is wall
+    clock.
     """
 
     kind: str = ""
     plan: Tuple[str, ...] = ()
+    operators: Tuple[OperatorStats, ...] = ()
     num_keys: int = 0
     num_rows: int = 0
+    morsels: int = 0
     shards_visited: int = 0
+    #: Distinct shard ids behind ``shards_visited`` (sharded stores
+    #: populate ints; the federation namespaces them per member, e.g.
+    #: ``"m1:2"``; morsel merging unions them so disjoint morsels that
+    #: each touch one shard still aggregate to the true fan-out).
+    shard_ids: Tuple = ()
     async_fanout: bool = False
     heads_evaluated: Tuple[str, ...] = ()
     heads_skipped: Tuple[str, ...] = ()
     columns_decoded: Tuple[str, ...] = ()
     columns_skipped: Tuple[str, ...] = ()
+    predicates: Tuple[str, ...] = ()
+    rows_decoded: int = 0
+    rows_matched: int = 0
     route_s: float = 0.0
     infer_s: float = 0.0
     exist_s: float = 0.0
     aux_s: float = 0.0
+    filter_s: float = 0.0
     decode_s: float = 0.0
+    gather_s: float = 0.0
     total_s: float = 0.0
 
     def merge_timings(self, other: "ExplainStats") -> None:
-        """Accumulate another stats object's stage timings (shard
-        fan-out / server batch aggregation)."""
+        """Accumulate another stats object's stage timings, counters,
+        and pushdown evidence (shard fan-out / morsel / server batch
+        aggregation).  Evidence tuples are unioned — a shard or morsel
+        must never make the aggregate under-report which heads ran or
+        which columns were decoded — and ``shards_visited`` keeps the
+        widest fan-out seen rather than being dropped."""
         self.route_s += other.route_s
         self.infer_s += other.infer_s
         self.exist_s += other.exist_s
         self.aux_s += other.aux_s
+        self.filter_s += other.filter_s
         self.decode_s += other.decode_s
+        self.gather_s += other.gather_s
+        self.rows_decoded += other.rows_decoded
+        self.rows_matched += other.rows_matched
+        self.shard_ids = tuple(
+            dict.fromkeys(self.shard_ids + other.shard_ids)
+        )
+        # Distinct-id union when shards are tracked (disjoint morsels
+        # each touching one shard still sum to the true fan-out); the
+        # max keeps a count-only side (a store reporting no ids) from
+        # being dropped.
+        self.shards_visited = max(
+            len(self.shard_ids), self.shards_visited, other.shards_visited
+        )
+        self.async_fanout = self.async_fanout or other.async_fanout
+        self.heads_evaluated = _union(self.heads_evaluated, other.heads_evaluated)
+        self.heads_skipped = _union(self.heads_skipped, other.heads_skipped)
+        self.columns_decoded = _union(self.columns_decoded, other.columns_decoded)
+        self.columns_skipped = _union(self.columns_skipped, other.columns_skipped)
+        self.predicates = _union(self.predicates, other.predicates)
 
 
 @dataclasses.dataclass
@@ -114,7 +310,9 @@ class QueryResult:
     ``exists`` is the existence mask (all-True for range/scan results,
     whose keys come from the existence index).  Rows where ``exists``
     is False carry placeholder values — callers must respect the mask,
-    the same contract as the legacy ``lookup``.
+    the same contract as the legacy ``lookup``.  Plans with value
+    predicates return only matching rows: ``keys``/``values`` are
+    filtered and ``exists`` is all-True.
     """
 
     keys: np.ndarray

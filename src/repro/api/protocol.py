@@ -27,6 +27,10 @@ Conformance contract (what the suite checks):
 6. ``query()`` plans execute byte-identically to the direct methods,
    including after interleaved insert/delete/update, and projection
    pushdown (``select``) never changes selected-column bytes.
+7. Value-predicate pushdown (``where``) returns byte-identical rows to
+   the post-hoc reference filter (``pushdown(False)``), including
+   rows answered by the aux table / modification overlay
+   (``tests/test_streaming_executor.py``).
 """
 
 from __future__ import annotations
@@ -37,7 +41,11 @@ from typing import Dict, Optional, Tuple
 
 import numpy as np
 
-from repro.api.plan import ExplainStats
+from repro.api.plan import (
+    ExplainStats,
+    columns_with_predicates,
+    evaluate_predicates,
+)
 
 #: Methods every conforming store must expose (used by the suite's
 #: surface check; behavioural checks live in the parametrized tests).
@@ -54,6 +62,18 @@ CONFORMANCE_METHODS = (
     "load",
     "query",
 )
+
+
+def _check_index_agreement(kind: str, exists: np.ndarray) -> None:
+    """Keys sourced from the existence index must all exist; a miss
+    means the index and the lookup path disagree.  A real error — not
+    an ``assert``, which vanishes under ``python -O`` (the executor
+    raises the same way)."""
+    if not bool(exists.all()):
+        raise RuntimeError(
+            f"{kind} produced keys missing from the store: existence "
+            f"index and lookup path disagree"
+        )
 
 
 class MappingStore(abc.ABC):
@@ -112,7 +132,7 @@ class MappingStore(abc.ABC):
         then answer the collected keys by batched lookup."""
         keys = self._range_keys(int(lo), int(hi))
         values, exists = self.lookup(keys, columns)
-        assert bool(exists.all())
+        _check_index_agreement("range", exists)
         return keys, values
 
     def scan(
@@ -121,7 +141,7 @@ class MappingStore(abc.ABC):
         """Full relation scan -> ``(keys, values)``, keys ascending."""
         keys = self._all_keys()
         values, exists = self.lookup(keys, columns)
-        assert bool(exists.all())
+        _check_index_agreement("scan", exists)
         return keys, values
 
     def size_bytes(self) -> int:
@@ -135,22 +155,45 @@ class MappingStore(abc.ABC):
         return Query(self)
 
     # ------------------------------------------- async lookup pipeline hooks
-    def _dispatch_lookup(self, keys, columns=None, fanout=None):
+    def _dispatch_lookup(self, keys, columns=None, fanout=None, predicates=()):
         """Begin an async lookup; :meth:`_collect_lookup` finishes it.
 
         Model-backed stores override the pair so device inference for
-        one batch overlaps host aux-merge/decode of another (the
-        executor and serving engine dispatch batch *i+1* before
-        collecting batch *i*).  The default defers everything to
-        collect time — baseline stores have no device stage to
-        overlap, so dispatch/collect degenerates to a plain call."""
-        return (keys, columns, fanout)
+        one morsel overlaps host aux-merge/decode of another (the
+        streaming executor and serving engine dispatch morsel *i+1*
+        before collecting morsel *i* — across plans, not just within
+        one).  The default defers everything to collect time — baseline
+        stores have no device stage to overlap, so dispatch/collect
+        degenerates to a plain call.  ``predicates`` is the pushed-down
+        value-filter conjunction (see :class:`~repro.api.plan.Predicate`)."""
+        return (keys, columns, fanout, tuple(predicates))
 
     def _collect_lookup(self, handle):
         """Finish a lookup begun by :meth:`_dispatch_lookup` ->
-        ``(values, exists, ExplainStats)``."""
-        keys, columns, fanout = handle
-        return self._lookup_with_stats(keys, columns, fanout=fanout)
+        ``(values, exists, match, ExplainStats)``.
+
+        ``match`` is ``None`` when no predicates were pushed down;
+        otherwise a bool row-selector aligned with the request keys
+        (``exists`` AND every predicate holds) — the executor keeps
+        only those rows.  The default evaluates predicates on the
+        store's ordinary lookup output, i.e. for the baselines on the
+        **modification-overlay view**: inserted/updated rows are
+        filtered by their overlay values, deleted rows by ``exists``."""
+        keys, columns, fanout, predicates = handle
+        if not predicates:
+            values, exists, stats = self._lookup_with_stats(
+                keys, columns, fanout=fanout
+            )
+            stats.rows_decoded += int(np.asarray(keys).shape[0])
+            return values, exists, None, stats
+        selected = tuple(columns) if columns is not None else tuple(self.columns)
+        need = columns_with_predicates(selected, predicates)
+        values, exists, stats = self._lookup_with_stats(keys, need, fanout=fanout)
+        match = evaluate_predicates(predicates, values, exists, stats)
+        stats.rows_decoded += int(np.asarray(keys).shape[0])
+        if len(need) != len(selected):
+            values = {c: values[c] for c in selected}
+        return values, exists, match, stats
 
     # ------------------------------------------------- executor stats hook
     def _lookup_with_stats(

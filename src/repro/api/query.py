@@ -2,21 +2,27 @@
 
     values, exists = store.query().where_keys(ks).execute()
     res = store.query().select("status").where_range(0, 10**6).execute()
-    res = store.query().scan().execute()
+    res = store.query().where("status", "==", "F").scan().execute()
+    for morsel in store.query().scan().stream(): ...
 
 A builder compiles to a :class:`~repro.api.plan.QueryPlan` (inspect it
-with :meth:`Query.plan`) and executes through the shared executor; the
-result's ``explain`` field reports the executed stages, pushdown
-evidence, and the latency breakdown.
+with :meth:`Query.plan`) and executes through the streaming operator
+pipeline; the result's ``explain`` field reports the executed
+operators, pushdown evidence, and the latency breakdown.  Value
+predicates (:meth:`where`) are pushed down by default — DeepMapping
+stores evaluate them on per-head argmax codes before any row is
+decoded; :meth:`pushdown` ``(False)`` switches to the post-hoc
+reference filter (decode everything, filter after), kept for
+byte-equality testing.
 """
 
 from __future__ import annotations
 
-from typing import Optional, Sequence, Tuple
+from typing import Iterator, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.api.plan import QueryPlan, QueryResult
+from repro.api.plan import Predicate, QueryPlan, QueryResult
 
 
 class Query:
@@ -31,7 +37,10 @@ class Query:
         self._lo: Optional[int] = None
         self._hi: Optional[int] = None
         self._columns: Optional[Tuple[str, ...]] = None
+        self._predicates: Tuple[Predicate, ...] = ()
+        self._pushdown: bool = True
         self._fanout: Optional[bool] = None
+        self._morsel: Optional[int] = None
 
     # ------------------------------------------------------------ projection
     def select(self, *columns: str) -> "Query":
@@ -42,13 +51,36 @@ class Query:
             columns = tuple(columns[0])
         if not columns:
             raise ValueError("select() needs at least one column")
+        self._check_columns(columns)
+        self._columns = tuple(dict.fromkeys(columns))  # dedup, keep order
+        return self
+
+    def _check_columns(self, columns: Sequence[str]) -> None:
         known = set(self._store.columns)
         unknown = [c for c in columns if c not in known]
         if unknown:
             raise ValueError(
                 f"unknown column(s) {unknown}; store has {sorted(known)}"
             )
-        self._columns = tuple(dict.fromkeys(columns))  # dedup, keep order
+
+    # ------------------------------------------------------------ predicates
+    def where(self, column: str, op: str, value) -> "Query":
+        """Add a value predicate ``column <op> value`` (AND-combined
+        with earlier ``where`` calls).  Pushed down below decode by
+        default: the result contains only matching rows, and on
+        DeepMapping stores non-matching rows are never decoded — the
+        predicate evaluates on per-head argmax codes (aux-corrected),
+        with aux/overlay rows filtered through the same path."""
+        self._check_columns((column,))
+        self._predicates += (Predicate(column=column, op=op, value=value),)
+        return self
+
+    def pushdown(self, enabled: bool) -> "Query":
+        """``False`` = post-hoc reference filter: decode every row,
+        then filter on decoded values.  Byte-identical results to the
+        pushed-down path (the equivalence suite checks this); strictly
+        more rows decoded."""
+        self._pushdown = bool(enabled)
         return self
 
     # ------------------------------------------------------------ key source
@@ -84,6 +116,12 @@ class Query:
         self._fanout = bool(enabled)
         return self
 
+    def morsel(self, rows: int) -> "Query":
+        """Override the executor's morsel size (rows per streamed
+        chunk); default :data:`~repro.api.plan.DEFAULT_MORSEL`."""
+        self._morsel = int(rows)
+        return self
+
     def plan(self) -> QueryPlan:
         """Compile to the IR without executing."""
         if self._kind is None:
@@ -96,10 +134,23 @@ class Query:
             lo=self._lo,
             hi=self._hi,
             columns=self._columns,
+            predicates=self._predicates,
+            pushdown=self._pushdown,
             fanout=self._fanout,
+            morsel=self._morsel,
         )
 
     def execute(self) -> QueryResult:
         from repro.api.executor import execute_plan  # local: keep import light
 
         return execute_plan(self._store, self.plan())
+
+    def stream(self) -> Iterator:
+        """Morsel-at-a-time execution: yields
+        :class:`~repro.api.executor.MorselResult` chunks as their host
+        halves complete, while later morsels' device work stays in
+        flight.  Predicate ``match`` selectors are left on the morsels
+        for the caller (use :meth:`execute` for a filtered relation)."""
+        from repro.api.executor import stream_plan
+
+        return stream_plan(self._store, self.plan())

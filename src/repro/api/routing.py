@@ -1,0 +1,61 @@
+"""Shared scatter/gather primitives (numpy-only, store-agnostic).
+
+One request batch fans out to several owners — shards behind a
+``ShardRouter``, members behind a ``FederatedStore`` — and results come
+back in request order.  Both layers used to carry private copies of
+the same two nontrivial idioms; they live here once:
+
+* :func:`group_runs` — stable group-by of positions per owner id
+  (argsort + run cuts; one contiguous group per owner, ascending id);
+* :func:`gather_parts` — reassemble per-owner ``(values, exists)``
+  into request order via concatenate + inverse permutation, which
+  sidesteps per-column dtype preallocation (owners may disagree on
+  e.g. unicode widths of decode maps).
+
+This module must stay dependency-light (numpy only): ``cluster``
+imports it through ``api``, and ``api`` must never import the store
+packages back.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Iterable, List, Tuple
+
+import numpy as np
+
+
+def group_runs(ids: np.ndarray) -> List[Tuple[int, np.ndarray]]:
+    """Group request positions by owner id -> ``[(id, positions), ...]``
+    (ascending id; owners with no positions are skipped; empty input
+    -> empty list).  ``positions`` index the original request array."""
+    ids = np.asarray(ids)
+    if ids.size == 0:
+        return []
+    order = np.argsort(ids, kind="stable")
+    sorted_ids = ids[order]
+    cut = np.flatnonzero(np.diff(sorted_ids)) + 1
+    starts = np.concatenate([[0], cut])
+    ends = np.concatenate([cut, [sorted_ids.size]])
+    return [
+        (int(sorted_ids[s]), order[s:e]) for s, e in zip(starts, ends)
+    ]
+
+
+def gather_parts(
+    n: int,
+    parts: Iterable[Tuple[np.ndarray, Dict[str, np.ndarray], np.ndarray]],
+) -> Tuple[Dict[str, np.ndarray], np.ndarray]:
+    """Reassemble per-owner ``(positions, values, exists)`` parts into
+    request order over ``n`` rows -> ``(values, exists)``."""
+    parts = list(parts)
+    exists = np.zeros(n, dtype=bool)
+    if not parts:
+        return {}, exists
+    positions = np.concatenate([p for p, _, _ in parts])
+    inv = np.empty(n, dtype=np.int64)
+    inv[positions] = np.arange(positions.size)
+    values: Dict[str, np.ndarray] = {}
+    for name in parts[0][1]:
+        values[name] = np.concatenate([v[name] for _, v, _ in parts])[inv]
+    exists[positions] = np.concatenate([e for _, _, e in parts])
+    return values, exists

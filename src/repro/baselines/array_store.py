@@ -139,7 +139,10 @@ class ArrayStore(PartitionedBaselineStore):
         exists = np.zeros(n, dtype=bool)
         out: Dict[str, np.ndarray] = {}
         gathered = {name: [] for name in wanted}
-        gathered_idx = []
+        # Hit bookkeeping only pays off when values must be gathered;
+        # exists-only probes (mutation validation, predicate-only
+        # requests) skip it.
+        gathered_idx = [] if wanted else None
         if self._partitions:
             pid = np.searchsorted(self._boundaries, keys, side="right") - 1
             order = np.argsort(pid, kind="stable")
@@ -159,9 +162,10 @@ class ArrayStore(PartitionedBaselineStore):
                     )
                     sel = qidx[hit]
                     exists[sel] = True
-                    gathered_idx.append(sel)
-                    for name in wanted:
-                        gathered[name].append(pcols[name][pos[hit]])
+                    if gathered_idx is not None:
+                        gathered_idx.append(sel)
+                        for name in wanted:
+                            gathered[name].append(pcols[name][pos[hit]])
                 start = end
         idx = (
             np.concatenate(gathered_idx)

@@ -83,9 +83,12 @@ class HashStore(PartitionedBaselineStore):
 
     def _base_lookup(self, keys: np.ndarray, wanted: List[str]):
         names = sorted(self.names)
+        # Exists-only probes (mutation validation, predicate-only
+        # columns=() requests) skip row materialization entirely.
+        col_idx = [names.index(name) for name in wanted]
         n = keys.shape[0]
         exists = np.zeros(n, dtype=bool)
-        rows: list = [None] * n
+        rows: list = [None] * n if wanted else []
         if len(self._partitions):
             pid = np.searchsorted(self._boundaries, keys, side="right") - 1
             order = np.argsort(pid, kind="stable")
@@ -97,15 +100,19 @@ class HashStore(PartitionedBaselineStore):
                     end += 1
                 if p >= 0:
                     d = self._load(int(p))
-                    for qi in order[start:end]:
-                        row = d.get(int(keys[qi]))
-                        if row is not None:
-                            exists[qi] = True
-                            rows[qi] = row
+                    if wanted:
+                        for qi in order[start:end]:
+                            row = d.get(int(keys[qi]))
+                            if row is not None:
+                                exists[qi] = True
+                                rows[qi] = row
+                    else:
+                        for qi in order[start:end]:
+                            if int(keys[qi]) in d:
+                                exists[qi] = True
                 start = end
         out: Dict[str, np.ndarray] = {}
-        for name in wanted:
-            ci = names.index(name)
+        for name, ci in zip(wanted, col_idx):
             vals = [r[ci] if r is not None else 0 for r in rows]
             out[name] = np.asarray(vals)
         return out, exists

@@ -20,11 +20,13 @@ one msgpack file (atomic ``os.replace``), self-describing via a
 from __future__ import annotations
 
 import os
+import time
 from typing import Dict, List, Optional, Tuple
 
 import msgpack
 import numpy as np
 
+from repro.api.plan import ExplainStats
 from repro.api.protocol import MappingStore
 from repro.storage import MemoryPool
 
@@ -119,28 +121,73 @@ class PartitionedBaselineStore(MappingStore):
         keys = np.asarray(keys, dtype=np.int64)
         wanted = [c for c in self.names if columns is None or c in columns]
         values, exists = self._base_lookup(keys, wanted)
-        if self._overlay or self._deleted:
-            # Vectorized prefilter: restrict the Python fix-up loop to
-            # keys that actually hit the (typically tiny) overlay state.
-            candidates = np.flatnonzero(np.isin(keys, self._touched_keys()))
-            fix_idx: List[int] = []
-            fix_rows: List[Dict[str, object]] = []
-            for i in candidates.tolist():
-                k = int(keys[i])
-                if k in self._deleted:
-                    exists[i] = False
-                else:
-                    row = self._overlay.get(k)
-                    if row is not None:
-                        exists[i] = True
-                        fix_idx.append(i)
-                        fix_rows.append(row)
-            if fix_idx:
-                for name in wanted:
-                    values[name] = _patch_column(
-                        values[name], fix_idx, [r[name] for r in fix_rows]
-                    )
+        self._apply_overlay(keys, wanted, values, exists)
         return values, exists
+
+    def _apply_overlay(
+        self,
+        keys: np.ndarray,
+        wanted: List[str],
+        values: Dict[str, np.ndarray],
+        exists: np.ndarray,
+    ) -> None:
+        """Patch overlay rows in / deleted keys out, in place — the
+        baselines' analogue of the hybrid store's aux-merge stage (the
+        streaming executor times it as the AuxMerge operator)."""
+        if not (self._overlay or self._deleted):
+            return
+        # Vectorized prefilter: restrict the Python fix-up loop to
+        # keys that actually hit the (typically tiny) overlay state.
+        candidates = np.flatnonzero(np.isin(keys, self._touched_keys()))
+        fix_idx: List[int] = []
+        fix_rows: List[Dict[str, object]] = []
+        for i in candidates.tolist():
+            k = int(keys[i])
+            if k in self._deleted:
+                exists[i] = False
+            else:
+                row = self._overlay.get(k)
+                if row is not None:
+                    exists[i] = True
+                    fix_idx.append(i)
+                    fix_rows.append(row)
+        if fix_idx:
+            for name in wanted:
+                values[name] = _patch_column(
+                    values[name], fix_idx, [r[name] for r in fix_rows]
+                )
+
+    def _lookup_with_stats(
+        self,
+        keys: np.ndarray,
+        columns: Optional[Tuple[str, ...]] = None,
+        fanout: Optional[bool] = None,
+    ) -> Tuple[Dict[str, np.ndarray], np.ndarray, ExplainStats]:
+        """Partition probe + overlay patch with a real stage split
+        (probe time lands in ``decode_s``, overlay patching in
+        ``aux_s``), so baseline explain output carries per-operator
+        rows instead of one coarse ``lookup`` bucket.  ``fanout`` is
+        accepted for protocol parity (nothing to fan out here)."""
+        keys = np.asarray(keys, dtype=np.int64)
+        wanted = [c for c in self.names if columns is None or c in columns]
+        t0 = time.perf_counter()
+        values, exists = self._base_lookup(keys, wanted)
+        t1 = time.perf_counter()
+        self._apply_overlay(keys, wanted, values, exists)
+        t2 = time.perf_counter()
+        stats = ExplainStats(
+            plan=(
+                f"probe[{len(self._partitions)} parts]",
+                f"overlay[{len(self._overlay)}+{len(self._deleted)}]",
+                f"decode[{','.join(wanted)}]",
+            ),
+            heads_skipped=tuple(self.columns),  # no model heads exist
+            columns_decoded=tuple(wanted),
+            columns_skipped=tuple(c for c in self.columns if c not in wanted),
+            decode_s=t1 - t0,
+            aux_s=t2 - t1,
+        )
+        return values, exists, stats
 
     def insert(self, keys: np.ndarray, columns: Dict[str, np.ndarray]) -> None:
         keys = np.asarray(keys, dtype=np.int64)

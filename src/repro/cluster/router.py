@@ -15,6 +15,7 @@ from typing import Dict, Iterable, List, Tuple
 
 import numpy as np
 
+from repro.api.routing import gather_parts, group_runs
 from repro.cluster.partitioner import Partitioner
 
 
@@ -47,20 +48,9 @@ class ShardRouter:
         keys = np.asarray(keys, dtype=np.int64)
         if keys.size == 0:
             return []
-        sid = self.partitioner.shard_of(keys)
-        order = np.argsort(sid, kind="stable")
-        sorted_sid = sid[order]
-        # Boundaries between runs of equal shard id.
-        cut = np.flatnonzero(np.diff(sorted_sid)) + 1
-        starts = np.concatenate([[0], cut])
-        ends = np.concatenate([cut, [sorted_sid.size]])
         return [
-            ShardBatch(
-                shard_id=int(sorted_sid[s]),
-                positions=order[s:e],
-                keys=keys[order[s:e]],
-            )
-            for s, e in zip(starts, ends)
+            ShardBatch(shard_id=sid, positions=pos, keys=keys[pos])
+            for sid, pos in group_runs(self.partitioner.shard_of(keys))
         ]
 
     @staticmethod
@@ -74,21 +64,9 @@ class ShardRouter:
     def gather(
         n: int, parts: Iterable[Tuple[ShardBatch, Dict[str, np.ndarray], np.ndarray]]
     ) -> Tuple[Dict[str, np.ndarray], np.ndarray]:
-        """Reassemble per-shard ``(values, exists)`` into request order.
-
-        Concatenates in scatter order, then applies the inverse
-        permutation — this sidesteps per-column dtype preallocation
-        (shards may disagree on e.g. unicode widths of decode maps).
-        """
-        parts = list(parts)
-        exists = np.zeros(n, dtype=bool)
-        if not parts:
-            return {}, exists
-        positions = np.concatenate([b.positions for b, _, _ in parts])
-        inv = np.empty(n, dtype=np.int64)
-        inv[positions] = np.arange(positions.size)
-        values: Dict[str, np.ndarray] = {}
-        for name in parts[0][1]:
-            values[name] = np.concatenate([v[name] for _, v, _ in parts])[inv]
-        exists[positions] = np.concatenate([e for _, _, e in parts])
-        return values, exists
+        """Reassemble per-shard ``(values, exists)`` into request order
+        (see :func:`repro.api.routing.gather_parts` for the inverse-
+        permutation discipline)."""
+        return gather_parts(
+            n, ((b.positions, v, e) for b, v, e in parts)
+        )

@@ -67,6 +67,7 @@ class _PendingShardedLookup:
     route_s: float
     use_fanout: bool
     columns: Optional[Tuple[str, ...]]
+    predicates: tuple = ()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -193,44 +194,54 @@ class ShardedDeepMappingStore(MappingStore):
         keys: np.ndarray,
         columns: Optional[Tuple[str, ...]] = None,
         fanout: Optional[bool] = None,
+        predicates: tuple = (),
     ) -> _PendingShardedLookup:
         """Scatter the batch and enqueue every shard's device inference
         (cheap serial dispatch — the device work itself overlaps);
-        ``_collect_lookup`` gathers the host halves."""
+        ``_collect_lookup`` gathers the host halves.  ``predicates``
+        push down into every shard (code-level argmax filtering), so a
+        scattered predicate plan never decodes a non-matching row on
+        any shard."""
         keys = np.asarray(keys, dtype=np.int64)
         t0 = time.perf_counter()
         batches = self.router.scatter(keys)
         route_s = time.perf_counter() - t0
         use_fanout = bool(fanout) and len(batches) > 1
         handles = [
-            self.shards[b.shard_id]._dispatch_lookup(b.keys, columns)
+            self.shards[b.shard_id]._dispatch_lookup(
+                b.keys, columns, predicates=predicates
+            )
             for b in batches
         ]
         return _PendingShardedLookup(
             keys=keys, batches=batches, handles=handles, route_s=route_s,
-            use_fanout=use_fanout, columns=columns,
+            use_fanout=use_fanout, columns=columns, predicates=predicates,
         )
 
     def _collect_lookup(
         self, pending: _PendingShardedLookup
-    ) -> Tuple[Dict[str, np.ndarray], np.ndarray, ExplainStats]:
+    ) -> Tuple[Dict[str, np.ndarray], np.ndarray, Optional[np.ndarray], ExplainStats]:
         keys, batches = pending.keys, pending.batches
         route_s, use_fanout = pending.route_s, pending.use_fanout
+        preds = pending.predicates
         if not batches:
             # Zero-length request: delegate to one shard for typed
             # empty columns + per-head stats (no scatter, no inference).
-            values, exists, stats = self.shards[0]._lookup_with_stats(
-                keys[:0], pending.columns
+            values, exists, match, stats = self.shards[0]._collect_lookup(
+                self.shards[0]._dispatch_lookup(
+                    keys[:0], pending.columns, predicates=preds
+                )
             )
             stats.plan = ("scatter[0]",) + stats.plan
             stats.route_s += route_s
-            return values, np.zeros(keys.shape[0], dtype=bool), stats
+            exists = np.zeros(keys.shape[0], dtype=bool)
+            return values, exists, exists.copy() if preds else None, stats
 
         def visit(batch_handle):
             batch, handle = batch_handle
             shard = self.shards[batch.shard_id]
-            vals, exists, stats = shard._collect_lookup(handle)
-            return batch, vals, exists, stats
+            vals, exists, match, stats = shard._collect_lookup(handle)
+            return batch, vals, exists, match, stats
 
         pairs = list(zip(batches, pending.handles))
         if use_fanout:
@@ -240,26 +251,31 @@ class ShardedDeepMappingStore(MappingStore):
 
         agg = ExplainStats(
             shards_visited=len(batches),
+            shard_ids=tuple(int(b.shard_id) for b in batches),
             async_fanout=use_fanout,
             route_s=route_s,
-            heads_evaluated=parts[0][3].heads_evaluated,
-            heads_skipped=parts[0][3].heads_skipped,
-            columns_decoded=parts[0][3].columns_decoded,
-            columns_skipped=parts[0][3].columns_skipped,
         )
-        for _, _, _, s in parts:
+        for _, _, _, _, s in parts:
+            # merge_timings unions the pushdown evidence tuples, so a
+            # shard that skipped different heads/columns than its peers
+            # cannot make the aggregate under-report.
             agg.merge_timings(s)
         agg.plan = (
             f"scatter[{len(batches)} shards]",
             "fanout" if use_fanout else "serial",
-        ) + parts[0][3].plan
+        ) + parts[0][4].plan
 
         t1 = time.perf_counter()
         values, exists = ShardRouter.gather(
-            keys.shape[0], [(b, v, e) for b, v, e, _ in parts]
+            keys.shape[0], [(b, v, e) for b, v, e, _, _ in parts]
         )
+        match = None
+        if preds:
+            match = np.zeros(keys.shape[0], dtype=bool)
+            for b, _, _, m, _ in parts:
+                match[b.positions] = m
         agg.route_s += time.perf_counter() - t1
-        return values, exists, agg
+        return values, exists, match, agg
 
     def _lookup_with_stats(
         self,
@@ -270,7 +286,10 @@ class ShardedDeepMappingStore(MappingStore):
         """Algorithm 1, scattered: route each key to its shard, answer
         per-shard batches (in parallel when ``fanout``), gather results
         back in request order — the dispatch/collect pair back-to-back."""
-        return self._collect_lookup(self._dispatch_lookup(keys, columns, fanout))
+        values, exists, _, stats = self._collect_lookup(
+            self._dispatch_lookup(keys, columns, fanout)
+        )
+        return values, exists, stats
 
     def lookup(
         self, keys: np.ndarray, columns: Optional[Tuple[str, ...]] = None

@@ -113,8 +113,10 @@ class _PendingLookup:
     ``DISPATCH_WINDOW`` chunks resident on device."""
 
     keys: np.ndarray
-    wanted: Tuple[str, ...]
+    wanted: Tuple[str, ...]            # heads to evaluate (selected + predicate)
+    decode: Tuple[str, ...]            # columns to decode (selected only)
     skipped: Tuple[str, ...]
+    preds: tuple                       # [(wanted idx, code table, describe), ...]
     tickets: list                      # [(start, InferTicket), ...] in flight
     next_start: int                    # first key offset not yet dispatched
     dispatch_s: float
@@ -152,6 +154,12 @@ class DeepMappingStore(MappingStore):
         # build() attaches the warm engine it evaluated T_aux with; a
         # cluster attaches engines from its shared EngineCache.
         self._engine: Optional[InferenceEngine] = None
+        # Predicate -> code-table memo: a morselized plan dispatches
+        # per chunk, but the full-vocabulary predicate evaluation must
+        # be paid once per (predicate, decode map), not per morsel.
+        # Keyed on the decode map OBJECT too — codec.extend() swaps in
+        # a new array, invalidating the table.  Bounded (see _pred_table).
+        self._pred_tables: Dict = {}
 
     @property
     def engine(self) -> InferenceEngine:
@@ -269,6 +277,7 @@ class DeepMappingStore(MappingStore):
         keys: np.ndarray,
         columns: Optional[Tuple[str, ...]] = None,
         fanout: Optional[bool] = None,
+        predicates: tuple = (),
     ) -> _PendingLookup:
         """Stage 1 of Algorithm 1: enqueue device inference (+ fused
         existence test) for the first chunks of the batch and return.
@@ -278,15 +287,31 @@ class DeepMappingStore(MappingStore):
         ``DISPATCH_WINDOW`` chunks are in flight (collect tops the
         window up), so a full-relation scan never pins the whole key
         set on device.  ``fanout`` is accepted for protocol parity
-        (nothing to fan out here)."""
+        (nothing to fan out here).
+
+        ``predicates`` are pushed below decode: each compiles here to a
+        boolean *code table* over the column's decode map (one
+        vectorized evaluation per distinct value, not per row), the
+        predicate head joins the inference task set even when the
+        projection excludes it, and at collect time rows are filtered
+        on their aux-corrected argmax codes — non-matching rows are
+        never decoded."""
         keys = np.asarray(keys, dtype=np.int64)
         all_tasks = self.spec.tasks
-        wanted = tuple(t for t in all_tasks if columns is None or t in columns)
+        selected = tuple(t for t in all_tasks if columns is None or t in columns)
+        pred_cols = frozenset(p.column for p in predicates)
+        wanted = tuple(
+            t for t in all_tasks if t in pred_cols or t in selected
+        )
         skipped = tuple(t for t in all_tasks if t not in wanted)
         t0 = time.perf_counter()
+        preds = tuple(
+            (wanted.index(p.column), self._pred_table(p), p.describe())
+            for p in predicates
+        )
         pending = _PendingLookup(
-            keys=keys, wanted=wanted, skipped=skipped, tickets=[],
-            next_start=0, dispatch_s=0.0,
+            keys=keys, wanted=wanted, decode=selected, skipped=skipped,
+            preds=preds, tickets=[], next_start=0, dispatch_s=0.0,
         )
         if keys.shape[0] and wanted:
             while (
@@ -296,6 +321,25 @@ class DeepMappingStore(MappingStore):
                 self._dispatch_next_chunk(pending)
         pending.dispatch_s = time.perf_counter() - t0
         return pending
+
+    def _pred_table(self, pred) -> np.ndarray:
+        """Memoized boolean code table for one predicate (see
+        ``Predicate.code_table``).  The cached decode map is kept in
+        the value so an ``extend()``-replaced map (new object, larger
+        vocabulary) recompiles; benign race under the shard fan-out —
+        worst case is one duplicate compute."""
+        codec = self.codecs[pred.column]
+        try:
+            hit = self._pred_tables.get(pred)
+        except TypeError:  # unhashable literal (e.g. an array) — skip memo
+            return pred.code_table(codec.decode_map)
+        if hit is not None and hit[0] is codec.decode_map:
+            return hit[1]
+        table = pred.code_table(codec.decode_map)
+        if len(self._pred_tables) >= 64:  # bound ad-hoc predicate churn
+            self._pred_tables.clear()
+        self._pred_tables[pred] = (codec.decode_map, table)
+        return table
 
     def _dispatch_next_chunk(self, pending: _PendingLookup) -> None:
         bs = self.config.inference_batch
@@ -311,11 +355,15 @@ class DeepMappingStore(MappingStore):
 
     def _collect_lookup(
         self, pending: _PendingLookup
-    ) -> Tuple[Dict[str, np.ndarray], np.ndarray, ExplainStats]:
+    ) -> Tuple[Dict[str, np.ndarray], np.ndarray, Optional[np.ndarray], ExplainStats]:
         """Stage 2 of Algorithm 1: per chunk, block on the device
-        result, apply the aux-table override, and decode — while later
-        chunks keep executing on the device."""
+        result, apply the aux-table override, filter on argmax codes
+        (value-predicate pushdown), and decode the surviving rows —
+        while later chunks keep executing on the device.  Returns
+        ``(values, exists, match, stats)``; ``match`` is ``None``
+        without predicates."""
         keys, wanted, skipped = pending.keys, pending.wanted, pending.skipped
+        decode_cols, preds = pending.decode, pending.preds
         all_tasks = self.spec.tasks
         n_chunks = max(
             1, -(-keys.shape[0] // self.config.inference_batch)
@@ -324,14 +372,18 @@ class DeepMappingStore(MappingStore):
         stats = ExplainStats(
             heads_evaluated=wanted,
             heads_skipped=skipped,
-            columns_decoded=wanted,
-            columns_skipped=skipped,
+            columns_decoded=decode_cols,
+            columns_skipped=tuple(t for t in all_tasks if t not in decode_cols),
+            predicates=tuple(d for _, _, d in preds),
             plan=(
                 f"infer[{len(wanted)}/{len(all_tasks)} heads,"
                 f"{pending.tickets[0][1].path if pending.tickets else 'none'}]",
                 "exist[fused]" if fused else "exist",
                 "aux_merge",
-                f"decode[{','.join(wanted)}]",
+            )
+            + ((f"filter[{','.join(d for _, _, d in preds)}]",) if preds else ())
+            + (
+                f"decode[{','.join(decode_cols)}]",
                 f"pipeline[{max(1, n_chunks)} chunks]",
             ),
         )
@@ -345,14 +397,16 @@ class DeepMappingStore(MappingStore):
             t2 = time.perf_counter()
             values = {
                 t: self.codecs[t].decode(np.zeros(keys.shape[0], dtype=np.int32))
-                for t in wanted
+                for t in decode_cols
             }
             stats.exist_s = t2 - t1
             stats.decode_s = time.perf_counter() - t2
-            return values, exists, stats
+            return values, exists, exists.copy() if preds else None, stats
 
         task_idx = [all_tasks.index(t) for t in wanted]
-        exists_parts, value_parts = [], {t: [] for t in wanted}
+        dec_idx = [wanted.index(t) for t in decode_cols]
+        exists_parts, match_parts = [], []
+        value_parts = {t: [] for t in decode_cols}
         while pending.tickets:
             start, ticket = pending.tickets.pop(0)
             # keep the device window full before blocking on this chunk
@@ -370,32 +424,63 @@ class DeepMappingStore(MappingStore):
                 exists = self.vexist.test(ticket.keys)
             t3 = time.perf_counter()
             # line 6-8: aux override for existing keys only.  T_aux rows
-            # carry codes for ALL tasks; project to the selected ones.
+            # carry codes for ALL tasks; project to the evaluated ones.
             exist_idx = np.flatnonzero(exists)
             found, aux_codes = self.aux.get(ticket.keys[exist_idx])
             pred[exist_idx[found]] = aux_codes[found][:, task_idx]
             t4 = time.perf_counter()
-            # line 13: decode — selected columns only.
-            for i, t in enumerate(wanted):
-                safe = np.where(exists, pred[:, i], 0)
-                value_parts[t].append(self.codecs[t].decode(safe))
-            t5 = time.perf_counter()
-            exists_parts.append(exists)
             stats.infer_s += t2 - t1
             stats.exist_s += t3 - t2
             stats.aux_s += t4 - t3
-            stats.decode_s += t5 - t4
+            # Predicate filter on aux-corrected argmax codes: one
+            # boolean gather per predicate, BEFORE any decode.
+            if preds:
+                match = exists.copy()
+                for wi, table, _ in preds:
+                    codes_w = np.where(exists, pred[:, wi], 0)
+                    match &= table[codes_w]
+                hit = np.flatnonzero(match)
+                t5 = time.perf_counter()
+                stats.filter_s += t5 - t4
+                stats.rows_matched += int(hit.size)
+                # line 13: decode ONLY the matching rows.
+                for t, wi in zip(decode_cols, dec_idx):
+                    codec = self.codecs[t]
+                    out = np.zeros(
+                        exists.shape[0], dtype=codec.decode_map.dtype
+                    )
+                    if hit.size:
+                        out[hit] = codec.decode(pred[hit, wi])
+                    value_parts[t].append(out)
+                stats.rows_decoded += int(hit.size)
+                stats.decode_s += time.perf_counter() - t5
+                match_parts.append(match)
+            else:
+                # line 13: decode — selected columns only.
+                for t, wi in zip(decode_cols, dec_idx):
+                    safe = np.where(exists, pred[:, wi], 0)
+                    value_parts[t].append(self.codecs[t].decode(safe))
+                stats.rows_decoded += int(exists.shape[0])
+                stats.decode_s += time.perf_counter() - t4
+            exists_parts.append(exists)
 
         exists = (
             exists_parts[0]
             if len(exists_parts) == 1
             else np.concatenate(exists_parts)
         )
+        match = None
+        if preds:
+            match = (
+                match_parts[0]
+                if len(match_parts) == 1
+                else np.concatenate(match_parts)
+            )
         values = {
             t: (parts[0] if len(parts) == 1 else np.concatenate(parts))
             for t, parts in value_parts.items()
         }
-        return values, exists, stats
+        return values, exists, match, stats
 
     def _lookup_with_stats(
         self,
@@ -406,7 +491,10 @@ class DeepMappingStore(MappingStore):
         """Algorithm 1 with projection pushdown and per-call stats —
         the dispatch/collect pair run back-to-back (all chunks' device
         work enqueued up front, host half trailing chunk by chunk)."""
-        return self._collect_lookup(self._dispatch_lookup(keys, columns, fanout))
+        values, exists, _, stats = self._collect_lookup(
+            self._dispatch_lookup(keys, columns, fanout)
+        )
+        return values, exists, stats
 
     def lookup(
         self, keys: np.ndarray, columns: Optional[Tuple[str, ...]] = None

@@ -443,6 +443,32 @@ class InferenceEngine:
         return codes, exists
 
     # ------------------------------------------------------- convenience
+    def stream(
+        self,
+        chunks,
+        tasks: Optional[Tuple[str, ...]] = None,
+        want_exists: bool = False,
+        depth: int = PIPELINE_DEPTH,
+    ):
+        """Windowed dispatch/collect over an iterable of key chunks —
+        the engine-level morsel pipeline the store hooks and the
+        streaming executor build on.  Chunk *i+1*'s device work is
+        enqueued before chunk *i*'s result is copied out, with at most
+        ``depth`` chunks resident on device.  Yields
+        ``(ticket, codes, exists)`` per chunk in input order
+        (``exists`` is None unless the fused path computed it)."""
+        tasks = self.spec.tasks if tasks is None else tuple(tasks)
+        pending: list = []
+        for chunk in chunks:
+            pending.append(self.dispatch(chunk, tasks, want_exists=want_exists))
+            if len(pending) >= depth:
+                t = pending.pop(0)
+                codes, exists = self.collect(t)
+                yield t, codes, exists
+        for t in pending:
+            codes, exists = self.collect(t)
+            yield t, codes, exists
+
     def infer(
         self, keys: np.ndarray, tasks: Optional[Tuple[str, ...]] = None
     ) -> np.ndarray:
@@ -455,16 +481,14 @@ class InferenceEngine:
         out = np.zeros((n, len(tasks)), dtype=np.int32)
         if n == 0 or not tasks:
             return out
-        pending = []
-        for start in range(0, n, self.max_bucket):
-            pending.append(
-                (start, self.dispatch(keys[start : start + self.max_bucket], tasks))
-            )
-            if len(pending) >= PIPELINE_DEPTH:
-                s, t = pending.pop(0)
-                out[s : s + t.n], _ = self.collect(t)
-        for s, t in pending:
-            out[s : s + t.n], _ = self.collect(t)
+        chunks = (
+            keys[start : start + self.max_bucket]
+            for start in range(0, n, self.max_bucket)
+        )
+        start = 0
+        for ticket, codes, _ in self.stream(chunks, tasks):
+            out[start : start + ticket.n] = codes
+            start += ticket.n
         return out
 
 

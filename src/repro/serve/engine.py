@@ -5,15 +5,15 @@ deduplicated, sorted (so each T_aux partition is decompressed at most
 once per batch — §IV-B2), answered via the hybrid store, and scattered
 back to requesters.
 
-Merged batches run as a two-stage software pipeline over the store's
-``_dispatch_lookup``/``_collect_lookup`` hooks: batch *i+1*'s device
-work is enqueued (JAX async dispatch returns immediately) before batch
-*i*'s host half — existence fallback, aux merge, decode, scatter —
-runs, so consecutive merged batches overlap while the sliding window
-keeps at most two batches in flight (device residency stays bounded
-for arbitrarily large merged requests).  For baseline stores the hooks
-degenerate to plain synchronous calls (no device stage to overlap), so
-the pipeline is a no-op there.
+Merged traffic rides the streaming operator pipeline
+(:func:`repro.api.executor.stream_plan`): the merged unique-key batch
+becomes ONE point plan whose morsel size is the server's ``max_batch``,
+and the executor keeps a window of morsels' device work in flight
+ahead of the host half — existence fallback, aux merge, decode,
+scatter — so consecutive morsels overlap while device residency stays
+bounded for arbitrarily large merged requests.  For baseline stores
+the store hooks degenerate to plain synchronous calls (no device stage
+to overlap), so the pipeline is a no-op there.
 """
 
 from __future__ import annotations
@@ -24,7 +24,7 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.api.executor import execute_plan
+from repro.api.executor import stream_plan
 from repro.api.plan import QueryPlan
 from repro.api.protocol import MappingStore
 
@@ -46,14 +46,14 @@ class ServeStats:
 
 class LookupServer:
     """Merge-batch server over any :class:`~repro.api.protocol.MappingStore`
-    (single, sharded, or baseline).
+    (single, sharded, baseline, or federated).
 
-    Merged batches execute through the store's dispatch/collect hooks,
-    so the server gets the unified pipeline — projection pushdown,
-    sharded thread-pool fan-out, infer/aux overlap across consecutive
-    merged batches, per-batch stats — for free; merged batches arrive
-    at the store sorted, so the sharded store's scatter sees at most
-    one contiguous run per shard.
+    Merged batches execute through the streaming executor, so the
+    server gets the unified pipeline — projection pushdown, sharded
+    thread-pool fan-out, infer/aux overlap across consecutive morsels,
+    per-morsel stats — for free; merged batches arrive at the store
+    sorted, so the sharded store's scatter sees at most one contiguous
+    run per shard.
     """
 
     def __init__(
@@ -78,7 +78,8 @@ class LookupServer:
     ) -> List[Tuple[Dict[str, np.ndarray], np.ndarray]]:
         """Merge several key-batch requests into deduplicated device
         batches; scatter results back per request.  Device inference of
-        batch *i+1* overlaps the host half of batch *i*."""
+        morsel *i+1* overlaps the host half of morsel *i* (the
+        streaming executor's window)."""
         if not requests:
             return []  # np.concatenate rejects an empty list
         t0 = time.perf_counter()
@@ -86,45 +87,33 @@ class LookupServer:
         merged = np.concatenate([np.asarray(r, dtype=np.int64) for r in requests])
         uniq, inverse = np.unique(merged, return_inverse=True)  # sorted + dedup
 
+        # One point plan over the merged uniques, morselized at the
+        # server's batch size.  Columns pass straight through so
+        # unknown names degrade to "ignored", like the legacy lookup
+        # did; fanout=True keeps the sharded store's thread-pool
+        # fan-out.  A zero-length merge still streams one empty morsel,
+        # so callers get typed empty columns (same contract as the
+        # stores' own zero-batch lookups).
+        plan = QueryPlan(
+            kind="point",
+            keys=uniq,
+            columns=tuple(columns) if columns is not None else None,
+            fanout=True,
+            morsel=self.max_batch,
+        )
         chunks: Dict[str, List[np.ndarray]] = {}
         exists_u = np.zeros(uniq.shape[0], dtype=bool)
-        cols = tuple(columns) if columns is not None else None
-        if uniq.shape[0] == 0:
-            # All requests zero-length: run one empty plan anyway so
-            # callers still get typed empty columns (same contract as
-            # the stores' own zero-batch lookups).
-            res = execute_plan(
-                self.store, QueryPlan(kind="point", keys=uniq, columns=cols)
+        for morsel in stream_plan(self.store, plan):
+            exists_u[morsel.start : morsel.start + morsel.exists.shape[0]] = (
+                morsel.exists
             )
-            for c, arr in res.values.items():
-                chunks[c] = [arr]
-        # Two-stage pipeline over a small sliding window of batches:
-        # dispatch batch i+1's device work before collecting batch i,
-        # without enqueueing the whole merged request at once (the
-        # store layer bounds per-batch residency; this bounds batches).
-        # Columns pass straight to the hook so unknown names degrade to
-        # "ignored", like the legacy lookup did; fanout=True keeps the
-        # sharded store's thread-pool fan-out, matching plan execution.
-        def collect(start, handle):
-            vals, exists, stats = self.store._collect_lookup(handle)
-            exists_u[start : start + self.max_batch] = exists
-            for c, arr in vals.items():
+            for c, arr in morsel.values.items():
                 chunks.setdefault(c, []).append(arr)
             self.stats.batches += 1
-            self.stats.infer_s += stats.infer_s
-            self.stats.exist_s += stats.exist_s
-            self.stats.aux_s += stats.aux_s
-            self.stats.decode_s += stats.decode_s
-
-        window: List = []
-        for start in range(0, uniq.shape[0], self.max_batch):
-            window.append((start, self.store._dispatch_lookup(
-                uniq[start : start + self.max_batch], cols, fanout=True
-            )))
-            if len(window) >= 2:  # one batch in flight ahead of the host
-                collect(*window.pop(0))
-        for start, handle in window:
-            collect(start, handle)
+            self.stats.infer_s += morsel.stats.infer_s
+            self.stats.exist_s += morsel.stats.exist_s
+            self.stats.aux_s += morsel.stats.aux_s
+            self.stats.decode_s += morsel.stats.decode_s
         # Concatenate per column (rather than filling a preallocated
         # buffer) so chunks that disagree on dtype — e.g. a baseline
         # store's int placeholder chunk before a string chunk —

@@ -1,0 +1,636 @@
+"""Streaming operator-pipeline executor suite (ISSUE 4).
+
+Parametrized over all four store types:
+
+* streaming (morselized) execution byte-identical to the legacy staged
+  path (``execute_plan_staged``) for point/range/scan, including after
+  interleaved insert/delete/update;
+* pushed-down ``.where()`` byte-identical to the post-hoc reference
+  filter (``pushdown(False)``), every operator, including predicate
+  columns outside the projection;
+* pushdown evidence: model-backed stores decode strictly fewer rows
+  under a selective predicate, evaluate the predicate head, and skip
+  its decode;
+* ``execute_plans`` multi-plan pipelining returns exactly what serial
+  ``execute_plan`` calls would;
+* cross-store federation (partition + replicate) against a reference
+  store built on the union table;
+* the range/scan existence invariant raises ``RuntimeError`` (not a
+  stripped-under``-O`` assert), and ``ExplainStats.merge_timings``
+  unions pushdown evidence.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.api import (
+    ExplainStats,
+    FederatedStore,
+    MappingStore,
+    Predicate,
+    QueryPlan,
+    execute_plan,
+    execute_plan_staged,
+    execute_plans,
+)
+from repro.baselines import ArrayStore, HashStore
+from repro.cluster import ClusterConfig, ShardedDeepMappingStore
+from repro.core import DeepMappingConfig, DeepMappingStore, Table
+from repro.core.trainer import TrainConfig
+
+STORE_KINDS = ("deepmapping", "sharded", "array", "hash")
+
+TINY = DeepMappingConfig(
+    shared=(16,), private=(4,), train=TrainConfig(epochs=2, batch_size=512)
+)
+
+
+def make_table(n=900, stride=3, off=0):
+    keys = np.arange(off, off + n * stride, stride, dtype=np.int64)
+    return Table(
+        keys=keys,
+        columns={
+            "a": ((keys // 16) % 5).astype(np.int32),
+            "b": ((keys // 32) % 3).astype(np.int32),
+            "c": ((keys // 8) % 7).astype(np.int32),
+        },
+    )
+
+
+def build_store(kind, table, config=TINY):
+    if kind == "deepmapping":
+        return DeepMappingStore.build(table, config)
+    if kind == "sharded":
+        return ShardedDeepMappingStore.build(
+            table, config, ClusterConfig(num_shards=3, policy="range")
+        )
+    if kind == "array":
+        return ArrayStore.build(table, codec="zstd", partition_bytes=4096)
+    if kind == "hash":
+        return HashStore.build(table, codec="none", partition_bytes=2048)
+    raise ValueError(kind)
+
+
+def query_keys(table, extra_missing=True):
+    rng = np.random.default_rng(1)
+    q = rng.choice(table.keys, size=220)
+    if extra_missing:
+        q = np.concatenate(
+            [q, np.array([1, table.max_key + 3, 10**8], dtype=np.int64)]
+        )
+    return q
+
+
+def assert_result_bytes_equal(a, b):
+    np.testing.assert_array_equal(a.keys, b.keys)
+    assert a.keys.tobytes() == b.keys.tobytes()
+    np.testing.assert_array_equal(a.exists, b.exists)
+    assert set(a.values) == set(b.values)
+    for c in a.values:
+        assert a.values[c].dtype == b.values[c].dtype, c
+        assert a.values[c].tobytes() == b.values[c].tobytes(), c
+
+
+@pytest.fixture(scope="module", params=STORE_KINDS)
+def ro_store(request):
+    table = make_table()
+    return request.param, table, build_store(request.param, table)
+
+
+@pytest.fixture(scope="module", params=STORE_KINDS)
+def mutated(request):
+    """Fresh store per kind + the same interleaved mod sequence."""
+    kind = request.param
+    table = make_table(n=400)
+    store = build_store(kind, table)
+    cols = lambda n, off: {  # noqa: E731
+        "a": (np.arange(n, dtype=np.int32) % 5) + off,
+        "b": (np.arange(n, dtype=np.int32) % 3) + off,
+        "c": (np.arange(n, dtype=np.int32) % 7) + off,
+    }
+    new_keys = np.asarray([2, 5, 10**6, 10**6 + 4], dtype=np.int64)
+    store.insert(new_keys, cols(4, 10))
+    store.update(table.keys[10:20], cols(10, 20))
+    store.delete(table.keys[30:40])
+    store.delete(new_keys[:1])
+    store.update(new_keys[3:4], cols(1, 30))
+    return kind, table, store, new_keys
+
+
+class TestStreamingVsStaged:
+    """Morselized streaming executor == legacy one-shot staged path."""
+
+    @pytest.mark.parametrize("morsel", (64, 10_000))
+    def test_point(self, ro_store, morsel):
+        _, table, store = ro_store
+        plan = store.query().where_keys(query_keys(table)).morsel(morsel).plan()
+        assert_result_bytes_equal(
+            execute_plan(store, plan), execute_plan_staged(store, plan)
+        )
+
+    def test_range_and_scan(self, ro_store):
+        _, table, store = ro_store
+        lo, hi = int(table.keys[50]), int(table.keys[500])
+        for q in (
+            store.query().where_range(lo, hi).morsel(100),
+            store.query().scan().morsel(128),
+        ):
+            plan = q.plan()
+            res = execute_plan(store, plan)
+            assert_result_bytes_equal(res, execute_plan_staged(store, plan))
+            assert res.exists.all()
+            assert res.explain.morsels > 1
+
+    def test_after_interleaved_mods(self, mutated):
+        _, table, store, new_keys = mutated
+        q = np.concatenate([table.keys, new_keys])
+        plan = store.query().where_keys(q).morsel(77).plan()
+        res = execute_plan(store, plan)
+        assert_result_bytes_equal(res, execute_plan_staged(store, plan))
+        legacy_v, legacy_e = store.lookup(q)
+        np.testing.assert_array_equal(res.exists, legacy_e)
+        for c in legacy_v:
+            assert res.values[c].tobytes() == legacy_v[c].tobytes()
+
+    def test_stream_yields_aligned_morsels(self, ro_store):
+        _, table, store = ro_store
+        q = table.keys[:130]
+        morsels = list(store.query().where_keys(q).morsel(50).stream())
+        assert [m.index for m in morsels] == [0, 1, 2]
+        assert sum(m.keys.shape[0] for m in morsels) == 130
+        assert all(m.match is None for m in morsels)
+        np.testing.assert_array_equal(
+            np.concatenate([m.keys for m in morsels]), q
+        )
+
+    def test_empty_batch_streams_typed_columns(self, ro_store):
+        _, _, store = ro_store
+        res = store.query().where_keys([]).execute()
+        assert res.exists.shape == (0,)
+        assert set(res.values) == set(store.columns)
+        assert res.explain.morsels == 1
+
+
+class TestPredicatePushdown:
+    """Pushed-down ``.where()`` == post-hoc reference filter, bytewise."""
+
+    PREDS = (
+        ("b", "==", 1),
+        ("b", "!=", 0),
+        ("a", ">=", 3),
+        ("c", "<", 2),
+        ("a", "in", (0, 4)),
+    )
+
+    @pytest.mark.parametrize("col,op,val", PREDS)
+    def test_point_matches_posthoc(self, ro_store, col, op, val):
+        _, table, store = ro_store
+        q = query_keys(table)
+        down = (
+            store.query().where(col, op, val).where_keys(q).morsel(64).execute()
+        )
+        ref = (
+            store.query().where(col, op, val).pushdown(False)
+            .where_keys(q).morsel(64).execute()
+        )
+        assert_result_bytes_equal(down, ref)
+        assert down.exists.all()  # only matching rows survive
+        # oracle: filter the plain result by hand
+        plain = store.query().where_keys(q).execute()
+        pred = Predicate(column=col, op=op, value=val)
+        m = plain.exists & pred.mask(plain.values[col])
+        np.testing.assert_array_equal(down.keys, q[m])
+
+    def test_scan_and_range_match_posthoc(self, ro_store):
+        _, table, store = ro_store
+        for q in (
+            store.query().where("a", "==", 2).scan().morsel(128),
+            store.query().where("c", ">", 3).where_range(0, int(table.max_key)),
+        ):
+            down = q.pushdown(True).execute()
+            ref = q.pushdown(False).execute()
+            assert_result_bytes_equal(down, ref)
+
+    def test_conjunction(self, ro_store):
+        _, table, store = ro_store
+        q = query_keys(table)
+        down = (
+            store.query().where("a", ">=", 1).where("b", "==", 2)
+            .where_keys(q).execute()
+        )
+        ref = (
+            store.query().where("a", ">=", 1).where("b", "==", 2)
+            .pushdown(False).where_keys(q).execute()
+        )
+        assert_result_bytes_equal(down, ref)
+        pa = Predicate(column="a", op=">=", value=1)
+        pb = Predicate(column="b", op="==", value=2)
+        plain = store.query().where_keys(q).execute()
+        m = plain.exists & pa.mask(plain.values["a"]) & pb.mask(plain.values["b"])
+        assert down.keys.shape[0] == int(m.sum())
+
+    def test_predicate_outside_projection(self, ro_store):
+        """select(a) where(b==1): b's head is evaluated but not decoded,
+        and the result carries only column a."""
+        kind, table, store = ro_store
+        q = query_keys(table)
+        down = (
+            store.query().select("a").where("b", "==", 1)
+            .where_keys(q).execute()
+        )
+        ref = (
+            store.query().select("a").where("b", "==", 1).pushdown(False)
+            .where_keys(q).execute()
+        )
+        assert set(down.values) == {"a"} == set(ref.values)
+        assert_result_bytes_equal(down, ref)
+        if kind in ("deepmapping", "sharded"):
+            assert "b" in down.explain.heads_evaluated
+            assert "b" not in down.explain.columns_decoded
+            assert "c" in down.explain.heads_skipped
+
+    def test_after_interleaved_mods(self, mutated):
+        """Predicates see overlay/aux state: updated rows filtered by
+        their NEW values, deleted rows gone, inserted rows included."""
+        _, table, store, new_keys = mutated
+        q = np.concatenate([table.keys, new_keys])
+        down = (
+            store.query().where("a", ">=", 10).where_keys(q).morsel(90).execute()
+        )
+        ref = (
+            store.query().where("a", ">=", 10).pushdown(False)
+            .where_keys(q).morsel(90).execute()
+        )
+        assert_result_bytes_equal(down, ref)
+        hit = set(down.keys.tolist())
+        # every surviving updated key has its new value; inserted key
+        # 10**6 has a=10 >= 10; base rows all have a < 10
+        assert int(10**6) in hit
+        assert hit <= set(table.keys[10:20].tolist()) | set(new_keys.tolist())
+
+    def test_pushdown_decodes_fewer_rows(self, ro_store):
+        """The acceptance-criterion evidence: on model-backed stores a
+        selective predicate decodes strictly fewer rows than the
+        post-hoc reference (baselines decode the overlay view either
+        way)."""
+        kind, table, store = ro_store
+        q = query_keys(table, extra_missing=False)
+        down = store.query().where("b", "==", 1).where_keys(q).execute()
+        ref = (
+            store.query().where("b", "==", 1).pushdown(False)
+            .where_keys(q).execute()
+        )
+        assert ref.explain.rows_decoded == q.shape[0]
+        if kind in ("deepmapping", "sharded"):
+            assert down.explain.rows_decoded == down.keys.shape[0]
+            assert down.explain.rows_decoded < ref.explain.rows_decoded
+        assert any(o.name == "filter" for o in down.explain.operators)
+        f = next(o for o in down.explain.operators if o.name == "filter")
+        assert f.rows_out == down.keys.shape[0] <= f.rows_in
+
+    def test_stream_applies_posthoc_predicates(self, ro_store):
+        """pushdown(False) must not leak unfiltered morsels to
+        streaming consumers: match selectors are populated (post-hoc)
+        and pred-only columns are dropped, same rows as execute()."""
+        _, table, store = ro_store
+        q = query_keys(table)
+        base = store.query().select("a").where("b", "==", 1).where_keys(q)
+        down_morsels = list(base.morsel(64).stream())
+        ref_morsels = list(base.pushdown(False).stream())
+        assert all(m.match is not None for m in down_morsels)
+        assert all(m.match is not None for m in ref_morsels)
+        assert all(set(m.values) == {"a"} for m in ref_morsels)
+        executed = base.execute()
+        for morsels in (down_morsels, ref_morsels):
+            keys = np.concatenate([m.keys[m.match] for m in morsels])
+            vals = np.concatenate([m.values["a"][m.match] for m in morsels])
+            np.testing.assert_array_equal(keys, executed.keys)
+            assert vals.tobytes() == executed.values["a"].tobytes()
+
+    def test_builder_validation(self, ro_store):
+        _, _, store = ro_store
+        with pytest.raises(ValueError, match="unknown column"):
+            store.query().where("nope", "==", 1)
+        with pytest.raises(ValueError, match="unknown predicate op"):
+            store.query().where("a", "~", 1)
+        with pytest.raises(ValueError, match="single "):
+            # tuple("NEW") would silently match chars 'N','E','W'
+            store.query().where("a", "in", "NEW")
+
+
+class TestMultiPlanPipelining:
+    def test_matches_serial_execution(self, ro_store):
+        _, table, store = ro_store
+        q = query_keys(table)
+        plans = [
+            store.query().where_keys(q).morsel(64).plan(),
+            store.query().where("b", "==", 1).scan().morsel(128).plan(),
+            store.query().select("c").where_range(0, 999).plan(),
+        ]
+        pipelined = execute_plans([(store, p) for p in plans])
+        serial = [execute_plan(store, p) for p in plans]
+        for a, b in zip(pipelined, serial):
+            assert_result_bytes_equal(a, b)
+
+    def test_across_store_types(self):
+        table = make_table(n=300)
+        dm = build_store("deepmapping", table)
+        hs = build_store("hash", table)
+        q = table.keys[::3]
+        res_dm, res_hs = execute_plans(
+            [
+                (dm, dm.query().where_keys(q).morsel(32).plan()),
+                (hs, hs.query().where_keys(q).morsel(32).plan()),
+            ]
+        )
+        np.testing.assert_array_equal(res_dm.exists, res_hs.exists)
+        for c in table.columns:
+            np.testing.assert_array_equal(
+                np.asarray(res_dm.values[c]), np.asarray(res_hs.values[c])
+            )
+
+
+class TestFederation:
+    @pytest.fixture(scope="class")
+    def partitioned(self):
+        t_lo, t_hi = make_table(n=300), make_table(n=300, off=10_000)
+        union = Table(
+            keys=np.concatenate([t_lo.keys, t_hi.keys]),
+            columns={
+                c: np.concatenate([t_lo.columns[c], t_hi.columns[c]])
+                for c in t_lo.columns
+            },
+        )
+        fed = FederatedStore(
+            [build_store("deepmapping", t_lo), build_store("hash", t_hi)],
+            mode="partition",
+            boundaries=[5000],
+        )
+        ref = build_store("array", union)
+        return fed, ref, union
+
+    def test_partition_lookup_matches_reference(self, partitioned):
+        fed, ref, union = partitioned
+        rng = np.random.default_rng(3)
+        q = np.concatenate([rng.choice(union.keys, 250), [4, 10**9]])
+        fv, fe = fed.lookup(q)
+        rv, re_ = ref.lookup(q)
+        np.testing.assert_array_equal(fe, re_)
+        for c in rv:
+            np.testing.assert_array_equal(
+                np.asarray(fv[c])[fe], np.asarray(rv[c])[re_]
+            )
+
+    def test_partition_scan_ascending_union(self, partitioned):
+        fed, _, union = partitioned
+        res = fed.query().scan().execute()
+        np.testing.assert_array_equal(res.keys, np.sort(union.keys))
+        assert res.exists.all()
+
+    def test_partition_predicate_matches_reference(self, partitioned):
+        fed, ref, union = partitioned
+        q = union.keys[::4]
+        down = fed.query().where("b", "==", 1).where_keys(q).morsel(70).execute()
+        want = ref.query().where("b", "==", 1).where_keys(q).execute()
+        np.testing.assert_array_equal(down.keys, want.keys)
+        for c in want.values:
+            np.testing.assert_array_equal(
+                np.asarray(down.values[c]), np.asarray(want.values[c])
+            )
+
+    def test_partition_mutations_route(self, partitioned):
+        fed, _, _ = partitioned
+        keys = np.array([123_456, 7], dtype=np.int64)  # one per member
+        cols = {
+            "a": np.array([90, 91], np.int32),
+            "b": np.array([90, 91], np.int32),
+            "c": np.array([90, 91], np.int32),
+        }
+        fed.insert(keys, cols)
+        v, e = fed.lookup(keys)
+        assert e.all()
+        np.testing.assert_array_equal(np.asarray(v["a"]), [90, 91])
+        assert fed.members[1].lookup(keys[:1])[1][0]  # routed to hi member
+        assert fed.members[0].lookup(keys[1:])[1][0]  # routed to lo member
+        fed.delete(keys)
+        assert not fed.lookup(keys)[1].any()
+
+    def test_federated_shard_fanout_namespaced(self):
+        """Two sharded members both have a 'shard 0'; the federation
+        must union namespaced ids, not dedupe them."""
+        fed = FederatedStore(
+            [
+                build_store("sharded", make_table(n=300)),
+                build_store("sharded", make_table(n=300, off=10_000)),
+            ],
+            mode="partition",
+            boundaries=[5000],
+        )
+        total = sum(m.num_shards for m in fed.members)
+        res = fed.query().scan().execute()
+        assert res.explain.shards_visited == total
+        assert len(set(res.explain.shard_ids)) == total
+
+    def test_replicate_policies(self):
+        table = make_table(n=250)
+        fed = FederatedStore(
+            [build_store("deepmapping", table), build_store("hash", table)],
+            mode="replicate",
+            policy="round_robin",
+        )
+        q = table.keys[::2]
+        res = fed.query().where_keys(q).morsel(40).execute()
+        assert res.explain.morsels > 1  # morsels rotated across members
+        assert res.exists.all()
+        for c in table.columns:
+            np.testing.assert_array_equal(
+                np.asarray(res.values[c]), table.columns[c][::2]
+            )
+        # replicated mutations hit every member
+        fed.delete(table.keys[:1])
+        for m in fed.members:
+            assert not m.lookup(table.keys[:1])[1][0]
+
+    def test_rejected_mutations_leave_federation_untouched(self, partitioned):
+        """Conformance rule 2 at the facade: a batch rejected by ANY
+        member (here: duplicate insert routed to member 1, missing
+        update routed to member 1) must not leave earlier members
+        mutated."""
+        fed, _, union = partitioned
+        fresh_lo = np.array([4], dtype=np.int64)       # member 0, new key
+        existing_hi = union.keys[-1:]                  # member 1, present
+        cols = {c: np.zeros(2, dtype=np.int32) for c in fed.columns}
+        before = fed.num_rows
+        with pytest.raises(ValueError, match="existing key"):
+            fed.insert(np.concatenate([fresh_lo, existing_hi]), cols)
+        assert fed.num_rows == before
+        assert not fed.lookup(fresh_lo)[1][0]  # member 0 not half-mutated
+        missing_hi = np.array([10**9], dtype=np.int64)
+        victim = union.keys[10:11]  # member 0
+        with pytest.raises(ValueError, match="non-existing"):
+            fed.update(np.concatenate([victim, missing_hi]), cols)
+        v, e = fed.lookup(victim)
+        assert e[0]
+        assert int(np.asarray(v["a"])[0]) == int(union.columns["a"][10])
+
+    def test_partition_zero_length_mutations_are_noops(self, partitioned):
+        """Conformance rule 2: empty batches mutate nothing (and must
+        not crash the scatter)."""
+        fed, _, _ = partitioned
+        empty = np.zeros(0, dtype=np.int64)
+        no_cols = {c: np.zeros(0, dtype=np.int32) for c in fed.columns}
+        before = fed.num_rows
+        fed.insert(empty, no_cols)
+        fed.delete(empty)
+        fed.update(empty, no_cols)
+        assert fed.num_rows == before
+        values, exists = fed.lookup(empty)
+        assert exists.shape == (0,)
+        assert set(values) == set(fed.columns)
+
+    def test_constructor_validation(self):
+        table = make_table(n=100)
+        store = build_store("hash", table)
+        with pytest.raises(ValueError, match="boundaries"):
+            FederatedStore([store, store], mode="partition")
+        with pytest.raises(ValueError, match="ascending"):
+            FederatedStore(
+                [store, store, store], mode="partition", boundaries=[9, 1]
+            )
+        with pytest.raises(ValueError, match="mode"):
+            FederatedStore([store], mode="magic")
+        other = ArrayStore.build(
+            Table(keys=np.arange(10, dtype=np.int64),
+                  columns={"z": np.arange(10, dtype=np.int32)}),
+        )
+        with pytest.raises(ValueError, match="one schema"):
+            FederatedStore([store, other], mode="replicate")
+        with pytest.raises(NotImplementedError):
+            FederatedStore([store], mode="replicate").save("/tmp/nope")
+
+
+class _BrokenIndexStore(MappingStore):
+    """Range keys that the lookup path denies — must raise, not assert."""
+
+    def __init__(self):
+        self._keys = np.arange(10, dtype=np.int64)
+
+    @property
+    def columns(self):
+        return ("x",)
+
+    def lookup(self, keys, columns=None):
+        keys = np.asarray(keys, dtype=np.int64)
+        return (
+            {"x": np.zeros(keys.shape[0], dtype=np.int32)},
+            np.zeros(keys.shape[0], dtype=bool),  # claims nothing exists
+        )
+
+    def insert(self, keys, columns):  # pragma: no cover - protocol stubs
+        raise NotImplementedError
+
+    def delete(self, keys):  # pragma: no cover
+        raise NotImplementedError
+
+    def update(self, keys, columns):  # pragma: no cover
+        raise NotImplementedError
+
+    def size_breakdown(self):  # pragma: no cover
+        return {}
+
+    def save(self, path):  # pragma: no cover
+        raise NotImplementedError
+
+    @classmethod
+    def load(cls, path, pool=None):  # pragma: no cover
+        raise NotImplementedError
+
+    def _range_keys(self, lo, hi):
+        return self._keys
+
+    def materialize(self):  # pragma: no cover
+        raise NotImplementedError
+
+
+class TestInvariantsAndStats:
+    def test_range_invariant_raises_runtime_error(self):
+        store = _BrokenIndexStore()
+        plan = QueryPlan(kind="range", lo=0, hi=10)
+        with pytest.raises(RuntimeError, match="existence index"):
+            execute_plan(store, plan)
+        with pytest.raises(RuntimeError, match="existence index"):
+            execute_plan_staged(store, plan)
+        with pytest.raises(RuntimeError, match="existence index"):
+            # the streaming consumer path must enforce it too
+            from repro.api import stream_plan
+
+            list(stream_plan(store, plan))
+        with pytest.raises(RuntimeError, match="existence index"):
+            store.range_lookup(0, 10)  # the legacy surface as well
+
+    def test_merge_timings_unions_evidence(self):
+        a = ExplainStats(
+            heads_evaluated=("a",), heads_skipped=("b", "c"),
+            columns_decoded=("a",), columns_skipped=("b", "c"),
+            shards_visited=2, rows_decoded=5, infer_s=1.0,
+        )
+        b = ExplainStats(
+            heads_evaluated=("b",), heads_skipped=("a", "c"),
+            columns_decoded=("b",), columns_skipped=("c",),
+            predicates=("a==1",), shards_visited=3, rows_decoded=7,
+            infer_s=0.5, filter_s=0.25,
+        )
+        a.merge_timings(b)
+        assert a.heads_evaluated == ("a", "b")
+        assert a.heads_skipped == ("b", "c", "a")
+        assert a.columns_decoded == ("a", "b")
+        assert a.predicates == ("a==1",)
+        assert a.shards_visited == 3
+        assert a.rows_decoded == 12
+        assert a.infer_s == pytest.approx(1.5)
+        assert a.filter_s == pytest.approx(0.25)
+        # a count-only side (no shard ids) must not be dropped by the
+        # id-union either
+        c = ExplainStats(shard_ids=("m0:0",), shards_visited=1)
+        c.merge_timings(ExplainStats(shards_visited=4))
+        assert c.shards_visited == 4
+
+    def test_sharded_explain_not_underreported(self):
+        """Per-shard evidence survives the cross-shard merge."""
+        table = make_table(n=600)
+        store = build_store("sharded", table)
+        res = (
+            store.query().select("a").where("b", "==", 1)
+            .where_keys(table.keys[::2]).execute()
+        )
+        assert res.explain.shards_visited > 1
+        assert set(res.explain.heads_evaluated) == {"a", "b"}
+        assert res.explain.columns_decoded == ("a",)
+        assert "b==1" in res.explain.predicates
+
+    def test_morselized_shard_fanout_not_underreported(self):
+        """Sorted keys + small morsels: each morsel touches ONE shard,
+        but the aggregate must still report the union of shards the
+        plan visited (same answer as the one-shot staged path)."""
+        table = make_table(n=600)
+        store = build_store("sharded", table)
+        plan = store.query().where_keys(table.keys).morsel(100).plan()
+        streamed = execute_plan(store, plan)
+        staged = execute_plan_staged(store, plan)
+        assert streamed.explain.morsels > 1
+        assert staged.explain.shards_visited == store.num_shards
+        assert streamed.explain.shards_visited == staged.explain.shards_visited
+        assert set(streamed.explain.shard_ids) == set(staged.explain.shard_ids)
+
+    def test_operator_rows_cover_pipeline(self, ro_store):
+        _, table, store = ro_store
+        res = store.query().where_keys(table.keys[:64]).execute()
+        names = [o.name for o in res.explain.operators]
+        for expected in ("key_source", "infer", "aux_merge", "decode", "gather"):
+            assert expected in names
+        gather = next(o for o in res.explain.operators if o.name == "gather")
+        assert gather.rows_out == 64
+        assert res.explain.total_s > 0
+        assert dataclasses.asdict(res.explain)  # stays a plain dataclass
