@@ -16,9 +16,12 @@ Sections:
   query   — plan executor vs legacy lookup (point/range/scan, projection
             pushdown, sharded sync vs async fan-out)
   query_stream — streaming operator pipeline: multi-plan pipelined vs
-            serial, value-predicate pushdown vs post-hoc filter; writes
-            BENCH_query.json at the repo root (uploaded by the CI
-            smoke-bench job alongside BENCH_lookup.json)
+            serial, value-predicate pushdown vs post-hoc filter, plus
+            the adaptive-execution section (warm-vs-cold plan cache,
+            baseline partition pruning, adaptive vs fixed morsel
+            sizing); writes BENCH_query.json at the repo root
+            (uploaded by the CI smoke-bench job alongside
+            BENCH_lookup.json)
   lookup_pipeline — staged (seed path) vs pipelined (inference engine)
             hot-path comparison; writes BENCH_lookup.json at the repo
             root (p50/p99 latency, QPS, compile counts) — the CI
@@ -79,7 +82,10 @@ def main() -> None:
             )
         ),
         "query_stream": lambda: bench_query.write_query_json(
-            bench_query.run_streaming(smoke=args.smoke)
+            dict(
+                bench_query.run_streaming(smoke=args.smoke),
+                adaptive=bench_query.run_adaptive(smoke=args.smoke),
+            )
         ),
         # lazy: bench_tokens hard-imports zstandard (optional elsewhere);
         # a host without it should still run every other section

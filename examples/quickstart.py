@@ -107,6 +107,19 @@ def main() -> None:
         f"{o.name}[{o.rows_in}->{o.rows_out}]" for o in res.explain.operators
     ))
 
+    print("\n-- Plan cache (adaptive execution) ---------------")
+    # Repeated plans reuse the materialized key stream + compiled
+    # predicate code tables; mutations invalidate via the store's
+    # mutation version (DESIGN.md §Adaptive execution).
+    repeated = lambda: (  # noqa: E731
+        store.query().where("status", "==", "F").scan().execute()
+    )
+    cold, warm = repeated(), repeated()
+    print(f"  first run:  plan_cache={cold.explain.plan_cache!r}")
+    print(f"  second run: plan_cache={warm.explain.plan_cache!r} "
+          f"(key stream + code tables resident)")
+    assert warm.keys.tobytes() == cold.keys.tobytes()
+
     print("\n-- Modifications (Algorithms 3-5) ----------------")
     store.insert(
         np.array([10**6], dtype=np.int64),

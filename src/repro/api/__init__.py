@@ -8,12 +8,14 @@ imports them at module level (they import us), so the dependency
 direction stays acyclic: ``api <- stores <- serve/benchmarks``.
 """
 
+from repro.api.cache import PlanCache, plan_fingerprint  # noqa: F401
 from repro.api.entry import build, open  # noqa: F401,A004
 from repro.api.executor import (  # noqa: F401
     MorselResult,
     execute_plan,
     execute_plan_staged,
     execute_plans,
+    next_morsel_rows,
     stream_plan,
 )
 from repro.api.federated import FederatedStore  # noqa: F401

@@ -1,0 +1,219 @@
+"""Per-store plan-compilation cache (the adaptive-execution layer's
+memory).
+
+The streaming executor recompiles the same artifacts on every
+``execute()`` of a repeated plan: the range/scan **key-source
+materialization** (an existence-index scan), the resolved **projection
+subset** (selected columns extended by post-hoc predicate columns),
+and — on DeepMapping stores — the per-predicate boolean **code tables**
+over a column's decode map.  Learned-index practice (RMI, NeurStore)
+keeps learned/compiled artifacts resident across queries instead of
+rebuilding them per call; :class:`PlanCache` does the same for plan
+artifacts.
+
+Every :class:`~repro.api.protocol.MappingStore` owns one lazily-created
+``PlanCache`` (``store.plan_cache()``).  Entries are keyed by a **plan
+fingerprint** (:func:`plan_fingerprint` — the plan minus its execution
+knobs) and validated against the store's **mutation version**
+(``store.mutation_version()``): every ``insert``/``delete``/``update``
+bumps the version, so a cached key stream or code table can never
+outlive the state it was computed from.  ``ValueCodec.extend`` growing
+a decode map only ever happens inside ``insert``/``update``, so the
+version bump covers decode-map growth too; the code-table memo
+additionally checks decode-map object identity as a second fence.
+
+The cache is bounded (LRU over plan entries, hard cap on predicate
+tables) and advisory: a miss or an unfingerprintable plan (e.g. an
+unhashable predicate literal) falls back to recomputation — never to
+an error.
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+#: LRU capacity for plan-level entries (fingerprint -> artifacts).
+PLAN_ENTRIES = 64
+
+#: Byte budget for cached key-stream materializations.  Entries pin
+#: O(num_rows) int64 arrays (a scan of a 100M-row store is 800 MB), so
+#: the LRU must bound BYTES, not just entry count — varying-bound range
+#: plans on a huge store would otherwise pin ``PLAN_ENTRIES`` full key
+#: streams.
+KEY_BYTES_BUDGET = 256 * 1024 * 1024
+
+#: Hard cap on memoized predicate code tables (ad-hoc predicate churn
+#: must not grow the cache without bound; tables are tiny, so a full
+#: clear on overflow is cheaper than LRU bookkeeping).
+PRED_TABLES = 64
+
+
+def plan_fingerprint(plan) -> Optional[Tuple]:
+    """Cache key for a plan's compiled artifacts, or ``None`` when the
+    plan cannot be fingerprinted (unhashable predicate literal) or has
+    caching disabled.
+
+    The fingerprint covers exactly what determines the cached
+    artifacts: the key source (``range``/``scan`` bounds — point plans
+    carry their keys explicitly, so only their projection/predicate
+    artifacts are shared), the projection, the predicate conjunction,
+    and the pushdown switch (post-hoc plans extend the decode set by
+    predicate columns).  Execution knobs (morsel size, fan-out) are
+    deliberately excluded: adaptive morsel resizing must not bust the
+    cache.
+    """
+    if not plan.cache:
+        return None
+    if plan.kind == "point":
+        source: Tuple = ("point",)
+    elif plan.kind == "range":
+        source = ("range", int(plan.lo), int(plan.hi))
+    else:
+        source = ("scan",)
+    fp = source + (plan.columns, plan.predicates, plan.pushdown)
+    try:
+        hash(fp)
+    except TypeError:  # unhashable predicate literal — skip the cache
+        return None
+    return fp
+
+
+class _PlanEntry:
+    """One cached plan's artifacts (``keys`` is ``None`` for point
+    plans — their key stream arrives with the plan)."""
+
+    __slots__ = ("version", "keys", "columns")
+
+    def __init__(self, version, keys: Optional[np.ndarray], columns):
+        self.version = version
+        self.keys = keys
+        self.columns = columns
+
+
+class PlanCache:
+    """Bounded per-store memo of plan-compilation artifacts.
+
+    Three memo surfaces:
+
+    * :meth:`get`/:meth:`put` — plan-level artifacts (key-source
+      materialization, resolved projection subset), LRU-bounded;
+    * :meth:`pred_table` — predicate -> boolean code table over a
+      column's decode map (the DeepMapping pushdown compile);
+    * :attr:`hits`/:attr:`misses` — cache telemetry (the benchmark's
+      warm-vs-cold evidence).
+
+    Every entry records the store's mutation version at compute time
+    and is dropped on mismatch, so stale artifacts are structurally
+    unreachable.
+    """
+
+    def __init__(
+        self,
+        plan_entries: int = PLAN_ENTRIES,
+        pred_tables: int = PRED_TABLES,
+        key_bytes_budget: int = KEY_BYTES_BUDGET,
+    ):
+        """Create an empty cache with the given capacity bounds."""
+        self._plan_entries = int(plan_entries)
+        self._pred_tables = int(pred_tables)
+        self._key_bytes_budget = int(key_bytes_budget)
+        self._key_bytes = 0
+        self._plans: "OrderedDict[Tuple, _PlanEntry]" = OrderedDict()
+        self._tables: Dict = {}  # pred -> (version, decode_map, table)
+        self.hits = 0
+        self.misses = 0
+
+    # -------------------------------------------------------- plan entries
+    def get(self, fingerprint: Optional[Tuple], version) -> Optional[_PlanEntry]:
+        """Look up a plan entry; a version mismatch evicts and misses."""
+        if fingerprint is None:
+            return None
+        entry = self._plans.get(fingerprint)
+        if entry is None:
+            self.misses += 1
+            return None
+        if entry.version != version:
+            self._evict(fingerprint)
+            self.misses += 1
+            return None
+        self._plans.move_to_end(fingerprint)
+        self.hits += 1
+        return entry
+
+    def _evict(self, fingerprint: Tuple) -> None:
+        entry = self._plans.pop(fingerprint)
+        if entry.keys is not None:
+            self._key_bytes -= int(entry.keys.nbytes)
+
+    def put(
+        self,
+        fingerprint: Optional[Tuple],
+        version,
+        keys: Optional[np.ndarray],
+        columns,
+    ) -> None:
+        """Insert a plan entry (LRU-evicting over BOTH the entry count
+        and the key-stream byte budget — key materializations are
+        O(num_rows) and must not pin unbounded memory).
+
+        Cached key arrays are frozen (``writeable=False``) so a
+        downstream consumer can never corrupt a shared stream.  A
+        single key stream larger than the whole budget is not cached
+        at all (columns still are).
+        """
+        if fingerprint is None:
+            return
+        nbytes = 0
+        if keys is not None:
+            keys = np.asarray(keys)
+            keys.flags.writeable = False
+            nbytes = int(keys.nbytes)
+            if nbytes > self._key_bytes_budget:
+                keys, nbytes = None, 0
+        while self._plans and (
+            len(self._plans) >= self._plan_entries
+            or self._key_bytes + nbytes > self._key_bytes_budget
+        ):
+            self._evict(next(iter(self._plans)))
+        self._key_bytes += nbytes
+        self._plans[fingerprint] = _PlanEntry(version, keys, columns)
+
+    # ---------------------------------------------------- predicate tables
+    def pred_table(self, pred, decode_map: np.ndarray, version) -> np.ndarray:
+        """Memoized boolean code table for one predicate over
+        ``decode_map`` (see ``Predicate.code_table``).
+
+        Validated against BOTH the store's mutation version and the
+        decode-map object identity (``ValueCodec.extend`` swaps in a
+        new, larger array), so a grown vocabulary always recompiles.
+        Unhashable predicate literals compute uncached.
+        """
+        try:
+            entry = self._tables.get(pred)
+        except TypeError:  # unhashable literal (e.g. an array) — skip memo
+            return pred.code_table(decode_map)
+        if (
+            entry is not None
+            and entry[0] == version
+            and entry[1] is decode_map
+        ):
+            return entry[2]
+        table = pred.code_table(decode_map)
+        if len(self._tables) >= self._pred_tables:
+            self._tables.clear()
+        self._tables[pred] = (version, decode_map, table)
+        return table
+
+    # ------------------------------------------------------------- control
+    def clear(self) -> None:
+        """Drop every cached artifact (the benchmark's cold path)."""
+        self._plans.clear()
+        self._tables.clear()
+        self._key_bytes = 0
+
+    def __len__(self) -> int:
+        """Number of live plan entries (predicate tables excluded)."""
+        return len(self._plans)

@@ -21,8 +21,32 @@ from __future__ import annotations
 import os
 
 
+#: The on-disk formats ``open`` recognizes, newest-listed-first in the
+#: sniffing order (also the error-message inventory).
+SUPPORTED_FORMATS = (
+    "sharded cluster: directory containing manifest.msgpack "
+    "(ShardedDeepMappingStore.save)",
+    "single DeepMapping store: directory containing meta.msgpack "
+    "(DeepMappingStore.save)",
+    "baseline overlay store: single msgpack file with an "
+    "array_store/hash_store 'kind' header (ArrayStore/HashStore.save)",
+)
+
+
 def open(path: str, pool=None):  # noqa: A001 — deliberate builtin shadow inside repro.*
-    """Load any saved store, sniffing single-vs-sharded-vs-baseline."""
+    """Load any saved store, sniffing the on-disk format.
+
+    Format sniffing, in order: a **directory** holding
+    ``manifest.msgpack`` is a sharded cluster; a directory holding
+    ``meta.msgpack`` is a single DeepMapping store; a **file** is
+    parsed as a baseline msgpack blob and dispatched on its ``kind``
+    header (``array_store``/``hash_store``).  Anything else raises a
+    ``ValueError`` (or ``FileNotFoundError`` when ``path`` does not
+    exist) that lists the supported formats.  ``pool`` is the shared
+    :class:`~repro.storage.MemoryPool` to charge decompressed
+    partitions to (one is created per store when omitted).
+    """
+    supported = "; ".join(SUPPORTED_FORMATS)
     if os.path.isdir(path):
         if os.path.exists(os.path.join(path, "manifest.msgpack")):
             from repro.cluster.sharded_store import ShardedDeepMappingStore
@@ -33,14 +57,22 @@ def open(path: str, pool=None):  # noqa: A001 — deliberate builtin shadow insi
 
             return DeepMappingStore.load(path, pool=pool)
         raise ValueError(
-            f"{path!r} is a directory but has neither a cluster manifest "
-            f"nor a store meta file"
+            f"{path!r} is a directory but holds neither a cluster "
+            f"manifest nor a store meta file; supported formats: "
+            f"{supported}"
         )
     if os.path.isfile(path):
         from repro.baselines.partitioned import load_baseline_store
 
-        return load_baseline_store(path, pool=pool)
-    raise FileNotFoundError(path)
+        try:
+            return load_baseline_store(path, pool=pool)
+        except ValueError as err:
+            raise ValueError(
+                f"{err}; supported formats: {supported}"
+            ) from err
+    raise FileNotFoundError(
+        f"{path!r} does not exist; repro.open loads any of: {supported}"
+    )
 
 
 def build(

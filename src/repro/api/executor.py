@@ -7,14 +7,20 @@ type:
               -> Filter -> Decode -> Gather
 
 and is executed **morsel-at-a-time**: the key stream is cut into
-``plan.morsel_rows()`` chunks, each chunk's device work is enqueued
-through the store's ``_dispatch_lookup`` hook before the previous
-chunk's host half (existence fallback, aux merge, predicate filter,
-decode) is collected — so model-backed stores overlap device inference
-of morsel *i+1* with host work of morsel *i*.  :func:`execute_plans`
-extends the same window **across plans**: while plan A's host half
-runs, plans B..'s device work keeps executing, which is where
-multi-plan pipelines win over running ``execute_plan`` in a loop.
+chunks — sized adaptively between morsels from per-operator timings
+(:func:`next_morsel_rows`), or fixed by ``Query.morsel(n)`` — and each
+chunk's device work is enqueued through the store's
+``_dispatch_lookup`` hook before the previous chunk's host half
+(existence fallback, aux merge, predicate filter, decode) is collected
+— so model-backed stores overlap device inference of morsel *i+1* with
+host work of morsel *i*.  :func:`execute_plans` extends the same
+window **across plans**: while plan A's host half runs, plans B..'s
+device work keeps executing, which is where multi-plan pipelines win
+over running ``execute_plan`` in a loop.  Plan compilation artifacts
+(key-source materializations, projection subsets, predicate code
+tables) come from the store's per-store
+:class:`~repro.api.cache.PlanCache`, so repeated plans skip the
+existence-index scan and predicate compiles entirely.
 
 The store-specific middle stages stay behind the two protocol hooks
 (``_dispatch_lookup``/``_collect_lookup``); the sharded store
@@ -44,6 +50,7 @@ from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.api.cache import plan_fingerprint
 from repro.api.plan import (
     ExplainStats,
     OperatorStats,
@@ -58,6 +65,37 @@ from repro.api.protocol import _check_index_agreement
 #: Morsels in flight ahead of the host half, per plan.  Matches the
 #: store-level DISPATCH_WINDOW so device residency stays bounded.
 MORSEL_WINDOW = 2
+
+#: Adaptive morsel sizing bounds (rows).  Powers of two so resized
+#: morsels keep hitting the inference engine's power-of-two batch
+#: buckets instead of forcing fresh compiles.
+ADAPT_MIN = 1 << 12
+ADAPT_MAX = 1 << 20
+
+#: Per-morsel operator-time targets (seconds).  Below the low mark the
+#: fixed per-morsel overhead (dispatch bookkeeping, stats merging)
+#: dominates and the window doubles; above the high mark a morsel is
+#: too coarse to overlap well (and pins too much on device) and the
+#: window halves.
+ADAPT_LOW_S = 0.004
+ADAPT_HIGH_S = 0.032
+
+
+def next_morsel_rows(rows: int, operator_seconds: float) -> int:
+    """Adaptive-sizing rule: the next morsel's row count given the last
+    full morsel's summed per-operator time.
+
+    Deterministic in its inputs (double under :data:`ADAPT_LOW_S`,
+    halve over :data:`ADAPT_HIGH_S`, else hold) and bounded to
+    ``[ADAPT_MIN, ADAPT_MAX]``; growth stays power-of-two-aligned so
+    the device batch buckets stay warm.  Pure so the equivalence suite
+    can test it directly.
+    """
+    if operator_seconds < ADAPT_LOW_S and rows < ADAPT_MAX:
+        return min(rows * 2, ADAPT_MAX)
+    if operator_seconds > ADAPT_HIGH_S and rows > ADAPT_MIN:
+        return max(rows // 2, ADAPT_MIN)
+    return rows
 
 
 @dataclasses.dataclass
@@ -98,39 +136,87 @@ class PlanStream:
     multiplexers (:func:`stream_plan`, :func:`execute_plans`) call
     :meth:`dispatch_one` / :meth:`collect_one` in whatever order keeps
     the most device work in flight.
+
+    Plan compilation consults the store's per-store
+    :class:`~repro.api.cache.PlanCache`: a repeated range/scan plan
+    reuses its materialized key stream and resolved projection instead
+    of re-scanning the existence index (``cache_state`` records the
+    outcome as explain evidence).  Morsel sizes are **adaptive** by
+    default — resized between morsels by :func:`next_morsel_rows` from
+    the collected morsel's per-operator timings — unless the plan
+    forces a fixed size (``Query.morsel(n)``).
     """
 
     def __init__(self, store, plan: QueryPlan):
         self.store = store
         self.plan = plan
-        self.keys, self.route_s = _resolve_keys(store, plan)
-        self.morsel = plan.morsel_rows()
+        self.fixed = plan.morsel is not None
+        self._morsel_rows = plan.morsel_rows()
         self.fanout = True if plan.fanout is None else plan.fanout
         self.preds: Tuple[Predicate, ...] = (
             plan.predicates if plan.pushdown else ()
         )
-        # Post-hoc filtering evaluates on decoded values, so the
-        # predicate columns must be decoded even when the projection
-        # excludes them (_finalize_morsel drops them after filtering).
-        self.columns = plan.columns
-        if plan.predicates and not plan.pushdown:
-            self.columns = columns_with_predicates(plan.columns, plan.predicates)
-        self.num_morsels = max(1, -(-self.keys.shape[0] // self.morsel))
-        self._next_dispatch = 0
-        self._next_collect = 0
-        self._inflight: List[Tuple[int, object]] = []  # (morsel index, handle)
+        #: range/scan keys come from the existence index, so every key
+        #: is known to exist — the hint baseline partition pruning needs.
+        self.keys_exist = plan.kind != "point"
+        fp = plan_fingerprint(plan)
+        cache = store.plan_cache()
+        version = store.mutation_version()
+        entry = cache.get(fp, version)
+        if entry is not None and plan.kind != "point" and entry.keys is None:
+            # The key stream exceeded the cache's byte budget and was
+            # dropped at put time — resolve it fresh.
+            entry = None
+        self.cache_state = "bypass" if fp is None else (
+            "hit" if entry is not None else "miss"
+        )
+        if entry is not None:
+            t0 = time.perf_counter()
+            self.keys = (
+                np.asarray(plan.keys, dtype=np.int64)
+                if plan.kind == "point"
+                else entry.keys
+            )
+            self.columns = entry.columns
+            self.route_s = time.perf_counter() - t0
+        else:
+            self.keys, self.route_s = _resolve_keys(store, plan)
+            # Post-hoc filtering evaluates on decoded values, so the
+            # predicate columns must be decoded even when the projection
+            # excludes them (_finalize_morsel drops them after filtering).
+            self.columns = plan.columns
+            if plan.predicates and not plan.pushdown:
+                self.columns = columns_with_predicates(
+                    plan.columns, plan.predicates
+                )
+            cache.put(
+                fp,
+                version,
+                None if plan.kind == "point" else self.keys,
+                self.columns,
+            )
+        self.sizes: List[int] = []  # dispatched morsel sizes (evidence)
+        self._cursor = 0
+        self._dispatched = 0
+        self._dispatched_any = False
+        # (seq, start, rows, target, handle) per in-flight morsel
+        self._inflight: List[Tuple[int, int, int, int, object]] = []
 
     # ------------------------------------------------------------- state
     @property
     def dispatch_done(self) -> bool:
-        return self._next_dispatch >= self.num_morsels
+        """True once the whole key stream has been dispatched (a
+        zero-length stream still dispatches ONE empty morsel)."""
+        return self._dispatched_any and self._cursor >= self.keys.shape[0]
 
     @property
     def done(self) -> bool:
-        return self._next_collect >= self.num_morsels
+        """True once every dispatched morsel has been collected."""
+        return self.dispatch_done and not self._inflight
 
     @property
     def inflight(self) -> int:
+        """Number of dispatched-but-uncollected morsels."""
         return len(self._inflight)
 
     # ------------------------------------------------------------- steps
@@ -138,27 +224,46 @@ class PlanStream:
         """Enqueue the next morsel's device work; False when drained."""
         if self.dispatch_done:
             return False
-        i = self._next_dispatch
-        chunk = self.keys[i * self.morsel : (i + 1) * self.morsel]
+        target = self._morsel_rows
+        chunk = self.keys[self._cursor : self._cursor + target]
         handle = self.store._dispatch_lookup(
-            chunk, self.columns, fanout=self.fanout, predicates=self.preds
+            chunk,
+            self.columns,
+            fanout=self.fanout,
+            predicates=self.preds,
+            keys_exist=self.keys_exist,
         )
-        self._inflight.append((i, handle))
-        self._next_dispatch += 1
+        rows = int(chunk.shape[0])
+        self._inflight.append(
+            (self._dispatched, self._cursor, rows, target, handle)
+        )
+        self.sizes.append(rows)
+        self._cursor += rows
+        self._dispatched += 1
+        self._dispatched_any = True
         return True
 
     def collect_one(self) -> MorselResult:
-        """Block on the oldest in-flight morsel's host half."""
+        """Block on the oldest in-flight morsel's host half.
+
+        Under adaptive sizing, a collected **full** morsel's summed
+        per-operator time feeds :func:`next_morsel_rows` to resize
+        subsequent dispatches (partial tail morsels carry no signal).
+        """
         if not self._inflight:
             raise RuntimeError("collect_one with no morsel in flight")
-        i, handle = self._inflight.pop(0)
+        seq, start, rows, target, handle = self._inflight.pop(0)
         values, exists, match, stats = self.store._collect_lookup(handle)
-        start = i * self.morsel
-        self._next_collect += 1
+        if not self.fixed and rows == target:
+            operator_s = (
+                stats.infer_s + stats.exist_s + stats.aux_s
+                + stats.filter_s + stats.decode_s
+            )
+            self._morsel_rows = next_morsel_rows(target, operator_s)
         return MorselResult(
-            index=i,
+            index=seq,
             start=start,
-            keys=self.keys[start : start + self.morsel],
+            keys=self.keys[start : start + rows],
             values=values,
             exists=exists,
             match=match,
@@ -226,6 +331,7 @@ class _Gatherer:
         self.t0 = time.perf_counter()
 
     def add(self, morsel: MorselResult) -> None:
+        """Fold one finalized morsel into the accumulating result."""
         t0 = time.perf_counter()
         if morsel.match is not None:
             sel = morsel.match
@@ -245,6 +351,9 @@ class _Gatherer:
         self.stats.gather_s += time.perf_counter() - t0
 
     def finish(self, run: PlanStream) -> QueryResult:
+        """Concatenate the accumulated morsels and assemble the final
+        :class:`~repro.api.plan.ExplainStats` (operator rows, plan
+        stages, cache + morsel-size evidence)."""
         t0 = time.perf_counter()
         keys = (
             _concat(self.key_parts)
@@ -262,6 +371,8 @@ class _Gatherer:
         stats.num_keys = int(run.keys.shape[0])
         stats.num_rows = int(exists.sum())
         stats.route_s += run.route_s
+        stats.plan_cache = run.cache_state
+        stats.morsel_sizes = tuple(run.sizes)
         filtered = bool(self.plan.predicates)
         stats.plan = (
             (run.plan.source_stage(),)

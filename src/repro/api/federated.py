@@ -47,7 +47,7 @@ import numpy as np
 
 from repro.api.plan import ExplainStats
 from repro.api.protocol import MappingStore
-from repro.api.routing import gather_parts, group_runs
+from repro.api.routing import LazyFanoutPool, gather_parts, group_runs
 
 MODES = ("partition", "replicate")
 POLICIES = ("primary", "round_robin")
@@ -56,14 +56,18 @@ POLICIES = ("primary", "round_robin")
 class _PendingFederatedLookup:
     """Per-member dispatches in flight for one request batch."""
 
-    __slots__ = ("keys", "parts", "route_s", "predicates", "member_ids")
+    __slots__ = (
+        "keys", "parts", "route_s", "predicates", "member_ids", "use_fanout",
+    )
 
-    def __init__(self, keys, parts, route_s, predicates, member_ids):
+    def __init__(self, keys, parts, route_s, predicates, member_ids,
+                 use_fanout):
         self.keys = keys
         self.parts = parts          # [(member, positions, handle), ...]
         self.route_s = route_s
         self.predicates = predicates
         self.member_ids = member_ids
+        self.use_fanout = use_fanout
 
 
 class FederatedStore(MappingStore):
@@ -111,6 +115,9 @@ class FederatedStore(MappingStore):
         self.policy = policy
         self._columns = cols
         self._rr = 0  # round-robin cursor (replicate mode)
+        # Morsel-parallel collect: member host halves gather on the
+        # same lazy fan-out pool machinery the sharded store uses.
+        self._fanout = LazyFanoutPool(None, "fed-collect")
 
     # --------------------------------------------------------------- routing
     def _member_of(self, keys: np.ndarray) -> np.ndarray:
@@ -134,13 +141,17 @@ class FederatedStore(MappingStore):
     # -------------------------------------------------------------- protocol
     @property
     def columns(self) -> Tuple[str, ...]:
+        """Member 0's column order (sets are identical by contract)."""
         return self._columns
 
-    def _dispatch_lookup(self, keys, columns=None, fanout=None, predicates=()):
+    def _dispatch_lookup(self, keys, columns=None, fanout=None, predicates=(),
+                         keys_exist=False):
         """Per-member scatter: every touched member's device work is
         enqueued before any host half runs, so a federated morsel
         overlaps member inference the same way the sharded store
-        overlaps shard inference."""
+        overlaps shard inference.  ``keys_exist`` forwards to every
+        member (partition-mode range/scan keys come from the members'
+        own existence indexes)."""
         keys = np.asarray(keys, dtype=np.int64)
         t0 = time.perf_counter()
         if self.mode == "replicate" or keys.shape[0] == 0:
@@ -154,28 +165,44 @@ class FederatedStore(MappingStore):
                 m,
                 pos,
                 self.members[m]._dispatch_lookup(
-                    keys[pos], columns, fanout=fanout, predicates=predicates
+                    keys[pos], columns, fanout=fanout, predicates=predicates,
+                    keys_exist=keys_exist,
                 ),
             )
             for m, pos in groups
         ]
+        use_fanout = (fanout is None or bool(fanout)) and len(parts) > 1
         return _PendingFederatedLookup(
-            keys, parts, route_s, tuple(predicates), [m for m, _ in groups]
+            keys, parts, route_s, tuple(predicates), [m for m, _ in groups],
+            use_fanout,
         )
 
     def _collect_lookup(self, pending: _PendingFederatedLookup):
-        """Streaming gather: collect each member's host half and
-        permute results back to request order."""
+        """Morsel-parallel gather: collect the members' host halves —
+        on the lazy fan-out pool when more than one member answered
+        (``Query.fanout(False)`` restores serial visits) — and permute
+        results back to request order."""
         n = pending.keys.shape[0]
-        agg = ExplainStats(route_s=pending.route_s)
-        collected = []
-        member_plan: Tuple[str, ...] = ()
-        for m, pos, handle in pending.parts:
+        agg = ExplainStats(route_s=pending.route_s, async_fanout=pending.use_fanout)
+
+        def visit(part):
+            m, pos, handle = part
             values, exists, match, stats = self.members[m]._collect_lookup(handle)
             # Namespace member-local shard ids before the union: two
             # sharded members both have a "shard 0", and deduping them
             # would under-report the federation's true fan-out.
             stats.shard_ids = tuple(f"m{m}:{s}" for s in stats.shard_ids)
+            return pos, values, exists, match, stats
+
+        if pending.use_fanout:
+            visited = self._fanout.map(
+                visit, pending.parts, owners=len(self.members)
+            )
+        else:
+            visited = [visit(p) for p in pending.parts]
+        collected = []
+        member_plan: Tuple[str, ...] = ()
+        for pos, values, exists, match, stats in visited:
             agg.merge_timings(stats)
             if not member_plan:
                 member_plan = stats.plan
@@ -215,6 +242,8 @@ class FederatedStore(MappingStore):
     def lookup(
         self, keys: np.ndarray, columns: Optional[Tuple[str, ...]] = None
     ) -> Tuple[Dict[str, np.ndarray], np.ndarray]:
+        """Batched exact-match lookup across the members (scatter in
+        partition mode, one replica in replicate mode)."""
         values, exists, _, _ = self._collect_lookup(
             self._dispatch_lookup(keys, columns)
         )
@@ -247,6 +276,8 @@ class FederatedStore(MappingStore):
     # leave the federation untouched, not half-mutated up to the
     # member that raised.
     def insert(self, keys: np.ndarray, columns: Dict[str, np.ndarray]) -> None:
+        """Insert new rows — routed to owners (partition) or applied to
+        every member (replicate); validated before any member mutates."""
         keys = np.asarray(keys, dtype=np.int64)
         if keys.size and np.unique(keys).size != keys.size:
             raise ValueError("duplicate keys in insert batch")
@@ -279,6 +310,8 @@ class FederatedStore(MappingStore):
             self.members[mid].delete(keys[pos])
 
     def update(self, keys: np.ndarray, columns: Dict[str, np.ndarray]) -> None:
+        """Overwrite existing rows (validated against every affected
+        member before mutating any, like :meth:`insert`)."""
         keys = np.asarray(keys, dtype=np.int64)
         if self.mode == "replicate":
             for m in self.members:
@@ -296,14 +329,23 @@ class FederatedStore(MappingStore):
                 keys[pos], {c: v[pos] for c, v in columns.items()}
             )
 
+    def mutation_version(self):
+        """Tuple of member tokens: a mutation through the facade OR
+        directly on a member store invalidates the federation's cached
+        plans (members are caller-owned and reachable)."""
+        return tuple(m.mutation_version() for m in self.members)
+
     # --------------------------------------------------------- accounting
     @property
     def num_rows(self) -> int:
+        """Logical row count (member sum in partition mode; member 0's
+        in replicate mode — replicas hold the same relation)."""
         if self.mode == "replicate":
             return int(self.members[0].num_rows)
         return int(sum(m.num_rows for m in self.members))
 
     def size_breakdown(self) -> Dict[str, int]:
+        """Per-member storage accounting, keys namespaced ``memberN.*``."""
         out: Dict[str, int] = {}
         for i, m in enumerate(self.members):
             for k, v in m.size_breakdown().items():
@@ -312,6 +354,7 @@ class FederatedStore(MappingStore):
 
     # -------------------------------------------------------- persistence
     def save(self, path: str) -> None:
+        """Intentionally unsupported — persist members individually."""
         raise NotImplementedError(
             "a federation is a runtime composition; save each member "
             "store individually and recompose with FederatedStore(...)"
@@ -319,6 +362,7 @@ class FederatedStore(MappingStore):
 
     @classmethod
     def load(cls, path: str, pool=None) -> "FederatedStore":
+        """Intentionally unsupported — load members and recompose."""
         raise NotImplementedError(
             "load the member stores individually (repro.open) and "
             "recompose with FederatedStore(...)"

@@ -111,6 +111,7 @@ class Predicate:
         return self.mask(decode_map)
 
     def describe(self) -> str:
+        """Compact ``column<op>value`` form for explain output."""
         return f"{self.column}{self.op}{self.value!r}"
 
 
@@ -166,8 +167,12 @@ class QueryPlan:
     overlay-view on baselines); ``pushdown=False`` keeps the post-hoc
     reference path: decode everything, filter after — byte-identical
     results, more rows decoded.  ``fanout`` overrides the sharded
-    store's parallel lookup fan-out; ``morsel`` overrides the executor
-    chunk size (``None`` = :data:`DEFAULT_MORSEL`).
+    store's parallel lookup fan-out; ``morsel`` **forces a fixed**
+    executor chunk size (``None`` = adaptive sizing seeded at
+    :data:`DEFAULT_MORSEL`, resized between morsels from per-operator
+    timings).  ``cache`` routes plan compilation through the store's
+    :class:`~repro.api.cache.PlanCache` (``False`` = always recompile
+    — the warm-vs-cold reference path).
     """
 
     kind: str
@@ -179,6 +184,7 @@ class QueryPlan:
     pushdown: bool = True
     fanout: Optional[bool] = None
     morsel: Optional[int] = None
+    cache: bool = True
 
     def __post_init__(self) -> None:
         if self.kind not in PLAN_KINDS:
@@ -199,6 +205,7 @@ class QueryPlan:
         return "scan"
 
     def morsel_rows(self) -> int:
+        """Initial executor chunk size (fixed when ``morsel`` is set)."""
         return DEFAULT_MORSEL if self.morsel is None else int(self.morsel)
 
 
@@ -234,9 +241,14 @@ class ExplainStats:
     honours; ``predicates`` the pushed-down value filters and
     ``rows_decoded`` how many rows actually reached a decode call
     (strictly fewer than ``num_keys`` under selective pushdown).
+    ``partitions_pruned`` counts baseline partitions skipped by the
+    dictionary zone maps; ``plan_cache`` reports the plan-cache
+    outcome (``"hit"``/``"miss"``/``"bypass"``) and ``morsel_sizes``
+    the dispatched morsel row counts (adaptive sizing evidence).
     Timings are seconds; under shard fan-out / morsel merging the
     per-stage times are summed (CPU time), while ``total_s`` is wall
-    clock.
+    clock.  See DESIGN.md §Explain-stats reference for the full
+    field-by-field table.
     """
 
     kind: str = ""
@@ -259,6 +271,9 @@ class ExplainStats:
     predicates: Tuple[str, ...] = ()
     rows_decoded: int = 0
     rows_matched: int = 0
+    partitions_pruned: int = 0
+    plan_cache: str = ""
+    morsel_sizes: Tuple[int, ...] = ()
     route_s: float = 0.0
     infer_s: float = 0.0
     exist_s: float = 0.0
@@ -284,6 +299,7 @@ class ExplainStats:
         self.gather_s += other.gather_s
         self.rows_decoded += other.rows_decoded
         self.rows_matched += other.rows_matched
+        self.partitions_pruned += other.partitions_pruned
         self.shard_ids = tuple(
             dict.fromkeys(self.shard_ids + other.shard_ids)
         )
@@ -322,4 +338,5 @@ class QueryResult:
 
     @property
     def num_rows(self) -> int:
+        """Existing result rows (``exists.sum()``)."""
         return int(self.exists.sum())

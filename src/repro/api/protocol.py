@@ -41,6 +41,7 @@ from typing import Dict, Optional, Tuple
 
 import numpy as np
 
+from repro.api.cache import PlanCache
 from repro.api.plan import (
     ExplainStats,
     columns_with_predicates,
@@ -145,6 +146,7 @@ class MappingStore(abc.ABC):
         return keys, values
 
     def size_bytes(self) -> int:
+        """Total storage footprint (sum of :meth:`size_breakdown`)."""
         return sum(self.size_breakdown().values())
 
     def query(self):
@@ -154,8 +156,40 @@ class MappingStore(abc.ABC):
 
         return Query(self)
 
+    # ------------------------------------------------ plan-cache integration
+    def mutation_version(self):
+        """Opaque token that changes on every logical mutation.
+
+        The plan cache stamps each artifact with this token and drops
+        it on mismatch, so ``insert``/``delete``/``update`` (including
+        a decode-map-growing insert) can never serve stale compiled
+        plans.  Stores call :meth:`_note_mutation` from their mutators;
+        composite stores (sharded, federated) combine member tokens.
+        Comparison is by equality only — the value has no ordering.
+        """
+        return getattr(self, "_mutation_version", 0)
+
+    def _note_mutation(self) -> None:
+        """Advance :meth:`mutation_version` (call from every mutator)."""
+        self._mutation_version = getattr(self, "_mutation_version", 0) + 1
+
+    def plan_cache(self) -> PlanCache:
+        """This store's lazily-created :class:`~repro.api.cache.PlanCache`.
+
+        The streaming executor consults it for repeated-plan artifacts
+        (key-source materializations, projection subsets); DeepMapping
+        stores additionally memoize predicate code tables through it.
+        ``store.plan_cache().clear()`` forces the cold path.
+        """
+        cache = getattr(self, "_plan_cache", None)
+        if cache is None:
+            cache = self._plan_cache = PlanCache()
+        return cache
+
     # ------------------------------------------- async lookup pipeline hooks
-    def _dispatch_lookup(self, keys, columns=None, fanout=None, predicates=()):
+    def _dispatch_lookup(
+        self, keys, columns=None, fanout=None, predicates=(), keys_exist=False
+    ):
         """Begin an async lookup; :meth:`_collect_lookup` finishes it.
 
         Model-backed stores override the pair so device inference for
@@ -165,8 +199,12 @@ class MappingStore(abc.ABC):
         one).  The default defers everything to collect time — baseline
         stores have no device stage to overlap, so dispatch/collect
         degenerates to a plain call.  ``predicates`` is the pushed-down
-        value-filter conjunction (see :class:`~repro.api.plan.Predicate`)."""
-        return (keys, columns, fanout, tuple(predicates))
+        value-filter conjunction (see :class:`~repro.api.plan.Predicate`);
+        ``keys_exist`` asserts every requested key exists (the executor
+        sets it for range/scan plans, whose keys come from the
+        existence index) — stores may exploit it to skip work (baseline
+        partition pruning) but must never rely on it for point plans."""
+        return (keys, columns, fanout, tuple(predicates), keys_exist)
 
     def _collect_lookup(self, handle):
         """Finish a lookup begun by :meth:`_dispatch_lookup` ->
@@ -179,7 +217,7 @@ class MappingStore(abc.ABC):
         store's ordinary lookup output, i.e. for the baselines on the
         **modification-overlay view**: inserted/updated rows are
         filtered by their overlay values, deleted rows by ``exists``."""
-        keys, columns, fanout, predicates = handle
+        keys, columns, fanout, predicates, _keys_exist = handle
         if not predicates:
             values, exists, stats = self._lookup_with_stats(
                 keys, columns, fanout=fanout

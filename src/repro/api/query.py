@@ -41,6 +41,7 @@ class Query:
         self._pushdown: bool = True
         self._fanout: Optional[bool] = None
         self._morsel: Optional[int] = None
+        self._cache: bool = True
 
     # ------------------------------------------------------------ projection
     def select(self, *columns: str) -> "Query":
@@ -117,9 +118,20 @@ class Query:
         return self
 
     def morsel(self, rows: int) -> "Query":
-        """Override the executor's morsel size (rows per streamed
-        chunk); default :data:`~repro.api.plan.DEFAULT_MORSEL`."""
+        """Force a FIXED executor morsel size (rows per streamed
+        chunk).  Without it the executor sizes morsels adaptively:
+        seeded at :data:`~repro.api.plan.DEFAULT_MORSEL` and resized
+        between morsels from per-operator timings (bounded,
+        power-of-two aligned — see ``executor.next_morsel_rows``)."""
         self._morsel = int(rows)
+        return self
+
+    def cached(self, enabled: bool) -> "Query":
+        """``False`` bypasses the store's plan cache: key-source
+        materializations, projection subsets, and predicate code
+        tables are recompiled for this plan (the warm-vs-cold
+        reference path; results are byte-identical either way)."""
+        self._cache = bool(enabled)
         return self
 
     def plan(self) -> QueryPlan:
@@ -138,9 +150,11 @@ class Query:
             pushdown=self._pushdown,
             fanout=self._fanout,
             morsel=self._morsel,
+            cache=self._cache,
         )
 
     def execute(self) -> QueryResult:
+        """Compile and run the plan through the streaming executor."""
         from repro.api.executor import execute_plan  # local: keep import light
 
         return execute_plan(self._store, self.plan())

@@ -10,7 +10,10 @@ the same two nontrivial idioms; they live here once:
 * :func:`gather_parts` — reassemble per-owner ``(values, exists)``
   into request order via concatenate + inverse permutation, which
   sidesteps per-column dtype preallocation (owners may disagree on
-  e.g. unicode widths of decode maps).
+  e.g. unicode widths of decode maps);
+* :class:`LazyFanoutPool` — the lazily-created, double-checked-locked
+  thread pool both fan-out stages (per-shard lookup visits, per-member
+  federation collects) run on.
 
 This module must stay dependency-light (numpy only): ``cluster``
 imports it through ``api``, and ``api`` must never import the store
@@ -19,9 +22,51 @@ packages back.
 
 from __future__ import annotations
 
-from typing import Dict, Iterable, List, Tuple
+import os
+import threading
+from concurrent.futures import ThreadPoolExecutor
+from typing import Dict, Iterable, List, Optional, Tuple
 
 import numpy as np
+
+
+class LazyFanoutPool:
+    """Lazy, long-lived thread pool for scatter/gather fan-out stages.
+
+    Shared by the sharded store (per-shard lookup visits) and the
+    federation (per-member morsel collects): owners are independent
+    stores whose host halves release the GIL inside compiled inference,
+    so visits genuinely overlap.  Creation is double-checked-locked —
+    two first-queries racing must not each build (and leak) a pool —
+    and deferred until the first parallel call, so serial workloads
+    never spawn threads.
+    """
+
+    def __init__(self, max_workers: Optional[int], name: str):
+        """Remember the sizing policy; no threads start until needed.
+
+        ``max_workers=None`` defers to ``min(owners, cpu_count)`` at
+        the first :meth:`map` call (``owners`` passed there).
+        """
+        self._max_workers = max_workers
+        self._name = name
+        self._pool: Optional[ThreadPoolExecutor] = None
+        self._lock = threading.Lock()
+
+    def map(self, fn, items, owners: Optional[int] = None) -> List:
+        """``[fn(x) for x in items]`` on the pool (created on first
+        use, sized by the configured cap or ``min(owners, cpus)``)."""
+        if self._pool is None:
+            with self._lock:
+                if self._pool is None:
+                    workers = self._max_workers or min(
+                        owners or (os.cpu_count() or 4), os.cpu_count() or 4
+                    )
+                    self._pool = ThreadPoolExecutor(
+                        max_workers=max(1, workers),
+                        thread_name_prefix=self._name,
+                    )
+        return list(self._pool.map(fn, items))
 
 
 def group_runs(ids: np.ndarray) -> List[Tuple[int, np.ndarray]]:

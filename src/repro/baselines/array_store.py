@@ -81,6 +81,9 @@ class ArrayStore(PartitionedBaselineStore):
         self._partitions: list[bytes] = []
         self._boundaries = np.zeros(0, dtype=np.int64)
         self._decoders: Dict[str, ValueCodec] = {}
+        # Lazy per-column zone maps over the immutable partitions
+        # (dictionary mode only) — the partition-pruning evidence.
+        self._zone_maps: Dict[str, np.ndarray] = {}
         self.num_rows = 0
         self._init_overlay()
 
@@ -187,6 +190,34 @@ class ArrayStore(PartitionedBaselineStore):
                 col[idx] = decoded_hits
             out[name] = col
         return out, exists
+
+    # ----------------------------------------------------- pruning hooks
+    def _column_decoder(self, column: str) -> Optional[ValueCodec]:
+        """Dictionary-mode columns expose their codec for zone-map
+        pruning; raw-value columns return ``None``."""
+        if not self.dictionary:
+            return None
+        return self._decoders.get(column)
+
+    def _partition_code_presence(self, column: str) -> Optional[np.ndarray]:
+        """Lazy zone map: bool ``(num_partitions, cardinality)`` of the
+        codes present in each partition (dictionary mode only).  Built
+        once per column by one pass over the partitions — the same
+        pool-cached loads a first scan pays anyway — and valid forever
+        (base partitions are immutable; overlay rows are handled by the
+        pruning path's touched-key exclusion)."""
+        if self._column_decoder(column) is None:
+            return None
+        zone = self._zone_maps.get(column)
+        if zone is None:
+            cardinality = self._decoders[column].cardinality
+            zone = np.zeros((len(self._partitions), cardinality), dtype=bool)
+            for pidx in range(len(self._partitions)):
+                _, pcols = self._load(pidx)
+                codes = np.unique(np.asarray(pcols[column], dtype=np.int64))
+                zone[pidx, codes] = True
+            self._zone_maps[column] = zone
+        return zone
 
     def _base_keys_in_range(self, lo: int, hi: Optional[int]) -> np.ndarray:
         first, last = self._partition_span(lo, hi)

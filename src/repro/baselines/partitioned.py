@@ -15,6 +15,16 @@ and masks deleted keys out; range/scan key sources merge the overlay
 into the base partition scan.  ``save``/``load`` persist everything in
 one msgpack file (atomic ``os.replace``), self-describing via a
 ``kind`` header that ``repro.open`` sniffs.
+
+**Partition pruning** (predicate pushdown into the partition probe):
+when a pushed-down predicate's column is dictionary-encoded, the store
+keeps a lazy per-partition *zone map* of present codes
+(``_partition_code_presence``) and skips — never decompresses — any
+partition whose dictionary holds no matching code.  Pruning only
+activates under the executor's ``keys_exist`` hint (range/scan plans,
+whose keys come from the existence index), so skipped rows' existence
+is known without a probe; overlay-touched keys are never pruned.
+``ExplainStats.partitions_pruned`` records the evidence.
 """
 
 from __future__ import annotations
@@ -26,7 +36,11 @@ from typing import Dict, List, Optional, Tuple
 import msgpack
 import numpy as np
 
-from repro.api.plan import ExplainStats
+from repro.api.plan import (
+    ExplainStats,
+    columns_with_predicates,
+    evaluate_predicates,
+)
 from repro.api.protocol import MappingStore
 from repro.storage import MemoryPool
 
@@ -97,6 +111,20 @@ class PartitionedBaselineStore(MappingStore):
 
     def _base_keys_in_range(self, lo: int, hi: Optional[int]) -> np.ndarray:
         raise NotImplementedError
+
+    # ----------------------------------------------------- pruning hooks
+    def _column_decoder(self, column: str):
+        """The column's :class:`~repro.core.encoding.ValueCodec` when
+        the base partitions store dictionary codes for it, else
+        ``None`` (no zone-map pruning possible).  Subclass hook."""
+        return None
+
+    def _partition_code_presence(self, column: str) -> Optional[np.ndarray]:
+        """Zone map: bool ``(num_partitions, cardinality)`` — which
+        codes appear in each partition's base rows — or ``None`` when
+        the column is not dictionary-encoded.  Base partitions are
+        immutable, so the map never invalidates.  Subclass hook."""
+        return None
 
     def _partition_span(self, lo: int, hi: Optional[int]) -> Tuple[int, int]:
         """Partition-id range [first, last] overlapping ``[lo, hi)``
@@ -189,6 +217,115 @@ class PartitionedBaselineStore(MappingStore):
         )
         return values, exists, stats
 
+    # --------------------------------------------------- partition pruning
+    def _prunable_partitions(
+        self, predicates: tuple
+    ) -> Optional[np.ndarray]:
+        """Bool array over partitions — True where NO base row can
+        match the conjunction (some predicate's zone map shows no
+        matching code) — or ``None`` when no predicate column has zone
+        info.  Code tables come from the store's plan cache."""
+        prunable = None
+        version = self.mutation_version()
+        for p in predicates:
+            presence = self._partition_code_presence(p.column)
+            if presence is None:
+                continue
+            decoder = self._column_decoder(p.column)
+            table = self.plan_cache().pred_table(
+                p, decoder.decode_map, version
+            )
+            cant_match = ~(presence & table[None, :]).any(axis=1)
+            prunable = (
+                cant_match if prunable is None else (prunable | cant_match)
+            )
+        return prunable
+
+    def _collect_lookup(self, handle):
+        """Predicated collects prune partitions via the dictionary zone
+        maps (see the module docstring); everything else defers to the
+        protocol default."""
+        keys, columns, fanout, predicates, keys_exist = handle
+        keys = np.asarray(keys, dtype=np.int64)
+        n = int(keys.shape[0])
+        prunable = (
+            self._prunable_partitions(predicates)
+            if predicates and keys_exist and n and self._partitions
+            else None
+        )
+        if prunable is None or not prunable.any():
+            return super()._collect_lookup(handle)
+        pid = np.searchsorted(self._boundaries, keys, side="right") - 1
+        prune_mask = (pid >= 0) & prunable[pid]
+        touched = np.zeros(n, dtype=bool)
+        if self._overlay or self._deleted:
+            # Overlay rows carry values the base dictionary never saw —
+            # they must be evaluated, never pruned.
+            touched = np.isin(keys, self._touched_keys())
+            prune_mask &= ~touched
+        if not prune_mask.any():
+            return super()._collect_lookup(handle)
+        if not (~prune_mask & ~touched & (pid >= 0)).any():
+            # The probed subset must contain at least one guaranteed
+            # base-partition HIT so every output column materializes
+            # with its true dtype (an overlay-only probe set would fall
+            # back to the empty-gather int64 fill and break morsel
+            # concatenation / byte-equality with the unpruned
+            # reference).  A pruned row qualifies: under keys_exist it
+            # exists and is not overlay-touched, hence lives in a base
+            # partition.
+            prune_mask[int(np.flatnonzero(prune_mask)[0])] = False
+        selected = (
+            tuple(columns) if columns is not None else tuple(self.columns)
+        )
+        need = columns_with_predicates(selected, predicates)
+        wanted = [c for c in self.names if c in need]
+        t0 = time.perf_counter()
+        probe_idx = np.flatnonzero(~prune_mask)
+        # Only partitions with NO probed row are truly skipped (never
+        # decompressed); one shared with an overlay-touched or anchor
+        # row is loaded anyway and must not inflate the evidence.
+        skipped_parts = int(
+            np.setdiff1d(pid[prune_mask], pid[probe_idx]).size
+        )
+        sub_values, sub_exists = self._base_lookup(keys[probe_idx], wanted)
+        t1 = time.perf_counter()
+        self._apply_overlay(keys[probe_idx], wanted, sub_values, sub_exists)
+        t2 = time.perf_counter()
+        stats = ExplainStats(
+            plan=(
+                f"probe[{len(self._partitions)} parts,"
+                f"{skipped_parts} pruned]",
+                f"overlay[{len(self._overlay)}+{len(self._deleted)}]",
+                f"filter[{','.join(p.describe() for p in predicates)}]",
+                f"decode[{','.join(wanted)}]",
+            ),
+            heads_skipped=tuple(self.columns),  # no model heads exist
+            columns_decoded=tuple(wanted),
+            columns_skipped=tuple(c for c in self.columns if c not in wanted),
+            partitions_pruned=skipped_parts,
+            decode_s=t1 - t0,
+            aux_s=t2 - t1,
+        )
+        sub_match = evaluate_predicates(
+            predicates, sub_values, sub_exists, stats
+        )
+        # keys_exist: every key came from the existence index, so the
+        # pruned (unprobed) rows are known present; the probed subset
+        # keeps its real probe answer.
+        exists = np.ones(n, dtype=bool)
+        exists[probe_idx] = sub_exists
+        match = np.zeros(n, dtype=bool)
+        match[probe_idx] = sub_match
+        values: Dict[str, np.ndarray] = {}
+        for c in selected:
+            sub = sub_values[c]
+            full = np.zeros(n, dtype=sub.dtype)
+            full[probe_idx] = sub
+            values[c] = full
+        stats.rows_decoded += int(probe_idx.size)
+        return values, exists, match, stats
+
     def insert(self, keys: np.ndarray, columns: Dict[str, np.ndarray]) -> None:
         keys = np.asarray(keys, dtype=np.int64)
         if keys.size == 0:
@@ -208,6 +345,7 @@ class PartitionedBaselineStore(MappingStore):
             self._overlay[k] = row
         self.num_rows += int(keys.size)
         self._touched_cache = None
+        self._note_mutation()
 
     def delete(self, keys: np.ndarray) -> None:
         # unique: a key repeated in one batch deletes one row, not two
@@ -222,6 +360,7 @@ class PartitionedBaselineStore(MappingStore):
             self._deleted.add(k)
         self.num_rows -= int(exists.sum())
         self._touched_cache = None
+        self._note_mutation()
 
     def update(self, keys: np.ndarray, columns: Dict[str, np.ndarray]) -> None:
         keys = np.asarray(keys, dtype=np.int64)
@@ -234,6 +373,7 @@ class PartitionedBaselineStore(MappingStore):
         for k, row in zip(keys.tolist(), rows):
             self._overlay[k] = row
         self._touched_cache = None
+        self._note_mutation()
 
     def _range_keys(self, lo: int, hi: Optional[int]) -> np.ndarray:
         base = self._base_keys_in_range(int(lo), None if hi is None else int(hi))

@@ -34,7 +34,6 @@ from __future__ import annotations
 import dataclasses
 import os
 import shutil
-import threading
 import time
 from concurrent.futures import ThreadPoolExecutor
 from typing import Dict, List, Optional, Sequence, Tuple
@@ -44,6 +43,7 @@ import numpy as np
 
 from repro.api.plan import ExplainStats
 from repro.api.protocol import MappingStore
+from repro.api.routing import LazyFanoutPool
 from repro.cluster.partitioner import Partitioner, make_partitioner
 from repro.cluster.router import ShardRouter
 from repro.core.hybrid import DeepMappingConfig, DeepMappingStore, LookupStats
@@ -108,8 +108,7 @@ class ShardedDeepMappingStore(MappingStore):
         self.cluster = cluster
         self.pool = pool
         self.last_stats = LookupStats()  # deprecated; see LookupStats docs
-        self._fanout_pool: Optional[ThreadPoolExecutor] = None
-        self._fanout_lock = threading.Lock()
+        self._fanout = LazyFanoutPool(cluster.max_workers, "shard-lookup")
         # One engine cache for the fleet: shard engines share a single
         # EngineStats, so identical (architecture, bucket) signatures
         # count as ONE compile cluster-wide and operators read one
@@ -173,35 +172,20 @@ class ShardedDeepMappingStore(MappingStore):
     def columns(self) -> Tuple[str, ...]:
         return self.shards[0].spec.tasks
 
-    def _lookup_executor(self) -> ThreadPoolExecutor:
-        """Lazy, long-lived thread pool for the lookup fan-out stage.
-        Per-shard lookups are independent (distinct stores; the shared
-        MemoryPool is lock-protected) and JAX releases the GIL inside
-        compiled inference, so shard visits genuinely overlap."""
-        if self._fanout_pool is None:
-            with self._fanout_lock:  # two first-queries racing must not
-                if self._fanout_pool is None:  # each build (and leak) a pool
-                    workers = self.cluster.max_workers or min(
-                        len(self.shards), os.cpu_count() or 4
-                    )
-                    self._fanout_pool = ThreadPoolExecutor(
-                        max_workers=workers, thread_name_prefix="shard-lookup"
-                    )
-        return self._fanout_pool
-
     def _dispatch_lookup(
         self,
         keys: np.ndarray,
         columns: Optional[Tuple[str, ...]] = None,
         fanout: Optional[bool] = None,
         predicates: tuple = (),
+        keys_exist: bool = False,
     ) -> _PendingShardedLookup:
         """Scatter the batch and enqueue every shard's device inference
         (cheap serial dispatch — the device work itself overlaps);
         ``_collect_lookup`` gathers the host halves.  ``predicates``
         push down into every shard (code-level argmax filtering), so a
         scattered predicate plan never decodes a non-matching row on
-        any shard."""
+        any shard; ``keys_exist`` forwards to every shard."""
         keys = np.asarray(keys, dtype=np.int64)
         t0 = time.perf_counter()
         batches = self.router.scatter(keys)
@@ -209,7 +193,7 @@ class ShardedDeepMappingStore(MappingStore):
         use_fanout = bool(fanout) and len(batches) > 1
         handles = [
             self.shards[b.shard_id]._dispatch_lookup(
-                b.keys, columns, predicates=predicates
+                b.keys, columns, predicates=predicates, keys_exist=keys_exist
             )
             for b in batches
         ]
@@ -245,7 +229,7 @@ class ShardedDeepMappingStore(MappingStore):
 
         pairs = list(zip(batches, pending.handles))
         if use_fanout:
-            parts = list(self._lookup_executor().map(visit, pairs))
+            parts = self._fanout.map(visit, pairs, owners=len(self.shards))
         else:
             parts = [visit(p) for p in pairs]
 
@@ -315,7 +299,7 @@ class ShardedDeepMappingStore(MappingStore):
             return self.shards[s].vexist.keys_in_range(lo, hi)
 
         if len(sids) > 1:
-            parts = list(self._lookup_executor().map(scan_one, sids))
+            parts = self._fanout.map(scan_one, sids, owners=len(self.shards))
         else:
             parts = [scan_one(s) for s in sids]
         parts = [p for p in parts if p.size]
@@ -347,12 +331,14 @@ class ShardedDeepMappingStore(MappingStore):
             self.shards[b.shard_id].insert(
                 b.keys, ShardRouter.take_columns(columns, b.positions)
             )
+        self._note_mutation()
 
     def delete(self, keys: np.ndarray) -> None:
         """Algorithm 4 per shard (idempotent, like the single store)."""
         keys = np.asarray(keys, dtype=np.int64)
         for b in self.router.scatter(keys):
             self.shards[b.shard_id].delete(b.keys)
+        self._note_mutation()
 
     def update(self, keys: np.ndarray, columns: Dict[str, np.ndarray]) -> None:
         """Algorithm 5 per shard; all-exist validated before mutating."""
@@ -365,6 +351,17 @@ class ShardedDeepMappingStore(MappingStore):
             self.shards[b.shard_id].update(
                 b.keys, ShardRouter.take_columns(columns, b.positions)
             )
+        self._note_mutation()
+
+    def mutation_version(self):
+        """Facade counter + per-shard tokens: direct mutations of a
+        shard (bypassing the facade) still invalidate cached plans, and
+        the facade bump on :meth:`retrain` keeps a rebuilt shard's
+        reset counter from colliding with an earlier cluster state."""
+        return (
+            getattr(self, "_mutation_version", 0),
+            tuple(s.mutation_version() for s in self.shards),
+        )
 
     # ------------------------------------------------------- lazy retrain
     def dirty_shards(self) -> List[int]:
@@ -394,6 +391,8 @@ class ShardedDeepMappingStore(MappingStore):
             for i, store in zip(ids, rebuilt):
                 self.shards[i] = store
                 self.engines.adopt(store)  # rebuilt shard joins fleet stats
+            self._note_mutation()  # a fresh shard's reset counter must
+            # not recreate an earlier cluster-wide version token
         if verbose:
             print(f"[cluster] retrained shards {ids}")
         return ids

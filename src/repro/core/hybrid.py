@@ -154,12 +154,6 @@ class DeepMappingStore(MappingStore):
         # build() attaches the warm engine it evaluated T_aux with; a
         # cluster attaches engines from its shared EngineCache.
         self._engine: Optional[InferenceEngine] = None
-        # Predicate -> code-table memo: a morselized plan dispatches
-        # per chunk, but the full-vocabulary predicate evaluation must
-        # be paid once per (predicate, decode map), not per morsel.
-        # Keyed on the decode map OBJECT too — codec.extend() swaps in
-        # a new array, invalidating the table.  Bounded (see _pred_table).
-        self._pred_tables: Dict = {}
 
     @property
     def engine(self) -> InferenceEngine:
@@ -278,6 +272,7 @@ class DeepMappingStore(MappingStore):
         columns: Optional[Tuple[str, ...]] = None,
         fanout: Optional[bool] = None,
         predicates: tuple = (),
+        keys_exist: bool = False,
     ) -> _PendingLookup:
         """Stage 1 of Algorithm 1: enqueue device inference (+ fused
         existence test) for the first chunks of the batch and return.
@@ -295,7 +290,8 @@ class DeepMappingStore(MappingStore):
         predicate head joins the inference task set even when the
         projection excludes it, and at collect time rows are filtered
         on their aux-corrected argmax codes — non-matching rows are
-        never decoded."""
+        never decoded.  ``keys_exist`` is accepted for hook parity (the
+        fused existence test is already device-cheap here)."""
         keys = np.asarray(keys, dtype=np.int64)
         all_tasks = self.spec.tasks
         selected = tuple(t for t in all_tasks if columns is None or t in columns)
@@ -324,22 +320,18 @@ class DeepMappingStore(MappingStore):
 
     def _pred_table(self, pred) -> np.ndarray:
         """Memoized boolean code table for one predicate (see
-        ``Predicate.code_table``).  The cached decode map is kept in
-        the value so an ``extend()``-replaced map (new object, larger
-        vocabulary) recompiles; benign race under the shard fan-out —
-        worst case is one duplicate compute."""
+        ``Predicate.code_table``), resident in the store's
+        :class:`~repro.api.cache.PlanCache`: a morselized plan
+        dispatches per chunk, but the full-vocabulary predicate
+        evaluation is paid once per (predicate, decode map), not per
+        morsel, and survives across repeated plans.  Invalidated by the
+        mutation version AND decode-map identity (``extend()`` swaps in
+        a new array); benign race under the shard fan-out — worst case
+        is one duplicate compute."""
         codec = self.codecs[pred.column]
-        try:
-            hit = self._pred_tables.get(pred)
-        except TypeError:  # unhashable literal (e.g. an array) — skip memo
-            return pred.code_table(codec.decode_map)
-        if hit is not None and hit[0] is codec.decode_map:
-            return hit[1]
-        table = pred.code_table(codec.decode_map)
-        if len(self._pred_tables) >= 64:  # bound ad-hoc predicate churn
-            self._pred_tables.clear()
-        self._pred_tables[pred] = (codec.decode_map, table)
-        return table
+        return self.plan_cache().pred_table(
+            pred, codec.decode_map, self.mutation_version()
+        )
 
     def _dispatch_next_chunk(self, pending: _PendingLookup) -> None:
         bs = self.config.inference_batch
@@ -547,6 +539,8 @@ class DeepMappingStore(MappingStore):
         self.num_rows += keys.shape[0]
         self.raw_bytes += int(keys.shape[0] * self._bytes_per_row)
         self.modified_bytes += int(keys.shape[0] * self._bytes_per_row)
+        self._note_mutation()  # invalidate cached plans (and, via the
+        # version stamp, code tables over a possibly-extended decode map)
 
     def delete(self, keys: np.ndarray) -> None:
         """Algorithm 4. Existence bit off; purge from T_aux if present."""
@@ -563,6 +557,7 @@ class DeepMappingStore(MappingStore):
         self.num_rows -= keys.shape[0]
         self.raw_bytes -= int(keys.shape[0] * self._bytes_per_row)
         self.modified_bytes += int(keys.shape[0] * self._bytes_per_row)
+        self._note_mutation()
 
     def update(self, keys: np.ndarray, columns: Dict[str, np.ndarray]) -> None:
         """Algorithm 5. Correctly-predicted updates drop any aux entry;
@@ -583,6 +578,7 @@ class DeepMappingStore(MappingStore):
         if wrong.any():
             self.aux.update(keys[wrong], codes[wrong])   # lines 7-11
         self.modified_bytes += int(keys.shape[0] * self._bytes_per_row)
+        self._note_mutation()
 
     def _range_keys(self, lo: int, hi: Optional[int]) -> np.ndarray:
         """Existence-index range filter (§IV-E) — key source for the

@@ -1,0 +1,66 @@
+"""Markdown link checker for the docs CI job (stdlib only).
+
+Scans the given markdown files for inline links/images
+(``[text](target)``) and reference definitions (``[ref]: target``) and
+fails when a **relative** target does not exist on disk (anchors are
+stripped; bare ``#fragment`` links are ignored).  ``http(s)``/
+``mailto`` targets are format-checked only — CI must not flake on
+third-party outages.
+
+    python tools/check_docs.py README.md DESIGN.md ROADMAP.md
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+#: Inline ``[text](target)`` — target captured lazily up to the first
+#: unescaped ``)``; fenced code is stripped before matching.
+INLINE = re.compile(r"\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+REFDEF = re.compile(r"^\s*\[[^\]]+\]:\s+(\S+)", re.MULTILINE)
+FENCE = re.compile(r"```.*?```", re.DOTALL)
+SCHEMES = ("http://", "https://", "mailto:")
+
+
+def check_file(path: Path) -> list[str]:
+    """Return a list of broken-link error strings for one file."""
+    text = FENCE.sub("", path.read_text(encoding="utf-8"))
+    errors = []
+    targets = INLINE.findall(text) + REFDEF.findall(text)
+    for target in targets:
+        if target.startswith(SCHEMES):
+            continue  # external: format-checked by the regex itself
+        local = target.split("#", 1)[0]
+        if not local:
+            continue  # pure in-page anchor
+        resolved = (path.parent / local).resolve()
+        if not resolved.exists():
+            errors.append(f"{path}: broken link -> {target}")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    """Check every argument file; exit non-zero on any broken link."""
+    if not argv:
+        print("usage: check_docs.py FILE.md [FILE.md ...]", file=sys.stderr)
+        return 2
+    failures = []
+    for name in argv:
+        path = Path(name)
+        if not path.exists():
+            failures.append(f"{name}: file not found")
+            continue
+        failures.extend(check_file(path))
+    for f in failures:
+        print(f, file=sys.stderr)
+    print(
+        f"checked {len(argv)} file(s): "
+        + ("FAILED" if failures else "all links resolve")
+    )
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
