@@ -37,13 +37,13 @@ def run_latency(datasets=None, batch=10_000) -> List[Dict]:
         keys = C.query_keys(table, batch, seed=1)
         store.lookup(keys)  # warm the jit
         pool.clear()
-        store.lookup(keys)
-        s = store.last_stats
+        s = store.query().where_keys(keys).execute().explain
+        stage_total = s.infer_s + s.exist_s + s.aux_s + s.decode_s
         rows.append({"dataset": ds, "infer_s": s.infer_s, "exist_s": s.exist_s,
                      "aux_s": s.aux_s, "decode_s": s.decode_s})
         C.emit(
             f"latency_breakdown/{ds}/B={batch}",
-            s.total() * 1e6,
+            stage_total * 1e6,
             f"infer={s.infer_s*1e6:.0f};exist={s.exist_s*1e6:.0f};"
             f"aux={s.aux_s*1e6:.0f};decode={s.decode_s*1e6:.0f}",
         )

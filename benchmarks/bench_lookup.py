@@ -18,7 +18,6 @@ from __future__ import annotations
 
 import argparse
 import hashlib
-import json
 import os
 import time
 from typing import Dict, List
@@ -218,6 +217,39 @@ def run_pipeline(
         C.emit(f"lookup/pipeline/pipelined/{name}", r["p50_s"] * 1e6,
                f"qps={r['qps']:.0f} compiles={r['compiles']}")
 
+    # --- always-on observability overhead (ISSUE 6 acceptance) ---
+    # Same fixed-size workload through the fully-instrumented executor
+    # path, metrics+tracing on vs off; the <3% QPS budget is recorded
+    # here and asserted in DESIGN.md §Observability.
+    from repro import obs
+
+    def query_fixed(b):
+        store.query().where_keys(b).execute()
+
+    _timed(query_fixed, fixed_batches)  # warm the plan/pred caches
+    # Alternate on/off rounds and take medians: a single pass each is
+    # noise-dominated (one slow batch moves QPS by several percent,
+    # and whichever mode runs later inherits warmer caches).
+    qps_on, qps_off = [], []
+    for _ in range(3):
+        qps_on.append(_timed(query_fixed, fixed_batches)["qps"])
+        obs.set_enabled(False)
+        try:
+            qps_off.append(_timed(query_fixed, fixed_batches)["qps"])
+        finally:
+            obs.set_enabled(True)
+    on, off = float(np.median(qps_on)), float(np.median(qps_off))
+    results["obs_overhead"] = {
+        "qps_on": on,
+        "qps_off": off,
+        "regression_pct": (1.0 - on / off) * 100.0,
+    }
+    C.emit(
+        "lookup/pipeline/obs_overhead", 0.0,
+        f"qps_on={on:.0f} qps_off={off:.0f} "
+        f"regression={results['obs_overhead']['regression_pct']:.2f}%",
+    )
+
     t = store.engine.dispatch(all_keys[:8], want_exists=True)
     store.engine.collect(t)
     results["engine_path"] = t.path
@@ -247,10 +279,9 @@ def run_pipeline(
 
 
 def write_pipeline_json(results: Dict, path: str = "BENCH_lookup.json") -> None:
-    """Machine-readable perf record (CI uploads it as an artifact)."""
-    with open(path, "w") as f:
-        json.dump(results, f, indent=2, sort_keys=True)
-        f.write("\n")
+    """Machine-readable perf record (CI uploads it as an artifact),
+    stamped with backend/platform metadata + the registry snapshot."""
+    C.write_bench_json(results, path)
 
 
 def main():

@@ -49,7 +49,6 @@ Adaptive-execution sections (``run_adaptive``, the ``adaptive`` key of
 from __future__ import annotations
 
 import argparse
-import json
 import time
 from typing import Dict, List
 
@@ -529,10 +528,9 @@ def run_adaptive(
 
 def write_query_json(results: Dict, path: str = "BENCH_query.json") -> None:
     """Machine-readable streaming-executor perf record (CI uploads it
-    alongside ``BENCH_lookup.json``)."""
-    with open(path, "w") as f:
-        json.dump(results, f, indent=2, sort_keys=True)
-        f.write("\n")
+    alongside ``BENCH_lookup.json``), stamped with backend/platform
+    metadata + the registry snapshot."""
+    C.write_bench_json(results, path)
 
 
 def main() -> None:

@@ -4,8 +4,11 @@ memory pools, timing, and the ``name,us_per_call,derived`` CSV emitter."""
 
 from __future__ import annotations
 
+import datetime
 import hashlib
+import json
 import os
+import platform
 import time
 from typing import Callable, Dict, Optional
 
@@ -116,3 +119,34 @@ def query_keys(table: Table, batch: int, seed: int = 0) -> np.ndarray:
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def bench_metadata() -> Dict:
+    """Environment stamp for every ``BENCH_*.json``: the trajectory is
+    currently CPU-only and the records must SAY so, not imply it."""
+    import jax
+
+    return {
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "platform": platform.platform(),
+        "python": platform.python_version(),
+        "jax": jax.__version__,
+        "numpy": np.__version__,
+        "timestamp_utc": datetime.datetime.now(datetime.timezone.utc).isoformat(),
+    }
+
+
+def write_bench_json(results: Dict, path: str) -> None:
+    """Write a machine-readable bench record (CI uploads them as
+    artifacts), stamped with :func:`bench_metadata` and a snapshot of
+    the process metrics registry — every BENCH file carries the
+    telemetry that produced it."""
+    from repro import obs
+
+    results = dict(results)
+    results["metadata"] = bench_metadata()
+    results["metrics"] = obs.snapshot()
+    with open(path, "w") as f:
+        json.dump(results, f, indent=2, sort_keys=True)
+        f.write("\n")

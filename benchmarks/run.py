@@ -43,6 +43,13 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized lookup_pipeline run (fewer rows/batches)")
     ap.add_argument("--sections", nargs="*", default=None)
+    ap.add_argument(
+        "--telemetry-dir", default=None, metavar="DIR",
+        help="after the sections run, export the process telemetry "
+             "there: metrics.prom (Prometheus text), metrics.json "
+             "(registry snapshot), trace.json (Chrome trace — open at "
+             "https://ui.perfetto.dev)",
+    )
     args = ap.parse_args()
 
     from benchmarks import bench_beyond, bench_breakdown, bench_lookup
@@ -105,6 +112,19 @@ def main() -> None:
             failures += 1
             print(f"# SECTION {name} FAILED", flush=True)
             traceback.print_exc()
+    if args.telemetry_dir:
+        import os
+
+        from repro import obs
+
+        os.makedirs(args.telemetry_dir, exist_ok=True)
+        for fname, writer in (
+            ("metrics.prom", obs.write_prometheus),
+            ("metrics.json", obs.write_json_snapshot),
+            ("trace.json", obs.write_chrome_trace),
+        ):
+            print(f"# telemetry: {writer(os.path.join(args.telemetry_dir, fname))}",
+                  flush=True)
     if failures:
         sys.exit(1)
 

@@ -27,6 +27,9 @@ def main() -> None:
                     help="number of cluster shards (1 = single store)")
     ap.add_argument("--policy", default="range", choices=("range", "hash"),
                     help="cluster partition policy (with --shards > 1)")
+    ap.add_argument("--telemetry-dir", default=None, metavar="DIR",
+                    help="where to write metrics.prom / metrics.json / "
+                         "trace.json (default: a temp dir)")
     args = ap.parse_args()
 
     # A small relation: order_id -> (status, priority).  Values follow a
@@ -176,6 +179,37 @@ def main() -> None:
         print(f"  dirty shards after modifications: {store.dirty_shards() or 'none'}")
         print(f"  range scatter [0, 1000): shards "
               f"{store.partitioner.shards_for_range(0, 1000).tolist()}")
+
+    print("\n-- Observability (metrics + trace export) --------")
+    # Everything above already recorded into the process-global metrics
+    # registry and span tracer (always on).  Run one more multi-morsel
+    # scan — small morsels force many dispatch/collect rounds, so the
+    # executor's pipelining (device infer of morsel i+1 overlapping the
+    # host half of morsel i) is visible in the trace — then export all
+    # three sinks from this one process.
+    from repro import obs
+
+    store.query().morsel(2048).scan().execute()
+    out_dir = args.telemetry_dir or tempfile.mkdtemp(prefix="deepmap_obs_")
+    prom = obs.write_prometheus(os.path.join(out_dir, "metrics.prom"))
+    snap = obs.write_json_snapshot(os.path.join(out_dir, "metrics.json"))
+    trace = obs.write_chrome_trace(os.path.join(out_dir, "trace.json"))
+    morsels = obs.registry().get("deepmap_executor_morsels_total")
+    plan_lat = obs.registry().get("deepmap_executor_plan_seconds")
+    print(f"  morsels executed: {int(sum(v for _, v in morsels.items()))}; "
+          f"scan plan p50 {plan_lat.quantile(0.5, kind='scan')*1e3:.1f} ms")
+    dispatch = obs.tracer().spans("infer_dispatch", track="device")
+    collect = obs.tracer().spans("collect", track="host")
+    overlaps = sum(
+        1 for d in dispatch for c in collect
+        if d.start < c.start and c.end < d.end
+    )
+    print(f"  trace: {len(dispatch)} device dispatch spans, "
+          f"{len(collect)} host collect spans, "
+          f"{overlaps} pipelined overlaps (dispatch i+1 covers collect i)")
+    print(f"  Prometheus text:   {prom}")
+    print(f"  JSON snapshot:     {snap}")
+    print(f"  Chrome trace:      {trace}  (open at https://ui.perfetto.dev)")
 
 
 if __name__ == "__main__":

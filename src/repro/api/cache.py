@@ -30,10 +30,13 @@ an error.
 
 from __future__ import annotations
 
+import threading
 from collections import OrderedDict
 from typing import Dict, Optional, Tuple
 
 import numpy as np
+
+from repro import obs
 
 #: LRU capacity for plan-level entries (fingerprint -> artifacts).
 PLAN_ENTRIES = 64
@@ -102,12 +105,20 @@ class PlanCache:
       materialization, resolved projection subset), LRU-bounded;
     * :meth:`pred_table` — predicate -> boolean code table over a
       column's decode map (the DeepMapping pushdown compile);
-    * :attr:`hits`/:attr:`misses` — cache telemetry (the benchmark's
-      warm-vs-cold evidence).
+    * :attr:`hits`/:attr:`misses`/:attr:`bypass` — cache telemetry
+      (the benchmark's warm-vs-cold evidence), mirrored into the
+      metrics registry as ``deepmap_plan_cache_events_total{outcome}``.
 
     Every entry records the store's mutation version at compute time
     and is dropped on mismatch, so stale artifacts are structurally
     unreachable.
+
+    All state mutations are guarded by one lock: the sharded and
+    federated stores' collect halves run on ``LazyFanoutPool`` threads,
+    so concurrent ``get``/``put``/``pred_table`` calls on a single
+    store's cache are routine, not exotic.  The predicate code-table
+    *compute* runs outside the lock (a duplicated compute under a race
+    is benign; serializing ``Predicate.code_table`` is not).
     """
 
     def __init__(
@@ -123,24 +134,37 @@ class PlanCache:
         self._key_bytes = 0
         self._plans: "OrderedDict[Tuple, _PlanEntry]" = OrderedDict()
         self._tables: Dict = {}  # pred -> (version, decode_map, table)
+        self._lock = threading.Lock()
         self.hits = 0
         self.misses = 0
+        self.bypass = 0
+
+    def _note(self, outcome: str) -> None:
+        obs.counter(
+            "deepmap_plan_cache_events_total",
+            "Plan-cache lookups by outcome (hit/miss/bypass).",
+        ).inc(outcome=outcome)
 
     # -------------------------------------------------------- plan entries
     def get(self, fingerprint: Optional[Tuple], version) -> Optional[_PlanEntry]:
-        """Look up a plan entry; a version mismatch evicts and misses."""
+        """Look up a plan entry; a version mismatch evicts and misses;
+        an unfingerprintable plan (``None``) counts as a bypass."""
         if fingerprint is None:
+            with self._lock:
+                self.bypass += 1
+            self._note("bypass")
             return None
-        entry = self._plans.get(fingerprint)
-        if entry is None:
-            self.misses += 1
-            return None
-        if entry.version != version:
-            self._evict(fingerprint)
-            self.misses += 1
-            return None
-        self._plans.move_to_end(fingerprint)
-        self.hits += 1
+        with self._lock:
+            entry = self._plans.get(fingerprint)
+            if entry is not None and entry.version != version:
+                self._evict(fingerprint)
+                entry = None
+            if entry is None:
+                self.misses += 1
+            else:
+                self._plans.move_to_end(fingerprint)
+                self.hits += 1
+        self._note("miss" if entry is None else "hit")
         return entry
 
     def _evict(self, fingerprint: Tuple) -> None:
@@ -173,13 +197,14 @@ class PlanCache:
             nbytes = int(keys.nbytes)
             if nbytes > self._key_bytes_budget:
                 keys, nbytes = None, 0
-        while self._plans and (
-            len(self._plans) >= self._plan_entries
-            or self._key_bytes + nbytes > self._key_bytes_budget
-        ):
-            self._evict(next(iter(self._plans)))
-        self._key_bytes += nbytes
-        self._plans[fingerprint] = _PlanEntry(version, keys, columns)
+        with self._lock:
+            while self._plans and (
+                len(self._plans) >= self._plan_entries
+                or self._key_bytes + nbytes > self._key_bytes_budget
+            ):
+                self._evict(next(iter(self._plans)))
+            self._key_bytes += nbytes
+            self._plans[fingerprint] = _PlanEntry(version, keys, columns)
 
     # ---------------------------------------------------- predicate tables
     def pred_table(self, pred, decode_map: np.ndarray, version) -> np.ndarray:
@@ -189,10 +214,13 @@ class PlanCache:
         Validated against BOTH the store's mutation version and the
         decode-map object identity (``ValueCodec.extend`` swaps in a
         new, larger array), so a grown vocabulary always recompiles.
-        Unhashable predicate literals compute uncached.
+        Unhashable predicate literals compute uncached.  The compute
+        itself runs outside the lock — two racing threads may both
+        build the same table (benign), but neither blocks the other.
         """
         try:
-            entry = self._tables.get(pred)
+            with self._lock:
+                entry = self._tables.get(pred)
         except TypeError:  # unhashable literal (e.g. an array) — skip memo
             return pred.code_table(decode_map)
         if (
@@ -202,18 +230,21 @@ class PlanCache:
         ):
             return entry[2]
         table = pred.code_table(decode_map)
-        if len(self._tables) >= self._pred_tables:
-            self._tables.clear()
-        self._tables[pred] = (version, decode_map, table)
+        with self._lock:
+            if len(self._tables) >= self._pred_tables:
+                self._tables.clear()
+            self._tables[pred] = (version, decode_map, table)
         return table
 
     # ------------------------------------------------------------- control
     def clear(self) -> None:
         """Drop every cached artifact (the benchmark's cold path)."""
-        self._plans.clear()
-        self._tables.clear()
-        self._key_bytes = 0
+        with self._lock:
+            self._plans.clear()
+            self._tables.clear()
+            self._key_bytes = 0
 
     def __len__(self) -> int:
         """Number of live plan entries (predicate tables excluded)."""
-        return len(self._plans)
+        with self._lock:
+            return len(self._plans)

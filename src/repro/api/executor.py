@@ -50,6 +50,7 @@ from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro import obs
 from repro.api.cache import plan_fingerprint
 from repro.api.plan import (
     ExplainStats,
@@ -71,6 +72,15 @@ MORSEL_WINDOW = 2
 #: buckets instead of forcing fresh compiles.
 ADAPT_MIN = 1 << 12
 ADAPT_MAX = 1 << 20
+
+#: Stage fields mirrored into ``deepmap_executor_stage_seconds_total``
+#: and rendered as per-operator child spans under each collect span.
+_STAGE_FIELDS = (
+    ("exist", "exist_s"),
+    ("aux_merge", "aux_s"),
+    ("filter", "filter_s"),
+    ("decode", "decode_s"),
+)
 
 #: Per-morsel operator-time targets (seconds).  Below the low mark the
 #: fixed per-morsel overhead (dispatch bookkeeping, stats merging)
@@ -150,6 +160,7 @@ class PlanStream:
     def __init__(self, store, plan: QueryPlan):
         self.store = store
         self.plan = plan
+        self._t_plan0 = time.perf_counter()
         self.fixed = plan.morsel is not None
         self._morsel_rows = plan.morsel_rows()
         self.fanout = True if plan.fanout is None else plan.fanout
@@ -195,12 +206,18 @@ class PlanStream:
                 None if plan.kind == "point" else self.keys,
                 self.columns,
             )
+        now = time.perf_counter()
+        obs.tracer().add_span(
+            "key_source", now - self.route_s, now, track="host",
+            kind=plan.kind, cache=self.cache_state,
+        )
         self.sizes: List[int] = []  # dispatched morsel sizes (evidence)
         self._cursor = 0
         self._dispatched = 0
         self._dispatched_any = False
-        # (seq, start, rows, target, handle) per in-flight morsel
-        self._inflight: List[Tuple[int, int, int, int, object]] = []
+        # (seq, start, rows, target, handle, t_dispatch) per in-flight
+        # morsel — t_dispatch anchors the retroactive device-track span.
+        self._inflight: List[Tuple[int, int, int, int, object, float]] = []
 
     # ------------------------------------------------------------- state
     @property
@@ -226,6 +243,7 @@ class PlanStream:
             return False
         target = self._morsel_rows
         chunk = self.keys[self._cursor : self._cursor + target]
+        t_dispatch = time.perf_counter()
         handle = self.store._dispatch_lookup(
             chunk,
             self.columns,
@@ -235,7 +253,7 @@ class PlanStream:
         )
         rows = int(chunk.shape[0])
         self._inflight.append(
-            (self._dispatched, self._cursor, rows, target, handle)
+            (self._dispatched, self._cursor, rows, target, handle, t_dispatch)
         )
         self.sizes.append(rows)
         self._cursor += rows
@@ -249,17 +267,30 @@ class PlanStream:
         Under adaptive sizing, a collected **full** morsel's summed
         per-operator time feeds :func:`next_morsel_rows` to resize
         subsequent dispatches (partial tail morsels carry no signal).
+
+        Telemetry is emitted here (never in the hot per-key loops):
+        a retroactive **device-track** span ``infer_dispatch`` covering
+        [dispatch(seq) → collect-start(seq)] — the window in which the
+        morsel's device work ran while the host drained earlier morsels
+        — plus a **host-track** ``collect`` span for the blocking host
+        half, per-operator child spans reconstructed from the morsel's
+        stage timings, and the morsel counters/histograms.
         """
         if not self._inflight:
             raise RuntimeError("collect_one with no morsel in flight")
-        seq, start, rows, target, handle = self._inflight.pop(0)
+        seq, start, rows, target, handle, t_dispatch = self._inflight.pop(0)
+        t_collect0 = time.perf_counter()
         values, exists, match, stats = self.store._collect_lookup(handle)
+        t_collect1 = time.perf_counter()
+        self._emit_morsel(seq, rows, stats, t_dispatch, t_collect0, t_collect1)
         if not self.fixed and rows == target:
             operator_s = (
                 stats.infer_s + stats.exist_s + stats.aux_s
                 + stats.filter_s + stats.decode_s
             )
             self._morsel_rows = next_morsel_rows(target, operator_s)
+        if self.done:
+            self._emit_plan(t_collect1)
         return MorselResult(
             index=seq,
             start=start,
@@ -269,6 +300,81 @@ class PlanStream:
             match=match,
             stats=stats,
         )
+
+    # --------------------------------------------------------- telemetry
+    def _emit_morsel(
+        self, seq: int, rows: int, stats: ExplainStats,
+        t_dispatch: float, t_collect0: float, t_collect1: float,
+    ) -> None:
+        reg = obs.registry()
+        trc = obs.tracer()
+        if not (reg.enabled or trc.enabled):
+            return
+        kind = self.plan.kind
+        trc.add_span(
+            "infer_dispatch", t_dispatch, t_collect0, track="device",
+            morsel=seq, rows=rows, kind=kind,
+        )
+        trc.add_span(
+            "collect", t_collect0, t_collect1, track="host",
+            morsel=seq, rows=rows, kind=kind,
+        )
+        # Operator child spans are a *reconstruction*: the store hooks
+        # report stage durations, not wall endpoints, so the children
+        # are laid out sequentially from collect-start in pipeline
+        # order.  Gaps under the collect span are un-attributed host
+        # overhead (scatter bookkeeping, stats merging).
+        t = t_collect0
+        for op, field in _STAGE_FIELDS:
+            d = getattr(stats, field)
+            if d > 0:
+                trc.add_span(f"op:{op}", t, t + d, track="host", morsel=seq)
+                t += d
+        reg.counter(
+            "deepmap_executor_morsels_total",
+            "Morsels collected, by plan kind.",
+        ).inc(kind=kind)
+        reg.histogram(
+            "deepmap_executor_morsel_rows",
+            "Rows per collected morsel.",
+            buckets=obs.SIZE_BUCKETS,
+        ).observe(rows, kind=kind)
+        reg.histogram(
+            "deepmap_executor_morsel_seconds",
+            "Host collect latency per morsel.",
+        ).observe(t_collect1 - t_collect0, kind=kind)
+        stages = reg.counter(
+            "deepmap_executor_stage_seconds_total",
+            "Cumulative per-operator seconds, from store stage timings.",
+        )
+        if stats.infer_s > 0:
+            stages.inc(stats.infer_s, stage="infer")
+        for op, field in _STAGE_FIELDS:
+            d = getattr(stats, field)
+            if d > 0:
+                stages.inc(d, stage=op)
+
+    def _emit_plan(self, t_end: float) -> None:
+        """Plan-level span + counters, once, when the last morsel of
+        this stream is collected (covers both ``execute_plan`` and bare
+        ``stream_plan`` consumers)."""
+        reg = obs.registry()
+        kind = self.plan.kind
+        obs.tracer().add_span(
+            "plan", self._t_plan0, t_end, track="plans",
+            kind=kind, morsels=self._dispatched, cache=self.cache_state,
+        )
+        reg.counter(
+            "deepmap_executor_plans_total", "Plans fully executed, by kind."
+        ).inc(kind=kind)
+        reg.histogram(
+            "deepmap_executor_plan_seconds",
+            "End-to-end plan latency (first dispatch to last collect).",
+        ).observe(t_end - self._t_plan0, kind=kind)
+        reg.counter(
+            "deepmap_executor_stage_seconds_total",
+            "Cumulative per-operator seconds, from store stage timings.",
+        ).inc(self.route_s, stage="key_source")
 
 
 # --------------------------------------------------------------- finalize

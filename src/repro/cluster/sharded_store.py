@@ -41,12 +41,13 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import msgpack
 import numpy as np
 
+from repro import obs
 from repro.api.plan import ExplainStats
 from repro.api.protocol import MappingStore
 from repro.api.routing import LazyFanoutPool
 from repro.cluster.partitioner import Partitioner, make_partitioner
 from repro.cluster.router import ShardRouter
-from repro.core.hybrid import DeepMappingConfig, DeepMappingStore, LookupStats
+from repro.core.hybrid import DeepMappingConfig, DeepMappingStore
 from repro.core.inference import EngineCache
 from repro.core.serialize import load_store, save_store
 from repro.core.table import Table
@@ -107,7 +108,6 @@ class ShardedDeepMappingStore(MappingStore):
         self.shards = shards
         self.cluster = cluster
         self.pool = pool
-        self.last_stats = LookupStats()  # deprecated; see LookupStats docs
         self._fanout = LazyFanoutPool(cluster.max_workers, "shard-lookup")
         # One engine cache for the fleet: shard engines share a single
         # EngineStats, so identical (architecture, bucket) signatures
@@ -224,7 +224,27 @@ class ShardedDeepMappingStore(MappingStore):
         def visit(batch_handle):
             batch, handle = batch_handle
             shard = self.shards[batch.shard_id]
+            t0 = time.perf_counter()
             vals, exists, match, stats = shard._collect_lookup(handle)
+            t1 = time.perf_counter()
+            # Per-shard telemetry, labeled by shard id — emitted from
+            # the fan-out pool threads, which is exactly why the
+            # registry (and PlanCache) increments are locked.
+            reg = obs.registry()
+            reg.counter(
+                "deepmap_shard_keys_total", "Keys answered per shard."
+            ).inc(int(batch.keys.shape[0]), shard=batch.shard_id)
+            reg.counter(
+                "deepmap_shard_visits_total", "Lookup batches per shard."
+            ).inc(shard=batch.shard_id)
+            reg.histogram(
+                "deepmap_shard_collect_seconds",
+                "Per-shard collect (host-half) latency.",
+            ).observe(t1 - t0, shard=batch.shard_id)
+            obs.tracer().add_span(
+                "shard_collect", t0, t1, track="shards",
+                shard=batch.shard_id, rows=int(batch.keys.shape[0]),
+            )
             return batch, vals, exists, match, stats
 
         pairs = list(zip(batches, pending.handles))
@@ -279,9 +299,8 @@ class ShardedDeepMappingStore(MappingStore):
         self, keys: np.ndarray, columns: Optional[Tuple[str, ...]] = None
     ) -> Tuple[Dict[str, np.ndarray], np.ndarray]:
         """Legacy serial shim (prefer ``store.query()``, whose executor
-        fans out).  Still refreshes the deprecated ``last_stats``."""
-        values, exists, stats = self._lookup_with_stats(keys, columns, fanout=False)
-        self.last_stats = LookupStats.from_explain(stats)
+        fans out and returns per-plan ``ExplainStats``)."""
+        values, exists, _stats = self._lookup_with_stats(keys, columns, fanout=False)
         return values, exists
 
     def _range_keys(self, lo: int, hi: Optional[int]) -> np.ndarray:

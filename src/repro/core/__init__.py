@@ -7,7 +7,7 @@ search and the modification workflows.
 from repro.core.aux_table import AuxTable  # noqa: F401
 from repro.core.bitvector import BitVector  # noqa: F401
 from repro.core.encoding import KeyEncoder, ValueCodec, build_codecs  # noqa: F401
-from repro.core.hybrid import DeepMappingConfig, DeepMappingStore, LookupStats  # noqa: F401
+from repro.core.hybrid import DeepMappingConfig, DeepMappingStore  # noqa: F401
 from repro.core.inference import EngineCache, EngineStats, InferenceEngine  # noqa: F401
 from repro.core.model import MLPSpec, forward_digits, forward_onehot, init_params  # noqa: F401
 from repro.core.table import Table, pack_composite_key  # noqa: F401

@@ -69,34 +69,6 @@ class DeepMappingConfig:
     use_pallas: bool = False
 
 
-@dataclasses.dataclass
-class LookupStats:
-    """Per-call latency breakdown — feeds the paper's Fig. 7 benchmark.
-
-    DEPRECATED side-channel: ``store.last_stats`` is still refreshed by
-    the legacy ``lookup`` shim for old callers, but plan execution
-    (``store.query()``) returns an immutable per-plan
-    :class:`~repro.api.plan.ExplainStats` instead — prefer that.
-    """
-
-    infer_s: float = 0.0
-    exist_s: float = 0.0
-    aux_s: float = 0.0
-    decode_s: float = 0.0
-
-    def total(self) -> float:
-        return self.infer_s + self.exist_s + self.aux_s + self.decode_s
-
-    @classmethod
-    def from_explain(cls, stats: ExplainStats) -> "LookupStats":
-        return cls(
-            infer_s=stats.infer_s,
-            exist_s=stats.exist_s,
-            aux_s=stats.aux_s,
-            decode_s=stats.decode_s,
-        )
-
-
 #: Device chunks in flight ahead of the host half.  Bounds device
 #: residency for huge scan/range batches (the window slides forward as
 #: chunks are collected) while still double-buffering the pipeline.
@@ -147,7 +119,6 @@ class DeepMappingStore(MappingStore):
         self.num_rows = int(num_rows)
         self.config = config
         self.modified_bytes = 0
-        self.last_stats = LookupStats()  # deprecated; see LookupStats docs
         self._bytes_per_row = raw_bytes / max(1, num_rows)
         # Device inference engine: padded-weight cache per task subset,
         # bucketed batch compiles, dispatch/collect pipeline.  Lazy —
@@ -496,11 +467,11 @@ class DeepMappingStore(MappingStore):
         Returns ``(values, exists)``: per-column decoded arrays (rows
         where ``exists`` is False are NULL — filled with the column's
         code-0 value, callers must respect the mask) plus the existence
-        mask.  Prefer ``store.query()`` for per-call stats; this shim
-        still refreshes the deprecated ``last_stats`` side-channel.
+        mask.  For per-call stats use ``store.query(...).execute().explain``
+        (the ``last_stats`` side-channel was removed — the metrics
+        registry and ``ExplainStats`` supersede it).
         """
-        values, exists, stats = self._lookup_with_stats(keys, columns)
-        self.last_stats = LookupStats.from_explain(stats)
+        values, exists, _stats = self._lookup_with_stats(keys, columns)
         return values, exists
 
     # ------------------------------------------------ modifications (Alg 3-5)

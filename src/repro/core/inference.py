@@ -51,6 +51,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import model as model_lib
 from repro.core.model import MLPSpec
 from repro.kernels import fused_mlp as fm_kernel
@@ -88,14 +89,30 @@ class EngineStats:
 
     def note_compile(self, key: Tuple) -> None:
         with self._lock:
+            new = key not in self._seen
             self._seen.add(key)
+        if new:
+            obs.counter(
+                "deepmap_engine_compiles_total",
+                "Distinct compiled program signatures (bucketed shapes "
+                "dedupe; shared EngineCache dedupes cluster-wide).",
+            ).inc()
 
     def bump(self, field: str, amount: int = 1) -> None:
         """Locked counter increment — shard engines under the fan-out
         thread pool share this object, and a plain ``+=`` would lose
-        updates across threads."""
+        updates across threads.  Mirrored into the metrics registry as
+        ``deepmap_engine_events_total{event=<field>}`` (dispatches,
+        fused/pallas/jit calls = the fallback-ladder tier taken,
+        weight-cache misses, word uploads)."""
         with self._lock:
             setattr(self, field, getattr(self, field) + amount)
+        obs.counter(
+            "deepmap_engine_events_total",
+            "Engine events by type: dispatches, fallback-ladder tier "
+            "taken (fused_calls/pallas_calls/jit_calls), host featurize, "
+            "weight-cache misses, bitvector word uploads.",
+        ).inc(amount, event=field)
 
 
 @functools.partial(jax.jit, static_argnames=("spec", "pos_ops", "capacity"))

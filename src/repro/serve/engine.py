@@ -24,21 +24,37 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.api.executor import stream_plan
+from repro import obs
+from repro.api.executor import MORSEL_WINDOW, PlanStream, _stream_run
 from repro.api.plan import QueryPlan
 from repro.api.protocol import MappingStore
 
 
 @dataclasses.dataclass
 class ServeStats:
+    """Serving-side rollup of the SAME stage accounting the executor
+    produces (per-morsel ``ExplainStats`` plus the plan stream's
+    route/cache evidence) — not an independently-measured field set.
+    The full pipeline is covered: route (key-source/plan compile),
+    infer/exist/aux/decode from the store hooks, filter (zero unless a
+    predicate plan is served), gather (scatter-back to requesters).
+    Everything here is also mirrored into the process metrics registry
+    under ``deepmap_serve_*`` for export."""
+
     requests: int = 0
     keys: int = 0
     batches: int = 0
     total_s: float = 0.0
+    route_s: float = 0.0
     infer_s: float = 0.0
     exist_s: float = 0.0
     aux_s: float = 0.0
+    filter_s: float = 0.0
     decode_s: float = 0.0
+    gather_s: float = 0.0
+    cache_hits: int = 0
+    cache_misses: int = 0
+    cache_bypass: int = 0
 
     def qps(self) -> float:
         return self.keys / self.total_s if self.total_s else 0.0
@@ -83,6 +99,12 @@ class LookupServer:
         if not requests:
             return []  # np.concatenate rejects an empty list
         t0 = time.perf_counter()
+        reg = obs.registry()
+        depth = reg.gauge(
+            "deepmap_serve_queue_depth",
+            "Requests currently being merged/answered by the server.",
+        )
+        depth.inc(len(requests))
         lens = [len(r) for r in requests]
         merged = np.concatenate([np.asarray(r, dtype=np.int64) for r in requests])
         uniq, inverse = np.unique(merged, return_inverse=True)  # sorted + dedup
@@ -103,7 +125,13 @@ class LookupServer:
         )
         chunks: Dict[str, List[np.ndarray]] = {}
         exists_u = np.zeros(uniq.shape[0], dtype=bool)
-        for morsel in stream_plan(self.store, plan):
+        # Drive the plan stream through an explicit PlanStream (rather
+        # than the stream_plan convenience) so the server can read the
+        # run's route time and plan-cache outcome — the ServeStats
+        # fields are sourced from the executor's accounting, not
+        # re-measured here.
+        run = PlanStream(self.store, plan)
+        for morsel in _stream_run(run, MORSEL_WINDOW):
             exists_u[morsel.start : morsel.start + morsel.exists.shape[0]] = (
                 morsel.exists
             )
@@ -113,11 +141,21 @@ class LookupServer:
             self.stats.infer_s += morsel.stats.infer_s
             self.stats.exist_s += morsel.stats.exist_s
             self.stats.aux_s += morsel.stats.aux_s
+            self.stats.filter_s += morsel.stats.filter_s
             self.stats.decode_s += morsel.stats.decode_s
-        # Concatenate per column (rather than filling a preallocated
-        # buffer) so chunks that disagree on dtype — e.g. a baseline
-        # store's int placeholder chunk before a string chunk —
-        # promote instead of crashing or truncating.
+        self.stats.route_s += run.route_s
+        if run.cache_state == "hit":
+            self.stats.cache_hits += 1
+        elif run.cache_state == "miss":
+            self.stats.cache_misses += 1
+        else:
+            self.stats.cache_bypass += 1
+        # Gather: concatenate per column (rather than filling a
+        # preallocated buffer) so chunks that disagree on dtype — e.g.
+        # a baseline store's int placeholder chunk before a string
+        # chunk — promote instead of crashing or truncating; then
+        # scatter back to requesters.
+        t_gather = time.perf_counter()
         vals_u = {c: np.concatenate(parts) for c, parts in chunks.items()}
 
         out: List[Tuple[Dict[str, np.ndarray], np.ndarray]] = []
@@ -126,7 +164,29 @@ class LookupServer:
             sel = inverse[off : off + n]
             out.append(({c: a[sel] for c, a in vals_u.items()}, exists_u[sel]))
             off += n
+        elapsed_gather = time.perf_counter() - t_gather
+        self.stats.gather_s += elapsed_gather
         self.stats.requests += len(requests)
         self.stats.keys += int(sum(lens))
-        self.stats.total_s += time.perf_counter() - t0
+        elapsed = time.perf_counter() - t0
+        self.stats.total_s += elapsed
+        depth.dec(len(requests))
+        reg.counter(
+            "deepmap_serve_requests_total", "Requests answered."
+        ).inc(len(requests))
+        reg.counter(
+            "deepmap_serve_keys_total", "Keys looked up (pre-dedup)."
+        ).inc(int(sum(lens)))
+        reg.histogram(
+            "deepmap_serve_batch_keys",
+            "Unique keys per merged device batch.",
+            buckets=obs.SIZE_BUCKETS,
+        ).observe(int(uniq.shape[0]))
+        lat = reg.histogram(
+            "deepmap_serve_request_seconds",
+            "Per-request latency (each merged request observes the "
+            "merged batch's wall time — the caller-visible latency).",
+        )
+        for _ in range(len(requests)):
+            lat.observe(elapsed)
         return out

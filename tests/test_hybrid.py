@@ -50,9 +50,16 @@ class TestBuildAndLookup:
 
     def test_stats_breakdown_populated(self, small_store):
         table, store = small_store
-        store.lookup(table.keys[:100])
-        s = store.last_stats
-        assert s.total() > 0 and s.infer_s >= 0 and s.aux_s >= 0
+        res = store.query().where_keys(table.keys[:100]).execute()
+        s = res.explain
+        assert s.total_s > 0 and s.infer_s >= 0 and s.aux_s >= 0
+
+    def test_last_stats_side_channel_removed(self, small_store):
+        """The mutable ``last_stats`` side-channel is gone; ExplainStats
+        (and the metrics registry) are the only stats surfaces."""
+        table, store = small_store
+        store.lookup(table.keys[:10])
+        assert not hasattr(store, "last_stats")
 
 
 class TestModifications:

@@ -91,3 +91,24 @@ class TestLookupServer:
         assert s.exist_s >= 0 and s.aux_s >= 0
         # fused existence runs in-kernel (exist_s ~ 0); host path times it
         assert s.total_s > 0
+
+    def test_stats_route_and_gather_timings(self, server):
+        """ISSUE 6: ServeStats surfaces executor route/gather accounting."""
+        table, srv = server
+        srv.stats = type(srv.stats)()
+        srv.lookup_many([table.keys[:100], table.keys[50:150]])
+        s = srv.stats
+        assert s.route_s >= 0
+        assert s.gather_s > 0  # per-request scatter always does work
+        assert s.filter_s >= 0
+
+    def test_stats_plan_cache_outcomes(self, server):
+        """Cache hit/miss/bypass counts come from the executor, not a
+        parallel server-side guess."""
+        table, srv = server
+        srv.stats = type(srv.stats)()
+        srv.lookup(table.keys[:64])
+        srv.lookup(table.keys[:64])
+        s = srv.stats
+        # every request is exactly one of hit/miss/bypass
+        assert s.cache_hits + s.cache_misses + s.cache_bypass == 2
