@@ -131,13 +131,13 @@ class PlanCache:
         self._plan_entries = int(plan_entries)
         self._pred_tables = int(pred_tables)
         self._key_bytes_budget = int(key_bytes_budget)
-        self._key_bytes = 0
-        self._plans: "OrderedDict[Tuple, _PlanEntry]" = OrderedDict()
-        self._tables: Dict = {}  # pred -> (version, decode_map, table)
+        self._key_bytes = 0  # guarded-by: _lock
+        self._plans: "OrderedDict[Tuple, _PlanEntry]" = OrderedDict()  # guarded-by: _lock
+        self._tables: Dict = {}  # guarded-by: _lock  (pred -> (version, decode_map, table))
         self._lock = threading.Lock()
-        self.hits = 0
-        self.misses = 0
-        self.bypass = 0
+        self.hits = 0  # guarded-by: _lock
+        self.misses = 0  # guarded-by: _lock
+        self.bypass = 0  # guarded-by: _lock
 
     def _note(self, outcome: str) -> None:
         obs.counter(
@@ -167,7 +167,7 @@ class PlanCache:
         self._note("miss" if entry is None else "hit")
         return entry
 
-    def _evict(self, fingerprint: Tuple) -> None:
+    def _evict(self, fingerprint: Tuple) -> None:  # holds-lock: _lock
         entry = self._plans.pop(fingerprint)
         if entry.keys is not None:
             self._key_bytes -= int(entry.keys.nbytes)

@@ -80,6 +80,11 @@ def _check_index_agreement(kind: str, exists: np.ndarray) -> None:
 class MappingStore(abc.ABC):
     """Abstract base of every key->row store (learned or baseline)."""
 
+    # Lazily-created instance state (see mutation_version / plan_cache);
+    # declared here so the typed surface knows their types.
+    _mutation_version: int
+    _plan_cache: PlanCache
+
     # ------------------------------------------------------------- required
     @property
     @abc.abstractmethod
@@ -157,7 +162,7 @@ class MappingStore(abc.ABC):
         return Query(self)
 
     # ------------------------------------------------ plan-cache integration
-    def mutation_version(self):
+    def mutation_version(self) -> object:
         """Opaque token that changes on every logical mutation.
 
         The plan cache stamps each artifact with this token and drops

@@ -50,7 +50,7 @@ class LazyFanoutPool:
         """
         self._max_workers = max_workers
         self._name = name
-        self._pool: Optional[ThreadPoolExecutor] = None
+        self._pool: Optional[ThreadPoolExecutor] = None  # guarded-by: _lock
         self._lock = threading.Lock()
 
     def map(self, fn, items, owners: Optional[int] = None) -> List:

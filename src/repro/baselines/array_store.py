@@ -199,6 +199,9 @@ class ArrayStore(PartitionedBaselineStore):
             return None
         return self._decoders.get(column)
 
+    # Memo of immutable derived data (see docstring) — a zone-map build
+    # is not a logical store mutation and must NOT bump the PlanCache.
+    # deeplint: ignore[mutation-version]
     def _partition_code_presence(self, column: str) -> Optional[np.ndarray]:
         """Lazy zone map: bool ``(num_partitions, cardinality)`` of the
         codes present in each partition (dictionary mode only).  Built

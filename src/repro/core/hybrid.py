@@ -487,7 +487,8 @@ class DeepMappingStore(MappingStore):
             codec = self.codecs[t]
             codec.extend(columns[t])
             codes, known = codec.encode(columns[t])
-            assert known.all(), "extend() must make every value encodable"
+            if not known.all():
+                raise RuntimeError("extend() must make every value encodable")
             cols.append(codes)
         return np.stack(cols, axis=1)
 

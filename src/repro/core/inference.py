@@ -79,7 +79,7 @@ class EngineStats:
     word_uploads: int = 0
 
     def __post_init__(self) -> None:
-        self._seen: set = set()
+        self._seen: set = set()  # guarded-by: _lock
         self._lock = threading.Lock()
 
     @property
@@ -212,10 +212,10 @@ class InferenceEngine:
         self.interpret = kops._auto_interpret(interpret)
         self.stats = stats if stats is not None else EngineStats()
         self._lock = threading.Lock()
-        self._entries: Dict[Tuple[str, ...], _TaskEntry] = {}
+        self._entries: Dict[Tuple[str, ...], _TaskEntry] = {}  # guarded-by: _lock
         self._pos_ops = tuple(encoder.position_ops())
         self._pos_ops_dev = None           # lazy (width, 2) int32 device array
-        self._words_cache: Optional[Tuple[int, jnp.ndarray]] = None
+        self._words_cache: Optional[Tuple[int, jnp.ndarray]] = None  # guarded-by: _lock
 
     def bind_vexist(self, vexist) -> None:
         """Swap the engine's bitvector binding, dropping the device
@@ -519,7 +519,7 @@ class EngineCache:
 
     def __init__(self) -> None:
         self.stats = EngineStats()
-        self._engines: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
+        self._engines: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()  # guarded-by: _lock
         self._lock = threading.Lock()
 
     def engine_for(self, store) -> InferenceEngine:
@@ -540,7 +540,8 @@ class EngineCache:
         eng = getattr(store, "_engine", None)
         if eng is not None:
             eng.stats = self.stats
-            self._engines[store] = eng
+            with self._lock:
+                self._engines[store] = eng
             return eng
         eng = self.engine_for(store)
         store.attach_engine(eng)

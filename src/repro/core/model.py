@@ -143,7 +143,8 @@ def _apply(layer: Dict, x, digits):
     if w.ndim == 3:
         # Gather path: sum over digit positions of selected rows.
         # digits: (n, width) int32 ; w: (width, base, out)
-        assert x is None, "rank-3 layer must be first from input"
+        if x is not None:
+            raise ValueError("rank-3 layer must be first from input")
         gathered = jax.vmap(lambda wp, dp: wp[dp], in_axes=(0, 1))(w, digits)
         return gathered.sum(axis=0) + layer["b"]  # (width, n, out) -> (n, out)
     return x @ w + layer["b"]
@@ -167,7 +168,8 @@ def forward_digits(params: Dict, digits: jnp.ndarray, spec: MLPSpec) -> Dict[str
 def _apply_onehot(layer: Dict, x, onehot):
     w = layer["w"]
     if w.ndim == 3:
-        assert x is None
+        if x is not None:
+            raise ValueError("rank-3 layer must be first from input")
         return onehot @ w.reshape(-1, w.shape[-1]) + layer["b"]
     return x @ w + layer["b"]
 

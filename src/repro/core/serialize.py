@@ -182,7 +182,11 @@ def load_store(path: str, pool: MemoryPool | None = None) -> DeepMappingStore:
     cap = meta["encoder"]["max_key_capacity"]
     residues = tuple(meta["encoder"].get("residues", ()))
     enc = KeyEncoder(max_key=max(0, cap - 1), base=base, residues=residues)
-    assert enc.capacity == cap
+    if enc.capacity != cap:
+        raise RuntimeError(
+            f"corrupt manifest: rebuilt encoder capacity {enc.capacity} "
+            f"does not match stored capacity {cap}"
+        )
 
     cfg = DeepMappingConfig(
         base=meta["config"]["base"],

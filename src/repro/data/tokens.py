@@ -51,7 +51,8 @@ class DeepMappingTokenStore:
 
     def get(self, positions: np.ndarray) -> np.ndarray:
         vals, exists = self._store.lookup(np.asarray(positions, dtype=np.int64))
-        assert bool(exists.all()), "token positions must exist"
+        if not bool(exists.all()):
+            raise KeyError("token positions must exist in the backing store")
         return vals["token"]
 
     def get_batch(self, starts: np.ndarray, seq_len: int) -> np.ndarray:

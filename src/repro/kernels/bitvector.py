@@ -41,7 +41,8 @@ def bitvector_call(
     Returns (N_pad,) int32 0/1.
     """
     n = keys.shape[0]
-    assert n % tile_n == 0
+    if n % tile_n != 0:
+        raise ValueError(f"batch size {n} must be a multiple of tile_n={tile_n}")
     grid = (n // tile_n,)
     return pl.pallas_call(
         _kernel,

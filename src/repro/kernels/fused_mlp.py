@@ -176,7 +176,8 @@ def fused_mlp_call(
     """
     card_pads_d = dict(card_pads)
     n = digits.shape[0]
-    assert n % tile_n == 0
+    if n % tile_n != 0:
+        raise ValueError(f"batch size {n} must be a multiple of tile_n={tile_n}")
     grid = (n // tile_n,)
     kernel = make_fused_kernel(spec, base_pad, card_pads_d, emit_codes)
 
@@ -294,7 +295,8 @@ def fused_lookup_call(
     (N_pad,) int32 0/1 — one device round trip for the whole batch.
     """
     n = keys.shape[0]
-    assert n % tile_n == 0
+    if n % tile_n != 0:
+        raise ValueError(f"batch size {n} must be a multiple of tile_n={tile_n}")
     grid = (n // tile_n,)
     kernel = make_fused_lookup_kernel(spec, base_pad, capacity, words32.shape[0])
 

@@ -190,7 +190,11 @@ def fused_lookup(
     ``pos_ops``/``words32``, and an already bucket-padded key batch —
     the wrapper adds no per-call host work.  Caller slices padding off.
     """
-    assert keys_i32.shape[0] % tile_n == 0
+    if keys_i32.shape[0] % tile_n != 0:
+        raise ValueError(
+            f"padded batch size {keys_i32.shape[0]} must be a multiple of "
+            f"tile_n={tile_n}"
+        )
     return fm_kernel.fused_lookup_call(
         keys_i32, pos_ops, words32, tuple(flat_weights), spec, tile_n,
         _round_up(spec.base, LANE), int(capacity), _auto_interpret(interpret),

@@ -73,7 +73,8 @@ def _dec_layer_init(rng, cfg) -> Dict:
 
 class EncDecLM:
     def __init__(self, cfg: ModelConfig):
-        assert cfg.is_encoder_decoder
+        if not cfg.is_encoder_decoder:
+            raise ValueError("EncDecLM requires an encoder-decoder ModelConfig")
         self.cfg = cfg
 
     def init(self, seed: int = 0) -> Dict:

@@ -63,7 +63,7 @@ class _Metric:
         self.help = help
         self._registry = registry
         self._lock = threading.Lock()
-        self._values: Dict[_LabelKey, float] = {}
+        self._values: Dict[_LabelKey, float] = {}  # guarded-by: _lock
 
     # ------------------------------------------------------------- reading
     def value(self, **labels) -> float:
@@ -154,7 +154,7 @@ class Histogram(_Metric):
         if list(bounds) != sorted(bounds) or len(set(bounds)) != len(bounds):
             raise ValueError(f"histogram {name} buckets must be ascending")
         self.buckets = bounds
-        self._states: Dict[_LabelKey, _HistState] = {}
+        self._states: Dict[_LabelKey, _HistState] = {}  # guarded-by: _lock
 
     def observe(self, value: float, **labels) -> None:
         """Record one observation into the labeled child."""
@@ -222,7 +222,7 @@ class MetricsRegistry:
     def __init__(self, enabled: bool = True):
         self.enabled = enabled
         self._lock = threading.Lock()
-        self._metrics: Dict[str, _Metric] = {}
+        self._metrics: Dict[str, _Metric] = {}  # guarded-by: _lock
 
     def _get_or_create(self, cls, name: str, help: str, **kwargs):
         with self._lock:

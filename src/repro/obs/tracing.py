@@ -95,7 +95,7 @@ class Tracer:
         self.enabled = enabled
         self.capacity = capacity
         self._lock = threading.Lock()
-        self._spans: deque = deque(maxlen=capacity)
+        self._spans: deque = deque(maxlen=capacity)  # guarded-by: _lock
 
     def span(self, name: str, track: str = "host", **args):
         """Context manager timing one span; ``args`` become trace-event

@@ -1,0 +1,928 @@
+"""Tests for the deeplint static-analysis suite (tools/deeplint).
+
+Per rule: a violating fixture, a clean fixture, a suppressed variant, and
+(for the engine-level mechanisms) baselined variants — plus seeded-bug
+checks against copies of the real sources and an end-to-end run over
+``src/repro`` asserting zero non-baselined findings.
+"""
+
+import json
+import sys
+import textwrap
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+if str(REPO_ROOT) not in sys.path:
+    sys.path.insert(0, str(REPO_ROOT))
+
+from tools.deeplint import engine  # noqa: E402
+from tools.deeplint.__main__ import main as deeplint_main  # noqa: E402
+from tools.deeplint.rules import (  # noqa: E402
+    ALL_RULES,
+    RULE_IDS,
+    device_sync,
+    kernel_purity,
+    layering,
+    lock_discipline,
+    metric_naming,
+    mutation_version,
+    stripped_assert,
+)
+
+
+def lint(tmp_path: Path, source: str, rules, rel: str = "mod.py"):
+    """Write one fixture file and run the given rules over it."""
+    path = tmp_path / rel
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(textwrap.dedent(source), encoding="utf-8")
+    findings, suppressed, errors = engine.run([path], tmp_path, rules)
+    assert not errors, errors
+    return findings, suppressed
+
+
+def rule_ids(findings):
+    return [f.rule for f in findings]
+
+
+# --------------------------------------------------------------- registry
+class TestRegistry:
+    def test_at_least_five_rules(self):
+        assert len(ALL_RULES) >= 5
+
+    def test_ids_are_kebab_and_unique(self):
+        assert len(RULE_IDS) == len(ALL_RULES)
+        for rid in RULE_IDS:
+            assert rid == rid.lower() and " " not in rid
+
+    def test_every_rule_has_summary_and_check(self):
+        for mod in ALL_RULES:
+            assert isinstance(mod.SUMMARY, str) and mod.SUMMARY
+            assert callable(mod.check)
+
+
+# --------------------------------------------------------- stripped-assert
+class TestStrippedAssert:
+    def test_violating(self, tmp_path):
+        findings, _ = lint(
+            tmp_path,
+            """
+            def f(n):
+                assert n > 0, "bad n"
+                return n
+            """,
+            [stripped_assert],
+        )
+        assert rule_ids(findings) == ["stripped-assert"]
+
+    def test_clean_raise(self, tmp_path):
+        findings, _ = lint(
+            tmp_path,
+            """
+            def f(n):
+                if n <= 0:
+                    raise ValueError("bad n")
+                return n
+            """,
+            [stripped_assert],
+        )
+        assert findings == []
+
+    def test_suppressed_inline(self, tmp_path):
+        findings, suppressed = lint(
+            tmp_path,
+            """
+            def f(n):
+                assert n > 0  # deeplint: ignore[stripped-assert]
+                return n
+            """,
+            [stripped_assert],
+        )
+        assert findings == []
+        assert rule_ids(suppressed) == ["stripped-assert"]
+
+    def test_suppressed_comment_above(self, tmp_path):
+        findings, suppressed = lint(
+            tmp_path,
+            """
+            def f(n):
+                # deeplint: ignore[stripped-assert]
+                assert n > 0
+                return n
+            """,
+            [stripped_assert],
+        )
+        assert findings == []
+        assert len(suppressed) == 1
+
+    def test_wrong_rule_suppression_does_not_apply(self, tmp_path):
+        findings, _ = lint(
+            tmp_path,
+            """
+            def f(n):
+                assert n > 0  # deeplint: ignore[lock-discipline]
+                return n
+            """,
+            [stripped_assert],
+        )
+        assert rule_ids(findings) == ["stripped-assert"]
+
+
+# --------------------------------------------------------- lock-discipline
+LOCKED_CLASS = """
+    import threading
+
+    class Box:
+        def __init__(self):
+            self._lock = threading.Lock()
+            self.count = 0  # guarded-by: _lock
+            self._items = []  # guarded-by: _lock
+
+        def bump(self):
+            with self._lock:
+                self.count += 1
+
+        def put(self, x):
+            with self._lock:
+                self._items.append(x)
+"""
+
+
+class TestLockDiscipline:
+    def test_clean(self, tmp_path):
+        findings, _ = lint(tmp_path, LOCKED_CLASS, [lock_discipline])
+        assert findings == []
+
+    def test_unlocked_augassign(self, tmp_path):
+        findings, _ = lint(
+            tmp_path,
+            LOCKED_CLASS
+            + """
+        def racy(self):
+            self.count += 1
+""",
+            [lock_discipline],
+        )
+        assert rule_ids(findings) == ["lock-discipline"]
+        assert "count" in findings[0].message
+
+    def test_unlocked_container_mutation(self, tmp_path):
+        findings, _ = lint(
+            tmp_path,
+            LOCKED_CLASS
+            + """
+        def racy(self, x):
+            self._items.append(x)
+""",
+            [lock_discipline],
+        )
+        assert rule_ids(findings) == ["lock-discipline"]
+
+    def test_item_store_outside_lock(self, tmp_path):
+        findings, _ = lint(
+            tmp_path,
+            """
+            import threading
+
+            class Box:
+                def __init__(self):
+                    self._lock = threading.Lock()
+                    self._map = {}  # guarded-by: _lock
+
+                def racy(self, k, v):
+                    self._map[k] = v
+            """,
+            [lock_discipline],
+        )
+        assert rule_ids(findings) == ["lock-discipline"]
+
+    def test_wrong_lock_held(self, tmp_path):
+        findings, _ = lint(
+            tmp_path,
+            """
+            import threading
+
+            class Box:
+                def __init__(self):
+                    self._lock = threading.Lock()
+                    self._other = threading.Lock()
+                    self.count = 0  # guarded-by: _lock
+
+                def racy(self):
+                    with self._other:
+                        self.count += 1
+            """,
+            [lock_discipline],
+        )
+        assert rule_ids(findings) == ["lock-discipline"]
+
+    def test_holds_lock_helper(self, tmp_path):
+        findings, _ = lint(
+            tmp_path,
+            LOCKED_CLASS
+            + """
+        def _evict(self):  # holds-lock: _lock
+            self._items.pop()
+""",
+            [lock_discipline],
+        )
+        assert findings == []
+
+    def test_closure_does_not_inherit_with(self, tmp_path):
+        # The PR 6 bug class: a with-block spawns a closure that runs on
+        # a pool thread later — the closure must NOT count as locked.
+        findings, _ = lint(
+            tmp_path,
+            LOCKED_CLASS
+            + """
+        def fan_out(self, pool):
+            with self._lock:
+                def work():
+                    self.count += 1
+                pool.submit(work)
+""",
+            [lock_discipline],
+        )
+        assert rule_ids(findings) == ["lock-discipline"]
+
+    def test_init_exempt(self, tmp_path):
+        findings, _ = lint(tmp_path, LOCKED_CLASS, [lock_discipline])
+        assert findings == []  # __init__ assigns guarded attrs lock-free
+
+    def test_guards_inherited_by_subclass(self, tmp_path):
+        findings, _ = lint(
+            tmp_path,
+            LOCKED_CLASS
+            + """
+
+    class SubBox(Box):
+        def racy(self):
+            self.count += 1
+""",
+            [lock_discipline],
+        )
+        assert rule_ids(findings) == ["lock-discipline"]
+        assert "SubBox" in findings[0].message
+
+    def test_suppressed(self, tmp_path):
+        findings, suppressed = lint(
+            tmp_path,
+            LOCKED_CLASS
+            + """
+        def racy(self):
+            self.count += 1  # deeplint: ignore[lock-discipline]
+""",
+            [lock_discipline],
+        )
+        assert findings == []
+        assert len(suppressed) == 1
+
+
+# ----------------------------------------------------------- kernel-purity
+class TestKernelPurity:
+    def test_clean_kernel(self, tmp_path):
+        findings, _ = lint(
+            tmp_path,
+            """
+            import jax.numpy as jnp
+            from jax.experimental import pallas as pl
+
+            def make(width):
+                def kernel(x_ref, o_ref):
+                    x = x_ref[...]
+                    acc = x * 0
+                    for p in range(width):
+                        acc = acc + x
+                    o_ref[...] = jnp.where(acc > 0, acc, 0)
+                return pl.pallas_call(kernel, out_shape=None)
+            """,
+            [kernel_purity],
+        )
+        assert findings == []
+
+    def test_branch_on_traced_value(self, tmp_path):
+        findings, _ = lint(
+            tmp_path,
+            """
+            from jax.experimental import pallas as pl
+
+            def make():
+                def kernel(x_ref, o_ref):
+                    x = x_ref[...]
+                    if x > 0:
+                        o_ref[...] = x
+                return pl.pallas_call(kernel, out_shape=None)
+            """,
+            [kernel_purity],
+        )
+        assert rule_ids(findings) == ["kernel-purity"]
+        assert "branches on a traced value" in findings[0].message
+
+    def test_host_numpy_in_kernel(self, tmp_path):
+        findings, _ = lint(
+            tmp_path,
+            """
+            import numpy as np
+            from jax.experimental import pallas as pl
+
+            def make():
+                def kernel(x_ref, o_ref):
+                    o_ref[...] = np.asarray(x_ref[...])
+                return pl.pallas_call(kernel, out_shape=None)
+            """,
+            [kernel_purity],
+        )
+        assert rule_ids(findings) == ["kernel-purity"]
+        assert "host numpy" in findings[0].message
+
+    def test_global_statement(self, tmp_path):
+        findings, _ = lint(
+            tmp_path,
+            """
+            from jax.experimental import pallas as pl
+
+            CALLS = 0
+
+            def make():
+                def kernel(x_ref, o_ref):
+                    global CALLS
+                    CALLS = CALLS + 1
+                    o_ref[...] = x_ref[...]
+                return pl.pallas_call(kernel, out_shape=None)
+            """,
+            [kernel_purity],
+        )
+        assert "kernel-purity" in rule_ids(findings)
+
+    def test_closure_over_mutable_literal(self, tmp_path):
+        findings, _ = lint(
+            tmp_path,
+            """
+            from jax.experimental import pallas as pl
+
+            def make():
+                table = [1, 2, 3]
+                def kernel(x_ref, o_ref):
+                    o_ref[...] = x_ref[...] * table[0]
+                return pl.pallas_call(kernel, out_shape=None)
+            """,
+            [kernel_purity],
+        )
+        assert rule_ids(findings) == ["kernel-purity"]
+        assert "mutable container" in findings[0].message
+
+    def test_closure_over_reassigned_var(self, tmp_path):
+        findings, _ = lint(
+            tmp_path,
+            """
+            from jax.experimental import pallas as pl
+
+            def make(n):
+                scale = 1
+                scale = n + 1
+                def kernel(x_ref, o_ref):
+                    o_ref[...] = x_ref[...] * scale
+                return pl.pallas_call(kernel, out_shape=None)
+            """,
+            [kernel_purity],
+        )
+        assert rule_ids(findings) == ["kernel-purity"]
+        assert "reassigned" in findings[0].message
+
+    def test_static_closure_allowed(self, tmp_path):
+        findings, _ = lint(
+            tmp_path,
+            """
+            from jax.experimental import pallas as pl
+
+            def make(spec, width):
+                plan = build_plan(spec)
+                def kernel(x_ref, o_ref):
+                    o_ref[...] = x_ref[...] * width + plan[0]
+                return pl.pallas_call(kernel, out_shape=None)
+
+            def build_plan(spec):
+                return (1,)
+            """,
+            [kernel_purity],
+        )
+        assert findings == []
+
+    def test_real_kernels_are_pure(self):
+        findings, _, errors = engine.run(
+            [REPO_ROOT / "src" / "repro" / "kernels"], REPO_ROOT, [kernel_purity]
+        )
+        assert not errors
+        assert findings == []
+
+
+# ------------------------------------------------------------- device-sync
+class TestDeviceSync:
+    def test_np_call_in_jit(self, tmp_path):
+        findings, _ = lint(
+            tmp_path,
+            """
+            import jax
+            import numpy as np
+
+            @jax.jit
+            def f(x):
+                return np.asarray(x) + 1
+            """,
+            [device_sync],
+        )
+        assert rule_ids(findings) == ["device-sync"]
+
+    def test_item_in_jit(self, tmp_path):
+        findings, _ = lint(
+            tmp_path,
+            """
+            import jax
+
+            @jax.jit
+            def f(x):
+                return x.sum().item()
+            """,
+            [device_sync],
+        )
+        assert rule_ids(findings) == ["device-sync"]
+
+    def test_partial_jit_decorator(self, tmp_path):
+        findings, _ = lint(
+            tmp_path,
+            """
+            import functools
+            import jax
+
+            @functools.partial(jax.jit, static_argnums=(1,))
+            def f(x, n):
+                return x.tolist()
+            """,
+            [device_sync],
+        )
+        assert rule_ids(findings) == ["device-sync"]
+
+    def test_host_function_unchecked(self, tmp_path):
+        findings, _ = lint(
+            tmp_path,
+            """
+            import numpy as np
+
+            def collect(x):
+                return np.asarray(x)
+            """,
+            [device_sync],
+        )
+        assert findings == []
+
+    def test_collect_point_exemption(self, tmp_path):
+        findings, _ = lint(
+            tmp_path,
+            """
+            import jax
+            import numpy as np
+
+            @jax.jit
+            def f(x):  # deeplint: collect-point
+                return np.asarray(x)
+            """,
+            [device_sync],
+        )
+        assert findings == []
+
+
+# -------------------------------------------------------- mutation-version
+STORE_BASE = """
+    class MappingStore:
+        def mutation_version(self):
+            return getattr(self, "_mutation_version", 0)
+
+        def _note_mutation(self):
+            self._mutation_version = getattr(self, "_mutation_version", 0) + 1
+"""
+
+
+class TestMutationVersion:
+    def test_insert_without_bump(self, tmp_path):
+        findings, _ = lint(
+            tmp_path,
+            STORE_BASE
+            + """
+
+    class MyStore(MappingStore):
+        def insert(self, keys, columns):
+            self.rows[0] = columns
+""",
+            [mutation_version],
+        )
+        assert rule_ids(findings) == ["mutation-version"]
+        assert "insert" in findings[0].message
+
+    def test_insert_with_bump(self, tmp_path):
+        findings, _ = lint(
+            tmp_path,
+            STORE_BASE
+            + """
+
+    class MyStore(MappingStore):
+        def insert(self, keys, columns):
+            self.rows[0] = columns
+            self._note_mutation()
+""",
+            [mutation_version],
+        )
+        assert findings == []
+
+    def test_transitive_bump_through_helper(self, tmp_path):
+        findings, _ = lint(
+            tmp_path,
+            STORE_BASE
+            + """
+
+    class MyStore(MappingStore):
+        def insert(self, keys, columns):
+            self.rows[0] = columns
+            self._finish()
+
+        def _finish(self):
+            self._note_mutation()
+""",
+            [mutation_version],
+        )
+        assert findings == []
+
+    def test_covered_helper(self, tmp_path):
+        # A state-writing helper whose only callers bump is covered.
+        findings, _ = lint(
+            tmp_path,
+            STORE_BASE
+            + """
+
+    class MyStore(MappingStore):
+        def insert(self, keys, columns):
+            self._encode(columns)
+            self._note_mutation()
+
+        def _encode(self, columns):
+            self.codec.extend(columns)
+""",
+            [mutation_version],
+        )
+        assert findings == []
+
+    def test_uncovered_state_writing_helper(self, tmp_path):
+        findings, _ = lint(
+            tmp_path,
+            STORE_BASE
+            + """
+
+    class MyStore(MappingStore):
+        def grow(self, columns):
+            self.codec.extend(columns)
+""",
+            [mutation_version],
+        )
+        assert rule_ids(findings) == ["mutation-version"]
+
+    def test_delegating_store_with_own_fence(self, tmp_path):
+        # Federation shape: verbs forward to members; the class overrides
+        # mutation_version, so member bumps are its fence.
+        findings, _ = lint(
+            tmp_path,
+            STORE_BASE
+            + """
+
+    class Federated(MappingStore):
+        def mutation_version(self):
+            return tuple(m.mutation_version() for m in self.members)
+
+        def insert(self, keys, columns):
+            self.members[0].insert(keys, columns)
+""",
+            [mutation_version],
+        )
+        assert findings == []
+
+    def test_abstract_verb_exempt(self, tmp_path):
+        findings, _ = lint(
+            tmp_path,
+            STORE_BASE
+            + """
+
+    class Facade(MappingStore):
+        def insert(self, keys, columns):
+            raise NotImplementedError("read-only facade")
+""",
+            [mutation_version],
+        )
+        assert findings == []
+
+    def test_suppressed(self, tmp_path):
+        findings, suppressed = lint(
+            tmp_path,
+            STORE_BASE
+            + """
+
+    class MyStore(MappingStore):
+        # deeplint: ignore[mutation-version]
+        def insert(self, keys, columns):
+            self.rows[0] = columns
+""",
+            [mutation_version],
+        )
+        assert findings == []
+        assert len(suppressed) == 1
+
+
+# ----------------------------------------------------------------- layering
+class TestLayering:
+    def test_obs_must_not_import_repro(self, tmp_path):
+        findings, _ = lint(
+            tmp_path,
+            """
+            from repro.api import cache
+            """,
+            [layering],
+            rel="repro/obs/bad.py",
+        )
+        assert rule_ids(findings) == ["layering"]
+        assert "repro.obs" in findings[0].message
+
+    def test_kernels_must_not_import_api(self, tmp_path):
+        findings, _ = lint(
+            tmp_path,
+            """
+            from repro.api.executor import run_plan
+            """,
+            [layering],
+            rel="repro/kernels/bad.py",
+        )
+        assert rule_ids(findings) == ["layering"]
+
+    def test_core_may_import_protocol_slice(self, tmp_path):
+        findings, _ = lint(
+            tmp_path,
+            """
+            from repro.api.protocol import MappingStore
+            from repro.api.plan import ExplainStats
+            """,
+            [layering],
+            rel="repro/core/good.py",
+        )
+        assert findings == []
+
+    def test_core_must_not_import_executor(self, tmp_path):
+        findings, _ = lint(
+            tmp_path,
+            """
+            from repro.api import executor
+            """,
+            [layering],
+            rel="repro/core/bad.py",
+        )
+        assert rule_ids(findings) == ["layering"]
+
+    def test_function_local_import_allowed(self, tmp_path):
+        # Function-local imports are the sanctioned cycle-breaker.
+        findings, _ = lint(
+            tmp_path,
+            """
+            def late():
+                from repro.api import executor
+                return executor
+            """,
+            [layering],
+            rel="repro/core/good.py",
+        )
+        assert findings == []
+
+    def test_non_repro_file_skipped(self, tmp_path):
+        findings, _ = lint(
+            tmp_path,
+            """
+            from repro.api import executor
+            """,
+            [layering],
+            rel="scratch.py",
+        )
+        assert findings == []
+
+
+# ------------------------------------------------------------ metric-naming
+class TestMetricNaming:
+    def test_bad_prefix(self, tmp_path):
+        findings, _ = lint(
+            tmp_path,
+            """
+            def f(obs):
+                obs.counter("lookups_total").inc()
+            """,
+            [metric_naming],
+        )
+        assert rule_ids(findings) == ["metric-naming"]
+
+    def test_counter_requires_total(self, tmp_path):
+        findings, _ = lint(
+            tmp_path,
+            """
+            def f(obs):
+                obs.counter("deepmap_lookups").inc()
+            """,
+            [metric_naming],
+        )
+        assert rule_ids(findings) == ["metric-naming"]
+
+    def test_histogram_requires_unit(self, tmp_path):
+        findings, _ = lint(
+            tmp_path,
+            """
+            def f(obs):
+                obs.histogram("deepmap_latency").observe(1.0)
+            """,
+            [metric_naming],
+        )
+        assert rule_ids(findings) == ["metric-naming"]
+
+    def test_gauge_must_not_end_total(self, tmp_path):
+        findings, _ = lint(
+            tmp_path,
+            """
+            def f(obs):
+                obs.gauge("deepmap_queue_total").set(1)
+            """,
+            [metric_naming],
+        )
+        assert rule_ids(findings) == ["metric-naming"]
+
+    def test_good_names(self, tmp_path):
+        findings, _ = lint(
+            tmp_path,
+            """
+            def f(obs):
+                obs.counter("deepmap_lookups_total").inc()
+                obs.gauge("deepmap_queue_depth").set(3)
+                obs.histogram("deepmap_latency_seconds").observe(0.1)
+            """,
+            [metric_naming],
+        )
+        assert findings == []
+
+    def test_unbounded_label(self, tmp_path):
+        findings, _ = lint(
+            tmp_path,
+            """
+            def f(obs, key):
+                obs.counter("deepmap_lookups_total").inc(key=f"k{key}")
+            """,
+            [metric_naming],
+        )
+        assert rule_ids(findings) == ["metric-naming"]
+        assert "unbounded" in findings[0].message
+
+    def test_bounded_label(self, tmp_path):
+        findings, _ = lint(
+            tmp_path,
+            """
+            def f(obs, shard_id):
+                obs.counter("deepmap_lookups_total").inc(shard=shard_id)
+            """,
+            [metric_naming],
+        )
+        assert findings == []
+
+
+# ----------------------------------------------------------------- baseline
+class TestBaseline:
+    def test_baselined_finding_does_not_fail(self, tmp_path, capsys):
+        target = tmp_path / "mod.py"
+        target.write_text("def f(n):\n    assert n\n", encoding="utf-8")
+        baseline = tmp_path / "baseline.json"
+
+        rc = deeplint_main(
+            [str(target), "--baseline", str(baseline), "--write-baseline"]
+        )
+        assert rc == 0
+        data = json.loads(baseline.read_text())
+        assert len(data["findings"]) == 1
+        assert data["findings"][0]["rule"] == "stripped-assert"
+
+        rc = deeplint_main([str(target), "--baseline", str(baseline)])
+        assert rc == 0
+        out = capsys.readouterr().out
+        assert "1 baselined" in out
+
+    def test_new_finding_still_fails_with_baseline(self, tmp_path):
+        target = tmp_path / "mod.py"
+        target.write_text("def f(n):\n    assert n\n", encoding="utf-8")
+        baseline = tmp_path / "baseline.json"
+        deeplint_main([str(target), "--baseline", str(baseline), "--write-baseline"])
+
+        target.write_text(
+            "def f(n):\n    assert n\n\ndef g(n):\n    assert not n\n",
+            encoding="utf-8",
+        )
+        rc = deeplint_main([str(target), "--baseline", str(baseline)])
+        assert rc == 1
+
+    def test_no_baseline_flag(self, tmp_path):
+        target = tmp_path / "mod.py"
+        target.write_text("def f(n):\n    assert n\n", encoding="utf-8")
+        baseline = tmp_path / "baseline.json"
+        deeplint_main([str(target), "--baseline", str(baseline), "--write-baseline"])
+        rc = deeplint_main(
+            [str(target), "--baseline", str(baseline), "--no-baseline"]
+        )
+        assert rc == 1
+
+    def test_shipped_baseline_is_empty(self):
+        data = json.loads(
+            (REPO_ROOT / "tools" / "deeplint" / "baseline.json").read_text()
+        )
+        assert data["findings"] == []
+
+
+# ---------------------------------------------------------------- seeded bugs
+class TestSeededBugs:
+    """Acceptance checks: reintroducing two historical bugs into copies
+    of the real sources produces exactly one finding each."""
+
+    def _copy(self, tmp_path, rel):
+        src = (REPO_ROOT / rel).read_text(encoding="utf-8")
+        dst = tmp_path / Path(rel).name
+        return src, dst
+
+    def test_unlocked_cache_hit_counter(self, tmp_path):
+        src, dst = self._copy(tmp_path, "src/repro/api/cache.py")
+        needle = "        with self._lock:\n            entry = self._plans.get(fingerprint)"
+        assert needle in src
+        dst.write_text(
+            src.replace(needle, "        self.hits += 1\n" + needle, 1),
+            encoding="utf-8",
+        )
+        findings, _, errors = engine.run([dst], tmp_path, None)
+        assert not errors
+        assert rule_ids(findings) == ["lock-discipline"]
+        assert "hits" in findings[0].message
+
+    def test_bare_assert_in_executor(self, tmp_path):
+        src, dst = self._copy(tmp_path, "src/repro/api/executor.py")
+        marker = "\nclass "
+        assert marker in src
+        dst.write_text(
+            src.replace(
+                marker,
+                '\ndef _seeded(n):\n    assert n > 0\n    return n\n\nclass ',
+                1,
+            ),
+            encoding="utf-8",
+        )
+        findings, _, errors = engine.run([dst], tmp_path, None)
+        assert not errors
+        assert rule_ids(findings) == ["stripped-assert"]
+
+
+# ------------------------------------------------------------------ e2e + CLI
+class TestEndToEnd:
+    def test_src_repro_is_clean(self):
+        rc = deeplint_main(
+            [
+                str(REPO_ROOT / "src" / "repro"),
+                "--baseline",
+                str(REPO_ROOT / "tools" / "deeplint" / "baseline.json"),
+            ]
+        )
+        assert rc == 0
+
+    def test_json_report_shape(self, tmp_path):
+        target = tmp_path / "mod.py"
+        target.write_text("def f(n):\n    assert n\n", encoding="utf-8")
+        out = tmp_path / "report.json"
+        rc = deeplint_main(
+            [str(target), "--format", "json", "--output", str(out),
+             "--baseline", str(tmp_path / "nope.json")]
+        )
+        assert rc == 1
+        data = json.loads(out.read_text())
+        assert data["tool"] == "deeplint"
+        assert data["summary"]["findings"] == 1
+        assert set(data["rules"]) == set(RULE_IDS)
+        f = data["findings"][0]
+        assert {"rule", "path", "line", "col", "message"} <= set(f)
+
+    def test_unknown_rule_is_usage_error(self, tmp_path):
+        target = tmp_path / "mod.py"
+        target.write_text("x = 1\n", encoding="utf-8")
+        assert deeplint_main([str(target), "--rules", "no-such-rule"]) == 2
+
+    def test_parse_error_exits_2(self, tmp_path):
+        target = tmp_path / "broken.py"
+        target.write_text("def f(:\n", encoding="utf-8")
+        assert deeplint_main([str(target)]) == 2
+
+    def test_rules_filter(self, tmp_path):
+        target = tmp_path / "mod.py"
+        target.write_text("def f(n):\n    assert n\n", encoding="utf-8")
+        rc = deeplint_main(
+            [str(target), "--rules", "layering",
+             "--baseline", str(tmp_path / "nope.json")]
+        )
+        assert rc == 0  # assert finding not reported when rule filtered out

@@ -1,0 +1,1 @@
+"""Repo maintenance tooling (stdlib-only; not shipped with the package)."""

@@ -7,6 +7,12 @@ stripped; bare ``#fragment`` links are ignored).  ``http(s)``/
 ``mailto`` targets are format-checked only — CI must not flake on
 third-party outages.
 
+For ``DESIGN.md`` the rule catalog in §Invariants & static analysis is
+additionally cross-checked against the deeplint registry
+(``tools.deeplint.rules.RULE_IDS``): every ``- **`rule-id`**`` bullet
+must name a registered rule and every registered rule must appear, so
+the documented catalog cannot drift from the code.
+
     python tools/check_docs.py README.md DESIGN.md ROADMAP.md
 """
 
@@ -15,6 +21,8 @@ from __future__ import annotations
 import re
 import sys
 from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
 
 #: Inline ``[text](target)`` — target captured lazily up to the first
 #: unescaped ``)``; fenced code is stripped before matching.
@@ -41,6 +49,33 @@ def check_file(path: Path) -> list[str]:
     return errors
 
 
+#: ``- **`rule-id`**`` bullets inside the DESIGN.md rule catalog.
+CATALOG_BULLET = re.compile(r"^\s*-\s+\*\*`([a-z][a-z0-9-]*)`\*\*", re.MULTILINE)
+CATALOG_HEADING = "### Rule catalog"
+
+
+def check_rule_catalog(path: Path) -> list[str]:
+    """Cross-check DESIGN.md's rule catalog against the deeplint registry."""
+    try:
+        from tools.deeplint.rules import RULE_IDS
+    except Exception as exc:  # registry must stay importable
+        return [f"{path}: cannot import deeplint registry: {exc}"]
+    text = path.read_text(encoding="utf-8")
+    start = text.find(CATALOG_HEADING)
+    if start < 0:
+        return [f"{path}: missing '{CATALOG_HEADING}' section"]
+    # The catalog runs to the next heading.
+    end = text.find("\n#", start + len(CATALOG_HEADING))
+    section = text[start:end] if end > 0 else text[start:]
+    documented = set(CATALOG_BULLET.findall(section))
+    errors = []
+    for rid in sorted(documented - set(RULE_IDS)):
+        errors.append(f"{path}: documented rule {rid!r} is not in the registry")
+    for rid in sorted(set(RULE_IDS) - documented):
+        errors.append(f"{path}: registered rule {rid!r} missing from the catalog")
+    return errors
+
+
 def main(argv: list[str]) -> int:
     """Check every argument file; exit non-zero on any broken link."""
     if not argv:
@@ -53,6 +88,8 @@ def main(argv: list[str]) -> int:
             failures.append(f"{name}: file not found")
             continue
         failures.extend(check_file(path))
+        if path.name == "DESIGN.md":
+            failures.extend(check_rule_catalog(path))
     for f in failures:
         print(f, file=sys.stderr)
     print(

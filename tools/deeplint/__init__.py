@@ -1,0 +1,19 @@
+"""deeplint — stdlib-``ast`` static analysis for this repo's invariants.
+
+The package is a small rule engine (:mod:`tools.deeplint.engine`) plus one
+module per rule under :mod:`tools.deeplint.rules`.  Run it as::
+
+    python -m tools.deeplint src/repro
+
+Exit codes: 0 = clean (or fully baselined), 1 = non-baselined findings,
+2 = usage / parse error.
+"""
+
+from tools.deeplint.engine import (  # noqa: F401
+    Finding,
+    Project,
+    SourceModule,
+    load_baseline,
+    run,
+)
+from tools.deeplint.rules import ALL_RULES, RULE_IDS  # noqa: F401

@@ -1,0 +1,114 @@
+"""CLI entry point: ``python -m tools.deeplint src/repro [options]``.
+
+Exit codes: 0 clean (or fully baselined/suppressed), 1 non-baselined
+findings, 2 usage or parse error.
+"""
+
+from __future__ import annotations
+
+import argparse
+import datetime
+import sys
+from pathlib import Path
+
+from tools.deeplint import engine
+from tools.deeplint.rules import ALL_RULES, RULE_IDS
+
+DEFAULT_BASELINE = Path(__file__).resolve().parent / "baseline.json"
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m tools.deeplint",
+        description="Repo-invariant static analysis (stdlib ast).",
+    )
+    parser.add_argument("paths", nargs="*", help="files or directories to lint")
+    parser.add_argument(
+        "--format", choices=("text", "json"), default="text", dest="fmt"
+    )
+    parser.add_argument(
+        "--baseline",
+        type=Path,
+        default=DEFAULT_BASELINE,
+        help=f"baseline file (default: {DEFAULT_BASELINE.name} next to the tool)",
+    )
+    parser.add_argument(
+        "--no-baseline",
+        action="store_true",
+        help="report every finding, ignoring the baseline file",
+    )
+    parser.add_argument(
+        "--write-baseline",
+        action="store_true",
+        help="rewrite the baseline file with the current findings and exit 0",
+    )
+    parser.add_argument(
+        "--rules",
+        help="comma-separated rule ids to run (default: all)",
+    )
+    parser.add_argument(
+        "--output", type=Path, help="write the report here instead of stdout"
+    )
+    parser.add_argument(
+        "--list-rules", action="store_true", help="print the rule catalog and exit"
+    )
+    args = parser.parse_args(argv)
+
+    if args.list_rules:
+        for mod in ALL_RULES:
+            print(f"{mod.RULE_ID}: {mod.SUMMARY}")
+        return 0
+    if not args.paths:
+        parser.error("paths are required unless --list-rules is given")
+
+    rules = ALL_RULES
+    if args.rules:
+        wanted = [r.strip() for r in args.rules.split(",") if r.strip()]
+        unknown = [r for r in wanted if r not in RULE_IDS]
+        if unknown:
+            print(f"deeplint: unknown rule(s): {', '.join(unknown)}", file=sys.stderr)
+            return 2
+        rules = [RULE_IDS[r] for r in wanted]
+
+    paths = [Path(p) for p in args.paths]
+    missing = [str(p) for p in paths if not p.exists()]
+    if missing:
+        print(f"deeplint: no such path: {', '.join(missing)}", file=sys.stderr)
+        return 2
+
+    root = Path.cwd()
+    findings, suppressed, errors = engine.run(paths, root, rules)
+    if errors:
+        for err in errors:
+            print(f"deeplint: parse error: {err}", file=sys.stderr)
+        return 2
+
+    if args.write_baseline:
+        date = datetime.date.today().isoformat()
+        engine.write_baseline(args.baseline, findings, date)
+        print(
+            f"deeplint: wrote {len(findings)} finding(s) to {args.baseline}",
+            file=sys.stderr,
+        )
+        return 0
+
+    baseline = {} if args.no_baseline else engine.load_baseline(args.baseline)
+    new, baselined = engine.apply_baseline(findings, baseline)
+
+    file_count = len({f.path for f in new} | {f.path for f in baselined})
+    if args.fmt == "json":
+        report = engine.render_json(
+            new, baselined, len(suppressed), file_count, [str(p) for p in paths]
+        )
+    else:
+        report = engine.render_text(new, baselined, len(suppressed), file_count)
+
+    if args.output:
+        args.output.write_text(report + "\n", encoding="utf-8")
+    else:
+        print(report)
+    return 1 if new else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

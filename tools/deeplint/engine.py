@@ -1,0 +1,412 @@
+"""Rule engine for deeplint: file model, suppressions, baseline, reporters.
+
+Everything here is stdlib-only.  The engine parses every ``.py`` file under
+the requested paths into a :class:`SourceModule`, bundles them into a
+:class:`Project`, and hands the project to each rule module (see
+:mod:`tools.deeplint.rules`).  Rules return :class:`Finding` objects; the
+engine then drops findings that are suppressed inline
+(``# deeplint: ignore[rule-id]``) or grandfathered in the baseline file.
+
+Conventions recognised in source comments (documented in DESIGN.md):
+
+``# deeplint: ignore[rule-a,rule-b]``
+    Suppress those rules on this line (or, on a comment-only line, on the
+    next line).  ``ignore`` without brackets suppresses every rule.
+``# guarded-by: <lock>``
+    On an attribute-initialisation line: the attribute may only be mutated
+    while ``self.<lock>`` is held (rule ``lock-discipline``).
+``# holds-lock: <lock>``
+    On a ``def`` line: the method is only ever called with ``self.<lock>``
+    already held, so its body counts as a locked region.
+``# deeplint: collect-point``
+    On a ``def`` line: sanctioned host/device synchronisation point for
+    rule ``device-sync``.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import re
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+SUPPRESS_RE = re.compile(r"#\s*deeplint:\s*ignore(?:\[([a-zA-Z0-9_,\- ]+)\])?")
+GUARDED_BY_RE = re.compile(r"#\s*guarded-by:\s*([A-Za-z_][A-Za-z0-9_]*)")
+HOLDS_LOCK_RE = re.compile(r"#\s*holds-lock:\s*([A-Za-z_][A-Za-z0-9_]*)")
+COLLECT_POINT_RE = re.compile(r"#\s*deeplint:\s*collect-point")
+
+ALL_MARKER = "*"
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """A single rule violation at a source location."""
+
+    rule: str
+    path: str  # repo-relative, forward slashes
+    line: int
+    col: int
+    message: str
+
+    def key(self) -> Tuple[str, str, str]:
+        """Line-number-insensitive identity used for baseline matching."""
+        return (self.rule, self.path, self.message)
+
+    def to_json(self) -> Dict[str, object]:
+        return dataclasses.asdict(self)
+
+
+class SourceModule:
+    """One parsed ``.py`` file plus its comment-level annotations."""
+
+    def __init__(self, path: Path, rel_path: str, text: str) -> None:
+        self.path = path
+        self.rel_path = rel_path
+        self.text = text
+        self.lines = text.splitlines()
+        self.tree = ast.parse(text, filename=rel_path)
+        self.module = derive_module_name(path)
+        # line -> set of suppressed rule ids (ALL_MARKER means all rules)
+        self.suppressions: Dict[int, Set[str]] = {}
+        self._scan_suppressions()
+
+    def _scan_suppressions(self) -> None:
+        for idx, raw in enumerate(self.lines, start=1):
+            m = SUPPRESS_RE.search(raw)
+            if not m:
+                continue
+            ids = (
+                {part.strip() for part in m.group(1).split(",") if part.strip()}
+                if m.group(1)
+                else {ALL_MARKER}
+            )
+            target = idx
+            # A comment-only line suppresses the next source line.
+            if raw.lstrip().startswith("#"):
+                target = idx + 1
+            self.suppressions.setdefault(target, set()).update(ids)
+
+    def is_suppressed(self, rule: str, line: int) -> bool:
+        ids = self.suppressions.get(line)
+        if not ids:
+            return False
+        return ALL_MARKER in ids or rule in ids
+
+    def line_comment(self, lineno: int) -> str:
+        """Raw text of the given 1-based line ('' when out of range)."""
+        if 1 <= lineno <= len(self.lines):
+            return self.lines[lineno - 1]
+        return ""
+
+    def guarded_by(self, lineno: int) -> Optional[str]:
+        m = GUARDED_BY_RE.search(self.line_comment(lineno))
+        return m.group(1) if m else None
+
+    def holds_lock(self, node: ast.AST) -> Optional[str]:
+        """``# holds-lock:`` marker on a def line or the line above it."""
+        lineno = getattr(node, "lineno", 0)
+        for cand in (lineno, lineno - 1):
+            m = HOLDS_LOCK_RE.search(self.line_comment(cand))
+            if m:
+                return m.group(1)
+        return None
+
+    def is_collect_point(self, node: ast.AST) -> bool:
+        lineno = getattr(node, "lineno", 0)
+        for cand in (lineno, lineno - 1):
+            if COLLECT_POINT_RE.search(self.line_comment(cand)):
+                return True
+        return False
+
+    def finding(self, rule: str, node: ast.AST, message: str) -> Finding:
+        return Finding(
+            rule=rule,
+            path=self.rel_path,
+            line=getattr(node, "lineno", 1),
+            col=getattr(node, "col_offset", 0),
+            message=message,
+        )
+
+
+def derive_module_name(path: Path) -> Optional[str]:
+    """Map a file path to a dotted module name rooted at ``repro``.
+
+    Works for ``src/repro/...`` layouts and for test fixtures that create a
+    bare ``repro/...`` tree.  Returns ``None`` when the file is not inside a
+    ``repro`` package (layering checks are skipped for such files).
+    """
+    parts = list(path.parts)
+    for i in range(len(parts) - 1, -1, -1):
+        if parts[i] == "repro":
+            dotted = parts[i:]
+            break
+    else:
+        return None
+    name = ".".join(dotted)
+    if name.endswith(".py"):
+        name = name[: -len(".py")]
+    if name.endswith(".__init__"):
+        name = name[: -len(".__init__")]
+    return name
+
+
+@dataclasses.dataclass
+class ClassInfo:
+    """Project-level class record used by hierarchy-aware rules."""
+
+    qualname: str  # "<module>.<ClassName>" (module may be "" for orphans)
+    node: ast.ClassDef
+    source: "SourceModule"
+    base_names: List[str]  # unresolved base expressions as dotted strings
+
+
+class Project:
+    """All parsed modules plus shared cross-module lookup tables."""
+
+    def __init__(self, modules: Sequence[SourceModule]) -> None:
+        self.modules = list(modules)
+        self.by_module: Dict[str, SourceModule] = {
+            m.module: m for m in self.modules if m.module
+        }
+        self._classes: Optional[Dict[str, ClassInfo]] = None
+
+    # -- class hierarchy ---------------------------------------------------
+    @property
+    def classes(self) -> Dict[str, ClassInfo]:
+        """Qualified-name -> ClassInfo for every top-level class."""
+        if self._classes is None:
+            table: Dict[str, ClassInfo] = {}
+            for src in self.modules:
+                prefix = (src.module + ".") if src.module else src.rel_path + ":"
+                for node in src.tree.body:
+                    if isinstance(node, ast.ClassDef):
+                        table[prefix + node.name] = ClassInfo(
+                            qualname=prefix + node.name,
+                            node=node,
+                            source=src,
+                            base_names=[_dotted(b) for b in node.bases],
+                        )
+            self._classes = table
+        return self._classes
+
+    def resolve_base(self, info: ClassInfo, base: str) -> Optional[str]:
+        """Resolve a base-class expression to a qualified class name."""
+        if not base:
+            return None
+        src = info.source
+        head, _, rest = base.partition(".")
+        imports = module_import_map(src)
+        if head in imports:
+            target = imports[head] + ("." + rest if rest else "")
+        elif not rest:
+            # Same-file base: use the same prefix the class table uses.
+            prefix = (src.module + ".") if src.module else src.rel_path + ":"
+            target = prefix + head
+        else:
+            target = base
+        return target if target in self.classes else None
+
+    def ancestors(self, qualname: str) -> Set[str]:
+        """All resolved ancestor qualnames of a class (excluding itself)."""
+        seen: Set[str] = set()
+        frontier = [qualname]
+        while frontier:
+            cur = frontier.pop()
+            info = self.classes.get(cur)
+            if info is None:
+                continue
+            for base in info.base_names:
+                resolved = self.resolve_base(info, base)
+                if resolved and resolved not in seen:
+                    seen.add(resolved)
+                    frontier.append(resolved)
+        return seen
+
+    def subclasses_of(self, root_qualname: str) -> List[ClassInfo]:
+        """Every class whose ancestor set contains ``root_qualname``."""
+        return [
+            info
+            for qual, info in sorted(self.classes.items())
+            if root_qualname in self.ancestors(qual)
+        ]
+
+
+def _dotted(node: ast.AST) -> str:
+    """Render Name/Attribute chains as a dotted string ('' otherwise)."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        head = _dotted(node.value)
+        return head + "." + node.attr if head else ""
+    return ""
+
+
+def module_import_map(src: SourceModule) -> Dict[str, str]:
+    """Local name -> imported dotted target for a module's imports."""
+    table: Dict[str, str] = {}
+    for node in ast.walk(src.tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                table[alias.asname or alias.name.split(".")[0]] = (
+                    alias.name if alias.asname else alias.name.split(".")[0]
+                )
+                if alias.asname:
+                    table[alias.asname] = alias.name
+        elif isinstance(node, ast.ImportFrom) and node.module and node.level == 0:
+            for alias in node.names:
+                table[alias.asname or alias.name] = node.module + "." + alias.name
+    return table
+
+
+# -- collection ------------------------------------------------------------
+
+def collect_modules(
+    paths: Sequence[Path], root: Path
+) -> Tuple[List[SourceModule], List[str]]:
+    """Parse every .py under ``paths``; returns (modules, parse_errors)."""
+    files: List[Path] = []
+    for p in paths:
+        if p.is_dir():
+            files.extend(sorted(p.rglob("*.py")))
+        elif p.suffix == ".py":
+            files.append(p)
+    modules: List[SourceModule] = []
+    errors: List[str] = []
+    for f in files:
+        try:
+            rel = f.resolve().relative_to(root.resolve()).as_posix()
+        except ValueError:
+            rel = f.as_posix()
+        try:
+            text = f.read_text(encoding="utf-8")
+            modules.append(SourceModule(f, rel, text))
+        except (OSError, SyntaxError, ValueError) as exc:
+            errors.append(f"{rel}: {exc}")
+    return modules, errors
+
+
+# -- baseline --------------------------------------------------------------
+
+def load_baseline(path: Path) -> Dict[Tuple[str, str, str], int]:
+    """Baseline file -> multiset of finding keys (key -> count)."""
+    if not path.exists():
+        return {}
+    data = json.loads(path.read_text(encoding="utf-8"))
+    counts: Dict[Tuple[str, str, str], int] = {}
+    for entry in data.get("findings", []):
+        key = (entry["rule"], entry["path"], entry["message"])
+        counts[key] = counts.get(key, 0) + 1
+    return counts
+
+
+def write_baseline(path: Path, findings: Sequence[Finding], date: str) -> None:
+    payload = {
+        "version": 1,
+        "updated": date,
+        "policy": (
+            "Grandfathered findings only. New code must be clean; entries "
+            "here need a dated justification and should trend to zero."
+        ),
+        "findings": [
+            {"rule": f.rule, "path": f.path, "message": f.message}
+            for f in sorted(findings, key=lambda f: (f.rule, f.path, f.message))
+        ],
+    }
+    path.write_text(json.dumps(payload, indent=2) + "\n", encoding="utf-8")
+
+
+# -- run -------------------------------------------------------------------
+
+def run(
+    paths: Sequence[Path],
+    root: Path,
+    rules: Optional[Sequence[object]] = None,
+) -> Tuple[List[Finding], List[Finding], List[str]]:
+    """Run rules over ``paths``.
+
+    Returns ``(findings, suppressed, parse_errors)`` where *findings* is the
+    post-suppression list (baseline filtering is the caller's concern).
+    """
+    from tools.deeplint.rules import ALL_RULES
+
+    modules, errors = collect_modules(paths, root)
+    project = Project(modules)
+    by_rel = {m.rel_path: m for m in modules}
+
+    active = list(rules) if rules is not None else list(ALL_RULES)
+    raw: List[Finding] = []
+    for rule_mod in active:
+        raw.extend(rule_mod.check(project))
+
+    findings: List[Finding] = []
+    suppressed: List[Finding] = []
+    for f in sorted(raw, key=lambda f: (f.path, f.line, f.rule)):
+        src = by_rel.get(f.path)
+        if src is not None and src.is_suppressed(f.rule, f.line):
+            suppressed.append(f)
+        else:
+            findings.append(f)
+    return findings, suppressed, errors
+
+
+def apply_baseline(
+    findings: Sequence[Finding], baseline: Dict[Tuple[str, str, str], int]
+) -> Tuple[List[Finding], List[Finding]]:
+    """Split findings into (new, baselined) using multiset matching."""
+    remaining = dict(baseline)
+    new: List[Finding] = []
+    old: List[Finding] = []
+    for f in findings:
+        key = f.key()
+        if remaining.get(key, 0) > 0:
+            remaining[key] -= 1
+            old.append(f)
+        else:
+            new.append(f)
+    return new, old
+
+
+# -- reporters -------------------------------------------------------------
+
+def render_text(
+    findings: Sequence[Finding],
+    baselined: Sequence[Finding],
+    suppressed_count: int,
+    file_count: int,
+) -> str:
+    lines = []
+    for f in findings:
+        lines.append(f"{f.path}:{f.line}:{f.col}: [{f.rule}] {f.message}")
+    lines.append(
+        f"deeplint: {len(findings)} finding(s) in {file_count} file(s) "
+        f"({len(baselined)} baselined, {suppressed_count} suppressed)"
+    )
+    return "\n".join(lines)
+
+
+def render_json(
+    findings: Sequence[Finding],
+    baselined: Sequence[Finding],
+    suppressed_count: int,
+    file_count: int,
+    paths: Sequence[str],
+) -> str:
+    from tools.deeplint.rules import ALL_RULES
+
+    payload = {
+        "tool": "deeplint",
+        "version": 1,
+        "paths": list(paths),
+        "rules": {mod.RULE_ID: mod.SUMMARY for mod in ALL_RULES},
+        "findings": [f.to_json() for f in findings],
+        "baselined": [f.to_json() for f in baselined],
+        "summary": {
+            "findings": len(findings),
+            "baselined": len(baselined),
+            "suppressed": suppressed_count,
+            "files": file_count,
+        },
+    }
+    return json.dumps(payload, indent=2)

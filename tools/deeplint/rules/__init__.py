@@ -1,0 +1,30 @@
+"""Rule registry: every deeplint rule module, keyed by ``RULE_ID``.
+
+Each rule module exposes ``RULE_ID`` (kebab-case id used in suppressions,
+baselines, and reports), ``SUMMARY`` (one line for ``--list-rules`` and
+the JSON report), and ``check(project) -> Iterable[Finding]``.
+"""
+
+from __future__ import annotations
+
+from tools.deeplint.rules import (
+    device_sync,
+    kernel_purity,
+    layering,
+    lock_discipline,
+    metric_naming,
+    mutation_version,
+    stripped_assert,
+)
+
+ALL_RULES = [
+    lock_discipline,
+    kernel_purity,
+    device_sync,
+    stripped_assert,
+    mutation_version,
+    layering,
+    metric_naming,
+]
+
+RULE_IDS = {mod.RULE_ID: mod for mod in ALL_RULES}

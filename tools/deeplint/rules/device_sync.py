@@ -1,0 +1,107 @@
+"""Rule ``device-sync``: no implicit host/device syncs on the jit path.
+
+Inside any ``@jax.jit``-decorated function (including ``partial(jax.jit,
+...)`` decorators), the following force a device round-trip or trace-time
+materialisation and are flagged:
+
+* host-numpy calls (``np.asarray``/``np.array``/any name bound to
+  ``numpy``) on traced values;
+* ``.item()`` / ``.tolist()`` / ``.block_until_ready()``;
+* ``jax.device_get`` / ``float()``/``int()`` on traced arrays are not
+  detectable soundly and are left to review, but ``print`` is flagged.
+
+Sanctioned collect points — the one place the pipeline is *supposed* to
+sync (e.g. ``InferenceEngine.collect``) — are host-side functions and
+therefore naturally out of scope; a jit-side exception can be annotated
+``# deeplint: collect-point`` on its ``def`` line.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List, Set
+
+from tools.deeplint.engine import Finding, Project, SourceModule, module_import_map
+
+RULE_ID = "device-sync"
+SUMMARY = "implicit host/device sync inside a jit-traced function"
+
+SYNC_ATTRS = {"item", "tolist", "block_until_ready"}
+
+
+def _numpy_aliases(src: SourceModule) -> Set[str]:
+    return {
+        local
+        for local, target in module_import_map(src).items()
+        if target == "numpy"
+    }
+
+
+def _is_jit_decorator(dec: ast.expr) -> bool:
+    """jax.jit / jit / partial(jax.jit, ...) / jax.jit(...) decorators."""
+
+    def names_jit(expr: ast.expr) -> bool:
+        if isinstance(expr, ast.Name):
+            return expr.id == "jit"
+        if isinstance(expr, ast.Attribute):
+            return expr.attr == "jit"
+        return False
+
+    if names_jit(dec):
+        return True
+    if isinstance(dec, ast.Call):
+        if names_jit(dec.func):
+            return True
+        return any(names_jit(a) for a in dec.args)
+    return False
+
+
+def check(project: Project) -> Iterable[Finding]:
+    findings: List[Finding] = []
+    for src in project.modules:
+        np_aliases = _numpy_aliases(src)
+        for fn in ast.walk(src.tree):
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            if not any(_is_jit_decorator(d) for d in fn.decorator_list):
+                continue
+            if src.is_collect_point(fn):
+                continue
+            for node in ast.walk(fn):
+                if not isinstance(node, ast.Call):
+                    continue
+                func = node.func
+                if isinstance(func, ast.Name) and func.id == "print":
+                    findings.append(
+                        src.finding(
+                            RULE_ID,
+                            node,
+                            f"print() inside jit function {fn.name!r} forces "
+                            "a host sync; use jax.debug.print",
+                        )
+                    )
+                if not isinstance(func, ast.Attribute):
+                    continue
+                if func.attr in SYNC_ATTRS:
+                    findings.append(
+                        src.finding(
+                            RULE_ID,
+                            node,
+                            f".{func.attr}() inside jit function {fn.name!r} "
+                            "forces a device sync; keep results on device",
+                        )
+                    )
+                root = func.value
+                while isinstance(root, ast.Attribute):
+                    root = root.value
+                if isinstance(root, ast.Name) and root.id in np_aliases:
+                    findings.append(
+                        src.finding(
+                            RULE_ID,
+                            node,
+                            f"host numpy call {root.id}.{func.attr} inside "
+                            f"jit function {fn.name!r} materialises traced "
+                            "values at trace time; use jnp",
+                        )
+                    )
+    return findings

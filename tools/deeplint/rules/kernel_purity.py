@@ -1,0 +1,356 @@
+"""Rule ``kernel-purity``: Pallas kernel bodies must be trace-pure.
+
+For every function passed as the kernel argument to ``pl.pallas_call`` /
+``pallas_call``:
+
+* no ``global``/``nonlocal`` — a kernel must not touch interpreter state;
+* no host-numpy calls (any name the module binds to ``numpy``) — refs are
+  device memory, host numpy silently materialises them;
+* no ``print``/``.item()``/``.block_until_ready()`` — host syncs inside a
+  traced body;
+* no ``if``/``while``/ternary on a *traced* value (anything derived from
+  the kernel's ref parameters) — Python control flow runs at trace time,
+  so branching on data either crashes (``ConcretizationTypeError``) or
+  bakes in one branch; use ``jnp.where``/``lax.cond``;
+* no closure over reassigned enclosing variables or mutable-literal
+  bindings (lists/dicts/sets built in the enclosing scope) — the closure
+  is captured at trace time, and later mutation desynchronises compiled
+  code from Python state.
+
+Free variables bound once in the enclosing function to call results
+(e.g. a static plan tuple) are allowed: staging static structure into a
+kernel factory is the supported pattern.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Set
+
+from tools.deeplint.engine import Finding, Project, SourceModule, module_import_map
+
+RULE_ID = "kernel-purity"
+SUMMARY = "pallas kernel body is not trace-pure (host state/sync/branching)"
+
+HOST_SYNC_ATTRS = {"item", "block_until_ready", "tolist"}
+MUTABLE_LITERALS = (
+    ast.List,
+    ast.Dict,
+    ast.Set,
+    ast.ListComp,
+    ast.DictComp,
+    ast.SetComp,
+)
+
+
+def _numpy_aliases(src: SourceModule) -> Set[str]:
+    return {
+        local
+        for local, target in module_import_map(src).items()
+        if target == "numpy" or target.startswith("numpy.")
+    }
+
+
+def _kernel_defs(src: SourceModule) -> List[ast.FunctionDef]:
+    """FunctionDefs passed (by name or lambda) to a pallas_call."""
+    # Name -> def for every function in the module (any nesting level).
+    defs: Dict[str, List[ast.FunctionDef]] = {}
+    for node in ast.walk(src.tree):
+        if isinstance(node, ast.FunctionDef):
+            defs.setdefault(node.name, []).append(node)
+
+    kernels: List[ast.FunctionDef] = []
+    seen: Set[int] = set()
+    for node in ast.walk(src.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        func = node.func
+        name = func.attr if isinstance(func, ast.Attribute) else (
+            func.id if isinstance(func, ast.Name) else None
+        )
+        if name != "pallas_call" or not node.args:
+            continue
+        kernel_arg = node.args[0]
+        if isinstance(kernel_arg, ast.Name):
+            for d in defs.get(kernel_arg.id, []):
+                if id(d) not in seen:
+                    seen.add(id(d))
+                    kernels.append(d)
+    return kernels
+
+
+def _assigned_names(node: ast.AST) -> Set[str]:
+    out: Set[str] = set()
+    for t in ast.walk(node):
+        if isinstance(t, ast.Name) and isinstance(t.ctx, ast.Store):
+            out.add(t.id)
+    return out
+
+
+def _local_bindings(fn: ast.FunctionDef) -> Set[str]:
+    """Names bound inside a function (params, assignments, loops, withs)."""
+    names: Set[str] = {a.arg for a in fn.args.args}
+    names.update(a.arg for a in fn.args.posonlyargs)
+    names.update(a.arg for a in fn.args.kwonlyargs)
+    if fn.args.vararg:
+        names.add(fn.args.vararg.arg)
+    if fn.args.kwarg:
+        names.add(fn.args.kwarg.arg)
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Store):
+            names.add(node.id)
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) and node is not fn:
+            names.add(node.name)
+    return names
+
+
+def _enclosing_chain(
+    src: SourceModule, kernel: ast.FunctionDef
+) -> List[ast.FunctionDef]:
+    """Functions lexically enclosing the kernel def, innermost first."""
+    chain: List[ast.FunctionDef] = []
+
+    def descend(node: ast.AST, stack: List[ast.FunctionDef]) -> bool:
+        for child in ast.iter_child_nodes(node):
+            if child is kernel:
+                chain.extend(reversed(stack))
+                return True
+            if isinstance(child, ast.FunctionDef):
+                if descend(child, stack + [child]):
+                    return True
+            else:
+                if descend(child, stack):
+                    return True
+        return False
+
+    descend(src.tree, [])
+    return chain
+
+
+def _binding_count(fn: ast.FunctionDef, name: str, kernel: ast.FunctionDef) -> int:
+    """How many times ``name`` is bound in ``fn`` (outside the kernel)."""
+    count = 0
+    params = {a.arg for a in fn.args.args} | {a.arg for a in fn.args.kwonlyargs}
+    if name in params:
+        count += 1
+    for node in ast.walk(fn):
+        if node is kernel or _contains(kernel, node):
+            continue
+        if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Store):
+            if node.id == name:
+                count += 1
+    return count
+
+
+def _contains(container: ast.AST, node: ast.AST) -> bool:
+    return any(n is node for n in ast.walk(container)) and container is not node
+
+
+def _binding_values(fn: ast.FunctionDef, name: str) -> List[ast.expr]:
+    values: List[ast.expr] = []
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign) and node.value is not None:
+            for t in node.targets:
+                if isinstance(t, ast.Name) and t.id == name:
+                    values.append(node.value)
+    return values
+
+
+def _check_kernel(
+    src: SourceModule,
+    kernel: ast.FunctionDef,
+    np_aliases: Set[str],
+    module_globals: Set[str],
+) -> Iterable[Finding]:
+    findings: List[Finding] = []
+    locals_ = _local_bindings(kernel)
+
+    # -- statement-level checks + taint tracking (in source order) -------
+    tainted: Set[str] = {a.arg for a in kernel.args.args}
+
+    def expr_tainted(expr: ast.expr) -> bool:
+        for n in ast.walk(expr):
+            if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Load):
+                if n.id in tainted:
+                    return True
+        return False
+
+    def walk_stmts(body: List[ast.stmt]) -> None:
+        for stmt in body:
+            if isinstance(stmt, (ast.Global, ast.Nonlocal)):
+                findings.append(
+                    src.finding(
+                        RULE_ID,
+                        stmt,
+                        f"kernel {kernel.name!r} uses "
+                        f"{'global' if isinstance(stmt, ast.Global) else 'nonlocal'}"
+                        " — kernels must not mutate interpreter state",
+                    )
+                )
+            elif isinstance(stmt, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+                value = getattr(stmt, "value", None)
+                if value is not None and expr_tainted(value):
+                    targets = (
+                        stmt.targets
+                        if isinstance(stmt, ast.Assign)
+                        else [stmt.target]
+                    )
+                    for t in targets:
+                        tainted.update(_assigned_names(t))
+            elif isinstance(stmt, (ast.If, ast.While)):
+                if expr_tainted(stmt.test):
+                    findings.append(
+                        src.finding(
+                            RULE_ID,
+                            stmt,
+                            f"kernel {kernel.name!r} branches on a traced "
+                            "value at trace time; use jnp.where/lax.cond",
+                        )
+                    )
+                walk_stmts(stmt.body)
+                walk_stmts(stmt.orelse)
+            elif isinstance(stmt, (ast.For,)):
+                if expr_tainted(stmt.iter):
+                    findings.append(
+                        src.finding(
+                            RULE_ID,
+                            stmt,
+                            f"kernel {kernel.name!r} iterates over a traced "
+                            "value at trace time; use lax.fori_loop",
+                        )
+                    )
+                tainted.update(_assigned_names(stmt.target))
+                walk_stmts(stmt.body)
+                walk_stmts(stmt.orelse)
+            elif isinstance(stmt, (ast.With,)):
+                walk_stmts(stmt.body)
+            elif isinstance(stmt, ast.Try):
+                walk_stmts(stmt.body)
+                for h in stmt.handlers:
+                    walk_stmts(h.body)
+                walk_stmts(stmt.orelse)
+                walk_stmts(stmt.finalbody)
+
+    walk_stmts(kernel.body)
+
+    # -- expression-level checks ----------------------------------------
+    for node in ast.walk(kernel):
+        if isinstance(node, ast.IfExp) and expr_tainted(node.test):
+            findings.append(
+                src.finding(
+                    RULE_ID,
+                    node,
+                    f"kernel {kernel.name!r} uses a ternary on a traced "
+                    "value at trace time; use jnp.where",
+                )
+            )
+        if isinstance(node, ast.Call):
+            func = node.func
+            if isinstance(func, ast.Name) and func.id == "print":
+                findings.append(
+                    src.finding(
+                        RULE_ID, node,
+                        f"kernel {kernel.name!r} calls print() — host sync "
+                        "inside a traced body (use pl.debug_print)",
+                    )
+                )
+            if isinstance(func, ast.Attribute):
+                if func.attr in HOST_SYNC_ATTRS:
+                    findings.append(
+                        src.finding(
+                            RULE_ID, node,
+                            f"kernel {kernel.name!r} calls .{func.attr}() — "
+                            "host/device sync inside a traced body",
+                        )
+                    )
+                root = func.value
+                while isinstance(root, ast.Attribute):
+                    root = root.value
+                if isinstance(root, ast.Name) and root.id in np_aliases:
+                    findings.append(
+                        src.finding(
+                            RULE_ID, node,
+                            f"kernel {kernel.name!r} calls host numpy "
+                            f"({root.id}.{func.attr}) on device refs; use jnp",
+                        )
+                    )
+
+    # -- closure checks --------------------------------------------------
+    import builtins
+
+    free: Set[str] = set()
+    for node in ast.walk(kernel):
+        if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Load):
+            if node.id not in locals_ and not hasattr(builtins, node.id):
+                free.add(node.id)
+
+    chain = _enclosing_chain(src, kernel)
+    for name in sorted(free):
+        binder: Optional[ast.FunctionDef] = None
+        for enclosing in chain:
+            bound = _local_bindings(enclosing)
+            if name in bound:
+                binder = enclosing
+                break
+        if binder is None:
+            # Module-level name: imports/defs/constants are fine; only a
+            # mutable-literal module global is a capture hazard.
+            if name in module_globals:
+                findings.append(
+                    src.finding(
+                        RULE_ID,
+                        kernel,
+                        f"kernel {kernel.name!r} closes over mutable module "
+                        f"global {name!r}; pass it in as a static argument",
+                    )
+                )
+            continue
+        if _binding_count(binder, name, kernel) > 1:
+            findings.append(
+                src.finding(
+                    RULE_ID,
+                    kernel,
+                    f"kernel {kernel.name!r} closes over {name!r}, which is "
+                    f"reassigned in enclosing {binder.name!r}; closures are "
+                    "captured at trace time",
+                )
+            )
+        else:
+            for value in _binding_values(binder, name):
+                if isinstance(value, MUTABLE_LITERALS):
+                    findings.append(
+                        src.finding(
+                            RULE_ID,
+                            kernel,
+                            f"kernel {kernel.name!r} closes over mutable "
+                            f"container {name!r} built in enclosing "
+                            f"{binder.name!r}; freeze it (tuple) first",
+                        )
+                    )
+    return findings
+
+
+def _module_mutable_globals(src: SourceModule) -> Set[str]:
+    out: Set[str] = set()
+    for node in src.tree.body:
+        if isinstance(node, ast.Assign):
+            if isinstance(node.value, MUTABLE_LITERALS):
+                for t in node.targets:
+                    if isinstance(t, ast.Name):
+                        out.add(t.id)
+    return out
+
+
+def check(project: Project) -> Iterable[Finding]:
+    findings: List[Finding] = []
+    for src in project.modules:
+        kernels = _kernel_defs(src)
+        if not kernels:
+            continue
+        np_aliases = _numpy_aliases(src)
+        module_globals = _module_mutable_globals(src)
+        for kernel in kernels:
+            findings.extend(
+                _check_kernel(src, kernel, np_aliases, module_globals)
+            )
+    return findings

@@ -1,0 +1,246 @@
+"""Rule ``lock-discipline``: guarded attributes mutate only under their lock.
+
+An attribute initialised with a ``# guarded-by: <lock>`` comment may only
+be mutated inside a lexical ``with self.<lock>:`` block (any method of the
+class or its subclasses — guard declarations are inherited).  "Mutated"
+covers assignment, augmented assignment, item stores (``self.d[k] = v``),
+``del``, and calls of known mutating container methods
+(``append``/``add``/``pop``/``update``/``clear``/...).
+
+Escapes:
+
+* ``__init__``/``__post_init__`` are construction-time and exempt.
+* A helper that is only ever called with the lock held is annotated
+  ``# holds-lock: <lock>`` on its ``def`` line and its whole body counts
+  as locked.
+* Nested functions (thread-pool closures!) do **not** inherit the
+  enclosing ``with``: the closure runs later on another thread, which is
+  exactly the bug class this rule exists for.
+
+Reads are deliberately unchecked — benign racy reads (double-checked
+locking fast paths) are a documented idiom here.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from tools.deeplint.engine import ClassInfo, Finding, GUARDED_BY_RE, Project
+
+RULE_ID = "lock-discipline"
+SUMMARY = "guarded-by attribute mutated outside its declared lock"
+
+CONSTRUCTORS = {"__init__", "__post_init__", "__new__"}
+MUTATORS = {
+    "append",
+    "appendleft",
+    "add",
+    "clear",
+    "discard",
+    "extend",
+    "insert",
+    "move_to_end",
+    "pop",
+    "popleft",
+    "popitem",
+    "remove",
+    "setdefault",
+    "update",
+}
+
+
+def _self_attr(node: ast.AST) -> Optional[str]:
+    """``self.X`` -> ``X`` (else None)."""
+    if (
+        isinstance(node, ast.Attribute)
+        and isinstance(node.value, ast.Name)
+        and node.value.id == "self"
+    ):
+        return node.attr
+    return None
+
+
+def _root_self_attr(node: ast.AST) -> Optional[str]:
+    """Strip subscripts: ``self.X[k][j]`` -> ``X``."""
+    while isinstance(node, ast.Subscript):
+        node = node.value
+    return _self_attr(node)
+
+
+def _guard_decls(info: ClassInfo) -> Dict[str, str]:
+    """Attr -> lock name for ``# guarded-by:`` comments in one class."""
+    guards: Dict[str, str] = {}
+    src = info.source
+    for node in ast.walk(info.node):
+        targets: List[ast.expr] = []
+        if isinstance(node, ast.Assign):
+            targets = list(node.targets)
+        elif isinstance(node, (ast.AnnAssign, ast.AugAssign)):
+            targets = [node.target]
+        else:
+            continue
+        m = GUARDED_BY_RE.search(src.line_comment(node.lineno))
+        if not m:
+            continue
+        for t in targets:
+            attr = _self_attr(t)
+            if attr is None and isinstance(t, ast.Name):
+                attr = t.id  # class-body declaration
+            if attr:
+                guards[attr] = m.group(1)
+    return guards
+
+
+def _class_guards(project: Project, qualname: str) -> Dict[str, str]:
+    guards: Dict[str, str] = {}
+    for ancestor in project.ancestors(qualname):
+        info = project.classes.get(ancestor)
+        if info is not None:
+            guards.update(_guard_decls(info))
+    guards.update(_guard_decls(project.classes[qualname]))
+    return guards
+
+
+def _header_exprs(stmt: ast.stmt) -> List[ast.expr]:
+    """Expressions evaluated at this statement's own lock level.
+
+    For compound statements only the header is scanned here — the bodies
+    are walked recursively by :class:`_MethodWalker` so the held-lock set
+    stays correct.
+    """
+    if isinstance(stmt, (ast.If, ast.While)):
+        return [stmt.test]
+    if isinstance(stmt, (ast.For, ast.AsyncFor)):
+        return [stmt.iter]
+    if isinstance(stmt, (ast.With, ast.AsyncWith)):
+        return [item.context_expr for item in stmt.items]
+    if isinstance(stmt, ast.Try):
+        return []
+    if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+        return []
+    # Simple statement: scan the whole thing.
+    return [stmt]  # type: ignore[list-item]
+
+
+def _mutations(stmt: ast.stmt) -> Iterable[Tuple[ast.AST, str, str]]:
+    """Yield (node, attr, verb) for guarded-candidate mutations in a stmt.
+
+    Only inspects the statement itself (and compound-statement headers),
+    not nested statements — the walker recurses explicitly so it can
+    track ``with`` scopes.
+    """
+    if isinstance(stmt, ast.Assign):
+        for t in stmt.targets:
+            attr = _root_self_attr(t)
+            if attr:
+                yield t, attr, "assigned"
+    elif isinstance(stmt, ast.AugAssign):
+        attr = _root_self_attr(stmt.target)
+        if attr:
+            yield stmt.target, attr, "assigned"
+    elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+        attr = _root_self_attr(stmt.target)
+        if attr:
+            yield stmt.target, attr, "assigned"
+    elif isinstance(stmt, ast.Delete):
+        for t in stmt.targets:
+            attr = _root_self_attr(t)
+            if attr:
+                yield t, attr, "deleted"
+    # Mutating method calls can appear in expression statements or inside
+    # any value expression evaluated at this statement's lock level.
+    for expr in _header_exprs(stmt):
+        for node in ast.walk(expr):
+            if isinstance(node, ast.Lambda):
+                continue
+            if isinstance(node, ast.Call) and isinstance(node.func, ast.Attribute):
+                if node.func.attr in MUTATORS:
+                    attr = _root_self_attr(node.func.value)
+                    if attr:
+                        yield node, attr, f"mutated via .{node.func.attr}()"
+
+
+def _with_locks(node: ast.stmt) -> Set[str]:
+    """Lock attr names acquired by ``with self.<name>[, ...]:``."""
+    out: Set[str] = set()
+    for item in node.items:
+        attr = _self_attr(item.context_expr)
+        if attr:
+            out.add(attr)
+    return out
+
+
+class _MethodWalker:
+    def __init__(
+        self,
+        src,
+        guards: Dict[str, str],
+        findings: List[Finding],
+        class_name: str,
+    ) -> None:
+        self.src = src
+        self.guards = guards
+        self.findings = findings
+        self.class_name = class_name
+
+    def walk_body(self, body: List[ast.stmt], held: Set[str]) -> None:
+        for stmt in body:
+            self.walk_stmt(stmt, held)
+
+    def walk_stmt(self, stmt: ast.stmt, held: Set[str]) -> None:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            # A nested def is a closure that may run on another thread:
+            # it does NOT inherit the enclosing with-block.
+            inner: Set[str] = set()
+            marker = self.src.holds_lock(stmt)
+            if marker:
+                inner.add(marker)
+            self.walk_body(stmt.body, inner)
+            return
+        for node, attr, verb in _mutations(stmt):
+            lock = self.guards.get(attr)
+            if lock is None or lock in held:
+                continue
+            self.findings.append(
+                self.src.finding(
+                    RULE_ID,
+                    node,
+                    f"{self.class_name}.{attr} is guarded-by "
+                    f"{lock} but {verb} outside 'with self.{lock}:'",
+                )
+            )
+        if isinstance(stmt, (ast.With, ast.AsyncWith)):
+            self.walk_body(stmt.body, held | _with_locks(stmt))
+        elif isinstance(stmt, (ast.If, ast.While)):
+            self.walk_body(stmt.body, held)
+            self.walk_body(stmt.orelse, held)
+        elif isinstance(stmt, (ast.For, ast.AsyncFor)):
+            self.walk_body(stmt.body, held)
+            self.walk_body(stmt.orelse, held)
+        elif isinstance(stmt, ast.Try):
+            self.walk_body(stmt.body, held)
+            for handler in stmt.handlers:
+                self.walk_body(handler.body, held)
+            self.walk_body(stmt.orelse, held)
+            self.walk_body(stmt.finalbody, held)
+
+
+def check(project: Project) -> Iterable[Finding]:
+    findings: List[Finding] = []
+    for qualname, info in sorted(project.classes.items()):
+        guards = _class_guards(project, qualname)
+        if not guards:
+            continue
+        for item in info.node.body:
+            if not isinstance(item, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            if item.name in CONSTRUCTORS:
+                continue
+            held: Set[str] = set()
+            marker = info.source.holds_lock(item)
+            if marker:
+                held.add(marker)
+            walker = _MethodWalker(info.source, guards, findings, info.node.name)
+            walker.walk_body(item.body, held)
+    return findings

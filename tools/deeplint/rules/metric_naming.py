@@ -1,0 +1,90 @@
+"""Rule ``metric-naming``: ``deepmap_*`` metric names and bounded labels.
+
+Two checks over every ``.counter(...)`` / ``.gauge(...)`` /
+``.histogram(...)`` call with a literal name:
+
+* Naming: names match ``deepmap_[a-z0-9_]+``; counters end ``_total``;
+  histograms end in a unit suffix (``_seconds``/``_rows``/``_keys``/
+  ``_bytes``); gauges must *not* end ``_total``.
+* Bounded labels: label keyword values passed to ``.inc``/``.dec``/
+  ``.observe``/``.set`` must not be f-strings, ``%``-formatting, or
+  ``.format(...)`` calls — interpolated labels have unbounded
+  cardinality and blow up the registry under real traffic.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from typing import Iterable, List
+
+from tools.deeplint.engine import Finding, Project
+
+RULE_ID = "metric-naming"
+SUMMARY = "deepmap_* metric naming and bounded-cardinality label lint"
+
+NAME_RE = re.compile(r"^deepmap_[a-z][a-z0-9_]*$")
+HISTOGRAM_SUFFIXES = ("_seconds", "_rows", "_keys", "_bytes")
+FAMILY_METHODS = {"counter", "gauge", "histogram"}
+RECORD_METHODS = {"inc", "dec", "observe", "set"}
+
+
+def _check_name(kind: str, name: str) -> str | None:
+    if not NAME_RE.match(name):
+        return (
+            f"metric name {name!r} must match deepmap_[a-z0-9_]+ "
+            "(project namespace prefix)"
+        )
+    if kind == "counter" and not name.endswith("_total"):
+        return f"counter {name!r} must end with _total"
+    if kind == "histogram" and not name.endswith(HISTOGRAM_SUFFIXES):
+        return (
+            f"histogram {name!r} must end with a unit suffix "
+            f"({'/'.join(HISTOGRAM_SUFFIXES)})"
+        )
+    if kind == "gauge" and name.endswith("_total"):
+        return f"gauge {name!r} must not end with _total (reserved for counters)"
+    return None
+
+
+def _unbounded(value: ast.expr) -> bool:
+    if isinstance(value, ast.JoinedStr):
+        return any(isinstance(v, ast.FormattedValue) for v in value.values)
+    if isinstance(value, ast.BinOp) and isinstance(value.op, ast.Mod):
+        return isinstance(value.left, (ast.Constant, ast.JoinedStr))
+    if (
+        isinstance(value, ast.Call)
+        and isinstance(value.func, ast.Attribute)
+        and value.func.attr == "format"
+    ):
+        return True
+    return False
+
+
+def check(project: Project) -> Iterable[Finding]:
+    findings: List[Finding] = []
+    for src in project.modules:
+        for node in ast.walk(src.tree):
+            if not (isinstance(node, ast.Call) and isinstance(node.func, ast.Attribute)):
+                continue
+            attr = node.func.attr
+            if attr in FAMILY_METHODS:
+                if node.args and isinstance(node.args[0], ast.Constant) and isinstance(
+                    node.args[0].value, str
+                ):
+                    msg = _check_name(attr, node.args[0].value)
+                    if msg:
+                        findings.append(src.finding(RULE_ID, node, msg))
+            elif attr in RECORD_METHODS:
+                for kw in node.keywords:
+                    if kw.arg is not None and _unbounded(kw.value):
+                        findings.append(
+                            src.finding(
+                                RULE_ID,
+                                node,
+                                f"label {kw.arg!r} is interpolated at the call "
+                                "site (unbounded cardinality); pass a bounded "
+                                "categorical value instead",
+                            )
+                        )
+    return findings

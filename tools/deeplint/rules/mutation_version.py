@@ -1,0 +1,295 @@
+"""Rule ``mutation-version``: store mutations must bump the version fence.
+
+The ``PlanCache`` is invalidated by ``MappingStore.mutation_version()``;
+a store method that writes store state without (transitively) calling
+``self._note_mutation()`` silently serves stale cached plan artifacts —
+a losslessness bug, not a perf bug.
+
+For every class that (transitively) subclasses ``MappingStore``:
+
+* the mutation verbs ``insert``/``delete``/``update``, when defined and
+  non-abstract, must reach ``_note_mutation`` through the intra-class
+  call graph (inherited helpers included), **or** delegate: a class that
+  overrides ``mutation_version`` and forwards the same verbs to member
+  stores (``self.members[i].insert(...)``) owns its own fence;
+* any other method that writes store state — an item-store into a
+  ``self.<attr>`` container or a mutating container-method call
+  (``self.aux.update(...)``, ``self.vexist.set(...)``,
+  ``self.codec.extend(...)``) — must itself reach ``_note_mutation``,
+  or be a *covered helper*: every intra-class caller reaches the bump
+  (e.g. ``_encode_rows`` is only called from ``insert``/``update``).
+
+Constructors, classmethods/staticmethods, and abstract bodies are exempt.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from tools.deeplint.engine import ClassInfo, Finding, Project
+
+RULE_ID = "mutation-version"
+SUMMARY = "store state written without reaching _note_mutation"
+
+ROOT_CLASS = "MappingStore"
+BUMP = "_note_mutation"
+VERBS = ("insert", "delete", "update")
+EXEMPT = {"__init__", "__post_init__", BUMP, "close"}
+STATE_MUTATORS = {
+    "add",
+    "append",
+    "appendleft",
+    "clear",
+    "discard",
+    "extend",
+    "insert",
+    "move_to_end",
+    "pop",
+    "popitem",
+    "remove",
+    "set",
+    "setdefault",
+    "update",
+    "delete",
+}
+
+
+def _root_qualnames(project: Project) -> Set[str]:
+    return {
+        qual
+        for qual, info in project.classes.items()
+        if info.node.name == ROOT_CLASS
+    }
+
+
+def _mro_chain(project: Project, qualname: str) -> List[ClassInfo]:
+    """Approximate MRO: the class, then bases depth-first in order."""
+    out: List[ClassInfo] = []
+    seen: Set[str] = set()
+
+    def visit(qual: str) -> None:
+        if qual in seen:
+            return
+        seen.add(qual)
+        info = project.classes.get(qual)
+        if info is None:
+            return
+        out.append(info)
+        for base in info.base_names:
+            resolved = project.resolve_base(info, base)
+            if resolved:
+                visit(resolved)
+
+    visit(qualname)
+    return out
+
+
+def _methods(info: ClassInfo) -> Dict[str, ast.FunctionDef]:
+    out: Dict[str, ast.FunctionDef] = {}
+    for item in info.node.body:
+        if isinstance(item, ast.FunctionDef):
+            out[item.name] = item
+    return out
+
+
+def _is_abstract(fn: ast.FunctionDef) -> bool:
+    for dec in fn.decorator_list:
+        name = dec.attr if isinstance(dec, ast.Attribute) else (
+            dec.id if isinstance(dec, ast.Name) else ""
+        )
+        if name in {"abstractmethod", "classmethod", "staticmethod", "property"}:
+            return True
+    body = [s for s in fn.body if not isinstance(s, ast.Pass)]
+    body = [
+        s
+        for s in body
+        if not (isinstance(s, ast.Expr) and isinstance(s.value, ast.Constant))
+    ]
+    if not body:
+        return True
+    return all(isinstance(s, ast.Raise) for s in body)
+
+
+def _self_calls(fn: ast.FunctionDef) -> Set[str]:
+    """Names of ``self.<m>(...)`` and ``super().<m>(...)`` calls."""
+    out: Set[str] = set()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call) and isinstance(node.func, ast.Attribute):
+            value = node.func.value
+            if isinstance(value, ast.Name) and value.id == "self":
+                out.add(node.func.attr)
+            elif (
+                isinstance(value, ast.Call)
+                and isinstance(value.func, ast.Name)
+                and value.func.id == "super"
+            ):
+                out.add(node.func.attr)
+    return out
+
+
+def _state_writes(fn: ast.FunctionDef) -> List[Tuple[ast.AST, str]]:
+    """(node, description) for store-state writes in a method body."""
+    writes: List[Tuple[ast.AST, str]] = []
+    for node in ast.walk(fn):
+        if isinstance(node, (ast.FunctionDef, ast.Lambda)) and node is not fn:
+            continue
+        if isinstance(node, (ast.Assign, ast.AugAssign)):
+            targets = node.targets if isinstance(node, ast.Assign) else [node.target]
+            for t in targets:
+                if isinstance(t, ast.Subscript):
+                    root = t.value
+                    while isinstance(root, ast.Subscript):
+                        root = root.value
+                    if (
+                        isinstance(root, ast.Attribute)
+                        and isinstance(root.value, ast.Name)
+                        and root.value.id == "self"
+                    ):
+                        writes.append((t, f"item-store into self.{root.attr}"))
+        elif isinstance(node, ast.Call) and isinstance(node.func, ast.Attribute):
+            if node.func.attr not in STATE_MUTATORS:
+                continue
+            recv = node.func.value
+            # self.<m>() is a plain self-call, not a container write.
+            if isinstance(recv, ast.Name):
+                continue
+            root = recv
+            while isinstance(root, (ast.Subscript, ast.Attribute)):
+                root = (
+                    root.value
+                    if isinstance(root, ast.Subscript)
+                    else root.value
+                )
+            if isinstance(root, ast.Name) and root.id == "self":
+                # Describe as self.<first-attr>.<mutator>()
+                first = recv
+                while isinstance(first, ast.Subscript):
+                    first = first.value
+                while (
+                    isinstance(first, ast.Attribute)
+                    and not (
+                        isinstance(first.value, ast.Name)
+                        and first.value.id == "self"
+                    )
+                ):
+                    first = first.value
+                    while isinstance(first, ast.Subscript):
+                        first = first.value
+                label = (
+                    f"self.{first.attr}...{node.func.attr}()"
+                    if isinstance(first, ast.Attribute)
+                    else f"self....{node.func.attr}()"
+                )
+                writes.append((node, label))
+    return writes
+
+
+def _delegates_verb(fn: ast.FunctionDef) -> bool:
+    """True if the method calls insert/delete/update on a non-self recv."""
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call) and isinstance(node.func, ast.Attribute):
+            if node.func.attr not in VERBS:
+                continue
+            recv = node.func.value
+            if isinstance(recv, ast.Name) and recv.id == "self":
+                continue
+            if (
+                isinstance(recv, ast.Call)
+                and isinstance(recv.func, ast.Name)
+                and recv.func.id == "super"
+            ):
+                continue
+            return True
+    return False
+
+
+class _ClassModel:
+    def __init__(self, project: Project, qualname: str) -> None:
+        self.project = project
+        self.qualname = qualname
+        self.chain = _mro_chain(project, qualname)
+        self.method_table: Dict[str, Tuple[ClassInfo, ast.FunctionDef]] = {}
+        for info in self.chain:
+            for name, fn in _methods(info).items():
+                self.method_table.setdefault(name, (info, fn))
+        self.overrides_version = any(
+            "mutation_version" in _methods(info)
+            for info in self.chain
+            if info.node.name != ROOT_CLASS
+        )
+        self._reaches: Dict[str, bool] = {}
+
+    def reaches_bump(self, method: str, stack: Optional[Set[str]] = None) -> bool:
+        if method == BUMP:
+            return True
+        if method in self._reaches:
+            return self._reaches[method]
+        stack = stack or set()
+        if method in stack:
+            return False
+        entry = self.method_table.get(method)
+        if entry is None:
+            return False
+        _, fn = entry
+        result = any(
+            self.reaches_bump(callee, stack | {method})
+            for callee in _self_calls(fn)
+        )
+        self._reaches[method] = result
+        return result
+
+    def callers_of(self, method: str) -> List[str]:
+        out = []
+        for name, (_, fn) in self.method_table.items():
+            if name != method and method in _self_calls(fn):
+                out.append(name)
+        return out
+
+
+def check(project: Project) -> Iterable[Finding]:
+    findings: List[Finding] = []
+    roots = _root_qualnames(project)
+    if not roots:
+        return findings
+    checked: Set[Tuple[str, str]] = set()  # (qualname of defining class, method)
+    for qual, info in sorted(project.classes.items()):
+        if info.node.name == ROOT_CLASS:
+            continue
+        if not (project.ancestors(qual) & roots):
+            continue
+        model = _ClassModel(project, qual)
+        for name, fn in sorted(_methods(info).items()):
+            if (qual, name) in checked:
+                continue
+            checked.add((qual, name))
+            if name in EXEMPT or name.startswith("__"):
+                continue
+            if _is_abstract(fn):
+                continue
+            is_verb = name in VERBS
+            writes = _state_writes(fn)
+            if not is_verb and not writes:
+                continue
+            if model.reaches_bump(name):
+                continue
+            if model.overrides_version and _delegates_verb(fn):
+                continue  # federation-style delegation owns its own fence
+            if not is_verb:
+                callers = model.callers_of(name)
+                if callers and all(model.reaches_bump(c) for c in callers):
+                    continue  # covered helper: every caller bumps
+            what = (
+                f"mutation verb {name!r}"
+                if is_verb
+                else f"state-writing method {name!r} ({writes[0][1]})"
+            )
+            findings.append(
+                info.source.finding(
+                    RULE_ID,
+                    fn,
+                    f"{info.node.name}: {what} never reaches "
+                    f"{BUMP}; stale PlanCache entries will be served",
+                )
+            )
+    return findings

@@ -1,0 +1,37 @@
+"""Rule ``stripped-assert``: bare ``assert`` guarding runtime behaviour.
+
+``python -O`` strips ``assert`` statements, so an assert that validates
+user input, shapes, or invariants silently becomes a no-op in optimised
+deployments.  Raise ``ValueError``/``RuntimeError`` instead.  Test code is
+out of scope (the engine is pointed at ``src/repro``); a deliberate
+debug-only assert can carry ``# deeplint: ignore[stripped-assert]``.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List
+
+from tools.deeplint.engine import Finding, Project
+
+RULE_ID = "stripped-assert"
+SUMMARY = (
+    "bare assert in runtime code is stripped under python -O; "
+    "raise an explicit error instead"
+)
+
+
+def check(project: Project) -> Iterable[Finding]:
+    findings: List[Finding] = []
+    for src in project.modules:
+        for node in ast.walk(src.tree):
+            if isinstance(node, ast.Assert):
+                findings.append(
+                    src.finding(
+                        RULE_ID,
+                        node,
+                        "bare assert is stripped under python -O; raise "
+                        "ValueError/RuntimeError for runtime guards",
+                    )
+                )
+    return findings
