@@ -102,6 +102,113 @@ def run(
     return rows
 
 
+DEGRADED_CFG = DeepMappingConfig(
+    shared=(96,),
+    private=(16,),
+    train=TrainConfig(epochs=25, batch_size=2048),
+)
+
+
+def run_degraded(
+    dataset: str = "tpcds_customer_demographics",
+    num_shards: int = 4,
+    batch: int = 2000,
+    batches: int = 40,
+    smoke: bool = False,
+) -> dict:
+    """Degraded-mode serving: 1 of K shards failing every visit.
+
+    Reports QPS / p50 / p99 and the served-key fraction for three
+    regimes over the same key batches:
+
+    * ``healthy``           — no faults (the reference ceiling)
+    * ``degraded_partial``  — dead shard, ``on_error='partial')``:
+                              retry + evidence, healthy K-1 keep serving
+    * ``fail_stop``         — dead shard, ``on_error='raise'``: every
+                              batch dies with :class:`OwnerFailure`
+                              (the pre-fault-tolerance behaviour)
+
+    The gap between the last two is the payoff: fail-stop serves 0% of
+    keys at roughly the same per-batch cost the retries pay anyway.
+    """
+    from repro.fault import FaultPlan, FaultSpec, OwnerFailure, RetryPolicy
+
+    if smoke:
+        batch, batches = 1000, 12
+    table = C.DATASETS[dataset]()
+    pool = MemoryPool(1 << 30)
+    store = ShardedDeepMappingStore.build(
+        table, DEGRADED_CFG,
+        ClusterConfig(num_shards=num_shards, policy="range"), pool=pool,
+    )
+    store.retry = RetryPolicy(
+        max_attempts=2, backoff_s=0.0005, max_backoff_s=0.002
+    )
+    rng = np.random.default_rng(0)
+    key_batches = [
+        rng.choice(table.keys, size=min(batch, table.num_rows), replace=False)
+        for _ in range(batches)
+    ]
+    store.lookup(key_batches[0])  # warm jit
+
+    def measure(mode: str) -> dict:
+        lat, served, unresolved, retries, failed = [], 0, 0, 0, 0
+        for keys in key_batches:
+            t0 = time.perf_counter()
+            try:
+                res = (
+                    store.query().where_keys(keys).on_error(mode).execute()
+                )
+                served += int(res.exists.sum())
+                unresolved += int(res.explain.keys_unresolved)
+                retries += int(res.explain.retries)
+            except OwnerFailure:
+                failed += 1
+            lat.append(time.perf_counter() - t0)
+        total_keys = sum(k.size for k in key_batches)
+        lat_us = np.asarray(lat) * 1e6
+        return {
+            "qps": total_keys / float(np.sum(lat)),
+            "p50_us": float(np.percentile(lat_us, 50)),
+            "p99_us": float(np.percentile(lat_us, 99)),
+            "served_frac": served / total_keys,
+            "keys_unresolved": unresolved,
+            "retries": retries,
+            "batches_failed": failed,
+        }
+
+    dead_shard = FaultSpec(
+        site="shard_collect", owner=f"shard:{num_shards - 1}", kind="raise"
+    )
+    healthy = measure("raise")
+    with FaultPlan([dead_shard]).activate() as plan:
+        degraded = measure("partial")
+        degraded["faults_injected"] = plan.fired
+    with FaultPlan([dead_shard]).activate() as plan:
+        fail_stop = measure("raise")
+        fail_stop["faults_injected"] = plan.fired
+
+    label = f"degraded[{dataset}]/K={num_shards}"
+    for name, row in (
+        ("healthy", healthy), ("partial", degraded), ("fail_stop", fail_stop)
+    ):
+        C.emit(
+            f"{label}/{name}", row["p50_us"],
+            f"qps={row['qps']:.0f};p99_us={row['p99_us']:.0f};"
+            f"served={row['served_frac']:.3f}",
+        )
+    return {
+        "dataset": dataset,
+        "shards": num_shards,
+        "dead_shards": 1,
+        "batch": batch,
+        "batches": batches,
+        "healthy": healthy,
+        "degraded_partial": degraded,
+        "fail_stop": fail_stop,
+    }
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--dataset", default="tpcds_customer_demographics",
@@ -109,7 +216,12 @@ def main() -> None:
     ap.add_argument("--shards", type=int, nargs="*", default=(1, 2, 4, 8))
     ap.add_argument("--policies", nargs="*", default=("range", "hash"))
     ap.add_argument("--batch", type=int, default=10_000)
+    ap.add_argument("--degraded", action="store_true",
+                    help="run only the degraded-mode (1 dead shard) section")
     args = ap.parse_args()
+    if args.degraded:
+        run_degraded(dataset=args.dataset, batch=args.batch)
+        return
     run(
         dataset=args.dataset,
         shard_counts=tuple(args.shards),

@@ -92,6 +92,7 @@ def main() -> None:
             dict(
                 bench_query.run_streaming(smoke=args.smoke),
                 adaptive=bench_query.run_adaptive(smoke=args.smoke),
+                degraded=bench_shards.run_degraded(smoke=args.smoke),
             )
         ),
         # lazy: bench_tokens hard-imports zstandard (optional elsewhere);

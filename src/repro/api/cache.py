@@ -64,9 +64,9 @@ def plan_fingerprint(plan) -> Optional[Tuple]:
     carry their keys explicitly, so only their projection/predicate
     artifacts are shared), the projection, the predicate conjunction,
     and the pushdown switch (post-hoc plans extend the decode set by
-    predicate columns).  Execution knobs (morsel size, fan-out) are
-    deliberately excluded: adaptive morsel resizing must not bust the
-    cache.
+    predicate columns).  Execution knobs (morsel size, fan-out, error
+    mode) are deliberately excluded: adaptive morsel resizing or
+    switching to ``on_error='partial')`` must not bust the cache.
     """
     if not plan.cache:
         return None

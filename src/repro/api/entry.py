@@ -33,7 +33,7 @@ SUPPORTED_FORMATS = (
 )
 
 
-def open(path: str, pool=None):  # noqa: A001 — deliberate builtin shadow inside repro.*
+def open(path: str, pool=None, on_corrupt: str = "raise"):  # noqa: A001 — deliberate builtin shadow inside repro.*
     """Load any saved store, sniffing the on-disk format.
 
     Format sniffing, in order: a **directory** holding
@@ -45,13 +45,33 @@ def open(path: str, pool=None):  # noqa: A001 — deliberate builtin shadow insi
     exist) that lists the supported formats.  ``pool`` is the shared
     :class:`~repro.storage.MemoryPool` to charge decompressed
     partitions to (one is created per store when omitted).
+
+    Every format verifies per-artifact crc32 checksums recorded at save
+    time — a corrupt or truncated artifact raises
+    :class:`~repro.fault.errors.IntegrityError` rather than decoding
+    into wrong values.  ``on_corrupt`` applies to sharded clusters:
+    ``'quarantine'`` degrades a cluster with corrupt shard directories
+    to its healthy shards (see
+    :func:`~repro.cluster.sharded_store.load_sharded_store`) instead of
+    refusing outright.  A ``<path>.tmp`` with no ``<path>`` means a
+    save died before its atomic rename — that raises a ``ValueError``
+    naming the interruption, because there is nothing verified to load.
     """
     supported = "; ".join(SUPPORTED_FORMATS)
+    if not os.path.exists(path) and os.path.exists(path + ".tmp"):
+        raise ValueError(
+            f"interrupted save detected: {path + '.tmp'!r} exists but "
+            f"{path!r} does not — the save never completed its atomic "
+            f"rename, and the tmp contents are unverifiable; rebuild the "
+            f"store or restore from a backup/replica"
+        )
     if os.path.isdir(path):
         if os.path.exists(os.path.join(path, "manifest.msgpack")):
             from repro.cluster.sharded_store import ShardedDeepMappingStore
 
-            return ShardedDeepMappingStore.load(path, pool=pool)
+            return ShardedDeepMappingStore.load(
+                path, pool=pool, on_corrupt=on_corrupt
+            )
         if os.path.exists(os.path.join(path, "meta.msgpack")):
             from repro.core.hybrid import DeepMappingStore
 
@@ -63,9 +83,12 @@ def open(path: str, pool=None):  # noqa: A001 — deliberate builtin shadow insi
         )
     if os.path.isfile(path):
         from repro.baselines.partitioned import load_baseline_store
+        from repro.fault.errors import IntegrityError
 
         try:
             return load_baseline_store(path, pool=pool)
+        except IntegrityError:
+            raise  # corruption, not an unrecognized format — say so
         except ValueError as err:
             raise ValueError(
                 f"{err}; supported formats: {supported}"

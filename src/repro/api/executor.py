@@ -62,6 +62,7 @@ from repro.api.plan import (
     evaluate_predicates,
 )
 from repro.api.protocol import _check_index_agreement
+from repro.fault.errors import OwnerError, OwnerFailure
 
 #: Morsels in flight ahead of the host half, per plan.  Matches the
 #: store-level DISPATCH_WINDOW so device residency stays bounded.
@@ -106,6 +107,17 @@ def next_morsel_rows(rows: int, operator_seconds: float) -> int:
     if operator_seconds > ADAPT_HIGH_S and rows > ADAPT_MIN:
         return max(rows // 2, ADAPT_MIN)
     return rows
+
+
+class _FailedDispatch:
+    """Handle slot for a morsel whose dispatch raised under
+    ``on_error='partial'`` — collect time turns it into a degraded
+    morsel instead of killing the plan."""
+
+    __slots__ = ("exc",)
+
+    def __init__(self, exc: BaseException):
+        self.exc = exc
 
 
 @dataclasses.dataclass
@@ -244,13 +256,21 @@ class PlanStream:
         target = self._morsel_rows
         chunk = self.keys[self._cursor : self._cursor + target]
         t_dispatch = time.perf_counter()
-        handle = self.store._dispatch_lookup(
-            chunk,
-            self.columns,
-            fanout=self.fanout,
-            predicates=self.preds,
-            keys_exist=self.keys_exist,
-        )
+        try:
+            handle = self.store._dispatch_lookup(
+                chunk,
+                self.columns,
+                fanout=self.fanout,
+                predicates=self.preds,
+                keys_exist=self.keys_exist,
+                on_error=self.plan.on_error,
+            )
+        except Exception as exc:
+            # Multi-owner stores capture dispatch failures themselves;
+            # this is the single-owner (or totally-failed) case.
+            if self.plan.on_error != "partial":
+                raise
+            handle = _FailedDispatch(exc)
         rows = int(chunk.shape[0])
         self._inflight.append(
             (self._dispatched, self._cursor, rows, target, handle, t_dispatch)
@@ -280,7 +300,18 @@ class PlanStream:
             raise RuntimeError("collect_one with no morsel in flight")
         seq, start, rows, target, handle, t_dispatch = self._inflight.pop(0)
         t_collect0 = time.perf_counter()
-        values, exists, match, stats = self.store._collect_lookup(handle)
+        if isinstance(handle, _FailedDispatch):
+            values, exists, match, stats = self._degraded_morsel(rows, handle.exc)
+        else:
+            try:
+                values, exists, match, stats = self.store._collect_lookup(handle)
+            except Exception as exc:
+                if self.plan.on_error != "partial":
+                    raise
+                # OwnerFailure here means even partial degradation was
+                # impossible inside the store (every owner failed);
+                # degrade the whole morsel at this level instead.
+                values, exists, match, stats = self._degraded_morsel(rows, exc)
         t_collect1 = time.perf_counter()
         self._emit_morsel(seq, rows, stats, t_dispatch, t_collect0, t_collect1)
         if not self.fixed and rows == target:
@@ -300,6 +331,48 @@ class PlanStream:
             match=match,
             stats=stats,
         )
+
+    # ---------------------------------------------------------- degraded
+    def _degraded_morsel(self, rows: int, exc: BaseException):
+        """Synthesize a fully-degraded morsel under ``on_error=
+        'partial')``: every row unreachable (``exists=False``, typed
+        placeholder values), with the failure carried as
+        ``owners_failed``/``keys_unresolved`` evidence.
+
+        Column dtypes come from a zero-length probe lookup — the
+        protocol guarantees typed empty columns for empty batches
+        without touching inference.  If even the probe fails there is
+        nothing typed to return: the original failure propagates."""
+        try:
+            probe = self.store._collect_lookup(self.store._dispatch_lookup(
+                np.zeros(0, dtype=np.int64), self.columns,
+                fanout=False, predicates=self.preds,
+            ))
+        except Exception:
+            raise exc
+        values = {
+            c: np.zeros(rows, dtype=arr.dtype) for c, arr in probe[0].items()
+        }
+        exists = np.zeros(rows, dtype=bool)
+        match = np.zeros(rows, dtype=bool) if self.preds else None
+        if isinstance(exc, OwnerFailure):
+            described = tuple(o.describe() for o in exc.owners)
+        else:
+            described = (OwnerError(
+                owner="store", site=getattr(exc, "site", "dispatch"),
+                attempts=1, error_type=type(exc).__name__, message=str(exc),
+            ).describe(),)
+        stats = ExplainStats(
+            plan=("degraded",),
+            owners_failed=described,
+            keys_unresolved=rows,
+        )
+        obs.registry().counter(
+            "deepmap_fault_degraded_morsels_total",
+            "Morsels answered with every row unreachable "
+            "(on_error='partial' full-owner failure).",
+        ).inc(kind=self.plan.kind)
+        return values, exists, match, stats
 
     # --------------------------------------------------------- telemetry
     def _emit_morsel(
@@ -385,9 +458,13 @@ def _finalize_morsel(plan: QueryPlan, morsel: MorselResult) -> MorselResult:
     ``execute_plan``, ``execute_plans``) sees the same match contract
     — never silently unfiltered rows.  Also enforces the range/scan
     existence-index invariant for every morsel consumer, streaming
-    included."""
+    included — relaxed by exactly the rows a degraded morsel reports
+    unreachable (``keys_unresolved``): a partial result may miss keys
+    whose owner is down, but never MORE than the evidence admits."""
     if plan.kind != "point":
-        _check_index_agreement(f"{plan.kind} plan", morsel.exists)
+        missing = int(morsel.exists.shape[0] - morsel.exists.sum())
+        if missing > int(morsel.stats.keys_unresolved):
+            _check_index_agreement(f"{plan.kind} plan", morsel.exists)
     if plan.predicates and not plan.pushdown:
         morsel.match = evaluate_predicates(
             plan.predicates, morsel.values, morsel.exists, morsel.stats
@@ -485,6 +562,11 @@ class _Gatherer:
             + self.inner_plan
             + ((f"filter[{','.join(stats.predicates)}]",) if filtered else ())
             + (f"gather[{stats.morsels} morsels]",)
+            + (
+                (f"degraded[{len(stats.owners_failed)} owners]",)
+                if stats.owners_failed
+                else ()
+            )
         )
         stats.total_s = time.perf_counter() - self.t0
         n = stats.num_keys

@@ -45,12 +45,29 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro import obs
 from repro.api.plan import ExplainStats
 from repro.api.protocol import MappingStore
-from repro.api.routing import LazyFanoutPool, gather_parts, group_runs
+from repro.api.routing import (
+    LazyFanoutPool,
+    gather_parts,
+    gather_parts_partial,
+    group_runs,
+)
+from repro.fault import injection as fault_injection
+from repro.fault.errors import OwnerFailure
+from repro.fault.health import HealthPolicy, HealthTracker
+from repro.fault.retry import DEFAULT_POLICY, RetryPolicy, call_guarded
 
 MODES = ("partition", "replicate")
 POLICIES = ("primary", "round_robin")
+
+#: Replicate-mode behaviour for mutations while a replica is
+#: quarantined: ``"reject"`` raises (no member mutates, replicas never
+#: diverge); ``"queue"`` buffers the op and applies it — in order —
+#: once every replica is healthy again (:meth:`FederatedStore
+#: .flush_mutations`, also attempted before the next mutation).
+MUTATION_POLICIES = ("reject", "queue")
 
 
 class _PendingFederatedLookup:
@@ -58,16 +75,20 @@ class _PendingFederatedLookup:
 
     __slots__ = (
         "keys", "parts", "route_s", "predicates", "member_ids", "use_fanout",
+        "columns", "keys_exist", "on_error",
     )
 
     def __init__(self, keys, parts, route_s, predicates, member_ids,
-                 use_fanout):
+                 use_fanout, columns, keys_exist, on_error):
         self.keys = keys
-        self.parts = parts          # [(member, positions, handle), ...]
+        self.parts = parts          # [(member, positions, (ok, payload))]
         self.route_s = route_s
         self.predicates = predicates
         self.member_ids = member_ids
         self.use_fanout = use_fanout
+        self.columns = columns
+        self.keys_exist = keys_exist
+        self.on_error = on_error
 
 
 class FederatedStore(MappingStore):
@@ -79,6 +100,9 @@ class FederatedStore(MappingStore):
         mode: str = "partition",
         boundaries: Optional[Sequence[int]] = None,
         policy: str = "primary",
+        retry: RetryPolicy = DEFAULT_POLICY,
+        health: HealthPolicy = HealthPolicy(),
+        mutation_policy: str = "reject",
     ):
         if not members:
             raise ValueError("federation needs at least one member store")
@@ -86,6 +110,11 @@ class FederatedStore(MappingStore):
             raise ValueError(f"unknown federation mode {mode!r}; have {MODES}")
         if policy not in POLICIES:
             raise ValueError(f"unknown routing policy {policy!r}; have {POLICIES}")
+        if mutation_policy not in MUTATION_POLICIES:
+            raise ValueError(
+                f"unknown mutation policy {mutation_policy!r}; "
+                f"have {MUTATION_POLICIES}"
+            )
         cols = tuple(members[0].columns)
         for i, m in enumerate(members[1:], 1):
             # set equality: different store types canonicalize column
@@ -113,8 +142,17 @@ class FederatedStore(MappingStore):
         self.members = list(members)
         self.mode = mode
         self.policy = policy
+        self.retry = retry
+        self.mutation_policy = mutation_policy
+        self.health = HealthTracker(health)
         self._columns = cols
+        self._names = tuple(f"member:{i}" for i in range(len(members)))
         self._rr = 0  # round-robin cursor (replicate mode)
+        # Replicate-mode mutations deferred under mutation_policy=
+        # "queue" while a replica is quarantined: [(op, keys, columns)].
+        # Mutations are caller-serialized (same contract as the
+        # members'), so no lock.
+        self._mutation_queue: List[Tuple[str, np.ndarray, Optional[Dict]]] = []
         # Morsel-parallel collect: member host halves gather on the
         # same lazy fan-out pool machinery the sharded store uses.
         self._fanout = LazyFanoutPool(None, "fed-collect")
@@ -145,64 +183,153 @@ class FederatedStore(MappingStore):
         return self._columns
 
     def _dispatch_lookup(self, keys, columns=None, fanout=None, predicates=(),
-                         keys_exist=False):
+                         keys_exist=False, on_error="raise"):
         """Per-member scatter: every touched member's device work is
         enqueued before any host half runs, so a federated morsel
         overlaps member inference the same way the sharded store
         overlaps shard inference.  ``keys_exist`` forwards to every
         member (partition-mode range/scan keys come from the members'
-        own existence indexes)."""
+        own existence indexes).
+
+        In replicate mode the serving replica is the health tracker's
+        :meth:`~repro.fault.health.HealthTracker.pick` over the routing
+        policy's preference — quarantined replicas are routed around
+        (and periodically probed back in).  A member whose dispatch
+        raises is captured in its handle slot; collect retries and, in
+        replicate mode, fails over to the next replica."""
         keys = np.asarray(keys, dtype=np.int64)
         t0 = time.perf_counter()
         if self.mode == "replicate" or keys.shape[0] == 0:
-            mid = self._pick_replica() if self.mode == "replicate" else 0
+            mid = 0
+            if self.mode == "replicate":
+                mid = self.health.pick(self._names, self._pick_replica())
             groups = [(mid, np.arange(keys.shape[0], dtype=np.int64))]
         else:
             groups = self._scatter(keys)
         route_s = time.perf_counter() - t0
-        parts = [
-            (
-                m,
-                pos,
-                self.members[m]._dispatch_lookup(
+        parts = []
+        for m, pos in groups:
+            try:
+                parts.append((m, pos, (True, self.members[m]._dispatch_lookup(
                     keys[pos], columns, fanout=fanout, predicates=predicates,
                     keys_exist=keys_exist,
-                ),
-            )
-            for m, pos in groups
-        ]
+                ))))
+            except Exception as exc:  # captured; retried at collect
+                parts.append((m, pos, (False, exc)))
         use_fanout = (fanout is None or bool(fanout)) and len(parts) > 1
         return _PendingFederatedLookup(
             keys, parts, route_s, tuple(predicates), [m for m, _ in groups],
-            use_fanout,
+            use_fanout, columns, keys_exist, on_error,
         )
+
+    def _visit_member(self, pending: _PendingFederatedLookup, part):
+        """Collect one member's part under the guarded retry loop ->
+        ``(member, positions, values, exists, match, stats, outcome)``
+        (result fields are ``None`` on terminal failure).  Health is
+        recorded on every outcome, so replicate-mode routing learns."""
+        m, pos, (ok, payload) = part
+        owner = self._names[m]
+
+        def attempt(i: int):
+            fault_injection.maybe_fail("member_collect", owner)
+            if i == 0 and ok:
+                handle = payload
+            elif i == 0 and payload is not None:
+                raise payload  # dispatch-time failure = try 0
+            else:
+                # Retry, or a handle-less part (replicate failover):
+                # dispatch fresh.
+                handle = self.members[m]._dispatch_lookup(
+                    pending.keys[pos], pending.columns,
+                    predicates=pending.predicates,
+                    keys_exist=pending.keys_exist,
+                )
+            return self.members[m]._collect_lookup(handle)
+
+        outcome = call_guarded(
+            attempt, owner=owner, site="member_collect", policy=self.retry
+        )
+        if not outcome.ok:
+            self.health.record_failure(owner)
+            return m, pos, None, None, None, None, outcome
+        self.health.record_success(owner, outcome.latency_s)
+        values, exists, match, stats = outcome.value
+        # Namespace member-local shard ids before the union: two
+        # sharded members both have a "shard 0", and deduping them
+        # would under-report the federation's true fan-out.
+        stats.shard_ids = tuple(f"m{m}:{s}" for s in stats.shard_ids)
+        return m, pos, values, exists, match, stats, outcome
+
+    def _failover_replicate(self, pending: _PendingFederatedLookup, first):
+        """Replicate-mode failover: the picked replica failed
+        terminally — walk the remaining replicas in ring order (fresh
+        dispatch each) until one serves.  Returns the winning visit
+        plus the accumulated failures; raises :class:`OwnerFailure`
+        when every replica is down (there is no partial result to
+        degrade to — replicas hold the SAME relation)."""
+        m0, pos = first[0], first[1]
+        errors = [first[6].error]
+        retries = first[6].retries
+        for step in range(1, len(self.members)):
+            mid = (m0 + step) % len(self.members)
+            obs.registry().counter(
+                "deepmap_fault_failovers_total",
+                "Replicate-mode lookups failed over to another replica.",
+            ).inc(member=mid)
+            # Handle-less part: _visit_member's attempt 0 dispatches
+            # fresh on the failover member.
+            visit = self._visit_member(pending, (mid, pos, (False, None)))
+            retries += visit[6].retries
+            if visit[6].ok:
+                return visit, tuple(errors), retries
+            errors.append(visit[6].error)
+        raise OwnerFailure(tuple(errors))
 
     def _collect_lookup(self, pending: _PendingFederatedLookup):
         """Morsel-parallel gather: collect the members' host halves —
         on the lazy fan-out pool when more than one member answered
         (``Query.fanout(False)`` restores serial visits) — and permute
-        results back to request order."""
+        results back to request order.
+
+        Failure semantics: each member's collect runs under the
+        bounded-retry guard.  Replicate mode fails over to the next
+        replica until one serves (lookups keep succeeding with any
+        healthy replica); partition mode degrades around failed members
+        under ``on_error='partial'`` or raises :class:`OwnerFailure`."""
         n = pending.keys.shape[0]
         agg = ExplainStats(route_s=pending.route_s, async_fanout=pending.use_fanout)
 
-        def visit(part):
-            m, pos, handle = part
-            values, exists, match, stats = self.members[m]._collect_lookup(handle)
-            # Namespace member-local shard ids before the union: two
-            # sharded members both have a "shard 0", and deduping them
-            # would under-report the federation's true fan-out.
-            stats.shard_ids = tuple(f"m{m}:{s}" for s in stats.shard_ids)
-            return pos, values, exists, match, stats
-
         if pending.use_fanout:
             visited = self._fanout.map(
-                visit, pending.parts, owners=len(self.members)
+                lambda p: self._visit_member(pending, p),
+                pending.parts, owners=len(self.members),
             )
         else:
-            visited = [visit(p) for p in pending.parts]
+            visited = [self._visit_member(pending, p) for p in pending.parts]
+
+        failover_errors: Tuple = ()
+        if self.mode == "replicate" and not visited[0][6].ok:
+            winner, failover_errors, retries = self._failover_replicate(
+                pending, visited[0]
+            )
+            visited = [winner]
+            agg.retries += retries - winner[6].retries
+
+        healthy = [v for v in visited if v[6].ok]
+        errors = tuple(v[6].error for v in visited if not v[6].ok)
+        if errors and (pending.on_error != "partial" or not healthy):
+            raise OwnerFailure(errors)
+        agg.retries += sum(v[6].retries for v in visited)
+        agg.owners_failed = tuple(
+            e.describe() for e in tuple(failover_errors) + errors
+        )
+        agg.keys_unresolved = sum(
+            int(v[1].shape[0]) for v in visited if not v[6].ok
+        )
+
         collected = []
         member_plan: Tuple[str, ...] = ()
-        for pos, values, exists, match, stats in visited:
+        for _, pos, values, exists, match, stats, _ in healthy:
             agg.merge_timings(stats)
             if not member_plan:
                 member_plan = stats.plan
@@ -216,13 +343,25 @@ class FederatedStore(MappingStore):
                 "federation member returned match=None for a predicated "
                 "lookup; its _collect_lookup violates the hook contract"
             )
-        if len(collected) == 1 and np.array_equal(
+        if len(collected) == 1 and not errors and np.array_equal(
             collected[0][0], np.arange(n, dtype=np.int64)
         ):
             # One member answered the whole batch in request order
             # (always true in replicate mode): the inverse permutation
             # is the identity — skip the per-column fancy-index copies.
             _, values, exists, match = collected[0]
+        elif errors:
+            values, exists, _covered = gather_parts_partial(
+                n, ((p, v, e) for p, v, e, _ in collected)
+            )
+            match = None
+            if pending.predicates:
+                # Failed members' positions stay False: unreachable
+                # rows are excluded from filtered results (the
+                # keys_unresolved evidence keeps the count).
+                match = np.zeros(n, dtype=bool)
+                for pos, _, _, m in collected:
+                    match[pos] = m
         else:
             values, exists = gather_parts(
                 n, ((p, v, e) for p, v, e, _ in collected)
@@ -251,7 +390,11 @@ class FederatedStore(MappingStore):
 
     def _range_keys(self, lo: int, hi: Optional[int]) -> np.ndarray:
         if self.mode == "replicate":
-            return self.members[0]._range_keys(lo, hi)
+            # Health-aware: a quarantined primary must not source the
+            # range/scan key stream either.
+            return self.members[self.health.pick(self._names, 0)]._range_keys(
+                lo, hi
+            )
         parts = []
         for i, m in enumerate(self.members):
             m_lo = lo if i == 0 else max(lo, int(self.boundaries[i - 1]))
@@ -275,13 +418,71 @@ class FederatedStore(MappingStore):
     # (same discipline as the sharded facade): a rejected batch must
     # leave the federation untouched, not half-mutated up to the
     # member that raised.
-    def insert(self, keys: np.ndarray, columns: Dict[str, np.ndarray]) -> None:
-        """Insert new rows — routed to owners (partition) or applied to
-        every member (replicate); validated before any member mutates."""
-        keys = np.asarray(keys, dtype=np.int64)
-        if keys.size and np.unique(keys).size != keys.size:
-            raise ValueError("duplicate keys in insert batch")
-        if self.mode == "replicate":
+    # Queue bookkeeping is NOT store state: a queued op changes no
+    # query result until flush applies it through the members' public
+    # mutators, which bump their mutation versions themselves.
+    # deeplint: ignore[mutation-version]
+    def _mutation_gate(self, op: str, keys, columns) -> bool:
+        """Replicate-mode admission for one mutation.  Returns True to
+        proceed now.  With a quarantined replica: ``"reject"`` raises
+        (nothing mutates, replicas cannot diverge); ``"queue"`` buffers
+        the op — applied in order by :meth:`flush_mutations` — and
+        returns False.  Queued ops are flushed here first, so a
+        mutation can never overtake an earlier queued one."""
+        if self.mode != "replicate":
+            return True
+        self.flush_mutations()
+        quarantined = [
+            n for n in self._names if self.health.is_quarantined(n)
+        ]
+        if not quarantined:
+            return True
+        reg = obs.registry()
+        if self.mutation_policy == "reject":
+            reg.counter(
+                "deepmap_fault_mutations_rejected_total",
+                "Replicate-mode mutations rejected while a replica is "
+                "quarantined (mutation_policy='reject').",
+            ).inc(op=op)
+            raise RuntimeError(
+                f"{op} rejected: replica(s) {quarantined} are quarantined "
+                f"and would diverge; retry after recovery or construct the "
+                f"federation with mutation_policy='queue'"
+            )
+        reg.counter(
+            "deepmap_fault_mutations_queued_total",
+            "Replicate-mode mutations queued while a replica is "
+            "quarantined (mutation_policy='queue').",
+        ).inc(op=op)
+        self._mutation_queue.append((op, keys, columns))
+        return False
+
+    # Pops happen only after _apply_replicate already mutated through
+    # the members' public ops (which bump their versions) — the queue
+    # itself is never consulted by a lookup.
+    # deeplint: ignore[mutation-version]
+    def flush_mutations(self) -> int:
+        """Apply queued replicate-mode mutations in arrival order, once
+        every replica is healthy again; returns the number applied (0
+        while any replica stays quarantined).  A queued op that fails
+        validation at flush time raises, leaving it and its successors
+        queued — order is never reordered around a failure."""
+        if not self._mutation_queue:
+            return 0
+        if any(self.health.is_quarantined(n) for n in self._names):
+            return 0
+        applied = 0
+        while self._mutation_queue:
+            op, keys, columns = self._mutation_queue[0]
+            self._apply_replicate(op, keys, columns)
+            self._mutation_queue.pop(0)
+            applied += 1
+        return applied
+
+    def _apply_replicate(self, op: str, keys, columns) -> None:
+        """Validate-all-then-mutate one replicate-mode op (the pre-gate
+        mutation body, shared by the direct path and the flush)."""
+        if op == "insert":
             # every member validates (a drifted replica must reject the
             # batch BEFORE any member mutates, or replicas diverge more)
             for m in self.members:
@@ -289,6 +490,25 @@ class FederatedStore(MappingStore):
                     raise ValueError("insert of existing key; use update()")
             for m in self.members:
                 m.insert(keys, columns)
+        elif op == "delete":
+            for m in self.members:
+                m.delete(keys)
+        else:
+            for m in self.members:
+                if not m.lookup(keys, columns=())[1].all():
+                    raise ValueError("update of non-existing key; use insert()")
+            for m in self.members:
+                m.update(keys, columns)
+
+    def insert(self, keys: np.ndarray, columns: Dict[str, np.ndarray]) -> None:
+        """Insert new rows — routed to owners (partition) or applied to
+        every member (replicate); validated before any member mutates."""
+        keys = np.asarray(keys, dtype=np.int64)
+        if keys.size and np.unique(keys).size != keys.size:
+            raise ValueError("duplicate keys in insert batch")
+        if self.mode == "replicate":
+            if self._mutation_gate("insert", keys, columns):
+                self._apply_replicate("insert", keys, columns)
             return
         batches = self._scatter(keys)
         for mid, pos in batches:
@@ -303,8 +523,8 @@ class FederatedStore(MappingStore):
         """Idempotent like the members — no validation needed."""
         keys = np.asarray(keys, dtype=np.int64)
         if self.mode == "replicate":
-            for m in self.members:
-                m.delete(keys)
+            if self._mutation_gate("delete", keys, None):
+                self._apply_replicate("delete", keys, None)
             return
         for mid, pos in self._scatter(keys):
             self.members[mid].delete(keys[pos])
@@ -314,11 +534,8 @@ class FederatedStore(MappingStore):
         member before mutating any, like :meth:`insert`)."""
         keys = np.asarray(keys, dtype=np.int64)
         if self.mode == "replicate":
-            for m in self.members:
-                if not m.lookup(keys, columns=())[1].all():
-                    raise ValueError("update of non-existing key; use insert()")
-            for m in self.members:
-                m.update(keys, columns)
+            if self._mutation_gate("update", keys, columns):
+                self._apply_replicate("update", keys, columns)
             return
         batches = self._scatter(keys)
         for mid, pos in batches:
@@ -351,6 +568,22 @@ class FederatedStore(MappingStore):
             for k, v in m.size_breakdown().items():
                 out[f"member{i}.{k}"] = v
         return out
+
+    # ----------------------------------------------------------- teardown
+    def close(self) -> None:
+        """Release the collect fan-out pool's threads (idempotent; the
+        federation stays usable — a later fan-out re-creates the pool).
+        Member stores are caller-owned and NOT closed here; close a
+        sharded member's own pool with ``member.close()``."""
+        self._fanout.close()
+
+    def __enter__(self) -> "FederatedStore":
+        """Context-manager entry; :meth:`close` runs on exit."""
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        """Close the fan-out pool on scope exit."""
+        self.close()
 
     # -------------------------------------------------------- persistence
     def save(self, path: str) -> None:

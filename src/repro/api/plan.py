@@ -44,6 +44,12 @@ PREDICATE_OPS = ("==", "!=", "<", "<=", ">", ">=", "in")
 #: one device chunk on the model-backed stores.
 DEFAULT_MORSEL = 1 << 16
 
+#: Valid ``QueryPlan.on_error`` modes: ``"raise"`` turns any terminal
+#: owner failure into :class:`~repro.fault.errors.OwnerFailure`;
+#: ``"partial"`` returns the healthy owners' rows with
+#: ``owners_failed``/``keys_unresolved`` evidence on the stats.
+ERROR_MODES = ("raise", "partial")
+
 
 @dataclasses.dataclass(frozen=True)
 class Predicate:
@@ -185,6 +191,7 @@ class QueryPlan:
     fanout: Optional[bool] = None
     morsel: Optional[int] = None
     cache: bool = True
+    on_error: str = "raise"
 
     def __post_init__(self) -> None:
         if self.kind not in PLAN_KINDS:
@@ -195,6 +202,10 @@ class QueryPlan:
             raise ValueError("range plan needs lo and hi")
         if self.morsel is not None and self.morsel < 1:
             raise ValueError("morsel size must be >= 1")
+        if self.on_error not in ERROR_MODES:
+            raise ValueError(
+                f"unknown on_error mode {self.on_error!r}; have {ERROR_MODES}"
+            )
 
     def source_stage(self) -> str:
         """Human-readable key-source stage name for explain output."""
@@ -274,6 +285,16 @@ class ExplainStats:
     partitions_pruned: int = 0
     plan_cache: str = ""
     morsel_sizes: Tuple[int, ...] = ()
+    #: Terminal owner failures this plan degraded around, as compact
+    #: ``OwnerError.describe()`` strings ("shard:2@shard_collect: ...").
+    #: Non-empty only for ``on_error='partial'`` results.
+    owners_failed: Tuple[str, ...] = ()
+    #: Retry attempts (beyond each first try) spent across owners.
+    retries: int = 0
+    #: Requested keys whose owner failed terminally — *unreachable*,
+    #: not absent: they report ``exists=False`` with placeholder values
+    #: but may well exist on the failed owner.
+    keys_unresolved: int = 0
     route_s: float = 0.0
     infer_s: float = 0.0
     exist_s: float = 0.0
@@ -300,6 +321,9 @@ class ExplainStats:
         self.rows_decoded += other.rows_decoded
         self.rows_matched += other.rows_matched
         self.partitions_pruned += other.partitions_pruned
+        self.retries += other.retries
+        self.keys_unresolved += other.keys_unresolved
+        self.owners_failed = _union(self.owners_failed, other.owners_failed)
         self.shard_ids = tuple(
             dict.fromkeys(self.shard_ids + other.shard_ids)
         )

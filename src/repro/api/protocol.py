@@ -193,7 +193,8 @@ class MappingStore(abc.ABC):
 
     # ------------------------------------------- async lookup pipeline hooks
     def _dispatch_lookup(
-        self, keys, columns=None, fanout=None, predicates=(), keys_exist=False
+        self, keys, columns=None, fanout=None, predicates=(), keys_exist=False,
+        on_error="raise",
     ):
         """Begin an async lookup; :meth:`_collect_lookup` finishes it.
 
@@ -208,7 +209,11 @@ class MappingStore(abc.ABC):
         ``keys_exist`` asserts every requested key exists (the executor
         sets it for range/scan plans, whose keys come from the
         existence index) — stores may exploit it to skip work (baseline
-        partition pruning) but must never rely on it for point plans."""
+        partition pruning) but must never rely on it for point plans.
+        ``on_error`` is the plan's failure mode (``"raise"``/
+        ``"partial"``); multi-owner stores degrade around failed owners
+        under ``"partial"``, single-owner stores ignore it (the
+        executor handles their partial fallback)."""
         return (keys, columns, fanout, tuple(predicates), keys_exist)
 
     def _collect_lookup(self, handle):

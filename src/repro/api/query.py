@@ -42,6 +42,7 @@ class Query:
         self._fanout: Optional[bool] = None
         self._morsel: Optional[int] = None
         self._cache: bool = True
+        self._on_error: str = "raise"
 
     # ------------------------------------------------------------ projection
     def select(self, *columns: str) -> "Query":
@@ -134,6 +135,18 @@ class Query:
         self._cache = bool(enabled)
         return self
 
+    def on_error(self, mode: str) -> "Query":
+        """Failure semantics when an owner (shard, federation member,
+        engine) fails terminally after retries.  ``"raise"`` (default)
+        raises :class:`~repro.fault.errors.OwnerFailure`; ``"partial"``
+        returns the healthy owners' rows byte-identical to a full run —
+        unreachable keys report ``exists=False`` — with the failures
+        recorded on ``explain`` (``owners_failed``, ``retries``,
+        ``keys_unresolved``) so absent and unreachable stay
+        distinguishable."""
+        self._on_error = str(mode)
+        return self
+
     def plan(self) -> QueryPlan:
         """Compile to the IR without executing."""
         if self._kind is None:
@@ -151,6 +164,7 @@ class Query:
             fanout=self._fanout,
             morsel=self._morsel,
             cache=self._cache,
+            on_error=self._on_error,
         )
 
     def execute(self) -> QueryResult:

@@ -56,7 +56,8 @@ class LazyFanoutPool:
     def map(self, fn, items, owners: Optional[int] = None) -> List:
         """``[fn(x) for x in items]`` on the pool (created on first
         use, sized by the configured cap or ``min(owners, cpus)``)."""
-        if self._pool is None:
+        pool = self._pool
+        if pool is None:
             with self._lock:
                 if self._pool is None:
                     workers = self._max_workers or min(
@@ -66,7 +67,28 @@ class LazyFanoutPool:
                         max_workers=max(1, workers),
                         thread_name_prefix=self._name,
                     )
-        return list(self._pool.map(fn, items))
+                pool = self._pool
+        return list(pool.map(fn, items))
+
+    def close(self) -> None:
+        """Shut down the worker threads (idempotent; in-flight work
+        finishes first).  Without this, pool threads live until
+        interpreter exit.  A later :meth:`map` lazily re-creates the
+        pool, so closing a store twice — or using it again after an
+        explicit close — stays safe."""
+        with self._lock:
+            pool = self._pool
+            self._pool = None
+        if pool is not None:
+            pool.shutdown(wait=True)
+
+    def __enter__(self) -> "LazyFanoutPool":
+        """Context-manager entry (no threads start here)."""
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        """Shut the pool down on scope exit."""
+        self.close()
 
 
 def group_runs(ids: np.ndarray) -> List[Tuple[int, np.ndarray]]:
@@ -104,3 +126,41 @@ def gather_parts(
         values[name] = np.concatenate([v[name] for _, v, _ in parts])[inv]
     exists[positions] = np.concatenate([e for _, _, e in parts])
     return values, exists
+
+
+def gather_parts_partial(
+    n: int,
+    parts: Iterable[Tuple[np.ndarray, Dict[str, np.ndarray], np.ndarray]],
+) -> Tuple[Dict[str, np.ndarray], np.ndarray, np.ndarray]:
+    """:func:`gather_parts` for a *partial* cover: some request
+    positions may have no owning part (their owner failed terminally).
+
+    Returns ``(values, exists, covered)`` where ``covered`` marks the
+    positions an owner actually answered for.  Uncovered rows carry a
+    placeholder value (a healthy row's bytes — never uninitialised
+    memory) and ``exists=False``; callers must report them as
+    *unreachable*, not *absent* (``ExplainStats.keys_unresolved``).
+
+    Requires at least one part: with zero healthy owners there are no
+    column dtypes to build placeholders from, and a fully-failed morsel
+    must surface as :class:`~repro.fault.errors.OwnerFailure` upstream.
+    """
+    parts = list(parts)
+    if not parts:
+        raise ValueError(
+            "gather_parts_partial needs >= 1 healthy part; a fully-failed "
+            "morsel must raise OwnerFailure instead of degrading"
+        )
+    exists = np.zeros(n, dtype=bool)
+    covered = np.zeros(n, dtype=bool)
+    positions = np.concatenate([p for p, _, _ in parts])
+    covered[positions] = True
+    # Uncovered rows map to concatenated index 0 — a real (healthy) row
+    # used purely as a typed placeholder, masked by exists=False.
+    inv = np.zeros(n, dtype=np.int64)
+    inv[positions] = np.arange(positions.size)
+    values: Dict[str, np.ndarray] = {}
+    for name in parts[0][1]:
+        values[name] = np.concatenate([v[name] for _, v, _ in parts])[inv]
+    exists[positions] = np.concatenate([e for _, _, e in parts])
+    return values, exists, covered

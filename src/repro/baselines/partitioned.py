@@ -42,9 +42,13 @@ from repro.api.plan import (
     evaluate_predicates,
 )
 from repro.api.protocol import MappingStore
+from repro.core.serialize import crc32, read_artifact, unpack_meta
 from repro.storage import MemoryPool
 
-BASELINE_FORMAT_VERSION = 1
+#: v2 wraps the state in a ``{"version", "kind", "crc32", "payload"}``
+#: envelope — the payload crc is verified on load; v1 flat files (state
+#: dict at top level, no checksum) still load, without verification.
+BASELINE_FORMAT_VERSION = 2
 
 
 
@@ -427,7 +431,11 @@ class PartitionedBaselineStore(MappingStore):
         raise NotImplementedError
 
     def save(self, path: str) -> None:
-        """One self-describing msgpack file (atomic ``os.replace``)."""
+        """One self-describing msgpack file (atomic ``os.replace``,
+        fsync before the swap).  v2 wraps the state in a
+        ``{"version", "kind", "crc32", "payload"}`` envelope — ``kind``
+        stays at top level so ``repro.open`` sniffs without unpacking
+        the payload, and the payload crc rejects bit flips at load."""
         ovl_keys = sorted(self._overlay)
         ovl_cols = {
             n: _array_to_state(np.asarray([self._overlay[k][n] for k in ovl_keys]))
@@ -447,18 +455,27 @@ class PartitionedBaselineStore(MappingStore):
             "deleted": sorted(self._deleted),
             "extra": self._extra_state(),
         }
+        payload = msgpack.packb(state)
+        envelope = msgpack.packb(
+            {
+                "version": BASELINE_FORMAT_VERSION,
+                "kind": self.kind,
+                "crc32": crc32(payload),
+                "payload": payload,
+            }
+        )
         tmp = path + ".tmp"
         with open(tmp, "wb") as f:
-            f.write(msgpack.packb(state))
+            f.write(envelope)
+            f.flush()
+            os.fsync(f.fileno())
         os.replace(tmp, path)
 
     @classmethod
     def load(
         cls, path: str, pool: Optional[MemoryPool] = None
     ) -> "PartitionedBaselineStore":
-        with open(path, "rb") as f:
-            state = msgpack.unpackb(f.read())
-        return cls.from_saved_state(state, pool=pool)
+        return cls.from_saved_state(_read_baseline_state(path), pool=pool)
 
     @classmethod
     def from_saved_state(
@@ -486,6 +503,20 @@ class PartitionedBaselineStore(MappingStore):
         return store
 
 
+def _read_baseline_state(path: str) -> Dict:
+    """Read + verify one baseline file: v2 crc32 envelope (payload crc
+    checked, :class:`IntegrityError` on mismatch) or v1 flat state.
+    Reads ride the ``artifact_read`` injection site like every other
+    persistence format."""
+    data = read_artifact(
+        os.path.dirname(path) or ".", os.path.basename(path), None
+    )
+    state = unpack_meta(data, path)
+    if not isinstance(state, dict):
+        raise ValueError(f"{path!r} is not a recognized baseline store file")
+    return state
+
+
 def load_baseline_store(
     path: str, pool: Optional[MemoryPool] = None
 ) -> PartitionedBaselineStore:
@@ -495,9 +526,8 @@ def load_baseline_store(
     from repro.baselines.hash_store import HashStore
 
     kinds = {ArrayStore.kind: ArrayStore, HashStore.kind: HashStore}
-    with open(path, "rb") as f:
-        state = msgpack.unpackb(f.read())
-    if not isinstance(state, dict) or state.get("kind") not in kinds:
+    state = _read_baseline_state(path)
+    if state.get("kind") not in kinds:
         raise ValueError(f"{path!r} is not a recognized baseline store file")
     return kinds[state["kind"]].from_saved_state(state, pool=pool)
 

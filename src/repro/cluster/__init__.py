@@ -14,6 +14,7 @@ from repro.cluster.partitioner import (  # noqa: F401
 from repro.cluster.router import ShardBatch, ShardRouter  # noqa: F401
 from repro.cluster.sharded_store import (  # noqa: F401
     ClusterConfig,
+    QuarantinedShard,
     ShardedDeepMappingStore,
     load_sharded_store,
     save_sharded_store,

@@ -15,7 +15,7 @@ from typing import Dict, Iterable, List, Tuple
 
 import numpy as np
 
-from repro.api.routing import gather_parts, group_runs
+from repro.api.routing import gather_parts, gather_parts_partial, group_runs
 from repro.cluster.partitioner import Partitioner
 
 
@@ -68,5 +68,18 @@ class ShardRouter:
         (see :func:`repro.api.routing.gather_parts` for the inverse-
         permutation discipline)."""
         return gather_parts(
+            n, ((b.positions, v, e) for b, v, e in parts)
+        )
+
+    @staticmethod
+    def gather_partial(
+        n: int, parts: Iterable[Tuple[ShardBatch, Dict[str, np.ndarray], np.ndarray]]
+    ) -> Tuple[Dict[str, np.ndarray], np.ndarray, np.ndarray]:
+        """Degraded-mode gather over the *healthy* shards only ->
+        ``(values, exists, covered)``; positions owned by a failed shard
+        report ``exists=False`` with typed placeholder values and
+        ``covered=False`` (see
+        :func:`repro.api.routing.gather_parts_partial`)."""
+        return gather_parts_partial(
             n, ((b.positions, v, e) for b, v, e in parts)
         )

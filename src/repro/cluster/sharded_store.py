@@ -35,10 +35,10 @@ import dataclasses
 import os
 import shutil
 import time
+import warnings
 from concurrent.futures import ThreadPoolExecutor
 from typing import Dict, List, Optional, Sequence, Tuple
 
-import msgpack
 import numpy as np
 
 from repro import obs
@@ -49,11 +49,26 @@ from repro.cluster.partitioner import Partitioner, make_partitioner
 from repro.cluster.router import ShardRouter
 from repro.core.hybrid import DeepMappingConfig, DeepMappingStore
 from repro.core.inference import EngineCache
-from repro.core.serialize import load_store, save_store
+from repro.core.serialize import (
+    clean_stale_tmp,
+    fsync_dir,
+    load_store,
+    pack_meta,
+    read_artifact,
+    save_store,
+    unpack_meta,
+)
 from repro.core.table import Table
+from repro.fault import injection as fault_injection
+from repro.fault.errors import IntegrityError, OwnerFailure
+from repro.fault.retry import DEFAULT_POLICY, RetryPolicy, call_guarded
 from repro.storage import MemoryPool
 
-MANIFEST_VERSION = 1
+#: v2 wraps the manifest in a crc32 envelope and records per-shard
+#: columns/rows so quarantined shards keep the facade's accounting
+#: coherent; v1 manifests still load (no verification, no quarantine
+#: metadata).
+MANIFEST_VERSION = 2
 
 
 @dataclasses.dataclass
@@ -64,11 +79,14 @@ class _PendingShardedLookup:
 
     keys: np.ndarray
     batches: list
-    handles: list          # parallel to batches
+    handles: list          # parallel to batches; (False, exc) on a
+                           # dispatch-time failure (retried at collect)
     route_s: float
     use_fanout: bool
     columns: Optional[Tuple[str, ...]]
     predicates: tuple = ()
+    keys_exist: bool = False
+    on_error: str = "raise"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -79,6 +97,107 @@ class ClusterConfig:
     policy: str = "range"          # "range" (planner-balanced) | "hash"
     seed: int = 0                  # hash-policy mixing seed
     max_workers: Optional[int] = None  # build/retrain thread pool size
+
+
+class _QuarantinedIndex:
+    """Existence-index shim for a quarantined shard: every consult
+    refuses loudly (scans/mutations must not silently skip the shard's
+    keys)."""
+
+    def __init__(self, owner: "QuarantinedShard"):
+        self._owner = owner
+
+    def keys_in_range(self, lo, hi):
+        raise self._owner.refusal()
+
+    def test(self, keys):
+        raise self._owner.refusal()
+
+
+class _QuarantinedAux:
+    """Aux-table shim: zero rows, so fleet accounting stays additive."""
+
+    num_rows = 0
+
+
+class _QuarantinedSpec:
+    """Spec shim carrying the column names recorded in the manifest."""
+
+    def __init__(self, tasks: Tuple[str, ...]):
+        self.tasks = tasks
+
+
+class QuarantinedShard:
+    """Placeholder for a shard whose on-disk artifacts failed checksum
+    verification at load (``load_sharded_store(..., on_corrupt=
+    'quarantine')``).
+
+    The cluster facade stays serviceable over the healthy K-1 shards:
+    point lookups routed here fail as a structured owner failure —
+    degradable via ``Query.on_error('partial')`` — while scans and
+    mutations touching this shard's key range raise
+    :class:`~repro.fault.errors.IntegrityError` loudly (a scan that
+    silently dropped a shard's rows would be a wrong answer, not a
+    degraded one).  Accounting (rows from the manifest, zero bytes)
+    keeps fleet totals coherent; re-saving a cluster holding one of
+    these refuses, so a corrupt shard can never be laundered back to
+    disk as healthy."""
+
+    def __init__(
+        self,
+        shard_id: int,
+        reason: str,
+        columns: Tuple[str, ...] = (),
+        num_rows: int = 0,
+    ):
+        self.shard_id = int(shard_id)
+        self.reason = str(reason)
+        self.spec = _QuarantinedSpec(tuple(columns))
+        self.num_rows = int(num_rows)
+        self.raw_bytes = 0
+        self.modified_bytes = 0
+        self.vexist = _QuarantinedIndex(self)
+        self.aux = _QuarantinedAux()
+
+    def refusal(self) -> IntegrityError:
+        return IntegrityError(
+            f"shard {self.shard_id} is quarantined (corrupt at load: "
+            f"{self.reason}); restore it from a replica or rebuild, or "
+            f"use Query.on_error('partial') for point lookups over the "
+            f"healthy shards"
+        )
+
+    # Protocol surface: every data path refuses with the same evidence.
+    def _dispatch_lookup(self, keys, columns=None, **kwargs):
+        raise self.refusal()
+
+    def _collect_lookup(self, pending):
+        raise self.refusal()
+
+    def insert(self, keys, columns):
+        raise self.refusal()
+
+    def delete(self, keys):
+        raise self.refusal()
+
+    def update(self, keys, columns):
+        raise self.refusal()
+
+    def retrain(self, verbose: bool = False):
+        raise self.refusal()
+
+    def materialize(self):
+        raise self.refusal()
+
+    # Accounting/bookkeeping surface the facade aggregates over.
+    def mutation_version(self) -> int:
+        return 0
+
+    def should_retrain(self) -> bool:
+        return False
+
+    def size_breakdown(self) -> Dict[str, int]:
+        return {}
 
 
 class ShardedDeepMappingStore(MappingStore):
@@ -97,6 +216,7 @@ class ShardedDeepMappingStore(MappingStore):
         shards: List[DeepMappingStore],
         cluster: ClusterConfig,
         pool: MemoryPool,
+        retry: RetryPolicy = DEFAULT_POLICY,
     ):
         if partitioner.num_shards != len(shards):
             raise ValueError(
@@ -108,6 +228,7 @@ class ShardedDeepMappingStore(MappingStore):
         self.shards = shards
         self.cluster = cluster
         self.pool = pool
+        self.retry = retry
         self._fanout = LazyFanoutPool(cluster.max_workers, "shard-lookup")
         # One engine cache for the fleet: shard engines share a single
         # EngineStats, so identical (architecture, bucket) signatures
@@ -115,7 +236,8 @@ class ShardedDeepMappingStore(MappingStore):
         # counter set.  Shards warm from build keep their weight caches.
         self.engines = EngineCache()
         for s in shards:
-            self.engines.adopt(s)
+            if not isinstance(s, QuarantinedShard):
+                self.engines.adopt(s)
 
     # ------------------------------------------------------------------ build
     @classmethod
@@ -170,7 +292,22 @@ class ShardedDeepMappingStore(MappingStore):
     # ---------------------------------------------------------------- lookup
     @property
     def columns(self) -> Tuple[str, ...]:
-        return self.shards[0].spec.tasks
+        return self._healthy_shard().spec.tasks
+
+    def _healthy_shard(self):
+        """First non-quarantined shard (delegation target for typed
+        zero-batch probes and column metadata)."""
+        for s in self.shards:
+            if not isinstance(s, QuarantinedShard):
+                return s
+        return self.shards[0]
+
+    def quarantined_shards(self) -> List[int]:
+        """Shard ids refused at load for failing checksum verification."""
+        return [
+            i for i, s in enumerate(self.shards)
+            if isinstance(s, QuarantinedShard)
+        ]
 
     def _dispatch_lookup(
         self,
@@ -179,27 +316,36 @@ class ShardedDeepMappingStore(MappingStore):
         fanout: Optional[bool] = None,
         predicates: tuple = (),
         keys_exist: bool = False,
+        on_error: str = "raise",
     ) -> _PendingShardedLookup:
         """Scatter the batch and enqueue every shard's device inference
         (cheap serial dispatch — the device work itself overlaps);
         ``_collect_lookup`` gathers the host halves.  ``predicates``
         push down into every shard (code-level argmax filtering), so a
         scattered predicate plan never decodes a non-matching row on
-        any shard; ``keys_exist`` forwards to every shard."""
+        any shard; ``keys_exist`` forwards to every shard.
+
+        A shard whose dispatch itself raises (a dying device engine)
+        does not kill the plan here: the failure is captured in the
+        handle slot and retried — then degraded around or surfaced as
+        :class:`OwnerFailure`, per ``on_error`` — at collect time."""
         keys = np.asarray(keys, dtype=np.int64)
         t0 = time.perf_counter()
         batches = self.router.scatter(keys)
         route_s = time.perf_counter() - t0
         use_fanout = bool(fanout) and len(batches) > 1
-        handles = [
-            self.shards[b.shard_id]._dispatch_lookup(
-                b.keys, columns, predicates=predicates, keys_exist=keys_exist
-            )
-            for b in batches
-        ]
+        handles = []
+        for b in batches:
+            try:
+                handles.append((True, self.shards[b.shard_id]._dispatch_lookup(
+                    b.keys, columns, predicates=predicates, keys_exist=keys_exist
+                )))
+            except Exception as exc:  # captured; retried at collect
+                handles.append((False, exc))
         return _PendingShardedLookup(
             keys=keys, batches=batches, handles=handles, route_s=route_s,
             use_fanout=use_fanout, columns=columns, predicates=predicates,
+            keys_exist=keys_exist, on_error=on_error,
         )
 
     def _collect_lookup(
@@ -209,10 +355,12 @@ class ShardedDeepMappingStore(MappingStore):
         route_s, use_fanout = pending.route_s, pending.use_fanout
         preds = pending.predicates
         if not batches:
-            # Zero-length request: delegate to one shard for typed
-            # empty columns + per-head stats (no scatter, no inference).
-            values, exists, match, stats = self.shards[0]._collect_lookup(
-                self.shards[0]._dispatch_lookup(
+            # Zero-length request: delegate to one healthy shard for
+            # typed empty columns + per-head stats (no scatter, no
+            # inference).
+            probe_shard = self._healthy_shard()
+            values, exists, match, stats = probe_shard._collect_lookup(
+                probe_shard._dispatch_lookup(
                     keys[:0], pending.columns, predicates=preds
                 )
             )
@@ -222,21 +370,44 @@ class ShardedDeepMappingStore(MappingStore):
             return values, exists, exists.copy() if preds else None, stats
 
         def visit(batch_handle):
-            batch, handle = batch_handle
+            batch, (ok, payload) = batch_handle
             shard = self.shards[batch.shard_id]
+            owner = f"shard:{batch.shard_id}"
+
+            def attempt(i: int):
+                # Injection site sits inside the guarded attempt so a
+                # `times=1` spec fails attempt 0 and the retry recovers.
+                fault_injection.maybe_fail("shard_collect", owner)
+                if i == 0:
+                    if not ok:
+                        raise payload  # dispatch-time failure = try 0
+                    handle = payload
+                else:
+                    # The first try consumed (part of) the dispatched
+                    # handle; retries re-dispatch fresh.
+                    handle = shard._dispatch_lookup(
+                        batch.keys, pending.columns,
+                        predicates=preds, keys_exist=pending.keys_exist,
+                    )
+                return shard._collect_lookup(handle)
+
             t0 = time.perf_counter()
-            vals, exists, match, stats = shard._collect_lookup(handle)
+            outcome = call_guarded(
+                attempt, owner=owner, site="shard_collect", policy=self.retry
+            )
             t1 = time.perf_counter()
             # Per-shard telemetry, labeled by shard id — emitted from
             # the fan-out pool threads, which is exactly why the
             # registry (and PlanCache) increments are locked.
             reg = obs.registry()
             reg.counter(
-                "deepmap_shard_keys_total", "Keys answered per shard."
-            ).inc(int(batch.keys.shape[0]), shard=batch.shard_id)
-            reg.counter(
                 "deepmap_shard_visits_total", "Lookup batches per shard."
             ).inc(shard=batch.shard_id)
+            if not outcome.ok:
+                return batch, None, None, None, None, outcome
+            reg.counter(
+                "deepmap_shard_keys_total", "Keys answered per shard."
+            ).inc(int(batch.keys.shape[0]), shard=batch.shard_id)
             reg.histogram(
                 "deepmap_shard_collect_seconds",
                 "Per-shard collect (host-half) latency.",
@@ -245,7 +416,8 @@ class ShardedDeepMappingStore(MappingStore):
                 "shard_collect", t0, t1, track="shards",
                 shard=batch.shard_id, rows=int(batch.keys.shape[0]),
             )
-            return batch, vals, exists, match, stats
+            vals, exists, match, stats = outcome.value
+            return batch, vals, exists, match, stats, outcome
 
         pairs = list(zip(batches, pending.handles))
         if use_fanout:
@@ -253,30 +425,49 @@ class ShardedDeepMappingStore(MappingStore):
         else:
             parts = [visit(p) for p in pairs]
 
+        healthy = [p for p in parts if p[5].ok]
+        errors = tuple(p[5].error for p in parts if not p[5].ok)
+        if errors and (pending.on_error != "partial" or not healthy):
+            # 'raise' mode, or nothing survived to degrade to — either
+            # way the structured owner evidence rides on the exception.
+            raise OwnerFailure(errors)
+
         agg = ExplainStats(
             shards_visited=len(batches),
             shard_ids=tuple(int(b.shard_id) for b in batches),
             async_fanout=use_fanout,
             route_s=route_s,
+            retries=sum(p[5].retries for p in parts),
+            owners_failed=tuple(e.describe() for e in errors),
+            keys_unresolved=sum(
+                int(p[0].keys.shape[0]) for p in parts if not p[5].ok
+            ),
         )
-        for _, _, _, _, s in parts:
+        for p in healthy:
             # merge_timings unions the pushdown evidence tuples, so a
             # shard that skipped different heads/columns than its peers
             # cannot make the aggregate under-report.
-            agg.merge_timings(s)
+            agg.merge_timings(p[4])
         agg.plan = (
             f"scatter[{len(batches)} shards]",
             "fanout" if use_fanout else "serial",
-        ) + parts[0][4].plan
+        ) + healthy[0][4].plan
 
         t1 = time.perf_counter()
-        values, exists = ShardRouter.gather(
-            keys.shape[0], [(b, v, e) for b, v, e, _, _ in parts]
-        )
+        if errors:
+            values, exists, _covered = ShardRouter.gather_partial(
+                keys.shape[0], [(b, v, e) for b, v, e, _, _, _ in healthy]
+            )
+        else:
+            values, exists = ShardRouter.gather(
+                keys.shape[0], [(b, v, e) for b, v, e, _, _, _ in healthy]
+            )
         match = None
         if preds:
+            # Failed shards' positions stay False: unreachable rows are
+            # excluded from filtered results (evidence keeps the count).
             match = np.zeros(keys.shape[0], dtype=bool)
-            for b, _, _, m, _ in parts:
+            for b, _, _, m, _, _ in healthy:
                 match[b.positions] = m
         agg.route_s += time.perf_counter() - t1
         return values, exists, match, agg
@@ -416,6 +607,21 @@ class ShardedDeepMappingStore(MappingStore):
             print(f"[cluster] retrained shards {ids}")
         return ids
 
+    # ------------------------------------------------------------- teardown
+    def close(self) -> None:
+        """Release the lookup fan-out pool's threads (idempotent; the
+        store remains usable — a later fan-out lazily re-creates the
+        pool).  Without it, pool threads live until interpreter exit."""
+        self._fanout.close()
+
+    def __enter__(self) -> "ShardedDeepMappingStore":
+        """Context-manager entry; :meth:`close` runs on exit."""
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        """Close the fan-out pool on scope exit."""
+        self.close()
+
     # ---------------------------------------------------------- persistence
     def save(self, path: str) -> None:
         """Protocol persistence — the manifest directory-of-stores
@@ -424,9 +630,12 @@ class ShardedDeepMappingStore(MappingStore):
 
     @classmethod
     def load(
-        cls, path: str, pool: Optional[MemoryPool] = None
+        cls,
+        path: str,
+        pool: Optional[MemoryPool] = None,
+        on_corrupt: str = "raise",
     ) -> "ShardedDeepMappingStore":
-        return load_sharded_store(path, pool=pool)
+        return load_sharded_store(path, pool=pool, on_corrupt=on_corrupt)
 
     def materialize(self) -> Table:
         """Reconstruct the full logical table, ascending key order."""
@@ -478,13 +687,24 @@ class ShardedDeepMappingStore(MappingStore):
 def save_sharded_store(store: ShardedDeepMappingStore, path: str) -> None:
     """Directory-of-stores format: manifest + one ``core.serialize``
     directory per shard.  Atomic (tmp + rename), like the single-store
-    format."""
+    format; the manifest is written LAST, crc32-enveloped, after every
+    shard directory landed (a manifest's presence marks the save
+    complete)."""
+    bad = store.quarantined_shards()
+    if bad:
+        raise IntegrityError(
+            f"refusing to save: shards {bad} are quarantined (corrupt at "
+            f"load) — saving would persist placeholders as data loss"
+        )
     tmp = path + ".tmp"
     if os.path.exists(tmp):
         shutil.rmtree(tmp)
     os.makedirs(tmp)
 
     shard_dirs = [f"shard_{i:05d}" for i in range(store.num_shards)]
+    for shard, d in zip(store.shards, shard_dirs):
+        save_store(shard, os.path.join(tmp, d))
+
     manifest = {
         "version": MANIFEST_VERSION,
         "partitioner": store.partitioner.to_state(),
@@ -497,29 +717,83 @@ def save_sharded_store(store: ShardedDeepMappingStore, path: str) -> None:
             "max_workers": store.cluster.max_workers,
         },
         "shards": shard_dirs,
+        # Quarantine metadata: lets a QuarantinedShard placeholder keep
+        # the facade's columns and row accounting coherent when one
+        # shard directory fails verification on a later load.
+        "columns": list(store.columns),
+        "shard_rows": [int(s.num_rows) for s in store.shards],
     }
     with open(os.path.join(tmp, "manifest.msgpack"), "wb") as f:
-        f.write(msgpack.packb(manifest))
-    for shard, d in zip(store.shards, shard_dirs):
-        save_store(shard, os.path.join(tmp, d))
+        f.write(pack_meta(manifest))
+        f.flush()
+        os.fsync(f.fileno())
+    fsync_dir(tmp)
 
     if os.path.exists(path):
         shutil.rmtree(path)
     os.rename(tmp, path)
+    fsync_dir(os.path.dirname(os.path.abspath(path)))
 
 
 def load_sharded_store(
-    path: str, pool: Optional[MemoryPool] = None
+    path: str,
+    pool: Optional[MemoryPool] = None,
+    on_corrupt: str = "raise",
 ) -> ShardedDeepMappingStore:
-    with open(os.path.join(path, "manifest.msgpack"), "rb") as f:
-        manifest = msgpack.unpackb(f.read())
+    """Load a saved cluster, verifying every shard's checksums.
+
+    ``on_corrupt='raise'`` (default) propagates the first shard's
+    :class:`~repro.fault.errors.IntegrityError`; ``'quarantine'``
+    replaces corrupt shards with :class:`QuarantinedShard` placeholders
+    — the healthy K-1 shards keep serving (point lookups degrade via
+    ``Query.on_error('partial')``), each quarantine warns and counts
+    into ``deepmap_fault_quarantines_total`` — and still raises when
+    EVERY shard is corrupt (nothing left to serve)."""
+    if on_corrupt not in ("raise", "quarantine"):
+        raise ValueError(
+            f"on_corrupt must be 'raise' or 'quarantine', got {on_corrupt!r}"
+        )
+    clean_stale_tmp(path)
+    manifest = unpack_meta(
+        read_artifact(path, "manifest.msgpack", None),
+        os.path.join(path, "manifest.msgpack"),
+    )
     if manifest["version"] > MANIFEST_VERSION:
         raise ValueError(f"cluster manifest {manifest['version']} newer than reader")
     pool = pool if pool is not None else MemoryPool(1 << 30)
     partitioner = Partitioner.from_state(manifest["partitioner"])
-    shards = [
-        load_store(os.path.join(path, d), pool=pool) for d in manifest["shards"]
-    ]
+    columns = tuple(manifest.get("columns", ()))
+    shard_dirs = manifest["shards"]
+    shard_rows = manifest.get("shard_rows", [0] * len(shard_dirs))
+    shards: List[DeepMappingStore] = []
+    corrupt = 0
+    for i, d in enumerate(shard_dirs):
+        try:
+            shards.append(load_store(os.path.join(path, d), pool=pool))
+        except (IntegrityError, OSError, ValueError, KeyError) as err:
+            if on_corrupt != "quarantine":
+                raise
+            corrupt += 1
+            warnings.warn(
+                f"quarantining shard {i} ({os.path.join(path, d)}): {err}",
+                RuntimeWarning,
+                stacklevel=2,
+            )
+            owner = f"shard:{i}"  # bounded by the manifest's shard count
+            obs.registry().counter(
+                "deepmap_fault_quarantines_total",
+                "Owners quarantined (consecutive failures, or corrupt "
+                "artifacts at load).",
+            ).inc(owner=owner)
+            shards.append(
+                QuarantinedShard(
+                    i, str(err), columns=columns, num_rows=int(shard_rows[i])
+                )
+            )
+    if corrupt and corrupt == len(shard_dirs):
+        raise IntegrityError(
+            f"every shard of {path!r} failed verification; nothing to serve"
+        )
     cluster = ClusterConfig(
         num_shards=manifest["cluster"]["num_shards"],
         policy=manifest["cluster"]["policy"],

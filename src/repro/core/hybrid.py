@@ -244,6 +244,7 @@ class DeepMappingStore(MappingStore):
         fanout: Optional[bool] = None,
         predicates: tuple = (),
         keys_exist: bool = False,
+        on_error: str = "raise",
     ) -> _PendingLookup:
         """Stage 1 of Algorithm 1: enqueue device inference (+ fused
         existence test) for the first chunks of the batch and return.
@@ -262,7 +263,9 @@ class DeepMappingStore(MappingStore):
         projection excludes it, and at collect time rows are filtered
         on their aux-corrected argmax codes — non-matching rows are
         never decoded.  ``keys_exist`` is accepted for hook parity (the
-        fused existence test is already device-cheap here)."""
+        fused existence test is already device-cheap here); so is
+        ``on_error`` — a single-owner store has no healthy subset to
+        degrade to, so the executor owns its partial fallback."""
         keys = np.asarray(keys, dtype=np.int64)
         all_tasks = self.spec.tasks
         selected = tuple(t for t in all_tasks if columns is None or t in columns)

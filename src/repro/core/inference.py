@@ -54,6 +54,7 @@ import numpy as np
 from repro import obs
 from repro.core import model as model_lib
 from repro.core.model import MLPSpec
+from repro.fault import injection as fault_injection
 from repro.kernels import fused_mlp as fm_kernel
 from repro.kernels import ops as kops
 
@@ -331,6 +332,10 @@ class InferenceEngine:
         if n == 0 or not tasks:
             return InferTicket(n=n, tasks=tasks, path="empty", keys=keys,
                                want_exists=want_exists)
+        # Fault-injection site: after the zero-length early-out so the
+        # executor's typed-empty probes (used to build placeholder
+        # columns in degraded mode) are never themselves failed.
+        fault_injection.maybe_fail("engine_dispatch")
         self.stats.bump("dispatches")
         # MLPSpec canonicalizes task order, so the subset entry (and the
         # device result columns) follow spec order; collect() permutes

@@ -3,7 +3,7 @@
 Directory layout (atomic: written to ``<dir>.tmp`` then renamed):
 
     store/
-      meta.msgpack      — spec, encoder, config, counters
+      meta.msgpack      — spec, encoder, config, counters, checksums
       params.npz        — model weights (flattened path -> array)
       aux.msgpack       — compacted T_aux state (compressed partitions)
       vexist.bin        — compressed existence bitvector
@@ -13,13 +13,35 @@ Directory layout (atomic: written to ``<dir>.tmp`` then renamed):
 The format is self-describing and versioned; restore works with any
 later minor version.  No pickle anywhere — partitions and weights are
 raw buffers, metadata is msgpack.
+
+Durability discipline (v2):
+
+* every artifact carries a ``zlib.crc32`` recorded in ``meta.msgpack``
+  and verified on load — a bit-flipped or truncated artifact raises
+  :class:`~repro.fault.errors.IntegrityError` instead of decoding into
+  wrong values;
+* ``meta.msgpack`` is written LAST (a directory with a meta file is a
+  complete save) and wrapped in a crc32 envelope of its own, so meta
+  corruption is detected too, not just artifact corruption;
+* every file is fsynced before the tmp-directory rename (and the
+  parent directory after), so a crash cannot publish a store whose
+  artifacts are still in the page cache;
+* a stale ``<dir>.tmp`` from an interrupted save is removed (with a
+  warning) on the next load of ``<dir>``.
+
+Reads flow through :func:`read_artifact`, which is instrumented for the
+``artifact_read`` fault-injection site — tests corrupt payloads
+in-memory (deterministically) and assert the checksums catch it.
 """
 
 from __future__ import annotations
 
+import io
 import os
 import shutil
-from typing import Dict
+import warnings
+import zlib
+from typing import Dict, Optional
 
 import msgpack
 import numpy as np
@@ -30,11 +52,112 @@ from repro.core.bitvector import BitVector
 from repro.core.encoding import KeyEncoder, ValueCodec
 from repro.core.hybrid import DeepMappingConfig, DeepMappingStore
 from repro.core.model import MLPSpec
+from repro.fault import injection as fault_injection
+from repro.fault.errors import IntegrityError
 from repro.storage import MemoryPool
 
-FORMAT_VERSION = 1
+#: v2 adds per-artifact crc32 checksums + the meta envelope; v1 stores
+#: (no ``checksums`` map, flat meta) still load, without verification.
+FORMAT_VERSION = 2
 
 
+# ------------------------------------------------------------ durability
+def crc32(data: bytes) -> int:
+    """Stdlib crc32, normalized to unsigned (msgpack round-trip safe)."""
+    return zlib.crc32(data) & 0xFFFFFFFF
+
+
+def fsync_dir(path: str) -> None:
+    """fsync a directory so its entries (renames, new files) are
+    durable — POSIX requires syncing the directory, not just the
+    files inside it."""
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def write_artifact(
+    dirpath: str, name: str, data: bytes, checksums: Dict[str, int]
+) -> None:
+    """Write one artifact durably (flush + fsync) and record its crc."""
+    with open(os.path.join(dirpath, name), "wb") as f:
+        f.write(data)
+        f.flush()
+        os.fsync(f.fileno())
+    checksums[name] = crc32(data)
+
+
+def read_artifact(
+    dirpath: str, name: str, checksums: Optional[Dict[str, int]]
+) -> bytes:
+    """Read one artifact and verify its crc against ``checksums``.
+
+    ``checksums=None`` (or a map without this artifact — a v1 save)
+    skips verification.  The ``artifact_read`` injection site fires
+    before the read (raise/delay) and on the payload (corrupt), so the
+    corruption path is testable without touching real files.
+    """
+    fault_injection.maybe_fail("artifact_read", owner=name)
+    with open(os.path.join(dirpath, name), "rb") as f:
+        data = f.read()
+    data = fault_injection.corrupt("artifact_read", name, data)
+    if checksums is not None and name in checksums:
+        got = crc32(data)
+        want = int(checksums[name])
+        if got != want:
+            raise IntegrityError(
+                f"{os.path.join(dirpath, name)}: crc32 mismatch "
+                f"(stored {want:#010x}, read {got:#010x}) — artifact is "
+                f"corrupt or truncated"
+            )
+    return data
+
+
+def clean_stale_tmp(path: str) -> bool:
+    """Remove a stale ``<path>.tmp`` left by an interrupted save.
+
+    The atomic-save discipline writes to ``<path>.tmp`` and renames;
+    a surviving tmp means a save died mid-write and its contents are
+    unverifiable garbage.  Returns True (after warning) if one was
+    removed."""
+    tmp = path + ".tmp"
+    if not os.path.exists(tmp):
+        return False
+    warnings.warn(
+        f"removing stale {tmp!r} left by an interrupted save; the last "
+        f"completed save at {path!r} is unaffected",
+        RuntimeWarning,
+        stacklevel=2,
+    )
+    if os.path.isdir(tmp):
+        shutil.rmtree(tmp)
+    else:
+        os.remove(tmp)
+    return True
+
+
+def pack_meta(meta: Dict) -> bytes:
+    """Wrap a metadata dict in a self-verifying crc32 envelope."""
+    payload = msgpack.packb(meta)
+    return msgpack.packb({"crc32": crc32(payload), "payload": payload})
+
+
+def unpack_meta(blob: bytes, label: str) -> Dict:
+    """Open a metadata blob: crc32 envelope (v2) or flat dict (v1)."""
+    obj = msgpack.unpackb(blob)
+    if isinstance(obj, dict) and "payload" in obj and "crc32" in obj:
+        payload = obj["payload"]
+        if crc32(payload) != int(obj["crc32"]):
+            raise IntegrityError(
+                f"{label}: metadata crc32 mismatch — file is corrupt"
+            )
+        return msgpack.unpackb(payload)
+    return obj  # v1 flat metadata, no checksum to verify
+
+
+# ----------------------------------------------------------- store format
 def _flatten_params(params: Dict, prefix: str = "") -> Dict[str, np.ndarray]:
     flat: Dict[str, np.ndarray] = {}
 
@@ -76,6 +199,36 @@ def save_store(store: DeepMappingStore, path: str) -> None:
         shutil.rmtree(tmp)
     os.makedirs(tmp)
 
+    checksums: Dict[str, int] = {}
+
+    buf = io.BytesIO()
+    np.savez(buf, **_flatten_params(store.params))
+    write_artifact(tmp, "params.npz", buf.getvalue(), checksums)
+
+    aux_state = store.aux.to_state()
+    aux_blob = msgpack.packb(
+        {
+            "codec": aux_state["codec"],
+            "partition_bytes": aux_state["partition_bytes"],
+            "num_values": aux_state["num_values"],
+            "partitions": aux_state["partitions"],
+            "boundaries": aux_state["boundaries"].tobytes(),
+            "part_rows": aux_state["part_rows"],
+            "rows": aux_state["rows"],
+        }
+    )
+    write_artifact(tmp, "aux.msgpack", aux_blob, checksums)
+
+    write_artifact(tmp, "vexist.bin", store.vexist.to_bytes(), checksums)
+
+    for col in store.spec.tasks:
+        dm = store.codecs[col].decode_map
+        if dm.dtype == object:
+            dm = dm.astype(str)  # unicode arrays serialize without pickle
+        buf = io.BytesIO()
+        np.save(buf, dm, allow_pickle=False)
+        write_artifact(tmp, f"decode_{col}.npy", buf.getvalue(), checksums)
+
     meta = {
         "version": FORMAT_VERSION,
         "spec": {
@@ -100,46 +253,31 @@ def save_store(store: DeepMappingStore, path: str) -> None:
         "num_rows": store.num_rows,
         "modified_bytes": store.modified_bytes,
         "columns": list(store.spec.tasks),
+        "checksums": checksums,
     }
+    # Meta goes LAST: its presence marks the save complete, so a crash
+    # before this point leaves a tmp dir load will never touch.
     with open(os.path.join(tmp, "meta.msgpack"), "wb") as f:
-        f.write(msgpack.packb(meta))
-
-    np.savez(os.path.join(tmp, "params.npz"), **_flatten_params(store.params))
-
-    aux_state = store.aux.to_state()
-    aux_blob = msgpack.packb(
-        {
-            "codec": aux_state["codec"],
-            "partition_bytes": aux_state["partition_bytes"],
-            "num_values": aux_state["num_values"],
-            "partitions": aux_state["partitions"],
-            "boundaries": aux_state["boundaries"].tobytes(),
-            "part_rows": aux_state["part_rows"],
-            "rows": aux_state["rows"],
-        }
-    )
-    with open(os.path.join(tmp, "aux.msgpack"), "wb") as f:
-        f.write(aux_blob)
-
-    with open(os.path.join(tmp, "vexist.bin"), "wb") as f:
-        f.write(store.vexist.to_bytes())
-
-    for col in store.spec.tasks:
-        dm = store.codecs[col].decode_map
-        if dm.dtype == object:
-            dm = dm.astype(str)  # unicode arrays serialize without pickle
-        np.save(os.path.join(tmp, f"decode_{col}.npy"), dm, allow_pickle=False)
+        f.write(pack_meta(meta))
+        f.flush()
+        os.fsync(f.fileno())
+    fsync_dir(tmp)
 
     if os.path.exists(path):
         shutil.rmtree(path)
     os.rename(tmp, path)
+    fsync_dir(os.path.dirname(os.path.abspath(path)))
 
 
 def load_store(path: str, pool: MemoryPool | None = None) -> DeepMappingStore:
-    with open(os.path.join(path, "meta.msgpack"), "rb") as f:
-        meta = msgpack.unpackb(f.read())
+    clean_stale_tmp(path)
+    meta = unpack_meta(
+        read_artifact(path, "meta.msgpack", None),
+        os.path.join(path, "meta.msgpack"),
+    )
     if meta["version"] > FORMAT_VERSION:
         raise ValueError(f"store format {meta['version']} newer than reader")
+    checksums = meta.get("checksums")  # absent on v1 saves
 
     s = meta["spec"]
     spec = MLPSpec(
@@ -150,12 +288,11 @@ def load_store(path: str, pool: MemoryPool | None = None) -> DeepMappingStore:
         out_cards={k: v for k, v in s["out_cards"]},
         dtype=s["dtype"],
     )
-    with np.load(os.path.join(path, "params.npz")) as z:
+    with np.load(io.BytesIO(read_artifact(path, "params.npz", checksums))) as z:
         flat = {k: z[k] for k in z.files}
     params = _unflatten_params(flat, spec)
 
-    with open(os.path.join(path, "aux.msgpack"), "rb") as f:
-        a = msgpack.unpackb(f.read())
+    a = msgpack.unpackb(read_artifact(path, "aux.msgpack", checksums))
     aux = AuxTable.from_state(
         {
             "codec": a["codec"],
@@ -169,12 +306,14 @@ def load_store(path: str, pool: MemoryPool | None = None) -> DeepMappingStore:
         pool=pool,
     )
 
-    with open(os.path.join(path, "vexist.bin"), "rb") as f:
-        vexist = BitVector.from_bytes(f.read())
+    vexist = BitVector.from_bytes(read_artifact(path, "vexist.bin", checksums))
 
     codecs: Dict[str, ValueCodec] = {}
     for col in meta["columns"]:
-        dm = np.load(os.path.join(path, f"decode_{col}.npy"), allow_pickle=False)
+        dm = np.load(
+            io.BytesIO(read_artifact(path, f"decode_{col}.npy", checksums)),
+            allow_pickle=False,
+        )
         codecs[col] = ValueCodec.from_decode_map(col, dm)
 
     # Reconstruct the KeyEncoder with the same width/base/residues.

@@ -1,0 +1,66 @@
+"""Fault tolerance for the query/serving path.
+
+Four small, composable pieces (see DESIGN.md §Fault tolerance):
+
+* :mod:`repro.fault.errors` — structured failure values
+  (:class:`OwnerError`, :class:`OwnerFailure`, :class:`IntegrityError`,
+  :class:`InjectedFault`);
+* :mod:`repro.fault.injection` — the deterministic fault-injection
+  harness (:class:`FaultPlan` / :class:`FaultSpec` plus the
+  ``maybe_fail`` / ``corrupt`` site hooks);
+* :mod:`repro.fault.retry` — bounded retry with exponential backoff
+  and per-owner deadlines (:class:`RetryPolicy`, :func:`call_guarded`);
+* :mod:`repro.fault.health` — consecutive-failure + latency-EWMA
+  health scoring driving replica failover (:class:`HealthTracker`).
+
+The package sits at the bottom of the layering (alongside ``obs``): it
+imports nothing from ``repro`` except ``repro.obs``, so every layer —
+core persistence up to the serving tier — can use it without cycles.
+"""
+
+from repro.fault.errors import (
+    InjectedFault,
+    IntegrityError,
+    OwnerError,
+    OwnerFailure,
+)
+from repro.fault.health import HealthPolicy, HealthTracker
+from repro.fault.injection import (
+    KINDS,
+    SITES,
+    FaultEvent,
+    FaultPlan,
+    FaultSpec,
+    active,
+    corrupt,
+    maybe_fail,
+)
+from repro.fault.retry import (
+    DEFAULT_POLICY,
+    FAIL_FAST,
+    GuardedOutcome,
+    RetryPolicy,
+    call_guarded,
+)
+
+__all__ = [
+    "DEFAULT_POLICY",
+    "FAIL_FAST",
+    "KINDS",
+    "SITES",
+    "FaultEvent",
+    "FaultPlan",
+    "FaultSpec",
+    "GuardedOutcome",
+    "HealthPolicy",
+    "HealthTracker",
+    "InjectedFault",
+    "IntegrityError",
+    "OwnerError",
+    "OwnerFailure",
+    "RetryPolicy",
+    "active",
+    "call_guarded",
+    "corrupt",
+    "maybe_fail",
+]

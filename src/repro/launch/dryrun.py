@@ -299,7 +299,12 @@ def main() -> None:
                     if r.get("ok"):
                         done.add((r["arch"], r["shape"], r["mesh"], r.get("variant")))
                 except json.JSONDecodeError:
-                    pass
+                    # half-written tail from a crashed run: that combo
+                    # is simply not "done" and will be re-run below.
+                    print(
+                        f"WARN {args.out}: skipping malformed journal line",
+                        flush=True,
+                    )
 
     meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
     for arch_id in archs:

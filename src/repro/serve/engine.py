@@ -76,9 +76,14 @@ class LookupServer:
         self,
         store: MappingStore,
         max_batch: int = 65536,
+        on_error: str = "raise",
     ):
         self.store = store
         self.max_batch = max_batch
+        #: 'raise' fails the whole merged batch on any owner failure;
+        #: 'partial' serves the healthy owners' keys (unreachable keys
+        #: report exists=False) — QueryPlan validates the mode.
+        self.on_error = on_error
         self.stats = ServeStats()
 
     def lookup(
@@ -122,6 +127,7 @@ class LookupServer:
             columns=tuple(columns) if columns is not None else None,
             fanout=True,
             morsel=self.max_batch,
+            on_error=self.on_error,
         )
         chunks: Dict[str, List[np.ndarray]] = {}
         exists_u = np.zeros(uniq.shape[0], dtype=bool)

@@ -27,6 +27,7 @@ from tools.deeplint.rules import (  # noqa: E402
     metric_naming,
     mutation_version,
     stripped_assert,
+    swallowed_exception,
 )
 
 
@@ -125,6 +126,109 @@ class TestStrippedAssert:
             [stripped_assert],
         )
         assert rule_ids(findings) == ["stripped-assert"]
+
+
+# ----------------------------------------------------- swallowed-exception
+class TestSwallowedException:
+    def test_pass_only_body(self, tmp_path):
+        findings, _ = lint(
+            tmp_path,
+            """
+            def f():
+                try:
+                    risky()
+                except ValueError:
+                    pass
+            """,
+            [swallowed_exception],
+        )
+        assert rule_ids(findings) == ["swallowed-exception"]
+
+    def test_pass_with_binding(self, tmp_path):
+        findings, _ = lint(
+            tmp_path,
+            """
+            def f():
+                try:
+                    risky()
+                except Exception as exc:
+                    pass
+            """,
+            [swallowed_exception],
+        )
+        assert rule_ids(findings) == ["swallowed-exception"]
+
+    def test_docstring_only_body_still_flagged(self, tmp_path):
+        findings, _ = lint(
+            tmp_path,
+            """
+            def f():
+                try:
+                    risky()
+                except ValueError:
+                    "best effort"
+            """,
+            [swallowed_exception],
+        )
+        assert rule_ids(findings) == ["swallowed-exception"]
+
+    def test_bare_except_flagged_even_with_real_body(self, tmp_path):
+        findings, _ = lint(
+            tmp_path,
+            """
+            def f(log):
+                try:
+                    risky()
+                except:
+                    log.warning("failed")
+            """,
+            [swallowed_exception],
+        )
+        assert rule_ids(findings) == ["swallowed-exception"]
+
+    def test_clean_handler_that_records(self, tmp_path):
+        findings, _ = lint(
+            tmp_path,
+            """
+            def f(log):
+                try:
+                    risky()
+                except ValueError as exc:
+                    log.warning("failed: %s", exc)
+                    return None
+            """,
+            [swallowed_exception],
+        )
+        assert findings == []
+
+    def test_clean_reraise(self, tmp_path):
+        findings, _ = lint(
+            tmp_path,
+            """
+            def f():
+                try:
+                    risky()
+                except ValueError:
+                    raise RuntimeError("context")
+            """,
+            [swallowed_exception],
+        )
+        assert findings == []
+
+    def test_suppressed(self, tmp_path):
+        findings, suppressed = lint(
+            tmp_path,
+            """
+            def f():
+                try:
+                    risky()
+                except OSError:  # deeplint: ignore[swallowed-exception]
+                    pass
+            """,
+            [swallowed_exception],
+        )
+        assert findings == []
+        assert rule_ids(suppressed) == ["swallowed-exception"]
 
 
 # --------------------------------------------------------- lock-discipline

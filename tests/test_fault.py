@@ -1,0 +1,589 @@
+"""Fault-tolerance tests: the deterministic injection harness, bounded
+retry/backoff, health-driven replica failover, and degraded partial
+execution (DESIGN.md §Fault tolerance).
+
+Everything here replays identically run to run: faults fire by
+matching-event index (a counter-seeded coin only when
+``probability < 1``), backoff is computed rather than drawn, and health
+scoring is pick-count driven.  CI runs this file under
+``PYTHONHASHSEED=0`` (the ``chaos`` job)."""
+
+import time
+
+import numpy as np
+import pytest
+
+from conftest import make_periodic_table
+from repro import obs
+from repro.api import FederatedStore
+from repro.api.routing import LazyFanoutPool
+from repro.baselines import HashStore
+from repro.cluster import ClusterConfig, ShardedDeepMappingStore
+from repro.core import DeepMappingConfig
+from repro.core.trainer import TrainConfig
+from repro.fault import (
+    FaultPlan,
+    FaultSpec,
+    HealthPolicy,
+    HealthTracker,
+    InjectedFault,
+    OwnerFailure,
+    RetryPolicy,
+    call_guarded,
+    injection,
+)
+from repro.serve import LookupServer
+
+FAST = DeepMappingConfig(
+    shared=(64,), private=(16,), train=TrainConfig(epochs=15, batch_size=512)
+)
+
+#: No backoff sleeps, two attempts — fault tests stay fast and exact.
+TIGHT = RetryPolicy(max_attempts=2, backoff_s=0.0, max_backoff_s=0.0)
+
+
+def counter_value(name, **labels):
+    """Current value of one labelled counter series (0 if never hit)."""
+    metric = obs.registry().get(name)
+    return 0.0 if metric is None else metric.value(**labels)
+
+
+# --------------------------------------------------------------- harness
+class TestFaultSpec:
+    def test_unknown_site_rejected(self):
+        with pytest.raises(ValueError, match="unknown fault site"):
+            FaultSpec(site="warp_core")
+
+    def test_unknown_kind_rejected(self):
+        with pytest.raises(ValueError, match="unknown fault kind"):
+            FaultSpec(site="shard_collect", kind="explode")
+
+    def test_probability_bounds(self):
+        with pytest.raises(ValueError):
+            FaultSpec(site="shard_collect", probability=1.5)
+
+
+class TestFaultPlan:
+    def test_inactive_plan_is_noop(self):
+        injection.maybe_fail("shard_collect", "shard:0")  # no plan active
+        assert injection.active() is None
+
+    def test_times_window(self):
+        plan = FaultPlan(
+            [FaultSpec(site="shard_collect", kind="raise", times=2)]
+        )
+        with plan.activate():
+            for _ in range(2):
+                with pytest.raises(InjectedFault):
+                    injection.maybe_fail("shard_collect", "shard:0")
+            injection.maybe_fail("shard_collect", "shard:0")  # exhausted
+        assert plan.fired == 2
+        assert plan.fired_at("shard_collect") == 2
+        assert [e.event_index for e in plan.events] == [0, 1]
+
+    def test_after_window(self):
+        plan = FaultPlan(
+            [FaultSpec(site="member_collect", kind="raise", after=1, times=1)]
+        )
+        with plan.activate():
+            injection.maybe_fail("member_collect", "member:0")  # idx 0 passes
+            with pytest.raises(InjectedFault):
+                injection.maybe_fail("member_collect", "member:0")
+
+    def test_owner_filter(self):
+        plan = FaultPlan(
+            [FaultSpec(site="shard_collect", kind="raise", owner="shard:1")]
+        )
+        with plan.activate():
+            injection.maybe_fail("shard_collect", "shard:0")
+            with pytest.raises(InjectedFault):
+                injection.maybe_fail("shard_collect", "shard:1")
+        assert [e.owner for e in plan.events] == ["shard:1"]
+
+    def test_delay_kind_returns(self):
+        plan = FaultPlan(
+            [FaultSpec(site="engine_dispatch", kind="delay", delay_s=0.0,
+                       times=1)]
+        )
+        with plan.activate():
+            injection.maybe_fail("engine_dispatch")  # sleeps 0s, no raise
+        assert plan.fired == 1
+
+    def test_probability_is_seed_deterministic(self):
+        def run(seed):
+            plan = FaultPlan(
+                [FaultSpec(site="shard_collect", probability=0.5)], seed=seed
+            )
+            fired = []
+            with plan.activate():
+                for _ in range(40):
+                    try:
+                        injection.maybe_fail("shard_collect", "shard:0")
+                        fired.append(False)
+                    except InjectedFault:
+                        fired.append(True)
+            return fired
+
+        assert run(7) == run(7)  # replays identically
+        assert 0 < sum(run(7)) < 40  # the coin actually flips
+        assert run(7) != run(8)  # and the seed matters
+
+    def test_nesting_disallowed(self):
+        plan = FaultPlan([FaultSpec(site="shard_collect")])
+        other = FaultPlan([FaultSpec(site="shard_collect")])
+        with plan.activate():
+            with pytest.raises(RuntimeError, match="already active"):
+                with other.activate():
+                    pass
+        assert injection.active() is None  # fully unwound
+
+    def test_corrupt_flips_exactly_one_byte(self):
+        data = bytes(range(64))
+        plan = FaultPlan(
+            [FaultSpec(site="artifact_read", kind="corrupt", times=1)]
+        )
+        with plan.activate():
+            out = injection.corrupt("artifact_read", "vexist.bin", data)
+            again = injection.corrupt("artifact_read", "vexist.bin", data)
+        assert len(out) == len(data) and out != data
+        assert sum(a != b for a, b in zip(out, data)) == 1
+        assert again == data  # times=1 exhausted
+
+    def test_corrupt_passes_empty_payload(self):
+        plan = FaultPlan([FaultSpec(site="artifact_read", kind="corrupt")])
+        with plan.activate():
+            assert injection.corrupt("artifact_read", "meta", b"") == b""
+
+    def test_fired_events_count_into_metrics(self):
+        before = counter_value(
+            "deepmap_fault_injected_total", site="shard_collect", kind="raise"
+        )
+        plan = FaultPlan([FaultSpec(site="shard_collect", times=3)])
+        with plan.activate():
+            for _ in range(3):
+                with pytest.raises(InjectedFault):
+                    injection.maybe_fail("shard_collect", "shard:0")
+        after = counter_value(
+            "deepmap_fault_injected_total", site="shard_collect", kind="raise"
+        )
+        assert after - before == 3 == plan.fired
+
+
+# ---------------------------------------------------------------- retry
+class TestCallGuarded:
+    def test_success_first_try(self):
+        out = call_guarded(
+            lambda i: "ok", owner="o", site="shard_collect", policy=TIGHT
+        )
+        assert out.ok and out.value == "ok"
+        assert out.retries == 0 and out.error is None
+
+    def test_retry_then_success(self):
+        before = counter_value(
+            "deepmap_fault_retries_total", site="shard_collect"
+        )
+
+        def flaky(attempt):
+            if attempt == 0:
+                raise RuntimeError("transient")
+            return attempt
+
+        out = call_guarded(
+            flaky, owner="o", site="shard_collect", policy=TIGHT
+        )
+        assert out.ok and out.value == 1 and out.retries == 1
+        after = counter_value(
+            "deepmap_fault_retries_total", site="shard_collect"
+        )
+        assert after - before == 1
+
+    def test_terminal_failure_is_a_value(self):
+        before = counter_value(
+            "deepmap_fault_owner_errors_total",
+            site="member_collect", cause="error",
+        )
+
+        def dead(attempt):
+            raise KeyError("gone")
+
+        out = call_guarded(
+            dead, owner="member:2", site="member_collect", policy=TIGHT
+        )
+        assert not out.ok and out.value is None
+        err = out.error
+        assert err.owner == "member:2" and err.site == "member_collect"
+        assert err.attempts == 2 and err.error_type == "KeyError"
+        assert "member:2@member_collect" in err.describe()
+        after = counter_value(
+            "deepmap_fault_owner_errors_total",
+            site="member_collect", cause="error",
+        )
+        assert after - before == 1
+
+    def test_slow_owner_blows_deadline(self):
+        policy = RetryPolicy(max_attempts=1, deadline_s=0.005)
+
+        def slow(attempt):
+            time.sleep(0.02)
+            return "late"
+
+        out = call_guarded(
+            slow, owner="o", site="member_collect", policy=policy
+        )
+        assert not out.ok
+        assert out.error.deadline_exceeded
+        assert out.error.error_type == "DeadlineExceeded"
+
+    def test_backoff_is_computed_not_drawn(self):
+        policy = RetryPolicy(
+            backoff_s=0.01, backoff_multiplier=2.0, max_backoff_s=0.03
+        )
+        assert policy.backoff(1) == pytest.approx(0.01)
+        assert policy.backoff(2) == pytest.approx(0.02)
+        assert policy.backoff(3) == pytest.approx(0.03)  # capped
+        assert policy.backoff(9) == pytest.approx(0.03)
+
+    def test_policy_validation(self):
+        with pytest.raises(ValueError):
+            RetryPolicy(max_attempts=0)
+        with pytest.raises(ValueError):
+            RetryPolicy(deadline_s=0.0)
+
+
+# --------------------------------------------------------------- health
+class TestHealthTracker:
+    def test_quarantine_after_threshold(self):
+        t = HealthTracker(HealthPolicy(fail_threshold=2))
+        assert t.record_failure("m") is False  # 1 of 2
+        assert t.record_failure("m") is True   # threshold crossed
+        assert t.record_failure("m") is False  # already quarantined
+        assert t.is_quarantined("m")
+
+    def test_success_resets_streak(self):
+        t = HealthTracker(HealthPolicy(fail_threshold=2))
+        t.record_failure("m")
+        t.record_success("m", 0.001)
+        t.record_failure("m")
+        assert not t.is_quarantined("m")  # streak broken, count restarted
+
+    def test_pick_fails_over_past_quarantined(self):
+        t = HealthTracker(HealthPolicy(fail_threshold=1, probe_every=100))
+        owners = ("member:0", "member:1", "member:2")
+        t.record_failure("member:0")
+        assert t.pick(owners, 0) == 1
+        assert t.healthy(owners) == ["member:1", "member:2"]
+
+    def test_probe_routes_through_quarantined(self):
+        t = HealthTracker(HealthPolicy(fail_threshold=1, probe_every=3))
+        owners = ("member:0", "member:1")
+        t.record_failure("member:0")
+        picks = [t.pick(owners, 0) for _ in range(3)]
+        assert picks == [1, 1, 0]  # every 3rd skip becomes a probe
+
+    def test_successful_probe_recovers(self):
+        t = HealthTracker(HealthPolicy(fail_threshold=1))
+        t.record_failure("m")
+        assert t.record_success("m", 0.001) is True  # recovered
+        assert not t.is_quarantined("m")
+
+    def test_all_quarantined_returns_preferred(self):
+        t = HealthTracker(HealthPolicy(fail_threshold=1, probe_every=100))
+        owners = ("a", "b")
+        t.record_failure("a")
+        t.record_failure("b")
+        assert t.pick(owners, 1) == 1  # serve *something*; success recovers
+
+    def test_latency_ewma_and_snapshot(self):
+        t = HealthTracker(HealthPolicy(ewma_alpha=0.5))
+        t.record_success("m", 0.1)
+        t.record_success("m", 0.2)
+        assert t.latency("m") == pytest.approx(0.15)
+        snap = t.snapshot()
+        assert snap["m"]["successes"] == 2
+        assert snap["m"]["quarantined"] is False
+
+
+# ------------------------------------------------- degraded cluster path
+@pytest.fixture(scope="module")
+def fault_cluster():
+    table = make_periodic_table(n=1200)
+    cluster = ShardedDeepMappingStore.build(
+        table, FAST, ClusterConfig(num_shards=3, policy="range")
+    )
+    cluster.retry = TIGHT
+    return table, cluster
+
+
+class TestDegradedCluster:
+    def test_raise_mode_surfaces_owner_failure(self, fault_cluster):
+        table, cluster = fault_cluster
+        plan = FaultPlan(
+            [FaultSpec(site="shard_collect", owner="shard:1", kind="raise")]
+        )
+        with plan.activate():
+            with pytest.raises(OwnerFailure) as exc_info:
+                cluster.query().where_keys(table.keys).execute()
+        assert "shard:1@shard_collect" in str(exc_info.value)
+        assert exc_info.value.owners[0].attempts == 2  # retried once
+        assert plan.fired == 2
+
+    def test_partial_mode_serves_healthy_shards_byte_identical(
+        self, fault_cluster
+    ):
+        table, cluster = fault_cluster
+        q = table.keys
+        ref_values, ref_exists = cluster.lookup(q)  # healthy reference
+        sid = cluster.partitioner.shard_of(q)
+        healthy = sid != 1
+
+        plan = FaultPlan(
+            [FaultSpec(site="shard_collect", owner="shard:1", kind="raise")]
+        )
+        with plan.activate():
+            res = (
+                cluster.query().where_keys(q).on_error("partial").execute()
+            )
+
+        # Healthy-shard rows are byte-identical to the fault-free run.
+        np.testing.assert_array_equal(res.exists[healthy], ref_exists[healthy])
+        for col in ref_values:
+            np.testing.assert_array_equal(
+                res.values[col][healthy], ref_values[col][healthy]
+            )
+        # Rows owned by the dead shard are unreachable, not absent.
+        assert not res.exists[~healthy].any()
+        assert res.explain.keys_unresolved == int((~healthy).sum())
+        assert len(res.explain.owners_failed) == 1
+        assert "shard:1@shard_collect" in res.explain.owners_failed[0]
+        assert any(s.startswith("degraded[") for s in res.explain.plan)
+
+    def test_transient_fault_retried_to_full_result(self, fault_cluster):
+        table, cluster = fault_cluster
+        ref_values, ref_exists = cluster.lookup(table.keys)
+        plan = FaultPlan(
+            [FaultSpec(site="shard_collect", owner="shard:1", kind="raise",
+                       times=1)]
+        )
+        with plan.activate():
+            res = (
+                cluster.query()
+                .where_keys(table.keys)
+                .on_error("partial")
+                .execute()
+            )
+        # One failure, retry succeeded: complete result, only evidence
+        # of the retry remains.
+        np.testing.assert_array_equal(res.exists, ref_exists)
+        for col in ref_values:
+            np.testing.assert_array_equal(res.values[col], ref_values[col])
+        assert res.explain.owners_failed == ()
+        assert res.explain.retries >= 1
+        assert plan.fired == 1
+
+    def test_injected_counter_matches_plan(self, fault_cluster):
+        table, cluster = fault_cluster
+        before = counter_value(
+            "deepmap_fault_injected_total", site="shard_collect", kind="raise"
+        )
+        plan = FaultPlan(
+            [FaultSpec(site="shard_collect", owner="shard:0", kind="raise")]
+        )
+        with plan.activate():
+            cluster.query().where_keys(
+                table.keys[:64]
+            ).on_error("partial").execute()
+        after = counter_value(
+            "deepmap_fault_injected_total", site="shard_collect", kind="raise"
+        )
+        assert after - before == plan.fired > 0
+
+    def test_on_error_validation(self, fault_cluster):
+        _, cluster = fault_cluster
+        with pytest.raises(ValueError, match="on_error"):
+            cluster.query().where_keys([1]).on_error("ignore").plan()
+
+
+# -------------------------------------------- degraded single-store path
+class TestDegradedSingleStore:
+    def test_engine_dispatch_fault_degrades_partial_query(self, small_store):
+        table, store = small_store
+        ref_values, ref_exists = store.lookup(table.keys[:128])
+        plan = FaultPlan(
+            [FaultSpec(site="engine_dispatch", kind="raise", times=1)]
+        )
+        with plan.activate():
+            res = (
+                store.query()
+                .where_keys(table.keys[:128])
+                .on_error("partial")
+                .execute()
+            )
+        assert plan.fired == 1
+        if res.explain.owners_failed:
+            # The whole (single-owner) morsel degraded: typed
+            # placeholders, nothing claimed to exist.
+            assert not res.exists.any()
+            assert res.explain.keys_unresolved == 128
+            assert set(res.values) == set(ref_values)
+            for col, arr in res.values.items():
+                assert arr.dtype == ref_values[col].dtype
+        else:
+            # The executor retried/recovered — result must be complete.
+            np.testing.assert_array_equal(res.exists, ref_exists)
+
+    def test_server_on_error_passthrough(self, small_store):
+        table, store = small_store
+        srv = LookupServer(store, max_batch=512, on_error="partial")
+        plan = FaultPlan(
+            [FaultSpec(site="engine_dispatch", kind="raise", times=1)]
+        )
+        with plan.activate():
+            values, exists = srv.lookup(table.keys[:32])
+        assert plan.fired == 1
+        assert exists.shape == (32,)
+        assert set(values) == set(table.columns)
+
+
+# -------------------------------------------------- replicate federation
+def build_federation(table, mutation_policy="reject"):
+    members = [
+        HashStore.build(table, codec="none", partition_bytes=2048)
+        for _ in range(3)
+    ]
+    return FederatedStore(
+        members,
+        mode="replicate",
+        retry=TIGHT,
+        health=HealthPolicy(fail_threshold=2, probe_every=4),
+        mutation_policy=mutation_policy,
+    )
+
+
+def kill_member_zero():
+    """A plan that fails every visit to member:0 at collect time."""
+    return FaultPlan(
+        [FaultSpec(site="member_collect", owner="member:0", kind="raise")]
+    )
+
+
+class TestReplicateFailover:
+    def test_every_lookup_serves_through_failover(self):
+        table = make_periodic_table(n=600)
+        fed = build_federation(table)
+        ref_values, ref_exists = fed.members[1].lookup(table.keys)
+        before = counter_value("deepmap_fault_failovers_total", member=1)
+        with kill_member_zero().activate() as plan:
+            batches = np.array_split(table.keys, 6)
+            for batch in batches:
+                values, exists = fed.lookup(batch)
+                sel = np.isin(table.keys, batch)
+                np.testing.assert_array_equal(exists, ref_exists[sel])
+                for col in ref_values:
+                    np.testing.assert_array_equal(
+                        values[col], ref_values[col][sel]
+                    )
+        # 100% of lookups served; the dead replica went to quarantine.
+        assert plan.fired >= 2
+        assert fed.health.is_quarantined("member:0")
+        assert not fed.health.is_quarantined("member:1")
+        after = counter_value("deepmap_fault_failovers_total", member=1)
+        assert after - before >= 1
+
+    def test_probe_recovers_member_after_fault_clears(self):
+        table = make_periodic_table(n=400)
+        fed = build_federation(table)
+        with kill_member_zero().activate():
+            for batch in np.array_split(table.keys, 4):
+                fed.lookup(batch)
+        assert fed.health.is_quarantined("member:0")
+        # Faults stopped; within probe_every picks a probe routes
+        # through member:0, succeeds, and recovers it.
+        for _ in range(fed.health.policy.probe_every + 1):
+            fed.lookup(table.keys[:16])
+            if not fed.health.is_quarantined("member:0"):
+                break
+        assert not fed.health.is_quarantined("member:0")
+
+    def test_all_replicas_down_raises_owner_failure(self):
+        table = make_periodic_table(n=200)
+        fed = build_federation(table)
+        plan = FaultPlan([FaultSpec(site="member_collect", kind="raise")])
+        with plan.activate():
+            with pytest.raises(OwnerFailure) as exc_info:
+                fed.lookup(table.keys[:16])
+        assert len(exc_info.value.owners) == 3  # every replica reported
+
+    def _quarantine_member_zero(self, fed, table):
+        with kill_member_zero().activate():
+            for batch in np.array_split(table.keys, 4):
+                fed.lookup(batch)
+        assert fed.health.is_quarantined("member:0")
+
+    def test_mutation_reject_while_quarantined(self):
+        table = make_periodic_table(n=400)
+        fed = build_federation(table, mutation_policy="reject")
+        self._quarantine_member_zero(fed, table)
+        before = counter_value(
+            "deepmap_fault_mutations_rejected_total", op="insert"
+        )
+        new_key = np.array([10**7], dtype=np.int64)
+        cols = {c: np.zeros(1, dtype=v.dtype) for c, v in table.columns.items()}
+        with pytest.raises(RuntimeError, match="member:0"):
+            fed.insert(new_key, cols)
+        # Nothing mutated anywhere — replicas cannot diverge.
+        for m in fed.members:
+            assert not m.lookup(new_key)[1].any()
+        after = counter_value(
+            "deepmap_fault_mutations_rejected_total", op="insert"
+        )
+        assert after - before == 1
+
+    def test_mutation_queue_flushes_after_recovery(self):
+        table = make_periodic_table(n=400)
+        fed = build_federation(table, mutation_policy="queue")
+        self._quarantine_member_zero(fed, table)
+        new_key = np.array([10**7], dtype=np.int64)
+        cols = {c: np.zeros(1, dtype=v.dtype) for c, v in table.columns.items()}
+        fed.insert(new_key, cols)  # queued, not applied
+        assert not fed.lookup(new_key)[1].any()
+        assert fed.flush_mutations() == 0  # still quarantined
+        # Recover member:0 (faults are gone; probes succeed).
+        for _ in range(fed.health.policy.probe_every + 1):
+            fed.lookup(table.keys[:8])
+            if not fed.health.is_quarantined("member:0"):
+                break
+        assert fed.flush_mutations() == 1
+        for m in fed.members:
+            assert m.lookup(new_key)[1].all()  # applied everywhere
+
+
+# ------------------------------------------------------- pool lifecycle
+class TestPoolLifecycle:
+    def test_close_is_idempotent_and_reentrant(self):
+        pool = LazyFanoutPool(2, "test-pool")
+        assert pool.map(lambda x: x * 2, [1, 2, 3], owners=3) == [2, 4, 6]
+        pool.close()
+        pool.close()  # idempotent
+        # A later map lazily re-creates the workers.
+        assert pool.map(lambda x: x + 1, [1], owners=1) == [2]
+        pool.close()
+
+    def test_context_manager_closes(self):
+        with LazyFanoutPool(2, "test-pool") as pool:
+            assert pool.map(lambda x: x, [7], owners=1) == [7]
+        assert pool._pool is None
+
+    def test_cluster_close_shuts_fanout_down(self, fault_cluster):
+        table, cluster = fault_cluster
+        cluster.lookup(table.keys[:32])  # may spin the pool up
+        cluster.close()
+        assert cluster._fanout._pool is None
+        # The store stays usable: the pool re-creates lazily.
+        _, exists = cluster.lookup(table.keys[:32])
+        assert exists.all()
+
+    def test_federation_context_manager(self):
+        table = make_periodic_table(n=200)
+        with build_federation(table) as fed:
+            fed.lookup(table.keys[:16])
+        assert fed._fanout._pool is None

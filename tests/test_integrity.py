@@ -1,0 +1,345 @@
+"""Checksummed-persistence tests: per-artifact crc32 verification,
+atomic-save hygiene (fsync + rename, stale-tmp cleanup, interrupted-save
+detection), and corrupt-shard quarantine (DESIGN.md §Fault tolerance).
+
+The invariant under test: a corrupt or truncated artifact must fail
+loudly at load time — :class:`~repro.fault.errors.IntegrityError` —
+never decode into wrong values."""
+
+import os
+import shutil
+
+import msgpack
+import numpy as np
+import pytest
+
+import repro
+from conftest import make_periodic_table
+from repro import obs
+from repro.baselines import ArrayStore, HashStore
+from repro.cluster import (
+    ClusterConfig,
+    ShardedDeepMappingStore,
+    load_sharded_store,
+    save_sharded_store,
+)
+from repro.core import DeepMappingConfig
+from repro.core.serialize import (
+    clean_stale_tmp,
+    crc32,
+    load_store,
+    read_artifact,
+    save_store,
+    unpack_meta,
+)
+from repro.core.trainer import TrainConfig
+from repro.fault import FaultPlan, FaultSpec, IntegrityError, OwnerFailure
+
+FAST = DeepMappingConfig(
+    shared=(64,), private=(16,), train=TrainConfig(epochs=15, batch_size=512)
+)
+
+
+def flip_byte(path, offset=None):
+    """Flip one bit of one byte in ``path`` (middle byte by default)."""
+    with open(path, "rb") as f:
+        data = bytearray(f.read())
+    i = len(data) // 2 if offset is None else offset
+    data[i] ^= 0x01
+    with open(path, "wb") as f:
+        f.write(bytes(data))
+
+
+def counter_value(name, **labels):
+    metric = obs.registry().get(name)
+    return 0.0 if metric is None else metric.value(**labels)
+
+
+def assert_same_lookup(expected, actual, keys):
+    ev, ee = expected.lookup(keys)
+    av, ae = actual.lookup(keys)
+    np.testing.assert_array_equal(ee, ae)
+    assert set(ev) == set(av)
+    for col in ev:
+        np.testing.assert_array_equal(ev[col][ee], av[col][ee])
+
+
+@pytest.fixture(scope="module")
+def saved_single(small_store, tmp_path_factory):
+    """One saved single-store directory; corruption tests copy it."""
+    table, store = small_store
+    path = str(tmp_path_factory.mktemp("single") / "store")
+    store.save(path)
+    return table, store, path
+
+
+@pytest.fixture(scope="module")
+def saved_cluster(tmp_path_factory):
+    table = make_periodic_table(n=800)
+    cluster = ShardedDeepMappingStore.build(
+        table, FAST, ClusterConfig(num_shards=2, policy="range")
+    )
+    path = str(tmp_path_factory.mktemp("cluster") / "cluster")
+    save_sharded_store(cluster, path)
+    return table, cluster, path
+
+
+def copy_of(saved_path, tmp_path):
+    dst = str(tmp_path / os.path.basename(saved_path))
+    shutil.copytree(saved_path, dst)
+    return dst
+
+
+# ------------------------------------------------------ checksum round-trip
+class TestChecksumRoundTrip:
+    def test_single_store(self, saved_single, tmp_path):
+        table, store, path = saved_single
+        loaded = repro.open(path)
+        probe = np.concatenate([table.keys, table.keys[:50] + 1])
+        assert_same_lookup(store, loaded, probe)
+
+    def test_sharded_store(self, saved_cluster):
+        table, cluster, path = saved_cluster
+        loaded = repro.open(path)
+        assert loaded.num_shards == 2
+        assert_same_lookup(cluster, loaded, table.keys)
+
+    @pytest.mark.parametrize("cls", [ArrayStore, HashStore])
+    def test_baseline_stores(self, cls, tmp_path):
+        table = make_periodic_table(n=500)
+        store = cls.build(table, codec="none", partition_bytes=2048)
+        path = str(tmp_path / "baseline.msgpack")
+        store.save(path)
+        loaded = repro.open(path)
+        assert_same_lookup(store, loaded, table.keys)
+
+    def test_meta_records_a_checksum_per_artifact(self, saved_single):
+        _, _, path = saved_single
+        meta = unpack_meta(
+            read_artifact(path, "meta.msgpack", None), "meta.msgpack"
+        )
+        checksums = meta["checksums"]
+        artifacts = {
+            f for f in os.listdir(path) if f != "meta.msgpack"
+        }
+        assert set(checksums) == artifacts
+        for name, stored in checksums.items():
+            with open(os.path.join(path, name), "rb") as f:
+                assert crc32(f.read()) == stored
+
+    def test_v1_layout_without_checksums_still_loads(
+        self, saved_single, tmp_path
+    ):
+        # Back-compat: strip the envelope + checksums map to mimic a
+        # pre-v2 directory; verification is skipped, the data loads.
+        table, store, path = saved_single
+        dst = copy_of(path, tmp_path)
+        meta = unpack_meta(
+            read_artifact(dst, "meta.msgpack", None), "meta.msgpack"
+        )
+        meta.pop("checksums")
+        meta["version"] = 1
+        with open(os.path.join(dst, "meta.msgpack"), "wb") as f:
+            f.write(msgpack.packb(meta))  # flat, no crc envelope
+        assert_same_lookup(store, load_store(dst), table.keys[:100])
+
+
+# ---------------------------------------------------- corruption detection
+class TestCorruptionDetection:
+    def test_bit_flipped_vexist_detected(self, saved_single, tmp_path):
+        _, _, path = saved_single
+        dst = copy_of(path, tmp_path)
+        flip_byte(os.path.join(dst, "vexist.bin"))
+        with pytest.raises(IntegrityError, match="vexist.bin"):
+            load_store(dst)
+
+    def test_truncated_params_detected(self, saved_single, tmp_path):
+        _, _, path = saved_single
+        dst = copy_of(path, tmp_path)
+        params = os.path.join(dst, "params.npz")
+        size = os.path.getsize(params)
+        with open(params, "rb+") as f:
+            f.truncate(size // 2)
+        with pytest.raises(IntegrityError, match="params.npz"):
+            load_store(dst)
+
+    def test_missing_decode_map_fails_loudly(self, saved_single, tmp_path):
+        _, _, path = saved_single
+        dst = copy_of(path, tmp_path)
+        victim = next(f for f in os.listdir(dst) if f.startswith("decode_"))
+        os.remove(os.path.join(dst, victim))
+        with pytest.raises(FileNotFoundError):
+            load_store(dst)
+
+    def test_bit_flipped_meta_detected(self, saved_single, tmp_path):
+        _, _, path = saved_single
+        dst = copy_of(path, tmp_path)
+        flip_byte(os.path.join(dst, "meta.msgpack"))
+        with pytest.raises((IntegrityError, ValueError)):
+            load_store(dst)
+
+    def test_injected_corruption_detected(self, saved_single, tmp_path):
+        # The artifact_read corrupt site flips a payload byte between
+        # the disk and the checksum check — which must catch it.
+        _, _, path = saved_single
+        plan = FaultPlan(
+            [FaultSpec(site="artifact_read", kind="corrupt",
+                       owner="vexist.bin")]
+        )
+        with plan.activate():
+            with pytest.raises(IntegrityError, match="vexist.bin"):
+                load_store(path)
+        assert plan.fired == 1
+
+    def test_bit_flipped_baseline_detected(self, tmp_path):
+        table = make_periodic_table(n=300)
+        store = HashStore.build(table, codec="none", partition_bytes=2048)
+        path = str(tmp_path / "hash.msgpack")
+        store.save(path)
+        flip_byte(path)
+        with pytest.raises((IntegrityError, ValueError)) as exc_info:
+            repro.open(path)
+        if isinstance(exc_info.value, IntegrityError):
+            # Corruption must be reported as corruption, not wrapped in
+            # the "unrecognized format" error.
+            assert "supported formats" not in str(exc_info.value)
+
+
+# ------------------------------------------------------ atomic-save hygiene
+class TestAtomicSaveHygiene:
+    def test_stale_tmp_cleaned_on_load_with_warning(
+        self, saved_single, tmp_path
+    ):
+        table, store, path = saved_single
+        dst = copy_of(path, tmp_path)
+        os.makedirs(dst + ".tmp")
+        with open(os.path.join(dst + ".tmp", "junk"), "wb") as f:
+            f.write(b"half-written")
+        with pytest.warns(RuntimeWarning, match="stale"):
+            loaded = load_store(dst)
+        assert not os.path.exists(dst + ".tmp")
+        assert_same_lookup(store, loaded, table.keys[:50])
+
+    def test_interrupted_save_detected_by_open(self, tmp_path):
+        path = str(tmp_path / "store")
+        os.makedirs(path + ".tmp")
+        with pytest.raises(ValueError, match="interrupted save"):
+            repro.open(path)
+
+    def test_clean_stale_tmp_reports(self, tmp_path):
+        path = str(tmp_path / "x")
+        assert clean_stale_tmp(path) is False  # nothing to do
+        os.makedirs(path + ".tmp")
+        with pytest.warns(RuntimeWarning):
+            assert clean_stale_tmp(path) is True
+        assert not os.path.exists(path + ".tmp")
+
+    def test_save_is_atomic_over_existing(self, small_store, tmp_path):
+        # Re-saving over an existing directory leaves no .tmp behind
+        # and the result loads clean.
+        table, store = small_store
+        path = str(tmp_path / "store")
+        save_store(store, path)
+        save_store(store, path)
+        assert not os.path.exists(path + ".tmp")
+        assert_same_lookup(store, load_store(path), table.keys[:50])
+
+
+# ------------------------------------------------------ shard quarantine
+def corrupt_shard(path, shard=1, artifact="aux.msgpack"):
+    flip_byte(os.path.join(path, f"shard_{shard:05d}", artifact))
+
+
+class TestShardQuarantine:
+    def test_raise_mode_propagates(self, saved_cluster, tmp_path):
+        _, _, path = saved_cluster
+        dst = copy_of(path, tmp_path)
+        corrupt_shard(dst)
+        with pytest.raises(IntegrityError, match="aux.msgpack"):
+            load_sharded_store(dst)
+
+    def test_invalid_on_corrupt_rejected(self, saved_cluster):
+        _, _, path = saved_cluster
+        with pytest.raises(ValueError, match="on_corrupt"):
+            load_sharded_store(path, on_corrupt="bogus")
+
+    @pytest.fixture()
+    def quarantined(self, saved_cluster, tmp_path):
+        table, cluster, path = saved_cluster
+        dst = copy_of(path, tmp_path)
+        corrupt_shard(dst)
+        before = counter_value(
+            "deepmap_fault_quarantines_total", owner="shard:1"
+        )
+        with pytest.warns(RuntimeWarning, match="quarantining shard 1"):
+            loaded = repro.open(dst, on_corrupt="quarantine")
+        assert (
+            counter_value("deepmap_fault_quarantines_total", owner="shard:1")
+            - before
+            == 1
+        )
+        return table, cluster, loaded
+
+    def test_healthy_shards_serve_byte_identical(self, quarantined):
+        table, cluster, loaded = quarantined
+        assert loaded.quarantined_shards() == [1]
+        ref_values, ref_exists = cluster.lookup(table.keys)
+        sid = cluster.partitioner.shard_of(table.keys)
+        healthy = sid != 1
+
+        res = (
+            loaded.query()
+            .where_keys(table.keys)
+            .on_error("partial")
+            .execute()
+        )
+        np.testing.assert_array_equal(res.exists[healthy], ref_exists[healthy])
+        for col in ref_values:
+            np.testing.assert_array_equal(
+                res.values[col][healthy], ref_values[col][healthy]
+            )
+        assert not res.exists[~healthy].any()
+        assert res.explain.keys_unresolved == int((~healthy).sum())
+        assert len(res.explain.owners_failed) == 1
+
+    def test_point_lookup_raise_mode_refuses(self, quarantined):
+        table, _, loaded = quarantined
+        with pytest.raises(OwnerFailure, match="shard:1"):
+            loaded.query().where_keys(table.keys).execute()
+
+    def test_scans_and_ranges_refuse_loudly(self, quarantined):
+        table, _, loaded = quarantined
+        with pytest.raises(IntegrityError, match="quarantined"):
+            loaded.query().scan().execute()
+        with pytest.raises(IntegrityError, match="quarantined"):
+            loaded.query().where_range(
+                int(table.keys[0]), int(table.keys[-1])
+            ).execute()
+
+    def test_mutations_refuse(self, quarantined):
+        table, _, loaded = quarantined
+        # The last key routes to the quarantined range shard.
+        with pytest.raises(IntegrityError):
+            loaded.delete(table.keys[-1:])
+
+    def test_resave_refuses_data_laundering(self, quarantined, tmp_path):
+        # Persisting a cluster with quarantined placeholders would
+        # turn "corrupt but detected" into silent data loss.
+        _, _, loaded = quarantined
+        with pytest.raises(IntegrityError, match="refusing to save"):
+            save_sharded_store(loaded, str(tmp_path / "resaved"))
+
+    def test_row_accounting_survives_quarantine(self, quarantined):
+        table, cluster, loaded = quarantined
+        # num_rows comes from the manifest's shard_rows, so capacity
+        # reporting stays truthful even for the placeholder.
+        assert loaded.num_rows == cluster.num_rows == table.keys.size
+
+    def test_all_shards_corrupt_still_raises(self, saved_cluster, tmp_path):
+        _, _, path = saved_cluster
+        dst = copy_of(path, tmp_path)
+        corrupt_shard(dst, shard=0)
+        corrupt_shard(dst, shard=1)
+        with pytest.warns(RuntimeWarning):
+            with pytest.raises(IntegrityError, match="every shard"):
+                load_sharded_store(dst, on_corrupt="quarantine")

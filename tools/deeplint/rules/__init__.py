@@ -15,6 +15,7 @@ from tools.deeplint.rules import (
     metric_naming,
     mutation_version,
     stripped_assert,
+    swallowed_exception,
 )
 
 ALL_RULES = [
@@ -25,6 +26,7 @@ ALL_RULES = [
     mutation_version,
     layering,
     metric_naming,
+    swallowed_exception,
 ]
 
 RULE_IDS = {mod.RULE_ID: mod for mod in ALL_RULES}

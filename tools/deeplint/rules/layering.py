@@ -31,7 +31,8 @@ SUMMARY = "module-scope import crosses a forbidden package boundary"
 ALLOWED: Dict[str, Tuple[str, ...]] = {
     "repro.obs": (),
     "repro.storage": (),
-    "repro.api": ("repro.obs", "repro.storage"),
+    "repro.fault": ("repro.obs",),
+    "repro.api": ("repro.obs", "repro.storage", "repro.fault"),
     "repro.kernels": ("repro.core", "repro.obs", "repro.storage"),
     "repro.core": (
         "repro.api.plan",
@@ -44,12 +45,14 @@ ALLOWED: Dict[str, Tuple[str, ...]] = {
         "repro.obs",
         "repro.storage",
         "repro.configs",
+        "repro.fault",
     ),
     "repro.baselines": (
         "repro.api",
         "repro.core",
         "repro.obs",
         "repro.storage",
+        "repro.fault",
     ),
     "repro.cluster": (
         "repro.api",
@@ -59,6 +62,7 @@ ALLOWED: Dict[str, Tuple[str, ...]] = {
         "repro.obs",
         "repro.storage",
         "repro.sharding",
+        "repro.fault",
     ),
     "repro.serve": (
         "repro.api",
@@ -68,6 +72,7 @@ ALLOWED: Dict[str, Tuple[str, ...]] = {
         "repro.models",
         "repro.obs",
         "repro.storage",
+        "repro.fault",
     ),
 }
 

@@ -1,0 +1,72 @@
+"""Rule ``swallowed-exception``: error paths that erase the error.
+
+The fault-tolerance layer (``repro.fault``) exists so failures become
+STRUCTURED evidence — ``OwnerError`` on explain stats, retry/quarantine
+counters, typed raises.  A handler that swallows an exception defeats
+all of it: the failure neither surfaces nor counts.  Two shapes are
+flagged:
+
+* ``except ...: pass`` (with or without a binding) — the caught
+  exception vanishes without a trace;
+* bare ``except:`` — catches ``SystemExit``/``KeyboardInterrupt`` too,
+  regardless of body.
+
+A handler that re-raises, logs, records an outcome, or returns a
+degraded value is fine — only a body that is nothing but ``pass``
+(docstrings included) counts as swallowing.  A deliberate best-effort
+cleanup can carry ``# deeplint: ignore[swallowed-exception]``.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List
+
+from tools.deeplint.engine import Finding, Project
+
+RULE_ID = "swallowed-exception"
+SUMMARY = (
+    "except handler swallows the exception (bare except, or a body of "
+    "only pass) — failures must surface or be recorded"
+)
+
+
+def _only_passes(body: List[ast.stmt]) -> bool:
+    """True when the handler body does nothing: ``pass`` statements
+    and/or a lone docstring/constant expression."""
+    for stmt in body:
+        if isinstance(stmt, ast.Pass):
+            continue
+        if isinstance(stmt, ast.Expr) and isinstance(stmt.value, ast.Constant):
+            continue  # docstring-style constant, still does nothing
+        return False
+    return True
+
+
+def check(project: Project) -> Iterable[Finding]:
+    findings: List[Finding] = []
+    for src in project.modules:
+        for node in ast.walk(src.tree):
+            if not isinstance(node, ast.ExceptHandler):
+                continue
+            if node.type is None:
+                findings.append(
+                    src.finding(
+                        RULE_ID,
+                        node,
+                        "bare except: catches SystemExit/KeyboardInterrupt "
+                        "and hides the failure type; name the exception "
+                        "class(es)",
+                    )
+                )
+            elif _only_passes(node.body):
+                findings.append(
+                    src.finding(
+                        RULE_ID,
+                        node,
+                        "except body is only pass — the failure neither "
+                        "surfaces nor counts; re-raise, record an "
+                        "OwnerError/metric, or return a degraded value",
+                    )
+                )
+    return findings
