@@ -158,6 +158,83 @@ def _timed(fn, batches) -> Dict:
     }
 
 
+def run_engine_tiers(store, batches: List[np.ndarray]) -> Dict:
+    """Residency-tier breakdown on ONE store: resident ``fused``,
+    page-streamed ``fused_streamed`` (the VMEM budget squeezed via
+    ``REPRO_VMEM_BUDGET`` so the model is over budget — the case that
+    used to be a hard ``check_vmem_budget`` failure), and the
+    ``jit_keys`` fallback.  Same key batches through a fresh engine per
+    tier; the jit result is the byte-identity reference for both
+    kernel tiers (the streamed acceptance bar)."""
+    from repro.core.inference import InferenceEngine
+    from repro.kernels import ops as kops
+
+    def fresh_engine(use_pallas: bool, budget=None) -> InferenceEngine:
+        old = os.environ.get("REPRO_VMEM_BUDGET")
+        if budget is None:
+            os.environ.pop("REPRO_VMEM_BUDGET", None)
+        else:
+            os.environ["REPRO_VMEM_BUDGET"] = str(int(budget))
+        try:
+            return InferenceEngine(
+                store.encoder, store.spec, store.params, store.vexist,
+                use_pallas=use_pallas,
+            )
+        finally:
+            if old is None:
+                os.environ.pop("REPRO_VMEM_BUDGET", None)
+            else:
+                os.environ["REPRO_VMEM_BUDGET"] = old
+
+    probe = fresh_engine(True)
+    entry = probe._entry(store.spec.tasks)
+    # One byte under the digits tier's weight requirement: both
+    # resident kernel tiers are over budget, head pages still fit.
+    squeeze = (
+        kops.padded_weight_bytes(entry.spec)
+        + kops.activation_bytes(entry.spec, probe.tile_n)
+        - 1
+    )
+    tiers = (
+        ("jit_keys", fresh_engine(False)),
+        ("fused", probe),
+        ("fused_streamed", fresh_engine(True, budget=squeeze)),
+    )
+
+    def lookup_once(eng, keys):
+        keys = np.asarray(keys, dtype=np.int64)
+        t = eng.dispatch(keys, want_exists=True)
+        codes, exists = eng.collect(t)
+        if exists is None:
+            exists = store.vexist.test(keys)
+        return t.path, codes, exists
+
+    out: Dict = {}
+    ref = None
+    for name, eng in tiers:
+        path, codes, exists = lookup_once(eng, batches[0])
+        assert path == name, f"expected tier {name}, engine took {path}"
+        if ref is None:
+            ref = (codes, exists)
+            identical = True
+        else:
+            identical = bool(
+                np.array_equal(codes, ref[0]) and np.array_equal(exists, ref[1])
+            )
+        r = _timed(lambda b, eng=eng: lookup_once(eng, b), batches)
+        out[name] = {
+            "path": name,
+            "vmem_budget_bytes": eng.vmem_budget,
+            "byte_identical_to_jit": identical,
+            **r,
+        }
+        C.emit(
+            f"lookup/engine_tiers/{name}", r["p50_s"] * 1e6,
+            f"qps={r['qps']:.0f} identical={identical}",
+        )
+    return out
+
+
 def run_pipeline(
     n: int = 1_000_000,
     fixed_batch: int = 1 << 16,
@@ -248,6 +325,14 @@ def run_pipeline(
         "lookup/pipeline/obs_overhead", 0.0,
         f"qps_on={on:.0f} qps_off={off:.0f} "
         f"regression={results['obs_overhead']['regression_pct']:.2f}%",
+    )
+
+    # --- residency-tier breakdown (streamed tier acceptance) ---
+    # Smaller batches than the pipeline workload: the kernel tiers run
+    # in interpret mode on CPU, and the record needs relative QPS +
+    # byte-identity, not absolute throughput.
+    results["engine_tiers"] = run_engine_tiers(
+        store, [sample(8192) for _ in range(4)]
     )
 
     t = store.engine.dispatch(all_keys[:8], want_exists=True)

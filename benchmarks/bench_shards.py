@@ -109,6 +109,96 @@ DEGRADED_CFG = DeepMappingConfig(
 )
 
 
+def run_mesh(
+    dataset: str = "tpcds_customer_demographics",
+    num_shards: int = 4,
+    batch: int = 4000,
+    batches: int = 30,
+    smoke: bool = False,
+) -> dict:
+    """Mesh shard scatter vs thread-pool fan-out on the same cluster.
+
+    With ≥ 2 devices (CI virtualizes them via
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``) the scatter
+    answers each lookup batch in one ``shard_map`` launch; the
+    thread-pool rows re-measure the same batches with the
+    ``REPRO_MESH_SCATTER=0`` kill switch.  On one device the mesh path
+    declines (``mesh_active: false``) and both rows measure the thread
+    pool — the record says which regime it captured either way.
+    Byte-identity of the two paths is recorded from the first batch.
+    """
+    import os
+
+    import jax
+
+    if smoke:
+        batch, batches = 2000, 10
+    table = C.DATASETS[dataset]()
+    pool = MemoryPool(1 << 30)
+    store = ShardedDeepMappingStore.build(
+        table, DEGRADED_CFG,
+        ClusterConfig(num_shards=num_shards, policy="range"), pool=pool,
+    )
+    rng = np.random.default_rng(1)
+    key_batches = [
+        rng.choice(table.keys, size=min(batch, table.num_rows), replace=True)
+        for _ in range(batches)
+    ]
+
+    def measure(mesh_off: bool) -> dict:
+        old = os.environ.get("REPRO_MESH_SCATTER")
+        if mesh_off:
+            os.environ["REPRO_MESH_SCATTER"] = "0"
+        try:
+            first = store.query().where_keys(key_batches[0]).execute()  # warm
+            lat = []
+            for keys in key_batches:
+                t0 = time.perf_counter()
+                store.query().where_keys(keys).execute()
+                lat.append(time.perf_counter() - t0)
+        finally:
+            if old is None:
+                os.environ.pop("REPRO_MESH_SCATTER", None)
+            else:
+                os.environ["REPRO_MESH_SCATTER"] = old
+        total = sum(k.size for k in key_batches)
+        lat_us = np.asarray(lat) * 1e6
+        return {
+            "qps": total / float(np.sum(lat)),
+            "p50_us": float(np.percentile(lat_us, 50)),
+            "p99_us": float(np.percentile(lat_us, 99)),
+        }, first
+
+    scatter, first_m = measure(mesh_off=False)
+    threadpool, first_t = measure(mesh_off=True)
+    mesh_active = store._mesh_runner() is not None
+    identical = bool(
+        np.array_equal(first_m.exists, first_t.exists)
+        and all(
+            np.array_equal(first_m.values[c], first_t.values[c])
+            for c in first_m.values
+        )
+    )
+    label = f"mesh[{dataset}]/K={num_shards}"
+    for name, row in (("scatter", scatter), ("threadpool", threadpool)):
+        C.emit(
+            f"{label}/{name}", row["p50_us"],
+            f"qps={row['qps']:.0f};p99_us={row['p99_us']:.0f};"
+            f"active={mesh_active}",
+        )
+    return {
+        "dataset": dataset,
+        "shards": num_shards,
+        "batch": batch,
+        "batches": batches,
+        "device_count": int(jax.device_count()),
+        "mesh_active": mesh_active,
+        "byte_identical": identical,
+        "scatter": scatter,
+        "threadpool": threadpool,
+    }
+
+
 def run_degraded(
     dataset: str = "tpcds_customer_demographics",
     num_shards: int = 4,

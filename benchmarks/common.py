@@ -126,9 +126,15 @@ def bench_metadata() -> Dict:
     currently CPU-only and the records must SAY so, not imply it."""
     import jax
 
+    import repro.core  # noqa: F401  (import order: core before kernels)
+    from repro.kernels.ops import vmem_budget_bytes
+
     return {
         "backend": jax.default_backend(),
         "device_count": jax.device_count(),
+        # The budget that drove tier selection for every store in this
+        # record (REPRO_VMEM_BUDGET env > per-backend table > default).
+        "vmem_budget_bytes": vmem_budget_bytes(),
         "platform": platform.platform(),
         "python": platform.python_version(),
         "jax": jax.__version__,

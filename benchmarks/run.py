@@ -19,7 +19,8 @@ Sections:
             serial, value-predicate pushdown vs post-hoc filter, plus
             the adaptive-execution section (warm-vs-cold plan cache,
             baseline partition pruning, adaptive vs fixed morsel
-            sizing); writes BENCH_query.json at the repo root
+            sizing) and the mesh shard-scatter vs thread-pool fan-out
+            comparison; writes BENCH_query.json at the repo root
             (uploaded by the CI smoke-bench job alongside
             BENCH_lookup.json)
   lookup_pipeline — staged (seed path) vs pipelined (inference engine)
@@ -93,6 +94,7 @@ def main() -> None:
                 bench_query.run_streaming(smoke=args.smoke),
                 adaptive=bench_query.run_adaptive(smoke=args.smoke),
                 degraded=bench_shards.run_degraded(smoke=args.smoke),
+                mesh=bench_shards.run_mesh(smoke=args.smoke),
             )
         ),
         # lazy: bench_tokens hard-imports zstandard (optional elsewhere);

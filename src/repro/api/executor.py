@@ -53,6 +53,7 @@ import numpy as np
 from repro import obs
 from repro.api.cache import plan_fingerprint
 from repro.api.plan import (
+    DEFAULT_MORSEL,
     ExplainStats,
     OperatorStats,
     Predicate,
@@ -106,6 +107,44 @@ def next_morsel_rows(rows: int, operator_seconds: float) -> int:
         return min(rows * 2, ADAPT_MAX)
     if operator_seconds > ADAPT_HIGH_S and rows > ADAPT_MIN:
         return max(rows // 2, ADAPT_MIN)
+    return rows
+
+
+#: First-morsel operator-time target: the geometric midpoint of the
+#: adaptive band (~11.3 ms) — a seed landing there needs no resizing.
+SEED_TARGET_S = (ADAPT_LOW_S * ADAPT_HIGH_S) ** 0.5
+
+#: Assumed effective batched-inference throughput (flop/s) for the
+#: cost model below.  Calibrated so a ~300 KB model (the common
+#: build in this repo's benchmarks) seeds at :data:`DEFAULT_MORSEL` —
+#: the seed only moves the start for models meaningfully bigger or
+#: smaller, and adaptive resizing corrects any residual error.
+SEED_THROUGHPUT_FLOPS = 1e12
+
+
+def seed_morsel_rows(model_bytes: int, max_rows: int = ADAPT_MAX) -> int:
+    """Cost-model seed for the FIRST morsel of an adaptive plan.
+
+    A row through an MLP of ``model_bytes`` float32 parameters costs
+    about ``model_bytes / 2`` flops (two flops per weight, four bytes
+    per weight); at :data:`SEED_THROUGHPUT_FLOPS` that gives an
+    estimated per-row time, and the seed is the power of two whose
+    morsel lands nearest :data:`SEED_TARGET_S` — so adaptive resizing
+    starts inside (or next to) the target band instead of walking
+    there from a fixed 2^16.  Clamped to ``[ADAPT_MIN, min(ADAPT_MAX,
+    max_rows)]`` with a power-of-two floor so the device batch buckets
+    stay warm.  ``model_bytes <= 0`` (baseline stores have no model)
+    returns :data:`DEFAULT_MORSEL` — their seed is unchanged.  Pure so
+    the seeding rule is unit-testable.
+    """
+    if model_bytes <= 0:
+        return DEFAULT_MORSEL
+    per_row_s = (model_bytes / 2) / SEED_THROUGHPUT_FLOPS
+    want = int(SEED_TARGET_S / per_row_s)
+    cap = min(ADAPT_MAX, max(int(max_rows), ADAPT_MIN))
+    rows = ADAPT_MIN
+    while rows * 2 <= min(want, cap):
+        rows *= 2
     return rows
 
 
@@ -175,9 +214,27 @@ class PlanStream:
         self._t_plan0 = time.perf_counter()
         self.fixed = plan.morsel is not None
         self._morsel_rows = plan.morsel_rows()
+        if not self.fixed:
+            # Cost-model seed (satellite of the device-residency work):
+            # start adaptive sizing from the store's model footprint
+            # instead of a fixed 2^16.  Baselines (no "model" component)
+            # keep the DEFAULT_MORSEL seed bit-for-bit.
+            self._morsel_rows = seed_morsel_rows(
+                int(store.size_breakdown().get("model", 0)),
+                max_rows=getattr(
+                    getattr(store, "config", None), "inference_batch",
+                    ADAPT_MAX,
+                ),
+            )
         self.fanout = True if plan.fanout is None else plan.fanout
         self.preds: Tuple[Predicate, ...] = (
             plan.predicates if plan.pushdown else ()
+        )
+        #: Dispatch capability: the store will evaluate these pushdown
+        #: predicates in-kernel (match bits ride the inference call), so
+        #: the executor's host Filter stage is expected to be a no-op.
+        self.kernel_filter = bool(self.preds) and bool(
+            store.supports_kernel_filter(self.preds)
         )
         #: range/scan keys come from the existence index, so every key
         #: is known to exist — the hint baseline partition pruning needs.
@@ -557,10 +614,21 @@ class _Gatherer:
         stats.plan_cache = run.cache_state
         stats.morsel_sizes = tuple(run.sizes)
         filtered = bool(self.plan.predicates)
+        # Kernel-filter evidence: the capability flag says the store
+        # *promised* in-kernel evaluation; ``stats.kernel_filtered``
+        # (or-merged across morsels) says at least one morsel delivered.
+        kfilter = filtered and (run.kernel_filter or stats.kernel_filtered)
         stats.plan = (
             (run.plan.source_stage(),)
             + self.inner_plan
-            + ((f"filter[{','.join(stats.predicates)}]",) if filtered else ())
+            + (
+                (
+                    f"filter[{'kernel:' if kfilter else ''}"
+                    f"{','.join(stats.predicates)}]",
+                )
+                if filtered
+                else ()
+            )
             + (f"gather[{stats.morsels} morsels]",)
             + (
                 (f"degraded[{len(stats.owners_failed)} owners]",)
@@ -577,7 +645,13 @@ class _Gatherer:
         ops.append(OperatorStats("exist", n, n, stats.exist_s))
         ops.append(OperatorStats("aux_merge", n, n, stats.aux_s))
         if filtered:
-            ops.append(OperatorStats("filter", n, stats.rows_matched, stats.filter_s))
+            # Under the in-kernel path the host stage only patches
+            # aux-overridden rows, so filter_s collapses toward zero;
+            # the renamed operator row records why.
+            ops.append(OperatorStats(
+                "filter[kernel]" if kfilter else "filter",
+                n, stats.rows_matched, stats.filter_s,
+            ))
         ops.append(
             OperatorStats("decode", stats.rows_decoded, stats.rows_decoded,
                           stats.decode_s)

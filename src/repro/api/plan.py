@@ -282,6 +282,11 @@ class ExplainStats:
     predicates: Tuple[str, ...] = ()
     rows_decoded: int = 0
     rows_matched: int = 0
+    #: True when the pushed-down predicates were evaluated *in-kernel*
+    #: (fused Pallas tier emitted match bits with the codes), so the
+    #: host filter stage only patched aux-overridden rows.  ``filter_s``
+    #: then measures that patch, not a per-row table gather.
+    kernel_filtered: bool = False
     partitions_pruned: int = 0
     plan_cache: str = ""
     morsel_sizes: Tuple[int, ...] = ()
@@ -340,6 +345,7 @@ class ExplainStats:
         self.columns_decoded = _union(self.columns_decoded, other.columns_decoded)
         self.columns_skipped = _union(self.columns_skipped, other.columns_skipped)
         self.predicates = _union(self.predicates, other.predicates)
+        self.kernel_filtered = self.kernel_filtered or other.kernel_filtered
 
 
 @dataclasses.dataclass

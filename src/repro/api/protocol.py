@@ -243,6 +243,18 @@ class MappingStore(abc.ABC):
             values = {c: values[c] for c in selected}
         return values, exists, match, stats
 
+    def supports_kernel_filter(self, predicates: tuple = ()) -> bool:
+        """Dispatch capability flag: ``True`` when the pushed-down
+        ``predicates`` would be evaluated *inside* the store's device
+        kernel (match bits emitted alongside codes + exist bits), so
+        the executor's host ``Filter`` stage is redundant and may be
+        skipped.  The default is ``False`` — baseline stores filter on
+        the host.  Advisory only: the executor still honours the
+        ``match`` column returned by :meth:`_collect_lookup`, so a
+        store that answers ``True`` but falls back to host filtering
+        for some chunk remains correct."""
+        return False
+
     # ------------------------------------------------- executor stats hook
     def _lookup_with_stats(
         self,

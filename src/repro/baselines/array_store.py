@@ -239,13 +239,28 @@ class ArrayStore(PartitionedBaselineStore):
 
     # ---------------------------------------------------------- persistence
     def _extra_state(self) -> Dict:
-        return {
+        state = {
             "dictionary": self.dictionary,
             "decoders": {
                 name: _array_to_state(vc.decode_map)
                 for name, vc in self._decoders.items()
             },
         }
+        if self._zone_maps:
+            # Persist whichever zone maps are already built (bit-packed:
+            # a map is bool (partitions, cardinality)) so a loaded store
+            # prunes from the first predicated scan without re-reading
+            # every partition.  They ride the v2 envelope, so the crc
+            # covers them like every other field.
+            state["zone_maps"] = {
+                name: {
+                    "partitions": int(zone.shape[0]),
+                    "cardinality": int(zone.shape[1]),
+                    "bits": np.packbits(zone, axis=None).tobytes(),
+                }
+                for name, zone in self._zone_maps.items()
+            }
+        return state
 
     @classmethod
     def _construct(cls, state: Dict, pool: Optional[MemoryPool]) -> "ArrayStore":
@@ -259,5 +274,24 @@ class ArrayStore(PartitionedBaselineStore):
         for name, dm_state in state["extra"]["decoders"].items():
             store._decoders[name] = ValueCodec.from_decode_map(
                 name, _array_from_state(dm_state)
+            )
+        n_parts = len(state["partitions"])
+        for name, zm in state["extra"].get("zone_maps", {}).items():
+            # A stale or malformed map (unknown column, partition count
+            # or cardinality drift, truncated bits) is silently dropped:
+            # the lazy build in ``_partition_code_presence`` regenerates
+            # it, so pruning degrades to a first-scan rebuild instead of
+            # a load failure.
+            vc = store._decoders.get(name)
+            rows, card = int(zm["partitions"]), int(zm["cardinality"])
+            if vc is None or rows != n_parts or card != vc.cardinality:
+                continue
+            bits = np.frombuffer(zm["bits"], dtype=np.uint8)
+            if bits.size * 8 < rows * card:
+                continue
+            store._zone_maps[name] = (
+                np.unpackbits(bits, count=rows * card)
+                .reshape(rows, card)
+                .astype(bool)
             )
         return store

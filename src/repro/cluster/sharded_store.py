@@ -87,6 +87,11 @@ class _PendingShardedLookup:
     predicates: tuple = ()
     keys_exist: bool = False
     on_error: str = "raise"
+    #: True when device inference for this batch ran as ONE mesh
+    #: shard-scatter launch (per-shard precomputed tickets) instead of
+    #: per-shard dispatches; plan evidence reads ``mesh`` in place of
+    #: ``fanout``/``serial``.
+    mesh: bool = False
 
 
 @dataclasses.dataclass(frozen=True)
@@ -97,6 +102,11 @@ class ClusterConfig:
     policy: str = "range"          # "range" (planner-balanced) | "hash"
     seed: int = 0                  # hash-policy mixing seed
     max_workers: Optional[int] = None  # build/retrain thread pool size
+    #: Scatter device inference across a multi-device mesh when ≥ 2
+    #: devices exist (``repro.cluster.mesh_scatter``); the thread-pool
+    #: fan-out remains the fallback and the host-half path either way.
+    #: Env kill-switch: ``REPRO_MESH_SCATTER=0``.
+    mesh_scatter: bool = True
 
 
 class _QuarantinedIndex:
@@ -230,6 +240,11 @@ class ShardedDeepMappingStore(MappingStore):
         self.pool = pool
         self.retry = retry
         self._fanout = LazyFanoutPool(cluster.max_workers, "shard-lookup")
+        # Mesh scatter runner, built lazily on first eligible dispatch
+        # (touching jax device state at construction would make simply
+        # *holding* a cluster initialize a backend).
+        self._mesh_runner_cache: object = None
+        self._mesh_probed = False
         # One engine cache for the fleet: shard engines share a single
         # EngineStats, so identical (architecture, bucket) signatures
         # count as ONE compile cluster-wide and operators read one
@@ -334,19 +349,65 @@ class ShardedDeepMappingStore(MappingStore):
         batches = self.router.scatter(keys)
         route_s = time.perf_counter() - t0
         use_fanout = bool(fanout) and len(batches) > 1
+        mesh_tickets = self._mesh_tickets(batches)
         handles = []
         for b in batches:
             try:
-                handles.append((True, self.shards[b.shard_id]._dispatch_lookup(
-                    b.keys, columns, predicates=predicates, keys_exist=keys_exist
-                )))
+                shard = self.shards[b.shard_id]
+                if mesh_tickets is not None and b.shard_id in mesh_tickets:
+                    handles.append((True, shard._dispatch_precomputed(
+                        b.keys, mesh_tickets[b.shard_id], columns, predicates,
+                    )))
+                else:
+                    handles.append((True, shard._dispatch_lookup(
+                        b.keys, columns, predicates=predicates,
+                        keys_exist=keys_exist,
+                    )))
             except Exception as exc:  # captured; retried at collect
                 handles.append((False, exc))
         return _PendingShardedLookup(
             keys=keys, batches=batches, handles=handles, route_s=route_s,
             use_fanout=use_fanout, columns=columns, predicates=predicates,
             keys_exist=keys_exist, on_error=on_error,
+            mesh=mesh_tickets is not None,
         )
+
+    def _mesh_tickets(self, batches) -> Optional[dict]:
+        """Precomputed per-shard inference tickets via the device mesh,
+        or None (thread-pool path).  Any mesh failure degrades to None
+        with a warning + counter — never a failed plan: the per-shard
+        dispatch below answers the same batch."""
+        if len(batches) < 2 or not self._mesh_enabled():
+            return None
+        runner = self._mesh_runner()
+        if runner is None:
+            return None
+        try:
+            return runner.tickets(batches)
+        except Exception as exc:
+            obs.counter(
+                "deepmap_mesh_scatter_failures_total",
+                "Mesh scatter launches degraded to the thread pool.",
+            ).inc()
+            warnings.warn(f"mesh scatter failed, using thread pool: {exc}")
+            return None
+
+    def _mesh_enabled(self) -> bool:
+        if not self.cluster.mesh_scatter:
+            return False
+        return os.environ.get("REPRO_MESH_SCATTER", "").strip() != "0"
+
+    def _mesh_runner(self):
+        """Lazily built :class:`~repro.cluster.mesh_scatter.
+        MeshShardRunner` (None when < 2 devices or the fleet is not
+        stackable).  Probed once; retrain-driven drift is re-validated
+        per launch inside the runner, which degrades to None."""
+        if not self._mesh_probed:
+            from repro.cluster.mesh_scatter import MeshShardRunner
+
+            self._mesh_runner_cache = MeshShardRunner.maybe_build(self.shards)
+            self._mesh_probed = True
+        return self._mesh_runner_cache
 
     def _collect_lookup(
         self, pending: _PendingShardedLookup
@@ -450,7 +511,7 @@ class ShardedDeepMappingStore(MappingStore):
             agg.merge_timings(p[4])
         agg.plan = (
             f"scatter[{len(batches)} shards]",
-            "fanout" if use_fanout else "serial",
+            "mesh" if pending.mesh else ("fanout" if use_fanout else "serial"),
         ) + healthy[0][4].plan
 
         t1 = time.perf_counter()

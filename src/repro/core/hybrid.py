@@ -92,6 +92,9 @@ class _PendingLookup:
     tickets: list                      # [(start, InferTicket), ...] in flight
     next_start: int                    # first key offset not yet dispatched
     dispatch_s: float
+    #: ((column, bool code table), ...) shipped to the engine so the
+    #: fused kernel can evaluate the predicate conjunction in-kernel.
+    kernel_tables: tuple = ()
 
 
 class DeepMappingStore(MappingStore):
@@ -267,21 +270,14 @@ class DeepMappingStore(MappingStore):
         ``on_error`` — a single-owner store has no healthy subset to
         degrade to, so the executor owns its partial fallback."""
         keys = np.asarray(keys, dtype=np.int64)
-        all_tasks = self.spec.tasks
-        selected = tuple(t for t in all_tasks if columns is None or t in columns)
-        pred_cols = frozenset(p.column for p in predicates)
-        wanted = tuple(
-            t for t in all_tasks if t in pred_cols or t in selected
-        )
-        skipped = tuple(t for t in all_tasks if t not in wanted)
         t0 = time.perf_counter()
-        preds = tuple(
-            (wanted.index(p.column), self._pred_table(p), p.describe())
-            for p in predicates
+        selected, wanted, skipped, preds, ktables = self._plan_lookup(
+            columns, predicates
         )
         pending = _PendingLookup(
             keys=keys, wanted=wanted, decode=selected, skipped=skipped,
             preds=preds, tickets=[], next_start=0, dispatch_s=0.0,
+            kernel_tables=ktables,
         )
         if keys.shape[0] and wanted:
             while (
@@ -291,6 +287,30 @@ class DeepMappingStore(MappingStore):
                 self._dispatch_next_chunk(pending)
         pending.dispatch_s = time.perf_counter() - t0
         return pending
+
+    def _plan_lookup(
+        self, columns: Optional[Tuple[str, ...]], predicates: tuple
+    ) -> tuple:
+        """Shared planning half of :meth:`_dispatch_lookup`: resolve the
+        projection/predicate head sets and compile the predicate code
+        tables once.  Returns ``(selected, wanted, skipped, preds,
+        kernel_tables)`` where ``kernel_tables`` pairs each predicate
+        column with its boolean table for the in-kernel filter path."""
+        all_tasks = self.spec.tasks
+        selected = tuple(t for t in all_tasks if columns is None or t in columns)
+        pred_cols = frozenset(p.column for p in predicates)
+        wanted = tuple(
+            t for t in all_tasks if t in pred_cols or t in selected
+        )
+        skipped = tuple(t for t in all_tasks if t not in wanted)
+        preds = tuple(
+            (wanted.index(p.column), self._pred_table(p), p.describe())
+            for p in predicates
+        )
+        ktables = tuple(
+            (p.column, preds[i][1]) for i, p in enumerate(predicates)
+        )
+        return selected, wanted, skipped, preds, ktables
 
     def _pred_table(self, pred) -> np.ndarray:
         """Memoized boolean code table for one predicate (see
@@ -315,9 +335,50 @@ class DeepMappingStore(MappingStore):
             self.engine.dispatch(
                 pending.keys[start : start + bs], pending.wanted,
                 want_exists=True,
+                pred_tables=pending.kernel_tables or None,
             ),
         ))
         pending.next_start = min(start + bs, pending.keys.shape[0])
+
+    def supports_kernel_filter(self, predicates: tuple = ()) -> bool:
+        """True when ``predicates`` would be evaluated in-kernel: every
+        predicate column is a model head and the full wanted head set
+        fits the resident ``fused`` tier (the streamed and jit tiers
+        filter on the host).  Checked per plan by the executor to skip
+        its host ``Filter`` stage."""
+        if not self.config.use_pallas or not predicates:
+            return False
+        if any(p.column not in self.spec.tasks for p in predicates):
+            return False
+        return self.engine.kernel_filter_capable(self.spec.tasks)
+
+    def _dispatch_precomputed(
+        self,
+        keys: np.ndarray,
+        ticket,
+        columns: Optional[Tuple[str, ...]] = None,
+        predicates: tuple = (),
+    ) -> _PendingLookup:
+        """Pending lookup whose device inference already happened
+        elsewhere — the mesh shard scatter computes codes + exist bits
+        for all shards in one ``shard_map`` launch and hands each shard
+        store a ready :class:`~repro.core.inference.InferTicket` here.
+        The host half of Algorithm 1 (existence fallback, aux merge,
+        predicate filter, decode) still runs in this store's
+        :meth:`_collect_lookup`, so modification overlays and byte
+        contracts are identical to the thread-pool path."""
+        keys = np.asarray(keys, dtype=np.int64)
+        selected, wanted, skipped, preds, _ = self._plan_lookup(
+            columns, predicates
+        )
+        # The scatter computes every head; narrow the ticket to the
+        # wanted subset — collect() selects/permutes via task_order.
+        ticket.tasks = wanted
+        return _PendingLookup(
+            keys=keys, wanted=wanted, decode=selected, skipped=skipped,
+            preds=preds, tickets=[(0, ticket)], next_start=keys.shape[0],
+            dispatch_s=0.0,
+        )
 
     def _collect_lookup(
         self, pending: _PendingLookup
@@ -335,6 +396,10 @@ class DeepMappingStore(MappingStore):
             1, -(-keys.shape[0] // self.config.inference_batch)
         ) if pending.tickets else 0
         fused = bool(pending.tickets) and pending.tickets[0][1].path == "fused"
+        kfilter = (
+            fused and bool(preds)
+            and pending.tickets[0][1].match_dev is not None
+        )
         stats = ExplainStats(
             heads_evaluated=wanted,
             heads_skipped=skipped,
@@ -347,12 +412,20 @@ class DeepMappingStore(MappingStore):
                 "exist[fused]" if fused else "exist",
                 "aux_merge",
             )
-            + ((f"filter[{','.join(d for _, _, d in preds)}]",) if preds else ())
+            + (
+                (
+                    f"filter[{'kernel,' if kfilter else ''}"
+                    f"{','.join(d for _, _, d in preds)}]",
+                )
+                if preds
+                else ()
+            )
             + (
                 f"decode[{','.join(decode_cols)}]",
                 f"pipeline[{max(1, n_chunks)} chunks]",
             ),
         )
+        stats.kernel_filtered = kfilter
         stats.infer_s = pending.dispatch_s
 
         if not pending.tickets:
@@ -401,10 +474,25 @@ class DeepMappingStore(MappingStore):
             # Predicate filter on aux-corrected argmax codes: one
             # boolean gather per predicate, BEFORE any decode.
             if preds:
-                match = exists.copy()
-                for wi, table, _ in preds:
-                    codes_w = np.where(exists, pred[:, wi], 0)
-                    match &= table[codes_w]
+                if ticket.match is not None:
+                    # In-kernel filter: the fused kernel already ANDed
+                    # the predicate code tables over the model codes and
+                    # exist bits; only the (few) aux-overridden rows can
+                    # have changed codes, so re-evaluate just those on
+                    # their corrected codes via the full host tables.
+                    match = ticket.match
+                    aux_rows = exist_idx[found]
+                    if aux_rows.size:
+                        patched = np.ones(aux_rows.shape[0], dtype=bool)
+                        for wi, table, _ in preds:
+                            patched &= table[pred[aux_rows, wi]]
+                        match[aux_rows] = patched
+                else:
+                    stats.kernel_filtered = False
+                    match = exists.copy()
+                    for wi, table, _ in preds:
+                        codes_w = np.where(exists, pred[:, wi], 0)
+                        match &= table[codes_w]
                 hit = np.flatnonzero(match)
                 t5 = time.perf_counter()
                 stats.filter_s += t5 - t4

@@ -33,10 +33,22 @@ Fallback ladder (never raises on eligibility, always answers):
 ``fused`` needs ``use_pallas``, an attached :class:`BitVector`, key
 and word domains within int32, and the VMEM budget; ``pallas_digits``
 drops the in-kernel encode/exist (host digits, host exist);
+``fused_streamed`` covers over-budget models — head weights are
+partitioned into VMEM-sized pages (``kops.plan_head_pages``) and each
+page runs its own ``fused_lookup`` call on the same device key buffer,
+so JAX async dispatch overlaps page *i+1*'s weight transfer with page
+*i*'s compute and a large multi-task model never falls back to jit;
 ``jit_keys`` is the non-Pallas twin with in-graph decomposition;
 ``jit_digits`` is the legacy host-featurized path for >int32 domains.
 Every path produces byte-identical codes/exists (tested in
-``tests/test_kernels.py::TestFusedLookupConformance``).
+``tests/test_kernels.py::TestFusedLookupConformance`` and
+``tests/test_vmem_streaming.py``).
+
+The fused tier can additionally evaluate pushdown predicates in-kernel:
+``dispatch(..., pred_tables=...)`` ships the boolean code tables into
+the ``pallas_call`` and ``InferTicket.match`` carries the match bits
+back (None when the chosen path could not kernel-filter — the caller
+falls back to host filtering).
 """
 
 from __future__ import annotations
@@ -55,6 +67,7 @@ from repro import obs
 from repro.core import model as model_lib
 from repro.core.model import MLPSpec
 from repro.fault import injection as fault_injection
+from repro.kernels import bitvector as bv_kernel
 from repro.kernels import fused_mlp as fm_kernel
 from repro.kernels import ops as kops
 
@@ -73,11 +86,16 @@ class EngineStats:
 
     dispatches: int = 0
     fused_calls: int = 0
+    fused_streamed_calls: int = 0
     pallas_calls: int = 0
     jit_calls: int = 0
     host_featurize_calls: int = 0
     weight_cache_misses: int = 0
     word_uploads: int = 0
+    #: Resolved VMEM residency budget (bytes) of the engine(s) sharing
+    #: this stats object — not a counter; surfaced so ExplainStats/bench
+    #: metadata can report which budget drove tier selection.
+    vmem_budget_bytes: int = 0
 
     def __post_init__(self) -> None:
         self._seen: set = set()  # guarded-by: _lock
@@ -104,8 +122,8 @@ class EngineStats:
         thread pool share this object, and a plain ``+=`` would lose
         updates across threads.  Mirrored into the metrics registry as
         ``deepmap_engine_events_total{event=<field>}`` (dispatches,
-        fused/pallas/jit calls = the fallback-ladder tier taken,
-        weight-cache misses, word uploads)."""
+        fused/fused_streamed/pallas/jit calls = the fallback-ladder
+        tier taken, weight-cache misses, word uploads)."""
         with self._lock:
             setattr(self, field, getattr(self, field) + amount)
         obs.counter(
@@ -175,8 +193,14 @@ class InferTicket:
     want_exists: bool = False
     codes_dev: object = None               # device array / tuple, path-shaped
     exists_dev: object = None              # (n_pad,) int32 device array (fused)
+    match_dev: object = None               # (n_pad,) int32 kernel match bits
     in_cap: Optional[np.ndarray] = None    # host mask (digits paths only)
     task_order: Tuple[str, ...] = ()       # device result order (spec canonical)
+    #: Host copy of the in-kernel predicate match bits, filled by
+    #: ``collect`` — None when the kernel did not filter (caller runs
+    #: the host filter instead).  Aux-overridden rows still need the
+    #: host patch: the kernel matched on the *model* code.
+    match: Optional[np.ndarray] = None
 
 
 class InferenceEngine:
@@ -211,7 +235,11 @@ class InferenceEngine:
         self.tile_n = int(tile_n)
         self.max_bucket = max(int(max_bucket), self.tile_n)
         self.interpret = kops._auto_interpret(interpret)
+        # Resolved once per engine: tier selection must be stable across
+        # a store's lifetime (REPRO_VMEM_BUDGET changes need a rebuild).
+        self.vmem_budget = kops.vmem_budget_bytes()
         self.stats = stats if stats is not None else EngineStats()
+        self.stats.vmem_budget_bytes = self.vmem_budget
         self._lock = threading.Lock()
         self._entries: Dict[Tuple[str, ...], _TaskEntry] = {}  # guarded-by: _lock
         self._pos_ops = tuple(encoder.position_ops())
@@ -274,7 +302,7 @@ class InferenceEngine:
         with self._lock:
             cached = self._words_cache
             if cached is None or cached[0] != v.version:
-                words32 = np.ascontiguousarray(v.words).view(np.uint32)
+                words32 = bv_kernel.pack_words32(v.words)
                 self._words_cache = (v.version, jnp.asarray(words32))
                 self.stats.bump("word_uploads")
             return self._words_cache[1]
@@ -306,14 +334,63 @@ class InferenceEngine:
             + kops.activation_bytes(entry.spec, self.tile_n)
             + int(v.words.nbytes)
         )
-        return vmem <= kops.VMEM_BUDGET_BYTES
+        return vmem <= self.vmem_budget
 
     def _pallas_eligible(self, entry: _TaskEntry) -> bool:
         return (
             kops.padded_weight_bytes(entry.spec)
             + kops.activation_bytes(entry.spec, self.tile_n)
-            <= kops.VMEM_BUDGET_BYTES
+            <= self.vmem_budget
         )
+
+    def kernel_filter_capable(
+        self, tasks: Optional[Tuple[str, ...]] = None
+    ) -> bool:
+        """True when ``dispatch(..., want_exists=True, pred_tables=...)``
+        for this task subset would take the resident ``fused`` tier —
+        the only tier that evaluates predicate code tables in-kernel.
+        Streamed and jit tiers report False (they filter on the host)."""
+        if not self.use_pallas:
+            return False
+        if tasks is None:
+            canon = self.spec.tasks
+        else:
+            keep = frozenset(tasks)
+            canon = tuple(t for t in self.spec.tasks if t in keep)
+        if not canon:
+            return False
+        return self._fused_eligible(self._entry(canon))
+
+    def _streamed_plan(
+        self, entry: _TaskEntry, want_exists: bool
+    ) -> Optional[Tuple[Tuple[Tuple[str, ...], ...], bool]]:
+        """Page plan for the ``fused_streamed`` tier, or None when it
+        cannot apply.  Returns ``(pages, with_exists)`` — existence
+        rides with page 0 only when the bitvector fits alongside that
+        page's heads; without ``want_exists`` (or without a bitvector)
+        every page is codes-only and the caller tests existence on the
+        host like the other non-fused tiers."""
+        if self.encoder.capacity > INT32_MAX:
+            return None
+        v = self.vexist
+        with_exists = (
+            want_exists and v is not None and v.capacity <= INT32_MAX + 1
+        )
+        words_bytes = int(v.words.nbytes) if with_exists else 0
+        pages = kops.plan_head_pages(
+            entry.spec, self.tile_n, words_bytes=words_bytes,
+            budget=self.vmem_budget,
+        )
+        if pages is None and with_exists:
+            # Words + any head over budget: stream codes-only pages and
+            # leave existence to the host fallback.
+            with_exists = False
+            pages = kops.plan_head_pages(
+                entry.spec, self.tile_n, budget=self.vmem_budget
+            )
+        if pages is None:
+            return None
+        return pages, with_exists
 
     # ---------------------------------------------------- dispatch/collect
     def dispatch(
@@ -321,11 +398,20 @@ class InferenceEngine:
         keys: np.ndarray,
         tasks: Optional[Tuple[str, ...]] = None,
         want_exists: bool = False,
+        pred_tables: Optional[Tuple[Tuple[str, np.ndarray], ...]] = None,
     ) -> InferTicket:
         """Enqueue device inference for one key chunk; returns
         immediately (JAX async dispatch).  ``want_exists`` additionally
         requests existence bits — in-kernel on the fused path, host
-        ``BitVector.test`` at collect time otherwise."""
+        ``BitVector.test`` at collect time otherwise.
+
+        ``pred_tables`` — ``((column, bool_code_table), ...)`` — asks
+        the fused kernel to evaluate the pushdown predicate conjunction
+        in-kernel; the resulting match bits land on
+        ``InferTicket.match`` at collect time.  Best-effort: any path
+        other than resident ``fused`` (or a table for a column outside
+        the dispatched task set) leaves ``match`` None and the caller
+        filters on the host."""
         keys = np.asarray(keys, dtype=np.int64)
         tasks = self.spec.tasks if tasks is None else tuple(tasks)
         n = keys.shape[0]
@@ -345,10 +431,16 @@ class InferenceEngine:
         bucket = self._bucket(n)
 
         if self.use_pallas and want_exists and self._fused_eligible(entry):
-            ticket = self._dispatch_fused(keys, tasks, entry, bucket)
+            ticket = self._dispatch_fused(keys, tasks, entry, bucket,
+                                          pred_tables)
         elif self.use_pallas and self._pallas_eligible(entry):
             ticket = self._dispatch_pallas_digits(keys, tasks, entry, bucket,
                                                   want_exists)
+        elif self.use_pallas and (
+            plan := self._streamed_plan(entry, want_exists)
+        ) is not None:
+            ticket = self._dispatch_fused_streamed(keys, tasks, entry, bucket,
+                                                   *plan)
         elif self.encoder.capacity <= INT32_MAX:
             ticket = self._dispatch_jit_keys(keys, tasks, entry, bucket,
                                              want_exists)
@@ -368,21 +460,92 @@ class InferenceEngine:
         kp[: keys.shape[0]] = np.where(valid, keys, -1).astype(np.int32)
         return kp
 
-    def _dispatch_fused(self, keys, tasks, entry, bucket) -> InferTicket:
+    def _kernel_pred_tables(
+        self, entry: _TaskEntry, pred_tables
+    ) -> Tuple[Tuple[int, ...], Tuple[jnp.ndarray, ...]]:
+        """Padded int32 device tables + head indices for in-kernel
+        filtering, or ``((), ())`` when any table's column is outside
+        the dispatched task subset (host filter handles it).  Model
+        codes never exceed the head cardinality, so only the first
+        ``card`` entries of the (possibly longer, codec-extended) host
+        table are shipped."""
+        if not pred_tables:
+            return (), ()
+        spec = entry.spec
+        cards = spec.card_map
+        ptasks, ptabs = [], []
+        for col, table in pred_tables:
+            if col not in cards:
+                return (), ()
+            card = cards[col]
+            padded = np.zeros(kops._round_up(card, kops.LANE), dtype=np.int32)
+            padded[:card] = np.asarray(table[:card], dtype=np.int32)
+            ptasks.append(spec.tasks.index(col))
+            ptabs.append(jnp.asarray(padded))
+        return tuple(ptasks), tuple(ptabs)
+
+    def _dispatch_fused(self, keys, tasks, entry, bucket,
+                        pred_tables=None) -> InferTicket:
         flat, _ = entry.flat()
         words = self._device_words()
+        ptasks, ptabs = self._kernel_pred_tables(entry, pred_tables)
         self.stats.bump("fused_calls")
         self.stats.note_compile(
-            ("fused", entry.spec, self.encoder.capacity, bucket, words.shape[0])
+            ("fused", entry.spec, self.encoder.capacity, bucket,
+             words.shape[0], ptasks, tuple(t.shape[0] for t in ptabs))
         )
-        codes, exists = kops.fused_lookup(
+        codes, exists, match = kops.fused_lookup(
             flat, entry.spec, jnp.asarray(self._keys_i32(keys, bucket)),
             self._device_pos_ops(), words, self.encoder.capacity,
             tile_n=self.tile_n, interpret=self.interpret,
+            pred_tables=ptabs, pred_tasks=ptasks,
         )
         return InferTicket(n=keys.shape[0], tasks=tasks, path="fused",
                            keys=keys, want_exists=True,
-                           codes_dev=codes, exists_dev=exists)
+                           codes_dev=codes, exists_dev=exists,
+                           match_dev=match)
+
+    def _dispatch_fused_streamed(
+        self, keys, tasks, entry, bucket, pages, with_exists
+    ) -> InferTicket:
+        """Over-budget fused path: one ``fused_lookup`` per head page.
+
+        All pages share the one device key buffer; JAX async dispatch
+        enqueues them back-to-back, so page *i+1*'s weight upload
+        overlaps page *i*'s compute (the streaming contract in DESIGN.md
+        §Device execution).  The shared trunk is re-sent and recomputed
+        per page — each page is exactly the resident fused kernel on a
+        task subset, so byte-identity follows from the per-subset
+        conformance the resident tier already guarantees.  Existence
+        rides with page 0 when ``with_exists``."""
+        keys_dev = jnp.asarray(self._keys_i32(keys, bucket))
+        pos_ops = self._device_pos_ops()
+        words = self._device_words() if with_exists else None
+        self.stats.bump("fused_streamed_calls")
+        codes_pages = []
+        exists_dev = None
+        for i, page in enumerate(pages):
+            page_entry = self._entry(page)
+            flat, _ = page_entry.flat()
+            page_exists = with_exists and i == 0
+            self.stats.note_compile(
+                ("fused_streamed", page_entry.spec, self.encoder.capacity,
+                 bucket, words.shape[0] if page_exists else 0, page_exists)
+            )
+            codes, ex, _ = kops.fused_lookup(
+                flat, page_entry.spec, keys_dev, pos_ops,
+                words if page_exists else None, self.encoder.capacity,
+                tile_n=self.tile_n, interpret=self.interpret,
+                with_exists=page_exists,
+            )
+            codes_pages.append(codes)
+            if page_exists:
+                exists_dev = ex
+        return InferTicket(n=keys.shape[0], tasks=tasks,
+                           path="fused_streamed", keys=keys,
+                           want_exists=with_exists,
+                           codes_dev=tuple(codes_pages),
+                           exists_dev=exists_dev)
 
     def _dispatch_jit_keys(self, keys, tasks, entry, bucket, want_exists):
         self.stats.bump("jit_calls")
@@ -448,6 +611,11 @@ class InferenceEngine:
             codes = np.concatenate(
                 [np.asarray(o)[:n] for o in ticket.codes_dev], axis=1
             )
+        elif ticket.path == "fused_streamed":
+            # one (n_pad, page_tasks) block per page, spec order overall
+            codes = np.concatenate(
+                [np.asarray(c)[:n] for c in ticket.codes_dev], axis=1
+            )
         else:
             codes = np.asarray(ticket.codes_dev)[:n]
         if ticket.task_order and ticket.tasks != ticket.task_order:
@@ -460,8 +628,10 @@ class InferenceEngine:
             codes[~ticket.in_cap] = 0
 
         exists = None
-        if ticket.path == "fused":
+        if ticket.exists_dev is not None:
             exists = np.asarray(ticket.exists_dev)[:n].astype(bool)
+        if ticket.match_dev is not None:
+            ticket.match = np.asarray(ticket.match_dev)[:n].astype(bool)
         return codes, exists
 
     # ------------------------------------------------------- convenience

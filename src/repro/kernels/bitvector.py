@@ -17,7 +17,18 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
+
+
+def pack_words32(words) -> np.ndarray:
+    """Contiguous uint32 view of a packed existence bit buffer (a
+    ``BitVector.words`` array) — the word layout every device existence
+    path consumes (``bit = (words[k >> 5] >> (k & 31)) & 1``): this
+    module's kernel, the fused lookup kernel, and the mesh shard
+    scatter.  One definition so the host packing can never drift from
+    the kernels' indexing."""
+    return np.ascontiguousarray(words).view(np.uint32)
 
 
 def _kernel(keys_ref, words_ref, out_ref):

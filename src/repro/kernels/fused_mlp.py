@@ -214,6 +214,8 @@ def make_fused_lookup_kernel(
     base_pad: int,
     capacity: int,
     n_words32: int,
+    pred_tasks: Tuple[int, ...] = (),
+    with_exists: bool = True,
 ):
     """Kernel body answering Algorithm 1 lines 3+5 from raw int32 keys.
 
@@ -224,17 +226,31 @@ def make_fused_lookup_kernel(
     ``[0, capacity)`` get code 0 (the host zero-fill contract of
     ``_infer_codes``) and keys outside the word domain exist=0, exactly
     matching ``BitVector.test``.
+
+    With ``with_exists=False`` (streamed pages past the first) the
+    words input and existence output are absent.  ``pred_tasks`` adds
+    one boolean code-table input per pushdown predicate plus a single
+    match-bit output: ``match = exists AND table_j[code(pred_tasks[j])]
+    for all j`` — the same conjunction the host filter evaluates, so
+    pushdown plans leave the kernel with their filtering already done.
     """
     trunk_kinds, head_kinds = _plan(spec)
     width = spec.width
     base = spec.base
     n_heads = len(spec.tasks)
+    n_preds = len(pred_tasks)
+    if n_preds and not with_exists:
+        raise ValueError("in-kernel predicate filtering requires with_exists")
+    n_outs = n_heads + (1 if with_exists else 0) + (1 if n_preds else 0)
 
-    def kernel(keys_ref, ops_ref, words_ref, *refs):
-        # refs = weights..., codes outs (one per task), exists out
-        exist_ref = refs[-1]
-        out_refs = refs[len(refs) - 1 - n_heads : -1]
-        w_refs = list(refs[: len(refs) - 1 - n_heads])
+    def kernel(keys_ref, ops_ref, *refs):
+        # refs = [words]?, pred tables..., weights..., then outputs:
+        # codes (one per task), [exists]?, [match]?
+        idx = 1 if with_exists else 0
+        words_ref = refs[0] if with_exists else None
+        table_refs = refs[idx : idx + n_preds]
+        w_refs = list(refs[idx + n_preds : len(refs) - n_outs])
+        out_refs = refs[len(refs) - n_outs :]
 
         keys = keys_ref[...]
         in_cap = (keys >= 0) & (keys < capacity)
@@ -255,64 +271,114 @@ def make_fused_lookup_kernel(
             digits, w_refs, spec, trunk_kinds, head_kinds, base_pad,
             emit_codes=True,
         )
+        codes = []
         for ti in range(n_heads):
-            out_refs[ti][...] = jnp.where(in_cap[:, None], outs[ti], 0)
+            c = jnp.where(in_cap[:, None], outs[ti], 0)
+            codes.append(c)
+            out_refs[ti][...] = c
 
-        # Existence test against the packed words (Algorithm 1 line 5).
-        # Bits past BitVector.capacity are never set, so the word-domain
-        # mask alone reproduces BitVector.test byte-for-byte.
-        in_dom = (keys >= 0) & (jax.lax.shift_right_logical(keys, 5) < n_words32)
-        sk = jnp.where(in_dom, keys, 0)
-        w = jnp.take(words_ref[...], jax.lax.shift_right_logical(sk, 5), axis=0)
-        bits = jnp.bitwise_and(
-            jax.lax.shift_right_logical(w, jnp.bitwise_and(sk, 31).astype(jnp.uint32)),
-            jnp.uint32(1),
-        )
-        exist_ref[...] = bits.astype(jnp.int32) * in_dom.astype(jnp.int32)
+        if with_exists:
+            # Existence test against the packed words (Algorithm 1 line
+            # 5).  Bits past BitVector.capacity are never set, so the
+            # word-domain mask alone reproduces BitVector.test
+            # byte-for-byte.
+            in_dom = (keys >= 0) & (
+                jax.lax.shift_right_logical(keys, 5) < n_words32
+            )
+            sk = jnp.where(in_dom, keys, 0)
+            w = jnp.take(
+                words_ref[...], jax.lax.shift_right_logical(sk, 5), axis=0
+            )
+            bits = jnp.bitwise_and(
+                jax.lax.shift_right_logical(
+                    w, jnp.bitwise_and(sk, 31).astype(jnp.uint32)
+                ),
+                jnp.uint32(1),
+            )
+            exists = bits.astype(jnp.int32) * in_dom.astype(jnp.int32)
+            out_refs[n_heads][...] = exists
+
+            if n_preds:
+                # The host contract (hybrid._collect_lookup): match
+                # starts as the existence bit and ANDs each predicate's
+                # table at the (in_cap-masked) model code — rows the aux
+                # table later overrides are re-patched host-side.
+                m = exists
+                for j in range(n_preds):
+                    code = codes[pred_tasks[j]][:, 0]
+                    m = m * jnp.take(table_refs[j][...], code, axis=0)
+                out_refs[n_heads + 1][...] = m
 
     return kernel
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("spec", "tile_n", "base_pad", "capacity", "interpret"),
+    static_argnames=(
+        "spec", "tile_n", "base_pad", "capacity", "interpret",
+        "pred_tasks", "with_exists",
+    ),
 )
 def fused_lookup_call(
     keys: jnp.ndarray,
     pos_ops: jnp.ndarray,
-    words32: jnp.ndarray,
+    words32,
     flat_weights: Tuple[jnp.ndarray, ...],
     spec: MLPSpec,
     tile_n: int,
     base_pad: int,
     capacity: int,
     interpret: bool,
+    pred_tables: Tuple[jnp.ndarray, ...] = (),
+    pred_tasks: Tuple[int, ...] = (),
+    with_exists: bool = True,
 ):
     """keys (N_pad,) int32; pos_ops (width, 2) int32 [(mod, div)…];
-    words32 (n_words32,) uint32; flat_weights in plan order (padded).
+    words32 (n_words32,) uint32 (None when ``with_exists=False``);
+    flat_weights in plan order (padded); pred_tables one padded int32
+    0/1 vector per pushdown predicate, indexed by the code of head
+    ``pred_tasks[j]``.
 
-    Returns ``(codes, exists)``: codes (N_pad, num_tasks) int32, exists
-    (N_pad,) int32 0/1 — one device round trip for the whole batch.
+    Returns ``(codes, exists, match)``: codes (N_pad, num_tasks) int32;
+    exists (N_pad,) int32 0/1 or None without ``with_exists``; match
+    (N_pad,) int32 0/1 or None without ``pred_tables`` — one device
+    round trip for the whole batch.
     """
     n = keys.shape[0]
     if n % tile_n != 0:
         raise ValueError(f"batch size {n} must be a multiple of tile_n={tile_n}")
     grid = (n // tile_n,)
-    kernel = make_fused_lookup_kernel(spec, base_pad, capacity, words32.shape[0])
+    n_heads = len(spec.tasks)
+    kernel = make_fused_lookup_kernel(
+        spec, base_pad, capacity,
+        words32.shape[0] if with_exists else 0,
+        pred_tasks=pred_tasks, with_exists=with_exists,
+    )
 
     smem_kwargs = {"memory_space": _SMEM} if _SMEM is not None else {}
+    inputs = [keys, pos_ops]
     in_specs = [
         pl.BlockSpec((tile_n,), lambda i: (i,)),
         pl.BlockSpec(pos_ops.shape, lambda i: (0, 0), **smem_kwargs),
-        pl.BlockSpec(words32.shape, lambda i: (0,)),
     ]
+    if with_exists:
+        inputs.append(words32)
+        in_specs.append(pl.BlockSpec(words32.shape, lambda i: (0,)))
+    for tb in pred_tables:
+        inputs.append(tb)
+        in_specs.append(pl.BlockSpec(tb.shape, lambda i: (0,)))
     for w in flat_weights:
+        inputs.append(w)
         in_specs.append(pl.BlockSpec(w.shape, lambda i, nd=w.ndim: (0,) * nd))
 
     out_shapes = [jax.ShapeDtypeStruct((n, 1), jnp.int32) for _ in spec.tasks]
     out_specs = [pl.BlockSpec((tile_n, 1), lambda i: (i, 0)) for _ in spec.tasks]
-    out_shapes.append(jax.ShapeDtypeStruct((n,), jnp.int32))
-    out_specs.append(pl.BlockSpec((tile_n,), lambda i: (i,)))
+    if with_exists:
+        out_shapes.append(jax.ShapeDtypeStruct((n,), jnp.int32))
+        out_specs.append(pl.BlockSpec((tile_n,), lambda i: (i,)))
+    if pred_tables:
+        out_shapes.append(jax.ShapeDtypeStruct((n,), jnp.int32))
+        out_specs.append(pl.BlockSpec((tile_n,), lambda i: (i,)))
 
     outs = pl.pallas_call(
         kernel,
@@ -321,6 +387,8 @@ def fused_lookup_call(
         out_specs=out_specs,
         out_shape=out_shapes,
         interpret=interpret,
-    )(keys, pos_ops, words32, *flat_weights)
-    codes = jnp.concatenate(outs[:-1], axis=1)
-    return codes, outs[-1]
+    )(*inputs)
+    codes = jnp.concatenate(outs[:n_heads], axis=1)
+    exists = outs[n_heads] if with_exists else None
+    match = outs[-1] if pred_tables else None
+    return codes, exists, match

@@ -9,6 +9,7 @@ the same tests run everywhere).
 
 from __future__ import annotations
 
+import os
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -21,7 +22,32 @@ from repro.kernels import fused_mlp as fm_kernel
 
 LANE = 128          # MXU lane width
 DEFAULT_TILE_N = 256
-VMEM_BUDGET_BYTES = 12 * 1024 * 1024  # conservative v5e VMEM residency cap
+#: Conservative default residency cap — fits every supported TPU
+#: generation; interpret-mode backends keep it so tier selection on CPU
+#: matches the smallest real target (see :func:`vmem_budget_bytes`).
+VMEM_BUDGET_BYTES = 12 * 1024 * 1024
+
+#: Per-backend residency caps.  Real TPUs have >=128 MiB VMEM per core,
+#: so the resident-weights strategy can afford a larger cap there;
+#: backends that run the kernels in interpret mode (cpu/gpu, see
+#: ``_auto_interpret``) stay on the conservative default so CI exercises
+#: the same eligibility ladder a small TPU would take.
+_BACKEND_VMEM_BUDGETS = {"tpu": 64 * 1024 * 1024}
+
+
+def vmem_budget_bytes() -> int:
+    """Resolved VMEM residency budget in bytes.
+
+    Resolution order: ``REPRO_VMEM_BUDGET`` (env, always wins — also the
+    hook the boundary tests use to pin exact budgets), then the
+    per-backend table, then :data:`VMEM_BUDGET_BYTES`.  Re-read on every
+    call: it is consulted at engine construction / eligibility time, not
+    in the hot loop.
+    """
+    env = os.environ.get("REPRO_VMEM_BUDGET", "").strip()
+    if env:
+        return max(int(env), 1)
+    return _BACKEND_VMEM_BUDGETS.get(jax.default_backend(), VMEM_BUDGET_BYTES)
 
 
 def _round_up(x: int, m: int) -> int:
@@ -74,11 +100,10 @@ def _pad_flat_weights(params: Dict, spec: MLPSpec) -> Tuple[Tuple[jnp.ndarray, .
 pad_flat_weights = _pad_flat_weights
 
 
-def padded_weight_bytes(spec: MLPSpec) -> int:
-    """Byte count :func:`pad_flat_weights` would produce, from shapes
-    alone — eligibility/budget decisions must not materialize (and
-    cache) a padded device copy that the chosen path never uses."""
-    total = 0
+def padded_weight_parts(spec: MLPSpec) -> Tuple[int, Dict[str, int]]:
+    """Shape-only padded byte counts, split ``(trunk_bytes, {task:
+    head_bytes})`` — the streaming page planner budgets the shared trunk
+    once per page and packs heads greedily against the remainder."""
 
     def dense(in_dim: int, out_dim: int, embed: bool) -> int:
         o = _round_up(out_dim, LANE)
@@ -86,19 +111,70 @@ def padded_weight_bytes(spec: MLPSpec) -> int:
             return spec.width * _round_up(spec.base, LANE) * o + o
         return _round_up(in_dim, LANE) * o + o
 
+    trunk_total = 0
     d = None
     for h in spec.shared:
-        total += dense(d or 0, h, embed=d is None)
+        trunk_total += dense(d or 0, h, embed=d is None)
         d = h
     trunk = d
     priv, cards = spec.private_map, spec.card_map
+    heads: Dict[str, int] = {}
     for t in spec.tasks:
         d = trunk
+        total = 0
         for h in priv[t]:
             total += dense(d or 0, h, embed=d is None)
             d = h
         total += dense(d or 0, cards[t], embed=d is None)
-    return total * 4  # fp32
+        heads[t] = total * 4  # fp32
+    return trunk_total * 4, heads
+
+
+def padded_weight_bytes(spec: MLPSpec) -> int:
+    """Byte count :func:`pad_flat_weights` would produce, from shapes
+    alone — eligibility/budget decisions must not materialize (and
+    cache) a padded device copy that the chosen path never uses."""
+    trunk, heads = padded_weight_parts(spec)
+    return trunk + sum(heads.values())
+
+
+def plan_head_pages(
+    spec: MLPSpec,
+    tile_n: int,
+    words_bytes: int = 0,
+    budget: Optional[int] = None,
+) -> Optional[Tuple[Tuple[str, ...], ...]]:
+    """Partition ``spec.tasks`` into consecutive head groups ("pages")
+    that each fit the VMEM budget — the ``fused_streamed`` tier runs one
+    :func:`fused_lookup` per page, so a model whose padded weights
+    exceed the budget still takes the fused kernel instead of jit.
+
+    Every page pays the shared trunk + activation overhead (the trunk
+    is re-sent and recomputed per page); page 0 additionally reserves
+    ``words_bytes`` for the resident existence words, because the
+    existence test rides with the first page by contract.  Returns a
+    tuple of task tuples covering ``spec.tasks`` in canonical order, or
+    None when even a single head cannot fit on a fresh page — the
+    caller falls back to the jit ladder.
+    """
+    budget = vmem_budget_bytes() if budget is None else int(budget)
+    trunk_b, head_b = padded_weight_parts(spec)
+    act = activation_bytes(spec, tile_n)
+    pages: list = []
+    cur: list = []
+    used = trunk_b + act + int(words_bytes)
+    for t in spec.tasks:
+        hb = head_b[t]
+        if cur and used + hb > budget:
+            pages.append(tuple(cur))
+            cur = []
+            used = trunk_b + act
+        if used + hb > budget:
+            return None
+        cur.append(t)
+        used += hb
+    pages.append(tuple(cur))
+    return tuple(pages)
 
 
 def activation_bytes(spec: MLPSpec, tile_n: int) -> int:
@@ -114,13 +190,14 @@ def check_vmem_budget(
 ) -> None:
     """Raise if weights + activations (+ ``extra_bytes``, e.g. the fused
     lookup kernel's resident existence words) exceed the VMEM cap."""
+    budget = vmem_budget_bytes()
     _, wbytes = _pad_flat_weights(params, spec)
     total = wbytes + activation_bytes(spec, tile_n) + extra_bytes
-    if total > VMEM_BUDGET_BYTES:
+    if total > budget:
         raise ValueError(
             f"model too large for VMEM-resident fused kernel "
             f"({total / 2**20:.1f} MiB > "
-            f"{VMEM_BUDGET_BYTES / 2**20:.0f} MiB); use the jnp path"
+            f"{budget / 2**20:.1f} MiB); use the streamed or jnp path"
         )
 
 
@@ -177,27 +254,45 @@ def fused_lookup(
     spec: MLPSpec,
     keys_i32: jnp.ndarray,
     pos_ops: jnp.ndarray,
-    words32: jnp.ndarray,
+    words32: Optional[jnp.ndarray],
     capacity: int,
     tile_n: int = DEFAULT_TILE_N,
     interpret: Optional[bool] = None,
-) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    with_exists: bool = True,
+    pred_tables: Tuple[jnp.ndarray, ...] = (),
+    pred_tasks: Tuple[int, ...] = (),
+) -> Tuple[jnp.ndarray, Optional[jnp.ndarray], Optional[jnp.ndarray]]:
     """One-round-trip lookup kernel call: padded int32 keys in,
-    ``(codes (N_pad, m) int32, exists (N_pad,) int32)`` out.
+    ``(codes (N_pad, m) int32, exists (N_pad,) int32 | None,
+    match (N_pad,) int32 | None)`` out.
 
     Unlike :func:`fused_mlp_codes` this takes ALREADY-padded device
     weights (the engine's per-task-subset cache), a device-resident
     ``pos_ops``/``words32``, and an already bucket-padded key batch —
     the wrapper adds no per-call host work.  Caller slices padding off.
+
+    ``with_exists=False`` drops the words input and existence output —
+    the ``fused_streamed`` tier uses it for pages past the first, whose
+    VMEM budget goes entirely to head weights.  ``pred_tables`` ships
+    per-predicate boolean code tables (as padded int32 vectors) into the
+    kernel; ``pred_tasks[j]`` names the head (index into ``spec.tasks``)
+    whose code indexes table ``j``.  Match bits are the AND of the
+    existence bit and every table lookup — predicate filtering requires
+    ``with_exists``.
     """
     if keys_i32.shape[0] % tile_n != 0:
         raise ValueError(
             f"padded batch size {keys_i32.shape[0]} must be a multiple of "
             f"tile_n={tile_n}"
         )
+    if pred_tables and not with_exists:
+        raise ValueError("in-kernel predicate filtering requires with_exists")
     return fm_kernel.fused_lookup_call(
-        keys_i32, pos_ops, words32, tuple(flat_weights), spec, tile_n,
+        keys_i32, pos_ops, words32 if with_exists else None,
+        tuple(flat_weights), spec, tile_n,
         _round_up(spec.base, LANE), int(capacity), _auto_interpret(interpret),
+        pred_tables=tuple(pred_tables), pred_tasks=tuple(pred_tasks),
+        with_exists=with_exists,
     )
 
 

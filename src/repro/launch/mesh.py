@@ -38,6 +38,17 @@ def make_host_mesh(data: int = 1, model: int = 1):
     return _make_mesh((data, model), ("data", "model"))
 
 
+def make_shard_mesh(n: int | None = None):
+    """1-D ``("shard",)`` mesh over the host's devices — the cluster
+    scatter (``repro.cluster.mesh_scatter``) lays K store shards out
+    along this axis, ``ceil(K / n)`` per device.  ``n`` caps the device
+    count (default: all devices, including
+    ``xla_force_host_platform_device_count``-virtualized ones)."""
+    n_dev = len(jax.devices())
+    n = n_dev if n is None else max(1, min(int(n), n_dev))
+    return _make_mesh((n,), ("shard",))
+
+
 def mesh_axes(mesh) -> Tuple[Tuple[str, ...], str]:
     """Returns (batch/FSDP axes, tensor axis) for a mesh from this module."""
     names = mesh.axis_names

@@ -66,3 +66,87 @@ class TestBaselineStores:
         store = ArrayStore.build(table, codec="zstd")
         vals, _ = store.lookup(table.keys[:10], columns=["v0"])
         assert set(vals) == {"v0"}
+
+
+class TestZoneMapPersistence:
+    """Dictionary-mode zone maps ride the v2 checksummed envelope:
+    built maps round-trip bit-exactly, stale or malformed entries are
+    dropped (lazy rebuild covers them), and the payload crc covers the
+    packed bits like every other field."""
+
+    @pytest.fixture()
+    def built(self, table):
+        store = ArrayStore.build(
+            table, codec="zlib", dictionary=True, partition_bytes=4096
+        )
+        zones = {
+            c: store._partition_code_presence(c).copy()
+            for c in store.names
+        }
+        return store, zones
+
+    def test_round_trip_bit_exact(self, built, tmp_path):
+        store, zones = built
+        path = str(tmp_path / "ab.bin")
+        store.save(path)
+        loaded = ArrayStore.load(path)
+        assert set(loaded._zone_maps) == set(zones)
+        for c, z in zones.items():
+            np.testing.assert_array_equal(loaded._zone_maps[c], z)
+
+    def test_loaded_maps_match_lazy_rebuild(self, built, tmp_path):
+        store, zones = built
+        path = str(tmp_path / "ab.bin")
+        store.save(path)
+        loaded = ArrayStore.load(path)
+        loaded._zone_maps.clear()  # force the from-partitions rebuild
+        for c, z in zones.items():
+            np.testing.assert_array_equal(
+                loaded._partition_code_presence(c), z
+            )
+
+    def test_unbuilt_maps_save_nothing(self, table, tmp_path):
+        store = ArrayStore.build(
+            table, codec="none", dictionary=True, partition_bytes=4096
+        )
+        path = str(tmp_path / "ab.bin")
+        store.save(path)  # no predicated scan ran: no maps built
+        assert "zone_maps" not in store._extra_state()
+        assert ArrayStore.load(path)._zone_maps == {}
+
+    def test_stale_maps_dropped_gracefully(self, built, tmp_path):
+        from repro.baselines.partitioned import _read_baseline_state
+
+        store, zones = built
+        path = str(tmp_path / "ab.bin")
+        store.save(path)
+        state = _read_baseline_state(path)
+        zm = state["extra"]["zone_maps"]
+        col0, col1 = sorted(zm)[:2]
+        zm[col0]["partitions"] += 1          # partition-count drift
+        zm[col1]["bits"] = zm[col1]["bits"][:1]  # truncated bit buffer
+        zm["ghost"] = {"partitions": 1, "cardinality": 2, "bits": b"\xff"}
+        loaded = ArrayStore.from_saved_state(state)
+        # the corrupted/unknown entries are dropped; the load succeeds
+        assert col0 not in loaded._zone_maps
+        assert col1 not in loaded._zone_maps
+        assert "ghost" not in loaded._zone_maps
+        for c, z in zones.items():           # lazy rebuild still exact
+            np.testing.assert_array_equal(
+                loaded._partition_code_presence(c), z
+            )
+
+    def test_checksum_covers_zone_maps(self, built, tmp_path):
+        from repro.core.serialize import IntegrityError
+
+        store, _ = built
+        path = str(tmp_path / "ab.bin")
+        store.save(path)
+        data = bytearray(open(path, "rb").read())
+        # flip one bit near the end of the payload (zone maps serialize
+        # inside "extra", the last state field)
+        data[len(data) - 16] ^= 0x40
+        with open(path, "wb") as f:
+            f.write(bytes(data))
+        with pytest.raises((IntegrityError, ValueError)):
+            ArrayStore.load(path)

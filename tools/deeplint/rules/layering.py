@@ -58,6 +58,9 @@ ALLOWED: Dict[str, Tuple[str, ...]] = {
         "repro.api",
         "repro.core",
         "repro.kernels",
+        # mesh_scatter lays shard fleets out on launch-layer meshes
+        # (make_shard_mesh); launch stays a leaf w.r.t. repro.cluster.
+        "repro.launch",
         "repro.models",
         "repro.obs",
         "repro.storage",
