@@ -43,6 +43,16 @@ Adaptive-execution sections (``run_adaptive``, the ``adaptive`` key of
 * ``morsel``     — adaptive morsel sizing vs the fixed default on a
                    predicated full scan.
 
+Aggregate sections (``run_aggregate``, the ``aggregate`` key of
+``BENCH_query.json``, ISSUE 10):
+
+* ``count``       — count-only GROUP BY aggregated entirely in code
+                    space (``rows_decoded == 0``) vs the
+                    ``pushdown(False)`` decode-then-aggregate
+                    reference, value-identity asserted per repetition;
+* ``sum_min_max`` — the full count/sum/min/max spec resolved through
+                    cached code->value tables, same evidence.
+
     PYTHONPATH=src:benchmarks python benchmarks/bench_query.py
 """
 
@@ -526,6 +536,100 @@ def run_adaptive(
     return results
 
 
+# --------------------------------------------------------------- aggregate
+def _norm_group(arr) -> np.ndarray:
+    arr = np.asarray(arr)
+    return arr.astype(str) if arr.dtype.kind in ("S", "U", "O") else arr
+
+
+def _assert_agg_equal(a, b) -> None:
+    """Value-identity between two AggregateResults (string labels
+    normalized) — the same contract the differential suite asserts."""
+    assert set(a.groups) == set(b.groups)
+    assert set(a.aggregates) == set(b.aggregates)
+    for c in a.groups:
+        assert np.array_equal(_norm_group(a.groups[c]), _norm_group(b.groups[c])), c
+    for name in a.aggregates:
+        assert np.array_equal(
+            np.asarray(a.aggregates[name]), np.asarray(b.aggregates[name])
+        ), name
+
+
+def run_aggregate(
+    n: int = 1_000_000,
+    repeats: int = 5,
+    smoke: bool = False,
+) -> Dict:
+    """Code-space aggregation record -> the ``aggregate`` section of
+    ``BENCH_query.json``.
+
+    A count-only GROUP BY and a full count/sum/min/max aggregate over
+    the wide string-columned demographics store, run (a) below decode
+    on the aux-corrected argmax codes (per-morsel code histograms, the
+    decode map resolving only distinct group labels, sum/min/max
+    through cached code->value tables) and (b) through the
+    ``pushdown(False)`` decode-then-aggregate reference.  Value
+    identity between the two is asserted in-line every repetition (the
+    same oracle the differential suite parametrizes); the structural
+    evidence is ``rows_decoded == 0`` on the code-space path vs ``n``
+    on the reference, independent of wall-clock noise.
+    """
+    if smoke:
+        n, repeats = 150_000, 3
+    store = _pushdown_store(n)
+    # low-stride demographic dims vary across the full truncated cross
+    # product, so the group count stays 7x7 at any n
+    group = ("cd_dep_count", "cd_dep_employed_count")
+    results: Dict = {"rows": int(n), "group_by": list(group)}
+
+    for section, specs in (
+        ("count", ("count",)),
+        ("sum_min_max", (
+            "count",
+            ("sum", "cd_purchase_estimate"),
+            ("min", "cd_purchase_estimate"),
+            ("max", "cd_purchase_estimate"),
+        )),
+    ):
+        def code_q(specs=specs):
+            return store.query().group_by(*group).agg(*specs).scan()
+
+        def ref_q(specs=specs):
+            return code_q(specs).pushdown(False)
+
+        code_q().execute()
+        ref_q().execute()
+        code_times, ref_times = [], []
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            code_res = code_q().execute()
+            code_times.append(time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            ref_res = ref_q().execute()
+            ref_times.append(time.perf_counter() - t0)
+            _assert_agg_equal(code_res, ref_res)
+        assert code_res.explain.rows_decoded == 0
+        assert ref_res.explain.rows_decoded == n
+        code_s, ref_s = float(min(code_times)), float(min(ref_times))
+        results[section] = {
+            "aggregates": [s if isinstance(s, str) else list(s) for s in specs],
+            "groups": int(code_res.num_groups),
+            "code_space_s": code_s,
+            "decode_then_agg_s": ref_s,
+            "code_space_rows_per_s": n / code_s,
+            "decode_then_agg_rows_per_s": n / ref_s,
+            "speedup": ref_s / code_s,
+            "rows_decoded_code_space": int(code_res.explain.rows_decoded),
+            "rows_decoded_reference": int(ref_res.explain.rows_decoded),
+            "groups_emitted": int(code_res.explain.groups_emitted),
+        }
+        C.emit(f"query.aggregate.{section}", code_s * 1e6,
+               f"{n / code_s:.0f} rows/s; decode-then-agg "
+               f"{n / ref_s:.0f} rows/s; speedup {ref_s / code_s:.2f}x; "
+               f"decoded 0/{n} rows ({code_res.num_groups} groups)")
+    return results
+
+
 def write_query_json(results: Dict, path: str = "BENCH_query.json") -> None:
     """Machine-readable streaming-executor perf record (CI uploads it
     alongside ``BENCH_lookup.json``), stamped with backend/platform
@@ -548,6 +652,9 @@ def main() -> None:
     if args.streaming:
         results = run_streaming(smoke=args.smoke)
         results["adaptive"] = run_adaptive(smoke=args.smoke)
+        results["aggregate"] = run_aggregate(
+            n=1_000_000 if not args.smoke else 150_000, smoke=args.smoke
+        )
         write_query_json(results)
         return
     run(datasets=args.datasets, batches=tuple(args.batches),

@@ -19,10 +19,12 @@ Sections:
             serial, value-predicate pushdown vs post-hoc filter, plus
             the adaptive-execution section (warm-vs-cold plan cache,
             baseline partition pruning, adaptive vs fixed morsel
-            sizing) and the mesh shard-scatter vs thread-pool fan-out
-            comparison; writes BENCH_query.json at the repo root
-            (uploaded by the CI smoke-bench job alongside
-            BENCH_lookup.json)
+            sizing), the code-space aggregate section (count-only
+            GROUP BY with rows_decoded == 0 and code-table sum/min/max
+            vs the decode-then-aggregate reference) and the mesh
+            shard-scatter vs thread-pool fan-out comparison; writes
+            BENCH_query.json at the repo root (uploaded by the CI
+            smoke-bench job alongside BENCH_lookup.json)
   lookup_pipeline — staged (seed path) vs pipelined (inference engine)
             hot-path comparison; writes BENCH_lookup.json at the repo
             root (p50/p99 latency, QPS, compile counts) — the CI
@@ -93,6 +95,9 @@ def main() -> None:
             dict(
                 bench_query.run_streaming(smoke=args.smoke),
                 adaptive=bench_query.run_adaptive(smoke=args.smoke),
+                aggregate=bench_query.run_aggregate(
+                    n=1_000_000 if args.full else 150_000, smoke=args.smoke
+                ),
                 degraded=bench_shards.run_degraded(smoke=args.smoke),
                 mesh=bench_shards.run_mesh(smoke=args.smoke),
             )

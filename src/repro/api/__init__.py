@@ -20,7 +20,10 @@ from repro.api.executor import (  # noqa: F401
 )
 from repro.api.federated import FederatedStore  # noqa: F401
 from repro.api.plan import (  # noqa: F401
+    AggregateResult,
+    AggSpec,
     ExplainStats,
+    JoinSpec,
     OperatorStats,
     Predicate,
     QueryPlan,

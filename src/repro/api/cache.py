@@ -48,10 +48,17 @@ PLAN_ENTRIES = 64
 #: streams.
 KEY_BYTES_BUDGET = 256 * 1024 * 1024
 
-#: Hard cap on memoized predicate code tables (ad-hoc predicate churn
-#: must not grow the cache without bound; tables are tiny, so a full
-#: clear on overflow is cheaper than LRU bookkeeping).
+#: Hard cap on memoized predicate/aggregate code tables (ad-hoc
+#: predicate churn must not grow the cache without bound; tables are
+#: tiny, so a full clear on overflow is cheaper than LRU bookkeeping).
 PRED_TABLES = 64
+
+#: Per-key cap on code-table variants.  A cache shared across
+#: federation members (or store generations) holds one entry per
+#: distinct (version, decode-map) pair under the same predicate/column
+#: key; a small list avoids two members at different versions
+#: thrashing a single slot.
+TABLE_VARIANTS = 8
 
 
 def plan_fingerprint(plan) -> Optional[Tuple]:
@@ -76,7 +83,17 @@ def plan_fingerprint(plan) -> Optional[Tuple]:
         source = ("range", int(plan.lo), int(plan.hi))
     else:
         source = ("scan",)
-    fp = source + (plan.columns, plan.predicates, plan.pushdown)
+    fp = source + (
+        plan.columns,
+        plan.predicates,
+        plan.pushdown,
+        plan.group_by,
+        plan.aggregates,
+    )
+    # ``plan.join`` is deliberately excluded: the cached artifacts (key
+    # stream, resolved projection, code tables) describe the LEFT side
+    # only — the right store answers probes through its own hooks, so a
+    # plan with and without a join shares its compiled left half.
     try:
         hash(fp)
     except TypeError:  # unhashable predicate literal — skip the cache
@@ -133,11 +150,16 @@ class PlanCache:
         self._key_bytes_budget = int(key_bytes_budget)
         self._key_bytes = 0  # guarded-by: _lock
         self._plans: "OrderedDict[Tuple, _PlanEntry]" = OrderedDict()  # guarded-by: _lock
-        self._tables: Dict = {}  # guarded-by: _lock  (pred -> (version, decode_map, table))
+        # key -> list of (version, decode_map, table) variants; keys are
+        # Predicate objects (filter tables) or ("agg", column) tuples
+        # (aggregate value tables)
+        self._tables: Dict = {}  # guarded-by: _lock
         self._lock = threading.Lock()
         self.hits = 0  # guarded-by: _lock
         self.misses = 0  # guarded-by: _lock
         self.bypass = 0  # guarded-by: _lock
+        self.table_hits = 0  # guarded-by: _lock
+        self.table_misses = 0  # guarded-by: _lock
 
     def _note(self, outcome: str) -> None:
         obs.counter(
@@ -206,35 +228,72 @@ class PlanCache:
             self._key_bytes += nbytes
             self._plans[fingerprint] = _PlanEntry(version, keys, columns)
 
-    # ---------------------------------------------------- predicate tables
+    # ----------------------------------------- predicate/aggregate tables
+    def _table_memo(self, key, decode_map: np.ndarray, version, compute) -> np.ndarray:
+        """Shared memo for code-indexed tables (predicate filter tables
+        and aggregate value tables).
+
+        An entry matches on the store's mutation version AND the decode
+        map — by object identity first (``ValueCodec.extend`` swaps in
+        a new, larger array), falling back to an ``array_equal``
+        content check so a cache shared across federation members lets
+        member B reuse the table member A compiled when their
+        vocabularies coincide (the cross-member sharing this repo's
+        federation sets up).  Up to :data:`TABLE_VARIANTS` variants per
+        key accommodate members at different versions/vocabularies.
+        The compute itself runs outside the lock — two racing threads
+        may both build the same table (benign), but neither blocks the
+        other.
+        """
+        with self._lock:
+            variants = self._tables.get(key, ())
+            for entry in variants:
+                if entry[0] == version and (
+                    entry[1] is decode_map
+                    or (
+                        entry[1].dtype == decode_map.dtype
+                        and np.array_equal(entry[1], decode_map)
+                    )
+                ):
+                    self.table_hits += 1
+                    return entry[2]
+            self.table_misses += 1
+        table = compute()
+        with self._lock:
+            if sum(len(v) for v in self._tables.values()) >= self._pred_tables:
+                self._tables.clear()
+            variants = self._tables.setdefault(key, [])
+            if len(variants) >= TABLE_VARIANTS:
+                del variants[0]
+            variants.append((version, decode_map, table))
+        return table
+
     def pred_table(self, pred, decode_map: np.ndarray, version) -> np.ndarray:
         """Memoized boolean code table for one predicate over
-        ``decode_map`` (see ``Predicate.code_table``).
-
-        Validated against BOTH the store's mutation version and the
-        decode-map object identity (``ValueCodec.extend`` swaps in a
-        new, larger array), so a grown vocabulary always recompiles.
-        Unhashable predicate literals compute uncached.  The compute
-        itself runs outside the lock — two racing threads may both
-        build the same table (benign), but neither blocks the other.
-        """
+        ``decode_map`` (see ``Predicate.code_table``); version- and
+        decode-map-fenced through :meth:`_table_memo`.  Unhashable
+        predicate literals compute uncached."""
         try:
-            with self._lock:
-                entry = self._tables.get(pred)
+            hash(pred)
         except TypeError:  # unhashable literal (e.g. an array) — skip memo
             return pred.code_table(decode_map)
-        if (
-            entry is not None
-            and entry[0] == version
-            and entry[1] is decode_map
-        ):
-            return entry[2]
-        table = pred.code_table(decode_map)
-        with self._lock:
-            if len(self._tables) >= self._pred_tables:
-                self._tables.clear()
-            self._tables[pred] = (version, decode_map, table)
-        return table
+        return self._table_memo(
+            pred, decode_map, version, lambda: pred.code_table(decode_map)
+        )
+
+    def agg_table(self, column: str, decode_map: np.ndarray, version) -> np.ndarray:
+        """Memoized code→value table for ``sum``/``min``/``max`` below
+        decode (see :func:`~repro.api.plan.agg_value_table`): the
+        column's decode map cast once to the accumulator dtype, fenced
+        exactly like the predicate tables."""
+        from repro.api.plan import agg_value_table
+
+        return self._table_memo(
+            ("agg", column),
+            decode_map,
+            version,
+            lambda: agg_value_table(column, decode_map),
+        )
 
     # ------------------------------------------------------------- control
     def clear(self) -> None:

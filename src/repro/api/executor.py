@@ -35,6 +35,22 @@ with ``pushdown=False`` the executor runs the **post-hoc reference
 path** — decode everything, filter on decoded values — kept for
 byte-equality testing and as the semantics oracle.
 
+Aggregates (``Query.group_by(...).agg(...)``) run **below decode** by
+default: each morsel's collect calls the store's
+``_collect_aggregate`` hook, which returns a partial aggregation state
+instead of decoded rows (code-space on DeepMapping stores — a
+count-only group-by decodes zero rows; fan-out merge on
+sharded/federated stores; decode-then-aggregate on baselines), and the
+Gather operator merges states instead of concatenating columns.  With
+``pushdown=False`` the morsels flow as decoded rows and the gatherer
+aggregates them post-hoc — the decode-then-aggregate reference the
+differential suite compares against.  Key-equi joins (``Query.join``)
+wrap the finalized morsel stream: each morsel's candidate rows probe
+the right store's existence index through the same
+dispatch/collect hooks (with a dispatch-ahead window, so right-store
+inference overlaps left host work), non-matching rows are dropped via
+the ``match`` selector, and right columns scatter into the morsel.
+
 Plan execution defaults the sharded fan-out ON (overlapping per-shard
 inference — ``Query.fanout(False)`` restores serial visits); the
 legacy ``store.lookup`` shim stays serial for bit-for-bit continuity.
@@ -54,13 +70,18 @@ from repro import obs
 from repro.api.cache import plan_fingerprint
 from repro.api.plan import (
     DEFAULT_MORSEL,
+    AggregateResult,
     ExplainStats,
     OperatorStats,
     Predicate,
     QueryPlan,
     QueryResult,
+    aggregate_columns,
+    aggregate_rows,
     columns_with_predicates,
     evaluate_predicates,
+    finalize_agg_state,
+    merge_agg_states,
 )
 from repro.api.protocol import _check_index_agreement
 from repro.fault.errors import OwnerError, OwnerFailure
@@ -82,6 +103,7 @@ _STAGE_FIELDS = (
     ("aux_merge", "aux_s"),
     ("filter", "filter_s"),
     ("decode", "decode_s"),
+    ("aggregate", "agg_s"),
 )
 
 #: Per-morsel operator-time targets (seconds).  Below the low mark the
@@ -166,6 +188,9 @@ class MorselResult:
     ``keys``/``values``/``exists`` are aligned with the morsel's slice
     of the key stream; ``match`` is the pushed-down predicate selector
     (``None`` = no predicates — every existing row is a result row).
+    For below-decode aggregate plans ``agg`` carries the morsel's
+    partial aggregation state instead — ``values``/``exists`` are
+    empty and the gatherer merges states rather than rows.
     """
 
     index: int
@@ -175,6 +200,18 @@ class MorselResult:
     exists: np.ndarray
     match: Optional[np.ndarray]
     stats: ExplainStats
+    agg: Optional[Dict[tuple, list]] = None
+
+
+def _describe_failure(exc: BaseException) -> Tuple[dict, ...]:
+    """Normalize an executor-level failure into ``owners_failed``
+    evidence entries (multi-owner failures keep per-owner detail)."""
+    if isinstance(exc, OwnerFailure):
+        return tuple(o.describe() for o in exc.owners)
+    return (OwnerError(
+        owner="store", site=getattr(exc, "site", "dispatch"),
+        attempts=1, error_type=type(exc).__name__, message=str(exc),
+    ).describe(),)
 
 
 def _resolve_keys(store, plan: QueryPlan) -> Tuple[np.ndarray, float]:
@@ -230,6 +267,11 @@ class PlanStream:
         self.preds: Tuple[Predicate, ...] = (
             plan.predicates if plan.pushdown else ()
         )
+        #: Below-decode aggregation: with pushdown (default) every
+        #: morsel collects through ``_collect_aggregate`` and returns a
+        #: partial state; ``pushdown=False`` keeps rows flowing and the
+        #: gatherer aggregates post-hoc (the reference path).
+        self.agg_below = bool(plan.aggregates) and plan.pushdown
         #: Dispatch capability: the store will evaluate these pushdown
         #: predicates in-kernel (match bits ride the inference call), so
         #: the executor's host Filter stage is expected to be a no-op.
@@ -264,10 +306,16 @@ class PlanStream:
             # Post-hoc filtering evaluates on decoded values, so the
             # predicate columns must be decoded even when the projection
             # excludes them (_finalize_morsel drops them after filtering).
-            self.columns = plan.columns
+            # Aggregate plans project exactly the group-by + aggregate
+            # columns (plan.columns is None by construction).
+            self.columns = (
+                aggregate_columns(plan.group_by, plan.aggregates)
+                if plan.aggregates
+                else plan.columns
+            )
             if plan.predicates and not plan.pushdown:
                 self.columns = columns_with_predicates(
-                    plan.columns, plan.predicates
+                    self.columns, plan.predicates
                 )
             cache.put(
                 fp,
@@ -357,24 +405,35 @@ class PlanStream:
             raise RuntimeError("collect_one with no morsel in flight")
         seq, start, rows, target, handle, t_dispatch = self._inflight.pop(0)
         t_collect0 = time.perf_counter()
+        agg: Optional[Dict[tuple, list]] = None
         if isinstance(handle, _FailedDispatch):
-            values, exists, match, stats = self._degraded_morsel(rows, handle.exc)
+            values, exists, match, stats, agg = self._degraded(rows, handle.exc)
         else:
             try:
-                values, exists, match, stats = self.store._collect_lookup(handle)
+                if self.agg_below:
+                    agg, stats = self.store._collect_aggregate(
+                        handle, self.plan.group_by, self.plan.aggregates
+                    )
+                    values = {}
+                    exists = np.zeros(0, dtype=bool)
+                    match = None
+                else:
+                    values, exists, match, stats = (
+                        self.store._collect_lookup(handle)
+                    )
             except Exception as exc:
                 if self.plan.on_error != "partial":
                     raise
                 # OwnerFailure here means even partial degradation was
                 # impossible inside the store (every owner failed);
                 # degrade the whole morsel at this level instead.
-                values, exists, match, stats = self._degraded_morsel(rows, exc)
+                values, exists, match, stats, agg = self._degraded(rows, exc)
         t_collect1 = time.perf_counter()
         self._emit_morsel(seq, rows, stats, t_dispatch, t_collect0, t_collect1)
         if not self.fixed and rows == target:
             operator_s = (
                 stats.infer_s + stats.exist_s + stats.aux_s
-                + stats.filter_s + stats.decode_s
+                + stats.filter_s + stats.decode_s + stats.agg_s
             )
             self._morsel_rows = next_morsel_rows(target, operator_s)
         if self.done:
@@ -387,9 +446,29 @@ class PlanStream:
             exists=exists,
             match=match,
             stats=stats,
+            agg=agg,
         )
 
     # ---------------------------------------------------------- degraded
+    def _degraded(self, rows: int, exc: BaseException):
+        """Degrade one morsel under ``on_error='partial'`` — row form
+        (typed placeholder columns) or aggregate form (empty partial
+        state), matching the plan's collect mode."""
+        if self.agg_below:
+            stats = ExplainStats(
+                plan=("degraded",),
+                owners_failed=_describe_failure(exc),
+                keys_unresolved=rows,
+            )
+            obs.registry().counter(
+                "deepmap_fault_degraded_morsels_total",
+                "Morsels answered with every row unreachable "
+                "(on_error='partial' full-owner failure).",
+            ).inc(kind=self.plan.kind)
+            return {}, np.zeros(0, dtype=bool), None, stats, {}
+        values, exists, match, stats = self._degraded_morsel(rows, exc)
+        return values, exists, match, stats, None
+
     def _degraded_morsel(self, rows: int, exc: BaseException):
         """Synthesize a fully-degraded morsel under ``on_error=
         'partial')``: every row unreachable (``exists=False``, typed
@@ -412,16 +491,9 @@ class PlanStream:
         }
         exists = np.zeros(rows, dtype=bool)
         match = np.zeros(rows, dtype=bool) if self.preds else None
-        if isinstance(exc, OwnerFailure):
-            described = tuple(o.describe() for o in exc.owners)
-        else:
-            described = (OwnerError(
-                owner="store", site=getattr(exc, "site", "dispatch"),
-                attempts=1, error_type=type(exc).__name__, message=str(exc),
-            ).describe(),)
         stats = ExplainStats(
             plan=("degraded",),
-            owners_failed=described,
+            owners_failed=_describe_failure(exc),
             keys_unresolved=rows,
         )
         obs.registry().counter(
@@ -518,6 +590,10 @@ def _finalize_morsel(plan: QueryPlan, morsel: MorselResult) -> MorselResult:
     included — relaxed by exactly the rows a degraded morsel reports
     unreachable (``keys_unresolved``): a partial result may miss keys
     whose owner is down, but never MORE than the evidence admits."""
+    if morsel.agg is not None:
+        # Below-decode aggregate morsel: no rows to filter or check —
+        # the partial state already reflects existence + predicates.
+        return morsel
     if plan.kind != "point":
         missing = int(morsel.exists.shape[0] - morsel.exists.sum())
         if missing > int(morsel.stats.keys_unresolved):
@@ -538,6 +614,118 @@ def _stream_run(run: PlanStream, window: int) -> Iterator[MorselResult]:
         yield _finalize_morsel(run.plan, run.collect_one())
 
 
+# ------------------------------------------------------------------- join
+def _dispatch_join(plan: QueryPlan, morsel: MorselResult):
+    """JoinProbe dispatch half: enqueue the right-store lookup for one
+    finalized morsel's candidate rows (existing + predicate-matched).
+    The probe keys go through ``JoinSpec.key`` (vectorized left-key →
+    right-key map; identity when ``None``) and scatter through the
+    right store's own dispatch hook — existence index, sharding and
+    fan-out included — so the probe IS a point plan on the right."""
+    spec = plan.join
+    sel = morsel.exists if morsel.match is None else morsel.match
+    sel_idx = np.flatnonzero(sel)
+    left = morsel.keys[sel_idx]
+    probe = (
+        left
+        if spec.key is None
+        else np.asarray(spec.key(left), dtype=np.int64)
+    )
+    try:
+        handle = spec.store._dispatch_lookup(
+            probe, spec.columns, fanout=True, on_error=plan.on_error
+        )
+    except Exception as exc:
+        if plan.on_error != "partial":
+            raise
+        handle = _FailedDispatch(exc)
+    return morsel, sel_idx, probe, handle
+
+
+def _degraded_join(plan: QueryPlan, probe: np.ndarray, exc: BaseException):
+    """Right-store failure under ``on_error='partial'``: every probe
+    unresolved — the candidate rows drop out of the join (typed empty
+    right columns via a zero-length probe, as ``_degraded_morsel``)."""
+    spec = plan.join
+    try:
+        pvals, _, _, _ = spec.store._collect_lookup(
+            spec.store._dispatch_lookup(
+                np.zeros(0, dtype=np.int64), spec.columns, fanout=False
+            )
+        )
+    except Exception:
+        raise exc
+    n = int(probe.shape[0])
+    rvalues = {c: np.zeros(n, dtype=arr.dtype) for c, arr in pvals.items()}
+    rexists = np.zeros(n, dtype=bool)
+    stats = ExplainStats(
+        owners_failed=_describe_failure(exc), keys_unresolved=n
+    )
+    obs.registry().counter(
+        "deepmap_fault_degraded_morsels_total",
+        "Morsels answered with every row unreachable "
+        "(on_error='partial' full-owner failure).",
+    ).inc(kind="join")
+    return rvalues, rexists, stats
+
+
+def _collect_join(plan: QueryPlan, entry) -> MorselResult:
+    """JoinProbe collect half: resolve the right-store lookup, narrow
+    ``match`` to rows whose probe key exists on the right, and scatter
+    the right columns into the morsel (prefixed with ``JoinSpec.prefix``
+    on name collision).  Right-store stage timings and decode counts
+    merge into the morsel's stats; ``join_probes`` records the probes."""
+    morsel, sel_idx, probe, handle = entry
+    spec = plan.join
+    rows = int(morsel.keys.shape[0])
+    morsel.stats.join_probes += int(probe.shape[0])
+    if isinstance(handle, _FailedDispatch):
+        rvalues, rexists, rstats = _degraded_join(plan, probe, handle.exc)
+    else:
+        try:
+            rvalues, rexists, _, rstats = spec.store._collect_lookup(handle)
+        except Exception as exc:
+            if plan.on_error != "partial":
+                raise
+            rvalues, rexists, rstats = _degraded_join(plan, probe, exc)
+    match = (
+        morsel.exists if morsel.match is None else morsel.match
+    ).copy()
+    match[sel_idx[~rexists]] = False
+    morsel.match = match
+    for c, arr in rvalues.items():
+        name = spec.prefix + c if c in morsel.values else c
+        full = np.zeros(rows, dtype=arr.dtype)
+        full[sel_idx] = arr
+        morsel.values[name] = full
+    morsel.stats.merge_timings(rstats)
+    return morsel
+
+
+def _join_stream(
+    plan: QueryPlan, stream: Iterator[MorselResult], window: int
+) -> Iterator[MorselResult]:
+    """Wrap a finalized morsel stream with the join operator, keeping
+    up to ``window`` right-store probes in flight ahead of the collect
+    — right-store device work overlaps left host halves the same way
+    morsel dispatch overlaps collect within one plan."""
+    pending: List[tuple] = []
+    for morsel in stream:
+        pending.append(_dispatch_join(plan, morsel))
+        while len(pending) > window:
+            yield _collect_join(plan, pending.pop(0))
+    while pending:
+        yield _collect_join(plan, pending.pop(0))
+
+
+def _apply_join(plan: QueryPlan, morsel: MorselResult) -> MorselResult:
+    """Synchronous join step (dispatch + collect back-to-back) for
+    consumers that interleave several plans (:func:`execute_plans`)."""
+    if plan.join is None:
+        return morsel
+    return _collect_join(plan, _dispatch_join(plan, morsel))
+
+
 def stream_plan(
     store, plan: QueryPlan, window: int = MORSEL_WINDOW
 ) -> Iterator[MorselResult]:
@@ -545,12 +733,16 @@ def stream_plan(
 
     Keeps up to ``window`` morsels' device work in flight ahead of the
     host half; yields morsels in key-stream order (post-hoc predicates
-    already applied as ``match`` selectors).  Callers that only need
-    the final relation should use :func:`execute_plan`; streaming
+    already applied as ``match`` selectors, join probes resolved with
+    their own dispatch-ahead window).  Callers that only need the
+    final relation should use :func:`execute_plan`; streaming
     consumers (the serving engine, federated gathers) get bounded
     memory and early rows from this form.
     """
-    return _stream_run(PlanStream(store, plan), window)
+    stream = _stream_run(PlanStream(store, plan), window)
+    if plan.join is not None:
+        stream = _join_stream(plan, stream, window)
+    return stream
 
 
 def _concat(parts: List[np.ndarray]) -> np.ndarray:
@@ -567,12 +759,34 @@ class _Gatherer:
         self.key_parts: List[np.ndarray] = []
         self.exists_parts: List[np.ndarray] = []
         self.value_parts: Dict[str, List[np.ndarray]] = {}
+        self.agg_state: Dict[tuple, list] = {}
         self.inner_plan: Tuple[str, ...] = ()
         self.t0 = time.perf_counter()
 
     def add(self, morsel: MorselResult) -> None:
         """Fold one finalized morsel into the accumulating result."""
         t0 = time.perf_counter()
+        if self.plan.aggregates:
+            if morsel.agg is not None:
+                # Below-decode morsel: merge the store's partial state.
+                merge_agg_states(
+                    self.agg_state, morsel.agg, self.plan.aggregates
+                )
+            else:
+                # pushdown(False) reference: aggregate the decoded rows.
+                aggregate_rows(
+                    self.agg_state,
+                    self.plan.group_by,
+                    self.plan.aggregates,
+                    morsel.values,
+                    morsel.exists if morsel.match is None else morsel.match,
+                )
+            if not self.inner_plan:
+                self.inner_plan = morsel.stats.plan
+            self.stats.merge_timings(morsel.stats)
+            self.stats.morsels += 1
+            self.stats.agg_s += time.perf_counter() - t0
+            return
         if morsel.match is not None:
             sel = morsel.match
             self.key_parts.append(morsel.keys[sel])
@@ -590,10 +804,13 @@ class _Gatherer:
         self.stats.morsels += 1
         self.stats.gather_s += time.perf_counter() - t0
 
-    def finish(self, run: PlanStream) -> QueryResult:
+    def finish(self, run: PlanStream):
         """Concatenate the accumulated morsels and assemble the final
         :class:`~repro.api.plan.ExplainStats` (operator rows, plan
-        stages, cache + morsel-size evidence)."""
+        stages, cache + morsel-size evidence).  Aggregate plans
+        finalize the folded state instead — :class:`AggregateResult`."""
+        if self.plan.aggregates:
+            return self._finish_aggregate(run)
         t0 = time.perf_counter()
         keys = (
             _concat(self.key_parts)
@@ -629,6 +846,14 @@ class _Gatherer:
                 if filtered
                 else ()
             )
+            + (
+                (
+                    f"join[{type(self.plan.join.store).__name__},"
+                    f"{stats.join_probes} probes]",
+                )
+                if self.plan.join is not None
+                else ()
+            )
             + (f"gather[{stats.morsels} morsels]",)
             + (
                 (f"degraded[{len(stats.owners_failed)} owners]",)
@@ -656,17 +881,108 @@ class _Gatherer:
             OperatorStats("decode", stats.rows_decoded, stats.rows_decoded,
                           stats.decode_s)
         )
+        if self.plan.join is not None:
+            ops.append(OperatorStats(
+                "join", stats.join_probes, int(keys.shape[0]), 0.0
+            ))
         ops.append(OperatorStats("gather", n, keys.shape[0], stats.gather_s))
         stats.operators = tuple(ops)
         return QueryResult(keys=keys, values=values, exists=exists, explain=stats)
 
+    def _finish_aggregate(self, run: PlanStream) -> AggregateResult:
+        """Finalize the folded aggregation state: deterministic group
+        order, plan stages (the store-level ``aggregate[...]`` stage is
+        kept when the inner plan recorded one; the post-hoc reference
+        path records its own ``aggregate[host,...]``), operator rows
+        with the decode evidence that proves where aggregation ran."""
+        t0 = time.perf_counter()
+        plan = self.plan
+        stats = self.stats
+        groups, aggs = finalize_agg_state(
+            self.agg_state, plan.group_by, plan.aggregates
+        )
+        stats.gather_s += time.perf_counter() - t0
+        stats.groups_emitted = len(self.agg_state)
+        stats.num_keys = int(run.keys.shape[0])
+        stats.num_rows = stats.groups_emitted
+        stats.route_s += run.route_s
+        stats.plan_cache = run.cache_state
+        stats.morsel_sizes = tuple(run.sizes)
+        filtered = bool(plan.predicates)
+        kfilter = filtered and (run.kernel_filter or stats.kernel_filtered)
+        has_agg_stage = any(
+            s.startswith("aggregate[") for s in self.inner_plan
+        )
+        mode = "store" if run.agg_below else "host"
+        stats.plan = (
+            (plan.source_stage(),)
+            + self.inner_plan
+            + (
+                (
+                    f"filter[{'kernel:' if kfilter else ''}"
+                    f"{','.join(stats.predicates)}]",
+                )
+                if filtered and not run.agg_below
+                else ()
+            )
+            + (
+                ()
+                if has_agg_stage
+                else (
+                    f"aggregate[{mode},{len(plan.group_by)} keys,"
+                    f"{len(plan.aggregates)} aggs]",
+                )
+            )
+            + (f"gather[{stats.morsels} morsels]",)
+            + (
+                (f"degraded[{len(stats.owners_failed)} owners]",)
+                if stats.owners_failed
+                else ()
+            )
+        )
+        stats.total_s = time.perf_counter() - self.t0
+        n = stats.num_keys
+        ops = [OperatorStats("key_source", 0, n, stats.route_s)]
+        if stats.shards_visited:
+            ops.append(OperatorStats("shard_scatter", n, n, 0.0))
+        ops.append(OperatorStats("infer", n, n, stats.infer_s))
+        ops.append(OperatorStats("exist", n, n, stats.exist_s))
+        ops.append(OperatorStats("aux_merge", n, n, stats.aux_s))
+        if filtered:
+            ops.append(OperatorStats(
+                "filter[kernel]" if kfilter else "filter",
+                n, stats.rows_matched, stats.filter_s,
+            ))
+        ops.append(
+            OperatorStats("decode", stats.rows_decoded, stats.rows_decoded,
+                          stats.decode_s)
+        )
+        ops.append(OperatorStats(
+            "aggregate", n, stats.groups_emitted, stats.agg_s
+        ))
+        ops.append(OperatorStats(
+            "gather", stats.groups_emitted, stats.groups_emitted,
+            stats.gather_s,
+        ))
+        stats.operators = tuple(ops)
+        return AggregateResult(
+            group_by=plan.group_by,
+            groups=groups,
+            aggregates=aggs,
+            explain=stats,
+        )
 
-def execute_plan(store, plan: QueryPlan) -> QueryResult:
+
+def execute_plan(store, plan: QueryPlan):
     """Run ``plan`` against ``store`` -> :class:`QueryResult` (the
-    morsel stream, fully gathered)."""
+    morsel stream, fully gathered), or :class:`AggregateResult` for
+    ``group_by``/``agg`` plans."""
     run = PlanStream(store, plan)
+    stream: Iterator[MorselResult] = _stream_run(run, MORSEL_WINDOW)
+    if plan.join is not None:
+        stream = _join_stream(plan, stream, MORSEL_WINDOW)
     gatherer = _Gatherer(plan)
-    for morsel in _stream_run(run, MORSEL_WINDOW):
+    for morsel in stream:
         gatherer.add(morsel)
     return gatherer.finish(run)
 
@@ -675,7 +991,7 @@ def execute_plans(
     pairs: Sequence[Tuple[object, QueryPlan]],
     window: int = MORSEL_WINDOW,
     max_inflight: int = 16,
-) -> List[QueryResult]:
+) -> List:
     """Run several plans — possibly against several stores — through
     ONE interleaved morsel pipeline.
 
@@ -699,7 +1015,7 @@ def execute_plans(
     max_inflight = max(1, int(max_inflight))
     runs = [PlanStream(store, plan) for store, plan in pairs]
     gatherers = [_Gatherer(plan) for _, plan in pairs]
-    results: List[Optional[QueryResult]] = [None] * len(runs)
+    results: List[Optional[object]] = [None] * len(runs)
     live = list(range(len(runs)))
     rounds = 0
     while live:
@@ -727,7 +1043,10 @@ def execute_plans(
         for i in live:
             run = runs[i]
             if run.inflight:
-                gatherers[i].add(_finalize_morsel(run.plan, run.collect_one()))
+                gatherers[i].add(_apply_join(
+                    run.plan,
+                    _finalize_morsel(run.plan, run.collect_one()),
+                ))
             if run.done:
                 results[i] = gatherers[i].finish(run)
             else:
@@ -737,22 +1056,69 @@ def execute_plans(
     return results  # type: ignore[return-value]
 
 
-def execute_plan_staged(store, plan: QueryPlan) -> QueryResult:
+def execute_plan_staged(store, plan: QueryPlan):
     """Legacy one-shot path (pre-streaming executor), kept as the
     reference implementation for the byte-equality suite: the whole
     key stream answered as a single batch through
-    ``_lookup_with_stats``, predicates applied post-hoc."""
+    ``_lookup_with_stats``, predicates applied post-hoc.  Aggregates
+    run post-hoc over the decoded batch (always decode-then-aggregate
+    here — the staged path IS a reference) and joins resolve as one
+    synchronous probe."""
     t0 = time.perf_counter()
     keys, route_s = _resolve_keys(store, plan)
     num_keys = int(keys.shape[0])
-    selected = plan.columns
+    selected = (
+        aggregate_columns(plan.group_by, plan.aggregates)
+        if plan.aggregates
+        else plan.columns
+    )
     need = columns_with_predicates(selected, plan.predicates)
     fanout = True if plan.fanout is None else plan.fanout
     values, exists, stats = store._lookup_with_stats(keys, need, fanout=fanout)
     if plan.kind != "point":
         _check_index_agreement(f"{plan.kind} plan", exists)
-    if plan.predicates:
-        match = evaluate_predicates(plan.predicates, values, exists, stats)
+    match = (
+        evaluate_predicates(plan.predicates, values, exists, stats)
+        if plan.predicates
+        else None
+    )
+    if plan.aggregates:
+        state: Dict[tuple, list] = {}
+        t_agg = time.perf_counter()
+        aggregate_rows(
+            state, plan.group_by, plan.aggregates, values,
+            exists if match is None else match,
+        )
+        stats.agg_s += time.perf_counter() - t_agg
+        groups, aggs = finalize_agg_state(state, plan.group_by, plan.aggregates)
+        stats.kind = plan.kind
+        stats.groups_emitted = len(state)
+        stats.plan = (plan.source_stage(),) + stats.plan + (
+            f"aggregate[host,{len(plan.group_by)} keys,"
+            f"{len(plan.aggregates)} aggs]",
+        )
+        stats.num_keys = num_keys
+        stats.num_rows = len(state)
+        stats.route_s += route_s
+        stats.total_s = time.perf_counter() - t0
+        return AggregateResult(
+            group_by=plan.group_by, groups=groups, aggregates=aggs,
+            explain=stats,
+        )
+    if plan.join is not None:
+        left_names = set(values)
+        morsel = _apply_join(
+            plan,
+            MorselResult(0, 0, keys, values, exists, match, stats),
+        )
+        match, values = morsel.match, morsel.values
+        keys, exists = keys[match], exists[match]
+        values = {
+            c: arr[match]
+            for c, arr in values.items()
+            if selected is None or c in selected or c not in left_names
+        }
+    elif match is not None:
         keys, exists = keys[match], exists[match]
         values = {
             c: arr[match]

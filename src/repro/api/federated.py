@@ -46,7 +46,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro import obs
-from repro.api.plan import ExplainStats
+from repro.api.plan import ExplainStats, merge_agg_states
 from repro.api.protocol import MappingStore
 from repro.api.routing import (
     LazyFanoutPool,
@@ -156,6 +156,16 @@ class FederatedStore(MappingStore):
         # Morsel-parallel collect: member host halves gather on the
         # same lazy fan-out pool machinery the sharded store uses.
         self._fanout = LazyFanoutPool(None, "fed-collect")
+        # One PlanCache across the federation: a predicate/aggregate
+        # code table compiled against one member's decode map is
+        # content-matched (PlanCache._table_memo) and reused by every
+        # member whose vocabulary coincides — a plan no longer
+        # recompiles its tables per member.  Member versions fence
+        # entries individually, so divergent members just occupy
+        # separate variants.
+        shared_cache = self.plan_cache()
+        for m in self.members:
+            m._plan_cache = shared_cache
 
     # --------------------------------------------------------------- routing
     def _member_of(self, keys: np.ndarray) -> np.ndarray:
@@ -222,11 +232,15 @@ class FederatedStore(MappingStore):
             use_fanout, columns, keys_exist, on_error,
         )
 
-    def _visit_member(self, pending: _PendingFederatedLookup, part):
+    def _visit_member(self, pending: _PendingFederatedLookup, part, aggregate=None):
         """Collect one member's part under the guarded retry loop ->
         ``(member, positions, values, exists, match, stats, outcome)``
         (result fields are ``None`` on terminal failure).  Health is
-        recorded on every outcome, so replicate-mode routing learns."""
+        recorded on every outcome, so replicate-mode routing learns.
+        With ``aggregate=(group_by, aggregates)`` the member folds its
+        part in code space instead (``_collect_aggregate``) and the
+        partial state rides in the ``values`` slot — tuple shape is
+        unchanged so the failover walk handles both."""
         m, pos, (ok, payload) = part
         owner = self._names[m]
 
@@ -244,6 +258,8 @@ class FederatedStore(MappingStore):
                     predicates=pending.predicates,
                     keys_exist=pending.keys_exist,
                 )
+            if aggregate is not None:
+                return self.members[m]._collect_aggregate(handle, *aggregate)
             return self.members[m]._collect_lookup(handle)
 
         outcome = call_guarded(
@@ -253,6 +269,10 @@ class FederatedStore(MappingStore):
             self.health.record_failure(owner)
             return m, pos, None, None, None, None, outcome
         self.health.record_success(owner, outcome.latency_s)
+        if aggregate is not None:
+            state, stats = outcome.value
+            stats.shard_ids = tuple(f"m{m}:{s}" for s in stats.shard_ids)
+            return m, pos, state, None, None, stats, outcome
         values, exists, match, stats = outcome.value
         # Namespace member-local shard ids before the union: two
         # sharded members both have a "shard 0", and deduping them
@@ -260,7 +280,9 @@ class FederatedStore(MappingStore):
         stats.shard_ids = tuple(f"m{m}:{s}" for s in stats.shard_ids)
         return m, pos, values, exists, match, stats, outcome
 
-    def _failover_replicate(self, pending: _PendingFederatedLookup, first):
+    def _failover_replicate(
+        self, pending: _PendingFederatedLookup, first, aggregate=None
+    ):
         """Replicate-mode failover: the picked replica failed
         terminally — walk the remaining replicas in ring order (fresh
         dispatch each) until one serves.  Returns the winning visit
@@ -278,7 +300,9 @@ class FederatedStore(MappingStore):
             ).inc(member=mid)
             # Handle-less part: _visit_member's attempt 0 dispatches
             # fresh on the failover member.
-            visit = self._visit_member(pending, (mid, pos, (False, None)))
+            visit = self._visit_member(
+                pending, (mid, pos, (False, None)), aggregate=aggregate
+            )
             retries += visit[6].retries
             if visit[6].ok:
                 return visit, tuple(errors), retries
@@ -377,6 +401,63 @@ class FederatedStore(MappingStore):
             f"{','.join(str(m) for m in pending.member_ids)}]",
         ) + member_plan
         return values, exists, match, agg
+
+    def _collect_aggregate(self, pending: _PendingFederatedLookup, group_by, aggregates):
+        """Federated ``group_by(...).agg(...)``: each member folds its
+        part through its own aggregate hook (code space on DeepMapping
+        members — zero rows decoded; decode-then-aggregate on baseline
+        members), and the facade merges the partial states.  Decoded
+        group values are the shared vocabulary, so a federation mixing
+        store types still aggregates exactly.  Replicate mode fails
+        over to the next replica; partition mode degrades around failed
+        members under ``on_error='partial')`` with the usual
+        evidence."""
+        agg = ExplainStats(route_s=pending.route_s, async_fanout=pending.use_fanout)
+        spec = (group_by, aggregates)
+
+        if pending.use_fanout:
+            visited = self._fanout.map(
+                lambda p: self._visit_member(pending, p, aggregate=spec),
+                pending.parts, owners=len(self.members),
+            )
+        else:
+            visited = [
+                self._visit_member(pending, p, aggregate=spec)
+                for p in pending.parts
+            ]
+
+        failover_errors: Tuple = ()
+        if self.mode == "replicate" and not visited[0][6].ok:
+            winner, failover_errors, retries = self._failover_replicate(
+                pending, visited[0], aggregate=spec
+            )
+            visited = [winner]
+            agg.retries += retries - winner[6].retries
+
+        healthy = [v for v in visited if v[6].ok]
+        errors = tuple(v[6].error for v in visited if not v[6].ok)
+        if errors and (pending.on_error != "partial" or not healthy):
+            raise OwnerFailure(errors)
+        agg.retries += sum(v[6].retries for v in visited)
+        agg.owners_failed = tuple(
+            e.describe() for e in tuple(failover_errors) + errors
+        )
+        agg.keys_unresolved = sum(
+            int(v[1].shape[0]) for v in visited if not v[6].ok
+        )
+
+        state: Dict[tuple, list] = {}
+        member_plan: Tuple[str, ...] = ()
+        for _, _, part_state, _, _, stats, _ in healthy:
+            agg.merge_timings(stats)
+            if not member_plan:
+                member_plan = stats.plan
+            merge_agg_states(state, part_state, aggregates)
+        agg.plan = (
+            f"federate[{self.mode}:"
+            f"{','.join(str(m) for m in pending.member_ids)}]",
+        ) + member_plan
+        return state, agg
 
     def lookup(
         self, keys: np.ndarray, columns: Optional[Tuple[str, ...]] = None

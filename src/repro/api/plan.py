@@ -39,6 +39,11 @@ PLAN_KINDS = ("point", "range", "scan")
 #: Valid ``Predicate.op`` values (vectorized numpy comparisons).
 PREDICATE_OPS = ("==", "!=", "<", "<=", ">", ">=", "in")
 
+#: Valid ``AggSpec.func`` values.  ``count`` works on any column set;
+#: ``sum``/``min``/``max`` need a numeric column and resolve values
+#: through per-column code→value tables on the learned stores.
+AGG_FUNCS = ("count", "sum", "min", "max")
+
 #: Default executor morsel size (rows per streamed chunk).  Matches the
 #: default ``DeepMappingConfig.inference_batch`` so one morsel maps to
 #: one device chunk on the model-backed stores.
@@ -160,6 +165,240 @@ def evaluate_predicates(
 
 
 @dataclasses.dataclass(frozen=True)
+class AggSpec:
+    """One aggregate in a ``group_by(...).agg(...)`` plan.
+
+    ``func`` is one of :data:`AGG_FUNCS`.  ``count`` takes no column
+    (it counts existing/matching rows); ``sum``/``min``/``max`` name
+    the numeric column they reduce.  On code-space stores the reduction
+    runs over aux-corrected argmax codes: counts never touch values at
+    all, and ``sum``/``min``/``max`` gather through a code→value table
+    (the column's decode map cast to the accumulator dtype), so no row
+    is ever decoded — see DESIGN.md §Aggregation & joins.
+    """
+
+    func: str
+    column: Optional[str] = None
+
+    def __post_init__(self) -> None:
+        if self.func not in AGG_FUNCS:
+            raise ValueError(f"unknown aggregate {self.func!r}; have {AGG_FUNCS}")
+        if self.func == "count" and self.column is not None:
+            raise ValueError("count takes no column (rows have no nulls)")
+        if self.func != "count" and self.column is None:
+            raise ValueError(f"{self.func} needs a column")
+
+    def name(self) -> str:
+        """Result-dict key: ``count`` or ``func(column)``."""
+        return "count" if self.func == "count" else f"{self.func}({self.column})"
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class JoinSpec:
+    """Key-equi join against another store's existence index.
+
+    ``store`` is any :class:`~repro.api.protocol.MappingStore`; for
+    each surviving left morsel the executor maps the left keys through
+    ``key`` (``None`` = identity; e.g. ``lambda k: k // 8`` recovers
+    the orderkey from a packed lineitem key), scatters the probe keys
+    through the right store's own dispatch/collect hooks (existence
+    index + shard/member scatter included), and keeps only rows whose
+    probe key exists on the right — an inner join streamed morsel by
+    morsel, store to store.  ``columns`` projects the right side
+    (``None`` = all right columns); a right column whose name collides
+    with a left output column is prefixed with ``prefix``.
+
+    Identity-based equality/hash on purpose: the spec holds a live
+    store object, and two plans joining the same store instance are
+    the same join.
+    """
+
+    store: object
+    key: Optional[object] = None
+    columns: Optional[Tuple[str, ...]] = None
+    prefix: str = "r."
+
+
+def aggregate_columns(
+    group_by: Tuple[str, ...], aggregates: Tuple[AggSpec, ...]
+) -> Tuple[str, ...]:
+    """The store-side projection an aggregate plan needs: group-by
+    columns plus every aggregated column, deduplicated in order."""
+    cols = list(group_by)
+    for spec in aggregates:
+        if spec.column is not None and spec.column not in cols:
+            cols.append(spec.column)
+    return tuple(cols)
+
+
+def agg_value_table(column: str, decode_map: np.ndarray) -> np.ndarray:
+    """Code→value table for ``sum``/``min``/``max`` below decode: the
+    column's decode map cast to the exact accumulator dtype (int64 for
+    integer/bool columns — exact; float64 for float columns), frozen
+    read-only.  Rejects non-numeric columns, the same contract the
+    row-space reference path (:func:`aggregate_rows`) enforces."""
+    dm = np.asarray(decode_map)
+    if dm.dtype.kind not in "biuf":
+        raise ValueError(
+            f"sum/min/max need a numeric column; {column!r} has dtype {dm.dtype}"
+        )
+    table = dm.astype(np.float64 if dm.dtype.kind == "f" else np.int64)
+    table.setflags(write=False)
+    return table
+
+
+def _agg_numeric(column: str, arr: np.ndarray) -> np.ndarray:
+    """Row values cast to the accumulator dtype (see
+    :func:`agg_value_table` — both paths must reduce in the same
+    dtype or sums could differ by overflow/rounding)."""
+    arr = np.asarray(arr)
+    if arr.dtype.kind not in "biuf":
+        raise ValueError(
+            f"sum/min/max need a numeric column; {column!r} has dtype {arr.dtype}"
+        )
+    return arr.astype(np.float64 if arr.dtype.kind == "f" else np.int64)
+
+
+def _agg_combine(func: str, a, b):
+    """Fold one accumulator pair (associative + commutative, so morsel
+    and shard merge order cannot change results)."""
+    if func in ("count", "sum"):
+        return a + b
+    return min(a, b) if func == "min" else max(a, b)
+
+
+def agg_partials(
+    aggregates: Tuple[AggSpec, ...],
+    ginv: np.ndarray,
+    num_groups: int,
+    value_arrays,
+) -> list:
+    """Per-group partial aggregates for one chunk.
+
+    ``ginv`` maps each selected row to its group index in
+    ``[0, num_groups)`` (every group non-empty); ``value_arrays`` is
+    aligned with ``aggregates`` (``None`` for ``count``, else the
+    selected rows' values in accumulator dtype — decoded values on the
+    reference path, code→value-table gathers on the code-space path).
+    Returns one array of length ``num_groups`` per spec.
+    """
+    partials = []
+    order = starts = None
+    for spec, vals in zip(aggregates, value_arrays):
+        if spec.func == "count":
+            partials.append(np.bincount(ginv, minlength=num_groups).astype(np.int64))
+            continue
+        if spec.func == "sum":
+            acc = np.zeros(num_groups, dtype=vals.dtype)
+            np.add.at(acc, ginv, vals)
+            partials.append(acc)
+            continue
+        if order is None:
+            order = np.argsort(ginv, kind="stable")
+            starts = np.searchsorted(ginv[order], np.arange(num_groups))
+        op = np.minimum if spec.func == "min" else np.maximum
+        partials.append(op.reduceat(vals[order], starts))
+    return partials
+
+
+def fold_agg_partials(
+    state: Dict[tuple, list],
+    group_tuples,
+    aggregates: Tuple[AggSpec, ...],
+    partials,
+) -> Dict[tuple, list]:
+    """Fold one chunk's per-group partials into the running state
+    (``state[group-value-tuple][i]`` accumulates ``aggregates[i]``).
+    Keys are *decoded* group values, never codes: codes are per-store
+    (shards and federation members own independent codecs), decoded
+    values are the one vocabulary every source shares."""
+    for j, g in enumerate(group_tuples):
+        acc = state.get(g)
+        if acc is None:
+            state[g] = [p[j] for p in partials]
+        else:
+            for i, spec in enumerate(aggregates):
+                acc[i] = _agg_combine(spec.func, acc[i], partials[i][j])
+    return state
+
+
+def aggregate_rows(
+    state: Dict[tuple, list],
+    group_by: Tuple[str, ...],
+    aggregates: Tuple[AggSpec, ...],
+    values: Dict[str, np.ndarray],
+    sel: np.ndarray,
+) -> Dict[tuple, list]:
+    """Decode-then-aggregate reference: fold the selected rows of one
+    decoded morsel into ``state``.  THE row-space aggregation path —
+    the default store hook, the ``pushdown=False`` executor reference,
+    and the test oracles all route here, so code-space results have a
+    single definition to be value-identical to."""
+    idx = np.flatnonzero(sel)
+    if idx.size == 0:
+        return state
+    if group_by:
+        uniqs, invs, dims = [], [], []
+        for c in group_by:
+            u, inv = np.unique(np.asarray(values[c])[idx], return_inverse=True)
+            uniqs.append(u)
+            invs.append(inv)
+            dims.append(len(u))
+        combined = np.ravel_multi_index(invs, dims) if len(invs) > 1 else invs[0]
+        ug, ginv = np.unique(combined, return_inverse=True)
+        coords = np.unravel_index(ug, dims)
+        labels = [u[c].tolist() for u, c in zip(uniqs, coords)]
+        group_tuples = list(zip(*labels))
+    else:
+        ug = np.zeros(1, dtype=np.int64)
+        ginv = np.zeros(idx.size, dtype=np.int64)
+        group_tuples = [()]
+    value_arrays = [
+        None if spec.column is None
+        else _agg_numeric(spec.column, np.asarray(values[spec.column])[idx])
+        for spec in aggregates
+    ]
+    partials = agg_partials(aggregates, ginv, len(ug), value_arrays)
+    return fold_agg_partials(state, group_tuples, aggregates, partials)
+
+
+def merge_agg_states(
+    state: Dict[tuple, list],
+    other: Dict[tuple, list],
+    aggregates: Tuple[AggSpec, ...],
+) -> Dict[tuple, list]:
+    """Merge a morsel/shard/member partial state into the running one
+    (group-wise :func:`_agg_combine` — order-insensitive)."""
+    for g, accs in other.items():
+        mine = state.get(g)
+        if mine is None:
+            state[g] = list(accs)
+        else:
+            for i, spec in enumerate(aggregates):
+                mine[i] = _agg_combine(spec.func, mine[i], accs[i])
+    return state
+
+
+def finalize_agg_state(
+    state: Dict[tuple, list],
+    group_by: Tuple[str, ...],
+    aggregates: Tuple[AggSpec, ...],
+):
+    """Deterministic result arrays from the folded state: groups sorted
+    by their value tuple, one array per group column and per aggregate
+    (keyed by :meth:`AggSpec.name`)."""
+    order = sorted(state)
+    groups = {
+        c: np.asarray([g[i] for g in order]) for i, c in enumerate(group_by)
+    }
+    aggs = {
+        spec.name(): np.asarray([state[g][i] for g in order])
+        for i, spec in enumerate(aggregates)
+    }
+    return groups, aggs
+
+
+@dataclasses.dataclass(frozen=True)
 class QueryPlan:
     """Declarative query description — what to fetch, not how.
 
@@ -192,6 +431,9 @@ class QueryPlan:
     morsel: Optional[int] = None
     cache: bool = True
     on_error: str = "raise"
+    group_by: Tuple[str, ...] = ()
+    aggregates: Tuple[AggSpec, ...] = ()
+    join: Optional[JoinSpec] = None
 
     def __post_init__(self) -> None:
         if self.kind not in PLAN_KINDS:
@@ -206,6 +448,14 @@ class QueryPlan:
             raise ValueError(
                 f"unknown on_error mode {self.on_error!r}; have {ERROR_MODES}"
             )
+        if self.group_by and not self.aggregates:
+            raise ValueError("group_by(...) needs agg(...)")
+        if self.aggregates and self.columns is not None:
+            raise ValueError(
+                "select() conflicts with agg(...): aggregates define the output"
+            )
+        if self.aggregates and self.join is not None:
+            raise ValueError("agg(...) and join(...) cannot combine in one plan")
 
     def source_stage(self) -> str:
         """Human-readable key-source stage name for explain output."""
@@ -300,12 +550,20 @@ class ExplainStats:
     #: not absent: they report ``exists=False`` with placeholder values
     #: but may well exist on the failed owner.
     keys_unresolved: int = 0
+    #: Result groups emitted by a ``group_by(...).agg(...)`` plan (set
+    #: on the final plan stats; per-morsel partials leave it 0 — a
+    #: group seen by many morsels is still one emitted group).
+    groups_emitted: int = 0
+    #: Probe keys scattered into the right store's existence index by
+    #: a ``join(...)`` plan (summed across morsels).
+    join_probes: int = 0
     route_s: float = 0.0
     infer_s: float = 0.0
     exist_s: float = 0.0
     aux_s: float = 0.0
     filter_s: float = 0.0
     decode_s: float = 0.0
+    agg_s: float = 0.0
     gather_s: float = 0.0
     total_s: float = 0.0
 
@@ -322,12 +580,16 @@ class ExplainStats:
         self.aux_s += other.aux_s
         self.filter_s += other.filter_s
         self.decode_s += other.decode_s
+        self.agg_s += other.agg_s
         self.gather_s += other.gather_s
         self.rows_decoded += other.rows_decoded
         self.rows_matched += other.rows_matched
         self.partitions_pruned += other.partitions_pruned
         self.retries += other.retries
         self.keys_unresolved += other.keys_unresolved
+        self.join_probes += other.join_probes
+        # one group seen by N morsels is still one group — keep the max
+        self.groups_emitted = max(self.groups_emitted, other.groups_emitted)
         self.owners_failed = _union(self.owners_failed, other.owners_failed)
         self.shard_ids = tuple(
             dict.fromkeys(self.shard_ids + other.shard_ids)
@@ -370,3 +632,27 @@ class QueryResult:
     def num_rows(self) -> int:
         """Existing result rows (``exists.sum()``)."""
         return int(self.exists.sum())
+
+
+@dataclasses.dataclass
+class AggregateResult:
+    """Executed ``group_by(...).agg(...)`` plan output.
+
+    ``groups`` maps each group-by column to its per-group value array;
+    ``aggregates`` maps each :meth:`AggSpec.name` to the per-group
+    aggregate array, all aligned and sorted by group-value tuple (so
+    two executions — or the code-space and reference paths — produce
+    positionally comparable arrays).  A global aggregate (no group-by
+    columns) emits exactly one group with empty ``groups``.
+    """
+
+    group_by: Tuple[str, ...]
+    groups: Dict[str, np.ndarray]
+    aggregates: Dict[str, np.ndarray]
+    explain: ExplainStats
+
+    @property
+    def num_groups(self) -> int:
+        """Emitted result groups."""
+        first = next(iter(self.aggregates.values()), None)
+        return 0 if first is None else int(len(first))

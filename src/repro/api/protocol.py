@@ -44,6 +44,7 @@ import numpy as np
 from repro.api.cache import PlanCache
 from repro.api.plan import (
     ExplainStats,
+    aggregate_rows,
     columns_with_predicates,
     evaluate_predicates,
 )
@@ -242,6 +243,29 @@ class MappingStore(abc.ABC):
         if len(need) != len(selected):
             values = {c: values[c] for c in selected}
         return values, exists, match, stats
+
+    def _collect_aggregate(self, handle, group_by, aggregates):
+        """Finish an *aggregate* lookup begun by :meth:`_dispatch_lookup`
+        -> ``(state, ExplainStats)``.
+
+        ``state`` maps decoded group-value tuples to accumulator lists
+        (one per :class:`~repro.api.plan.AggSpec`), foldable across
+        morsels/shards/members with
+        :func:`~repro.api.plan.merge_agg_states` — keyed by decoded
+        VALUES, never codes, because composite stores aggregate over
+        members with independent codecs.  The default is the
+        decode-then-aggregate reference: collect the rows the ordinary
+        way and fold them through
+        :func:`~repro.api.plan.aggregate_rows` (baseline stores, which
+        decode to answer at all, use this directly).  Code-space stores
+        override it to aggregate argmax codes below decode."""
+        values, exists, match, stats = self._collect_lookup(handle)
+        sel = exists if match is None else match
+        t0 = time.perf_counter()
+        state: Dict[tuple, list] = {}
+        aggregate_rows(state, group_by, aggregates, values, sel)
+        stats.agg_s += time.perf_counter() - t0
+        return state, stats
 
     def supports_kernel_filter(self, predicates: tuple = ()) -> bool:
         """Dispatch capability flag: ``True`` when the pushed-down

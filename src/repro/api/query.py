@@ -22,7 +22,7 @@ from typing import Iterator, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.api.plan import Predicate, QueryPlan, QueryResult
+from repro.api.plan import AggSpec, JoinSpec, Predicate, QueryPlan
 
 
 class Query:
@@ -43,6 +43,9 @@ class Query:
         self._morsel: Optional[int] = None
         self._cache: bool = True
         self._on_error: str = "raise"
+        self._group_by: Tuple[str, ...] = ()
+        self._aggregates: Tuple[AggSpec, ...] = ()
+        self._join: Optional[JoinSpec] = None
 
     # ------------------------------------------------------------ projection
     def select(self, *columns: str) -> "Query":
@@ -83,6 +86,68 @@ class Query:
         pushed-down path (the equivalence suite checks this); strictly
         more rows decoded."""
         self._pushdown = bool(enabled)
+        return self
+
+    # ----------------------------------------------------------- aggregation
+    def group_by(self, *columns: str) -> "Query":
+        """Group the result by the given columns (follow with
+        :meth:`agg`).  On code-space stores the grouping runs below
+        decode: rows group by their aux-corrected argmax codes and only
+        the distinct group *labels* are decoded, so a count-only
+        group-by reports ``rows_decoded == 0``.  Zero columns (the
+        default when only :meth:`agg` is called) is a global aggregate:
+        one group."""
+        if len(columns) == 1 and not isinstance(columns[0], str):
+            columns = tuple(columns[0])
+        self._check_columns(columns)
+        self._group_by = tuple(dict.fromkeys(columns))
+        return self
+
+    def agg(self, *specs) -> "Query":
+        """Add aggregates: ``"count"`` or ``(func, column)`` pairs with
+        ``func`` in :data:`~repro.api.plan.AGG_FUNCS` (``AggSpec``
+        objects also accepted).  ``sum``/``min``/``max`` need a numeric
+        column and resolve per-group values through code→value tables
+        below decode; :meth:`execute` then returns an
+        :class:`~repro.api.plan.AggregateResult`."""
+        parsed = []
+        for spec in specs:
+            if isinstance(spec, AggSpec):
+                parsed.append(spec)
+            elif isinstance(spec, str):
+                parsed.append(AggSpec(func=spec))
+            else:
+                func, column = spec
+                parsed.append(AggSpec(func=func, column=column))
+        for spec in parsed:
+            if spec.column is not None:
+                self._check_columns((spec.column,))
+        self._aggregates += tuple(parsed)
+        return self
+
+    # ------------------------------------------------------------------ join
+    def join(self, store, key=None, columns=None, prefix: str = "r.") -> "Query":
+        """Inner key-equi join against another store: each surviving
+        left row's key is mapped through ``key`` (``None`` = identity)
+        and probed into ``store``'s existence index; matching rows keep
+        the right store's ``columns`` (``None`` = all), streamed morsel
+        by morsel store-to-store (shard/member scatter included).
+        Right columns colliding with left output names are prefixed
+        with ``prefix``."""
+        if columns is not None:
+            if isinstance(columns, str):
+                columns = (columns,)
+            known = set(store.columns)
+            unknown = [c for c in columns if c not in known]
+            if unknown:
+                raise ValueError(
+                    f"unknown join column(s) {unknown}; right store has "
+                    f"{sorted(known)}"
+                )
+            columns = tuple(dict.fromkeys(columns))
+        if key is not None and not callable(key):
+            raise ValueError("join key must be a callable mapping left keys")
+        self._join = JoinSpec(store=store, key=key, columns=columns, prefix=prefix)
         return self
 
     # ------------------------------------------------------------ key source
@@ -165,10 +230,18 @@ class Query:
             morsel=self._morsel,
             cache=self._cache,
             on_error=self._on_error,
+            group_by=self._group_by,
+            aggregates=self._aggregates,
+            join=self._join,
         )
 
-    def execute(self) -> QueryResult:
-        """Compile and run the plan through the streaming executor."""
+    def execute(self):
+        """Compile and run the plan through the streaming executor.
+
+        Returns a :class:`~repro.api.plan.QueryResult` — or an
+        :class:`~repro.api.plan.AggregateResult` when :meth:`agg`
+        aggregates are set.
+        """
         from repro.api.executor import execute_plan  # local: keep import light
 
         return execute_plan(self._store, self.plan())

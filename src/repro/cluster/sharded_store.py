@@ -42,7 +42,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro import obs
-from repro.api.plan import ExplainStats
+from repro.api.plan import ExplainStats, merge_agg_states
 from repro.api.protocol import MappingStore
 from repro.api.routing import LazyFanoutPool
 from repro.cluster.partitioner import Partitioner, make_partitioner
@@ -532,6 +532,92 @@ class ShardedDeepMappingStore(MappingStore):
                 match[b.positions] = m
         agg.route_s += time.perf_counter() - t1
         return values, exists, match, agg
+
+    def _collect_aggregate(self, pending: _PendingShardedLookup, group_by, aggregates):
+        """Scattered ``group_by(...).agg(...)``: every shard folds its
+        batch in code space (:meth:`DeepMappingStore._collect_aggregate`
+        — zero rows decoded), and the facade merges the per-shard
+        partial states.  States key on decoded group values, so shards
+        with independent codecs (codes are NOT comparable across
+        shards) merge exactly.  Failed shards degrade under
+        ``on_error='partial'`` with the usual ``owners_failed``/
+        ``keys_unresolved`` evidence — their batches' rows are simply
+        absent from every group."""
+        keys, batches = pending.keys, pending.batches
+        route_s, use_fanout = pending.route_s, pending.use_fanout
+        preds = pending.predicates
+        if not batches:
+            probe_shard = self._healthy_shard()
+            state, stats = probe_shard._collect_aggregate(
+                probe_shard._dispatch_lookup(
+                    keys[:0], pending.columns, predicates=preds
+                ),
+                group_by, aggregates,
+            )
+            stats.plan = ("scatter[0]",) + stats.plan
+            stats.route_s += route_s
+            return state, stats
+
+        def visit(batch_handle):
+            batch, (ok, payload) = batch_handle
+            shard = self.shards[batch.shard_id]
+            owner = f"shard:{batch.shard_id}"
+
+            def attempt(i: int):
+                fault_injection.maybe_fail("shard_collect", owner)
+                if i == 0:
+                    if not ok:
+                        raise payload  # dispatch-time failure = try 0
+                    handle = payload
+                else:
+                    handle = shard._dispatch_lookup(
+                        batch.keys, pending.columns,
+                        predicates=preds, keys_exist=pending.keys_exist,
+                    )
+                return shard._collect_aggregate(handle, group_by, aggregates)
+
+            outcome = call_guarded(
+                attempt, owner=owner, site="shard_collect", policy=self.retry
+            )
+            obs.registry().counter(
+                "deepmap_shard_visits_total", "Lookup batches per shard."
+            ).inc(shard=batch.shard_id)
+            if not outcome.ok:
+                return batch, None, None, outcome
+            state, stats = outcome.value
+            return batch, state, stats, outcome
+
+        pairs = list(zip(batches, pending.handles))
+        if use_fanout:
+            parts = self._fanout.map(visit, pairs, owners=len(self.shards))
+        else:
+            parts = [visit(p) for p in pairs]
+
+        healthy = [p for p in parts if p[3].ok]
+        errors = tuple(p[3].error for p in parts if not p[3].ok)
+        if errors and (pending.on_error != "partial" or not healthy):
+            raise OwnerFailure(errors)
+
+        agg = ExplainStats(
+            shards_visited=len(batches),
+            shard_ids=tuple(int(b.shard_id) for b in batches),
+            async_fanout=use_fanout,
+            route_s=route_s,
+            retries=sum(p[3].retries for p in parts),
+            owners_failed=tuple(e.describe() for e in errors),
+            keys_unresolved=sum(
+                int(p[0].keys.shape[0]) for p in parts if not p[3].ok
+            ),
+        )
+        state: Dict[tuple, list] = {}
+        for p in healthy:
+            agg.merge_timings(p[2])
+            merge_agg_states(state, p[1], aggregates)
+        agg.plan = (
+            f"scatter[{len(batches)} shards]",
+            "mesh" if pending.mesh else ("fanout" if use_fanout else "serial"),
+        ) + healthy[0][2].plan
+        return state, agg
 
     def _lookup_with_stats(
         self,

@@ -1,0 +1,582 @@
+"""Differential harness for code-space aggregation & key-equi joins
+(ISSUE 10).
+
+Every ``group_by(...).agg(...)`` and ``join(...)`` result is checked
+value-identical against the naive decode-then-aggregate oracle in
+``tests/tpch_reference.py`` (pure numpy/python, independent of the
+plan machinery) on all four store types, and against the executor's
+own ``pushdown(False)`` reference path — under mutations, pushdown
+on/off, adaptive and fixed morsels, the staged legacy path, the
+multi-plan pipeline, federation (partition + replicate), and degraded
+``on_error('partial')`` execution with injected shard/member faults.
+
+Evidence contracts proven here:
+
+* count-only group-by on model-backed stores reports
+  ``rows_decoded == 0`` (aggregation consumed only aux-corrected
+  codes + the decode map);
+* ``groups_emitted`` equals the emitted group count and
+  ``join_probes`` the probed row count;
+* the federation shares ONE ``PlanCache`` across members — aggregate
+  code→value tables compiled against one member's decode maps are
+  content-matched by the others (``table_hits``), not recompiled.
+"""
+
+import numpy as np
+import pytest
+from tpch_reference import (
+    assert_aggregate_equal,
+    ref_group_aggregate,
+    ref_join_mask,
+)
+
+from repro.api import AggregateResult, FederatedStore
+from repro.api.executor import execute_plan_staged, execute_plans
+from repro.baselines import ArrayStore, HashStore
+from repro.cluster import ClusterConfig, ShardedDeepMappingStore
+from repro.core import DeepMappingConfig, DeepMappingStore, Table
+from repro.core.trainer import TrainConfig
+from repro.fault import FaultPlan, FaultSpec, OwnerFailure, RetryPolicy
+
+STORE_KINDS = ("deepmapping", "sharded", "array", "hash")
+
+TINY = DeepMappingConfig(
+    shared=(16,), private=(4,), train=TrainConfig(epochs=2, batch_size=512)
+)
+
+#: No backoff sleeps, two attempts — fault tests stay fast and exact.
+TIGHT = RetryPolicy(max_attempts=2, backoff_s=0.0, max_backoff_s=0.0)
+
+#: The harness aggregate set: one of each func, mixed columns.
+SPECS = ("count", ("sum", "c"), ("min", "c"), ("max", "a"))
+REF_SPECS = (("count", None), ("sum", "c"), ("min", "c"), ("max", "a"))
+
+
+def make_table(n=900, stride=3, off=0):
+    keys = np.arange(off, off + n * stride, stride, dtype=np.int64)
+    return Table(
+        keys=keys,
+        columns={
+            "a": ((keys // 16) % 5).astype(np.int32),
+            "b": ((keys // 32) % 3).astype(np.int32),
+            "c": ((keys // 8) % 7).astype(np.int32),
+        },
+    )
+
+
+def build_store(kind, table, config=TINY):
+    if kind == "deepmapping":
+        return DeepMappingStore.build(table, config)
+    if kind == "sharded":
+        return ShardedDeepMappingStore.build(
+            table, config, ClusterConfig(num_shards=3, policy="range")
+        )
+    if kind == "array":
+        return ArrayStore.build(table, codec="zstd", partition_bytes=4096)
+    if kind == "hash":
+        return HashStore.build(table, codec="none", partition_bytes=2048)
+    raise ValueError(kind)
+
+
+def oracle(table, group_by, sel=None, specs=REF_SPECS):
+    return ref_group_aggregate(table.columns, group_by, specs, sel)
+
+
+def rows_for_keys(table, keys):
+    """Point-plan oracle input: the table rows the executor resolves
+    for ``keys`` (missing keys drop, duplicates count per occurrence)."""
+    pos = {int(k): i for i, k in enumerate(table.keys)}
+    rows = [pos[int(k)] for k in keys if int(k) in pos]
+    return {c: np.asarray(v)[rows] for c, v in table.columns.items()}
+
+
+@pytest.fixture(scope="module", params=STORE_KINDS)
+def agg_store(request):
+    table = make_table()
+    return request.param, table, build_store(request.param, table)
+
+
+class TestAggregateDifferential:
+    def test_scan_groupby_all_funcs(self, agg_store):
+        """Code-space scan aggregate ≡ pushdown(False) reference ≡
+        naive oracle, on every store type."""
+        kind, table, store = agg_store
+        res = store.query().group_by("a", "b").agg(*SPECS).scan().execute()
+        assert isinstance(res, AggregateResult)
+        groups, aggs = oracle(table, ("a", "b"))
+        assert_aggregate_equal(res, groups, aggs)
+        ref = (
+            store.query().group_by("a", "b").agg(*SPECS)
+            .pushdown(False).scan().execute()
+        )
+        assert_aggregate_equal(ref, groups, aggs)
+        assert res.explain.groups_emitted == res.num_groups
+
+    def test_predicate_pushdown_on_off(self, agg_store):
+        kind, table, store = agg_store
+        sel = table.columns["c"] < 4
+        groups, aggs = oracle(table, ("a",), sel=sel)
+        for pushdown in (True, False):
+            res = (
+                store.query().where("c", "<", 4).group_by("a").agg(*SPECS)
+                .pushdown(pushdown).scan().execute()
+            )
+            assert_aggregate_equal(res, groups, aggs)
+
+    def test_point_keys_with_missing_and_duplicates(self, agg_store):
+        kind, table, store = agg_store
+        rng = np.random.default_rng(7)
+        q = np.concatenate(
+            [rng.choice(table.keys, 300), [1, table.max_key + 5, 10**8]]
+        )
+        groups, aggs = ref_group_aggregate(
+            rows_for_keys(table, q), ("b",), REF_SPECS
+        )
+        res = store.query().group_by("b").agg(*SPECS).where_keys(q).execute()
+        assert_aggregate_equal(res, groups, aggs)
+
+    def test_global_aggregate_single_group(self, agg_store):
+        kind, table, store = agg_store
+        res = store.query().agg("count", ("max", "c")).scan().execute()
+        assert res.num_groups == 1 and res.groups == {}
+        assert int(res.aggregates["count"][0]) == len(table.keys)
+        assert int(res.aggregates["max(c)"][0]) == int(table.columns["c"].max())
+
+    def test_range_aggregate(self, agg_store):
+        kind, table, store = agg_store
+        lo, hi = int(table.keys[100]), int(table.keys[700])
+        sel = (table.keys >= lo) & (table.keys < hi)
+        groups, aggs = oracle(table, ("a",), sel=sel)
+        res = (
+            store.query().group_by("a").agg(*SPECS)
+            .where_range(lo, hi).execute()
+        )
+        assert_aggregate_equal(res, groups, aggs)
+
+    def test_adaptive_vs_fixed_morsel(self, agg_store):
+        kind, table, store = agg_store
+        adaptive = store.query().group_by("a", "b").agg(*SPECS).scan().execute()
+        fixed = (
+            store.query().group_by("a", "b").agg(*SPECS)
+            .morsel(70).scan().execute()
+        )
+        assert fixed.explain.morsels > 1
+        assert_aggregate_equal(adaptive, fixed.groups, fixed.aggregates)
+
+    def test_staged_equals_streaming(self, agg_store):
+        kind, table, store = agg_store
+        plan = store.query().group_by("a").agg(*SPECS).scan().plan()
+        staged = execute_plan_staged(store, plan)
+        streamed = store.query().group_by("a").agg(*SPECS).scan().execute()
+        assert_aggregate_equal(streamed, staged.groups, staged.aggregates)
+
+    def test_execute_plans_interleaved(self, agg_store):
+        """Aggregate plans ride the multi-plan pipeline unchanged —
+        interleaved results identical to serial execute_plan."""
+        kind, table, store = agg_store
+        p_agg = store.query().group_by("a").agg(*SPECS).scan().plan()
+        p_row = store.query().select("b").where_keys(table.keys[::4]).plan()
+        r_agg, r_row = execute_plans([(store, p_agg), (store, p_row)])
+        serial = store.query().group_by("a").agg(*SPECS).scan().execute()
+        assert_aggregate_equal(r_agg, serial.groups, serial.aggregates)
+        assert r_row.keys.shape[0] == len(table.keys[::4])
+
+    def test_count_only_decodes_zero_rows(self, agg_store):
+        """The tentpole evidence contract: a count-only group-by on
+        model-backed stores consumes only codes — zero rows decoded."""
+        kind, table, store = agg_store
+        res = store.query().group_by("a", "b").agg("count").scan().execute()
+        groups, aggs = oracle(
+            table, ("a", "b"), specs=(("count", None),)
+        )
+        assert_aggregate_equal(res, groups, aggs)
+        if kind in ("deepmapping", "sharded"):
+            assert res.explain.rows_decoded == 0
+        assert any(
+            op.name == "aggregate" for op in res.explain.operators
+        )
+
+    @pytest.mark.parametrize("kind", STORE_KINDS)
+    def test_aggregate_after_mutations(self, kind):
+        """Insert/update/delete, then aggregate: code space stays
+        value-identical to the oracle over the mutated logical table
+        (stale code→value tables would show up here)."""
+        table = make_table(n=400)
+        store = build_store(kind, table)
+        cols = lambda n, off: {  # noqa: E731
+            "a": (np.arange(n, dtype=np.int32) % 5) + off,
+            "b": (np.arange(n, dtype=np.int32) % 3) + off,
+            "c": (np.arange(n, dtype=np.int32) % 7) + off,
+        }
+        new_keys = np.asarray([2, 5, 10**6, 10**6 + 4], dtype=np.int64)
+        store.insert(new_keys, cols(4, 10))
+        store.update(table.keys[10:20], cols(10, 20))
+        store.delete(table.keys[30:40])
+        store.delete(new_keys[:1])
+        # Mirror the mutations on a plain dict model of the table.
+        model = {
+            int(k): {c: int(table.columns[c][i]) for c in table.columns}
+            for i, k in enumerate(table.keys)
+        }
+        ins = cols(4, 10)
+        for i, k in enumerate(new_keys):
+            model[int(k)] = {c: int(ins[c][i]) for c in ins}
+        upd = cols(10, 20)
+        for i, k in enumerate(table.keys[10:20]):
+            model[int(k)] = {c: int(upd[c][i]) for c in upd}
+        for k in table.keys[30:40]:
+            del model[int(k)]
+        del model[int(new_keys[0])]
+        live = sorted(model)
+        logical = {
+            c: np.asarray([model[k][c] for k in live], dtype=np.int32)
+            for c in ("a", "b", "c")
+        }
+        groups, aggs = ref_group_aggregate(logical, ("a",), REF_SPECS)
+        res = store.query().group_by("a").agg(*SPECS).scan().execute()
+        assert_aggregate_equal(res, groups, aggs)
+        ref = (
+            store.query().group_by("a").agg(*SPECS)
+            .pushdown(False).scan().execute()
+        )
+        assert_aggregate_equal(ref, groups, aggs)
+        if kind in ("deepmapping", "sharded"):
+            assert res.explain.rows_decoded == 0
+
+    def test_groupby_without_agg_rejected(self, agg_store):
+        kind, table, store = agg_store
+        with pytest.raises(ValueError):
+            store.query().group_by("a").scan().plan()
+
+    def test_agg_with_select_rejected(self, agg_store):
+        kind, table, store = agg_store
+        with pytest.raises(ValueError):
+            store.query().select("a").agg("count").scan().plan()
+
+
+class TestJoinDifferential:
+    @pytest.fixture(scope="class")
+    def right_table(self):
+        keys = np.arange(0, 700, 2, dtype=np.int64)  # even keys only
+        return Table(
+            keys=keys,
+            columns={
+                "clerk": (keys % 11).astype(np.int32),
+                "c": (keys % 13).astype(np.int32),  # collides with left "c"
+            },
+        )
+
+    @pytest.fixture(scope="class")
+    def left(self):
+        table = make_table(n=600)
+        return table, build_store("deepmapping", table)
+
+    @pytest.mark.parametrize("right_kind", STORE_KINDS)
+    def test_join_matches_mask_every_right_kind(
+        self, left, right_table, right_kind
+    ):
+        """The probe scatters through every store type's own existence
+        index/dispatch hook; surviving rows ≡ the python-set oracle."""
+        table, lstore = left
+        rstore = build_store(right_kind, right_table)
+        key_fn = lambda k: k % 700  # noqa: E731
+        res = (
+            lstore.query().join(rstore, key=key_fn, columns=("clerk",))
+            .scan().execute()
+        )
+        mask = ref_join_mask(table.keys, key_fn, right_table.keys)
+        np.testing.assert_array_equal(res.keys, table.keys[mask])
+        clerk = {int(k): int(v) for k, v in zip(
+            right_table.keys, right_table.columns["clerk"]
+        )}
+        np.testing.assert_array_equal(
+            np.asarray(res.values["clerk"]),
+            [clerk[int(k) % 700] for k in res.keys],
+        )
+        assert res.explain.join_probes == len(table.keys)
+
+    @pytest.mark.parametrize("left_kind", STORE_KINDS)
+    def test_join_every_left_kind(self, right_table, left_kind):
+        table = make_table(n=500)
+        lstore = build_store(left_kind, table)
+        rstore = build_store("array", right_table)
+        key_fn = lambda k: k % 700  # noqa: E731
+        res = lstore.query().join(rstore, key=key_fn).scan().execute()
+        mask = ref_join_mask(table.keys, key_fn, right_table.keys)
+        np.testing.assert_array_equal(res.keys, table.keys[mask])
+
+    def test_join_collision_prefix_and_left_columns(self, left, right_table):
+        """Left columns survive the join; right names colliding with
+        left output are prefixed; left values stay byte-identical to a
+        no-join query on the surviving keys."""
+        table, lstore = left
+        rstore = build_store("hash", right_table)
+        key_fn = lambda k: k % 700  # noqa: E731
+        res = lstore.query().join(rstore, key=key_fn).scan().execute()
+        assert "r.c" in res.values and "clerk" in res.values
+        mask = ref_join_mask(table.keys, key_fn, right_table.keys)
+        np.testing.assert_array_equal(
+            np.asarray(res.values["c"]), table.columns["c"][mask]
+        )
+        cmap = {int(k): int(v) for k, v in zip(
+            right_table.keys, right_table.columns["c"]
+        )}
+        np.testing.assert_array_equal(
+            np.asarray(res.values["r.c"]),
+            [cmap[int(k) % 700] for k in res.keys],
+        )
+
+    def test_join_with_predicate_pushdown_on_off(self, left, right_table):
+        table, lstore = left
+        rstore = build_store("array", right_table)
+        key_fn = lambda k: k % 700  # noqa: E731
+        down = (
+            lstore.query().where("c", ">", 3).join(rstore, key=key_fn)
+            .scan().execute()
+        )
+        ref = (
+            lstore.query().where("c", ">", 3).join(rstore, key=key_fn)
+            .pushdown(False).scan().execute()
+        )
+        np.testing.assert_array_equal(down.keys, ref.keys)
+        for c in ref.values:
+            np.testing.assert_array_equal(
+                np.asarray(down.values[c]), np.asarray(ref.values[c]), c
+            )
+        mask = ref_join_mask(table.keys, key_fn, right_table.keys)
+        mask &= table.columns["c"] > 3
+        np.testing.assert_array_equal(down.keys, table.keys[mask])
+
+    def test_join_staged_equals_streaming(self, left, right_table):
+        table, lstore = left
+        rstore = build_store("hash", right_table)
+        key_fn = lambda k: k % 700  # noqa: E731
+        plan = lstore.query().join(rstore, key=key_fn).scan().plan()
+        staged = execute_plan_staged(lstore, plan)
+        streamed = lstore.query().join(rstore, key=key_fn).scan().execute()
+        np.testing.assert_array_equal(staged.keys, streamed.keys)
+        assert set(staged.values) == set(streamed.values)
+        for c in staged.values:
+            np.testing.assert_array_equal(
+                np.asarray(staged.values[c]), np.asarray(streamed.values[c]), c
+            )
+
+    def test_join_probes_evidence(self, left, right_table):
+        table, lstore = left
+        rstore = build_store("hash", right_table)
+        res = (
+            lstore.query().where("c", "==", 2)
+            .join(rstore, key=lambda k: k % 700).scan().execute()
+        )
+        want = int((table.columns["c"] == 2).sum())
+        assert res.explain.join_probes == want  # only survivors probe
+        assert any("join[" in s for s in res.explain.plan)
+
+    def test_agg_with_join_rejected(self, left, right_table):
+        table, lstore = left
+        rstore = build_store("hash", right_table)
+        with pytest.raises(ValueError):
+            (
+                lstore.query().agg("count").join(rstore)
+                .scan().plan()
+            )
+
+
+class TestFederatedAggregateJoin:
+    @pytest.fixture(scope="class")
+    def partitioned(self):
+        t_lo, t_hi = make_table(n=300), make_table(n=300, off=10_000)
+        union = Table(
+            keys=np.concatenate([t_lo.keys, t_hi.keys]),
+            columns={
+                c: np.concatenate([t_lo.columns[c], t_hi.columns[c]])
+                for c in t_lo.columns
+            },
+        )
+        fed = FederatedStore(
+            [build_store("deepmapping", t_lo), build_store("hash", t_hi)],
+            mode="partition",
+            boundaries=[5000],
+        )
+        return fed, union
+
+    def test_partition_aggregate_matches_union_oracle(self, partitioned):
+        fed, union = partitioned
+        groups, aggs = oracle(union, ("a", "b"))
+        res = fed.query().group_by("a", "b").agg(*SPECS).scan().execute()
+        assert_aggregate_equal(res, groups, aggs)
+        ref = (
+            fed.query().group_by("a", "b").agg(*SPECS)
+            .pushdown(False).scan().execute()
+        )
+        assert_aggregate_equal(ref, groups, aggs)
+
+    def test_replicate_aggregate(self):
+        table = make_table(n=250)
+        fed = FederatedStore(
+            [build_store("deepmapping", table), build_store("hash", table)],
+            mode="replicate",
+            policy="round_robin",
+        )
+        groups, aggs = oracle(table, ("a",))
+        res = (
+            fed.query().group_by("a").agg(*SPECS)
+            .morsel(40).scan().execute()
+        )
+        assert res.explain.morsels > 1
+        assert_aggregate_equal(res, groups, aggs)
+
+    def test_all_model_members_decode_zero_rows(self):
+        t_lo, t_hi = make_table(n=200), make_table(n=200, off=10_000)
+        fed = FederatedStore(
+            [build_store("deepmapping", t_lo),
+             build_store("deepmapping", t_hi)],
+            mode="partition",
+            boundaries=[5000],
+        )
+        res = fed.query().group_by("a").agg("count").scan().execute()
+        assert res.explain.rows_decoded == 0
+
+    def test_plan_cache_shared_across_members(self):
+        """Carried thread (ISSUE 10 satellite): one PlanCache for the
+        whole federation — aggregate value tables compiled against one
+        member's decode maps are content-matched by the other member
+        (table hit), never recompiled per member."""
+        table = make_table(n=300)
+        m0 = build_store("deepmapping", table)
+        m1 = build_store("deepmapping", table)
+        fed = FederatedStore([m0, m1], mode="replicate", policy="primary")
+        cache = fed.plan_cache()
+        assert m0.plan_cache() is cache and m1.plan_cache() is cache
+        assert cache.table_hits == 0 and cache.table_misses == 0
+        res = (
+            fed.query().group_by("a").agg(("sum", "c"))
+            .morsel(80).scan().execute()
+        )
+        groups, aggs = oracle(
+            table, ("a",), specs=(("sum", "c"),)
+        )
+        assert_aggregate_equal(res, groups, aggs)
+        first_misses = cache.table_misses
+        assert first_misses >= 1
+        # Replays — and the second member in a fan-out — reuse the
+        # content-matched table: misses stay flat, hits grow.
+        fed.query().group_by("a").agg(("sum", "c")).scan().execute()
+        m1.query().group_by("a").agg(("sum", "c")).scan().execute()
+        assert cache.table_misses == first_misses
+        assert cache.table_hits >= 1
+
+    def test_join_across_federated_right(self, partitioned):
+        """Probe keys scatter store-to-store across federation members
+        on the right side of the join."""
+        fed, union = partitioned
+        lt = make_table(n=400)
+        lstore = build_store("hash", lt)
+        key_fn = lambda k: (k * 7) % 12_000  # noqa: E731
+        res = lstore.query().join(fed, key=key_fn).scan().execute()
+        mask = ref_join_mask(lt.keys, key_fn, union.keys)
+        np.testing.assert_array_equal(res.keys, lt.keys[mask])
+
+
+class TestDegradedAggregateJoin:
+    @pytest.fixture()
+    def cluster(self):
+        store = ShardedDeepMappingStore.build(
+            make_table(n=1200), TINY,
+            ClusterConfig(num_shards=3, policy="range"),
+        )
+        store.retry = TIGHT
+        return store
+
+    def test_partial_shard_loss_degrades_with_evidence(self, cluster):
+        full = (
+            cluster.query().group_by("a").agg("count", ("sum", "c"))
+            .scan().execute()
+        )
+        plan = FaultPlan([FaultSpec(
+            site="shard_collect", owner="shard:1", kind="raise", times=99
+        )])
+        with plan.activate():
+            part = (
+                cluster.query().group_by("a").agg("count", ("sum", "c"))
+                .on_error("partial").scan().execute()
+            )
+        assert plan.fired
+        assert part.explain.keys_unresolved > 0
+        assert any("shard:1" in o for o in part.explain.owners_failed)
+        # Healthy shards' groups only: strictly fewer rows counted.
+        assert (
+            int(part.aggregates["count"].sum())
+            < int(full.aggregates["count"].sum())
+        )
+
+    def test_partial_without_flag_raises(self, cluster):
+        plan = FaultPlan([FaultSpec(
+            site="shard_collect", owner="shard:1", kind="raise", times=99
+        )])
+        with plan.activate():
+            with pytest.raises(OwnerFailure):
+                (
+                    cluster.query().group_by("a").agg("count")
+                    .scan().execute()
+                )
+
+    def test_transient_fault_retries_to_full_answer(self, cluster):
+        full = (
+            cluster.query().group_by("a").agg("count", ("sum", "c"))
+            .scan().execute()
+        )
+        plan = FaultPlan([FaultSpec(
+            site="shard_collect", owner="shard:1", kind="raise", times=1
+        )])
+        with plan.activate():
+            res = (
+                cluster.query().group_by("a").agg("count", ("sum", "c"))
+                .scan().execute()
+            )
+        assert res.explain.retries >= 1
+        assert_aggregate_equal(res, full.groups, full.aggregates)
+
+    def test_federated_member_loss_partial_aggregate(self):
+        t_lo, t_hi = make_table(n=300), make_table(n=300, off=10_000)
+        fed = FederatedStore(
+            [build_store("deepmapping", t_lo), build_store("hash", t_hi)],
+            mode="partition",
+            boundaries=[5000],
+        )
+        fed.retry = TIGHT
+        plan = FaultPlan([FaultSpec(
+            site="member_collect", owner="member:1", kind="raise", times=99
+        )])
+        groups, aggs = oracle(t_lo, ("a",))  # healthy member only
+        with plan.activate():
+            res = (
+                fed.query().group_by("a").agg(*SPECS)
+                .on_error("partial").scan().execute()
+            )
+        assert plan.fired
+        assert res.explain.keys_unresolved > 0
+        assert_aggregate_equal(res, groups, aggs)
+
+    def test_join_right_owner_loss_drops_candidates(self, cluster):
+        lt = Table(
+            keys=np.arange(0, 3000, 8, dtype=np.int64),
+            columns={"qty": (np.arange(0, 3000, 8) % 13).astype(np.int32)},
+        )
+        lstore = build_store("hash", lt)
+        key_fn = lambda k: k // 8 * 3  # noqa: E731  # cluster keys: 0,3,..
+        full = lstore.query().join(cluster, key=key_fn).scan().execute()
+        assert full.keys.shape[0] > 0
+        plan = FaultPlan([FaultSpec(
+            site="shard_collect", owner="shard:0", kind="raise", times=99
+        )])
+        with plan.activate():
+            part = (
+                lstore.query().join(cluster, key=key_fn)
+                .on_error("partial").scan().execute()
+            )
+        assert part.keys.shape[0] < full.keys.shape[0]
+        assert part.explain.keys_unresolved > 0
+        # Survivors are a subset with identical values.
+        surv = set(part.keys.tolist())
+        assert surv <= set(full.keys.tolist())

@@ -6,16 +6,78 @@ import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import HealthCheck, given, settings
 from hypothesis import strategies as st
+from tpch_reference import assert_aggregate_equal, ref_group_aggregate, ref_join_mask
 
+from repro.baselines import HashStore
+from repro.core import DeepMappingConfig, DeepMappingStore, Table
 from repro.core.aux_table import AuxTable
 from repro.core.bitvector import BitVector
 from repro.core.encoding import KeyEncoder, ValueCodec
+from repro.core.trainer import TrainConfig
 from repro.storage import MemoryPool, get_codec
 
 SET = settings(
     max_examples=30, deadline=None,
     suppress_health_check=[HealthCheck.too_slow],
 )
+
+#: Store builds inside — far fewer examples, same no-deadline rules.
+SET_STORE = settings(
+    max_examples=10, deadline=None,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+)
+
+#: Per-example MLP training: keep the example count tight.
+SET_MODEL = settings(
+    max_examples=5, deadline=None,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+)
+
+TINY_DM = DeepMappingConfig(
+    shared=(16,), private=(4,), train=TrainConfig(epochs=2, batch_size=512)
+)
+
+
+@st.composite
+def agg_query(draw, columns=("a", "b")):
+    """Random group-by/aggregate combo: a (possibly empty) group-key
+    subset plus 1-3 aggregates over the value columns."""
+    group_by = tuple(draw(st.sets(st.sampled_from(columns), max_size=2)))
+    n_aggs = draw(st.integers(1, 3))
+    specs, ref = [], []
+    for _ in range(n_aggs):
+        func = draw(st.sampled_from(["count", "sum", "min", "max"]))
+        if func == "count":
+            if ("count", None) in ref:
+                continue
+            specs.append("count")
+            ref.append(("count", None))
+        else:
+            col = draw(st.sampled_from(columns))
+            if (func, col) in ref:
+                continue
+            specs.append((func, col))
+            ref.append((func, col))
+    return group_by, tuple(specs), tuple(ref)
+
+
+@st.composite
+def int_table(draw, min_rows=4, max_rows=60):
+    """Random small table: unique int64 keys, two int32 value columns
+    with small domains (negatives included — sum/min/max sign paths)."""
+    n = draw(st.integers(min_rows, max_rows))
+    keys = draw(st.lists(
+        st.integers(0, 3000), min_size=n, max_size=n, unique=True
+    ))
+    a = draw(st.lists(st.integers(0, 4), min_size=n, max_size=n))
+    b = draw(st.lists(st.integers(-3, 3), min_size=n, max_size=n))
+    return Table(
+        keys=np.asarray(sorted(keys), dtype=np.int64),
+        columns={
+            "a": np.asarray(a, dtype=np.int32),
+            "b": np.asarray(b, dtype=np.int32),
+        },
+    )
 
 
 class TestEncodingProperties:
@@ -135,6 +197,109 @@ class TestCodecProperties:
     def test_codec_roundtrip(self, data, name):
         c = get_codec(name)
         assert c.decompress(c.compress(data)) == data
+
+
+class TestAggregateJoinProperties:
+    """ISSUE 10: random tables x random group/agg/join/predicate
+    combos, every executor answer ≡ the naive reference."""
+
+    @SET_STORE
+    @given(table=int_table(), data=st.data())
+    def test_rowspace_aggregate_matches_oracle(self, table, data):
+        """Store-hook aggregation (baseline decode-then-aggregate path)
+        over a random table/query combo ≡ the oracle, pushdown on+off."""
+        store = HashStore.build(table, codec="none", partition_bytes=512)
+        group_by, specs, ref = data.draw(agg_query())
+        sel = None
+        q = store.query().group_by(*group_by).agg(*specs)
+        if data.draw(st.booleans()):
+            cut = data.draw(st.integers(-3, 4))
+            q = q.where("b", "<", cut)
+            sel = table.columns["b"] < cut
+        if data.draw(st.booleans()):
+            q = q.pushdown(False)
+        groups, aggs = ref_group_aggregate(table.columns, group_by, ref, sel)
+        assert_aggregate_equal(q.scan().execute(), groups, aggs)
+
+    @SET_MODEL
+    @given(table=int_table(min_rows=24, max_rows=48), data=st.data())
+    def test_codespace_equals_reference_after_mutations(self, table, data):
+        """Code-space aggregation on the model-backed store stays
+        value-identical to decode-then-aggregate after interleaved
+        insert/delete/update (stale code→value tables would diverge)."""
+        store = DeepMappingStore.build(table, TINY_DM)
+        model = {
+            int(k): {c: int(table.columns[c][i]) for c in table.columns}
+            for i, k in enumerate(table.keys)
+        }
+        n_ops = data.draw(st.integers(1, 4))
+        for _ in range(n_ops):
+            op = data.draw(st.sampled_from(["insert", "update", "delete"]))
+            if op == "insert":
+                k = data.draw(st.integers(5000, 6000))
+                va = data.draw(st.integers(0, 9))
+                vb = data.draw(st.integers(-5, 5))
+                store.insert(
+                    np.asarray([k], dtype=np.int64),
+                    {"a": np.asarray([va], np.int32),
+                     "b": np.asarray([vb], np.int32)},
+                )
+                model[k] = {"a": va, "b": vb}
+            elif op == "update" and model:
+                k = data.draw(st.sampled_from(sorted(model)))
+                va = data.draw(st.integers(0, 9))
+                store.update(
+                    np.asarray([k], dtype=np.int64),
+                    {"a": np.asarray([va], np.int32),
+                     "b": np.asarray([model[k]["b"]], np.int32)},
+                )
+                model[k]["a"] = va
+            elif op == "delete" and len(model) > 2:
+                k = data.draw(st.sampled_from(sorted(model)))
+                store.delete(np.asarray([k], dtype=np.int64))
+                del model[k]
+        live = sorted(model)
+        logical = {
+            c: np.asarray([model[k][c] for k in live], dtype=np.int32)
+            for c in ("a", "b")
+        }
+        group_by, specs, ref = data.draw(agg_query())
+        code = store.query().group_by(*group_by).agg(*specs).scan().execute()
+        rows = (
+            store.query().group_by(*group_by).agg(*specs)
+            .pushdown(False).scan().execute()
+        )
+        groups, aggs = ref_group_aggregate(logical, group_by, ref)
+        assert_aggregate_equal(code, groups, aggs)
+        assert_aggregate_equal(rows, groups, aggs)
+        assert code.explain.rows_decoded <= rows.explain.rows_decoded
+
+    @SET_STORE
+    @given(
+        left=int_table(), right_keys=st.sets(
+            st.integers(0, 500), min_size=1, max_size=80
+        ),
+        div=st.integers(1, 7),
+    )
+    def test_join_matches_set_oracle(self, left, right_keys, div):
+        """Key-equi join survivors ≡ the python-set membership oracle
+        for a random left table, right key set, and key map."""
+        rkeys = np.asarray(sorted(right_keys), dtype=np.int64)
+        right = HashStore.build(
+            Table(keys=rkeys, columns={
+                "r": (rkeys % 5).astype(np.int32),
+            }),
+            codec="none", partition_bytes=512,
+        )
+        lstore = HashStore.build(left, codec="none", partition_bytes=512)
+        key_fn = lambda k: k // div  # noqa: E731
+        res = lstore.query().join(right, key=key_fn).scan().execute()
+        mask = ref_join_mask(left.keys, key_fn, rkeys)
+        np.testing.assert_array_equal(res.keys, left.keys[mask])
+        np.testing.assert_array_equal(
+            np.asarray(res.values["r"]),
+            ((left.keys[mask] // div) % 5).astype(np.int32),
+        )
 
 
 class TestMemoryPoolProperties:
